@@ -1,0 +1,49 @@
+//! Reoptimization in action (§4.3/§5.3): drive seq2seq training — whose
+//! block sizes change with every sampled mini-batch — under both the
+//! Chainer-style pool and the profile-guided allocator, and watch the
+//! pool strand memory while `opt` re-solves DSA and stays flat.
+//!
+//! ```bash
+//! cargo run --release --example seq2seq_reopt
+//! ```
+
+use pgmo::models::{self, Phase};
+use pgmo::sim::{self, AllocKind, SimConfig};
+use pgmo::util::humansize::format_bytes;
+
+fn main() {
+    let model = models::by_name("seq2seq").expect("model");
+    let cfg = SimConfig {
+        unified_memory: true, // measure demand beyond 16 GiB like §5.1
+        warmup: 1,
+        iterations: 40,
+        ..SimConfig::default()
+    };
+
+    println!("seq2seq training, 40 mini-batches of sampled-length sentences\n");
+    println!(
+        "{:>6} {:>12} {:>14} {:>14} {:>8} {:>10}",
+        "batch", "alloc", "after-10-iters", "peak", "reopts", "solve-ms"
+    );
+    for batch in [32u32, 64, 128, 256] {
+        for kind in [AllocKind::Pool, AllocKind::ProfileGuided] {
+            let r = sim::run(&*model, Phase::Training, batch, kind, &cfg);
+            println!(
+                "{:>6} {:>12} {:>14} {:>14} {:>8} {:>10.2}",
+                batch,
+                r.alloc,
+                format_bytes(r.used_after_10),
+                format_bytes(r.peak_device_bytes),
+                r.stats.reopts,
+                r.solve_ns as f64 / 1e6,
+            );
+        }
+    }
+
+    println!(
+        "\nThe pool's exact-size free lists cannot recycle blocks across \
+         differently-sized iterations (§5.3), so its footprint ratchets \
+         upward; the profile-guided allocator re-solves DSA on deviation \
+         and keeps one arena sized to the largest observed working set."
+    );
+}

@@ -1,0 +1,64 @@
+//! End-to-end driver: train the real L2 model (JAX+Pallas, AOT-compiled
+//! to HLO) from Rust through PJRT, with every per-step host staging
+//! buffer managed by the paper's profile→solve→replay mechanism.
+//!
+//! Proves all three layers compose: the L1 Pallas matmul is inside the L2
+//! train-step HLO, which this L3 driver executes — Python never runs.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_e2e
+//! ```
+//!
+//! The loss curve + memory report land in stdout (recorded in
+//! EXPERIMENTS.md §E2E).
+
+use pgmo::coordinator::{TrainConfig, TrainingCoordinator};
+use pgmo::util::humansize::format_bytes;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("PGMO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let steps: u32 = std::env::var("PGMO_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let mut coord = TrainingCoordinator::new(&PathBuf::from(artifacts), 7)?;
+    println!(
+        "training MLP {:?} on synthetic data, {steps} steps, batch 32",
+        coord.layer_sizes()
+    );
+
+    let report = coord.train(&TrainConfig {
+        steps,
+        batch: 32,
+        seed: 7,
+        checkpoint_every: 50,
+    })?;
+
+    println!("\nstep   loss");
+    for (i, loss) in report.losses.iter().enumerate() {
+        if i % 25 == 0 || i + 1 == report.losses.len() {
+            println!("{i:>5}  {loss:.4}");
+        }
+    }
+    let first = report.losses.first().copied().unwrap_or(0.0);
+    let last = report.losses.last().copied().unwrap_or(0.0);
+    println!(
+        "\nloss {first:.4} → {last:.4} ({})",
+        if last < first { "learning ✓" } else { "NOT learning ✗" }
+    );
+    println!(
+        "avg step {:.2} ms | staging arena {} | replay fraction {:.1}% | {} reopts",
+        report.avg_step_ms,
+        format_bytes(report.arena_bytes as u64),
+        report.replay_fraction * 100.0,
+        report.reopts
+    );
+    anyhow::ensure!(last < first, "training must reduce the loss");
+    anyhow::ensure!(
+        report.replay_fraction > 0.9,
+        "hot staging path must be replayed"
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO *text* artifacts for the
+Rust PJRT runtime.
+
+HLO text — not ``serialize()``d protos — is the interchange format: jax
+≥ 0.5 emits 64-bit instruction ids that the ``xla`` crate's bundled
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+* ``train_step_b{B}.hlo.txt`` — one SGD step, per configured batch size
+* ``predict_b{B}.hlo.txt``   — forward pass
+* ``meta.json``              — entry signatures (shapes/dtypes, in order)
+  so the Rust side can build input literals without guessing
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+TRAIN_BATCHES = (32,)
+PREDICT_BATCHES = (32, 1)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs(layer_sizes):
+    specs = []
+    for fan_in, fan_out in zip(layer_sizes[:-1], layer_sizes[1:]):
+        specs.append(jax.ShapeDtypeStruct((fan_in, fan_out), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((fan_out,), jnp.float32))
+    return specs
+
+
+def lower_all(layer_sizes=model.LAYER_SIZES):
+    """Yield (artifact_name, hlo_text, signature) for every variant."""
+    params = _param_specs(layer_sizes)
+    classes = layer_sizes[-1]
+    for b in TRAIN_BATCHES:
+        x = jax.ShapeDtypeStruct((b, layer_sizes[0]), jnp.float32)
+        y = jax.ShapeDtypeStruct((b, classes), jnp.float32)
+        lowered = jax.jit(model.train_step).lower(*params, x, y)
+        sig = [list(s.shape) for s in (*params, x, y)]
+        yield f"train_step_b{b}", to_hlo_text(lowered), sig
+    for b in PREDICT_BATCHES:
+        x = jax.ShapeDtypeStruct((b, layer_sizes[0]), jnp.float32)
+        lowered = jax.jit(model.predict).lower(*params, x)
+        sig = [list(s.shape) for s in (*params, x)]
+        yield f"predict_b{b}", to_hlo_text(lowered), sig
+    # Probability head (L1 Pallas softmax on the logits), single-input.
+    x1 = jax.ShapeDtypeStruct((1, layer_sizes[0]), jnp.float32)
+    lowered = jax.jit(model.predict_proba).lower(*params, x1)
+    yield "predict_proba_b1", to_hlo_text(lowered), [list(s.shape) for s in (*params, x1)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    meta = {
+        "layer_sizes": list(model.LAYER_SIZES),
+        "learning_rate": model.LEARNING_RATE,
+        "entries": {},
+    }
+    for name, text, sig in lower_all():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["entries"][name] = {"inputs": sig}
+        print(f"wrote {path} ({len(text)} chars, {len(sig)} inputs)")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Layer-1 Pallas kernel: tiled matmul with optional fused bias + ReLU.
+
+This is the compute hot-spot of the L2 model (every linear layer of the
+MLP classifier goes through it). The tiling is written for TPU-style
+execution even though this repository runs it under ``interpret=True`` on
+the CPU PJRT plugin (real-TPU lowering emits a Mosaic custom call the CPU
+plugin cannot execute — see DESIGN.md §Hardware-Adaptation):
+
+* the grid is ``(M/bm, N/bn)``; each program instance owns one
+  ``bm × bn`` output tile — the MXU-shaped unit of work;
+* the K dimension is looped *inside* the kernel body over ``bk``-wide
+  slices of the operand tiles, accumulating in fp32 — the classic
+  VMEM-resident accumulator pattern (``bm*bk + bk*bn + bm*bn`` floats per
+  instance; 128³ tiles ≈ 192 KiB, comfortably within a TPU core's
+  ~16 MiB VMEM with room for double buffering);
+* ``BlockSpec`` index maps express the HBM→VMEM schedule that a CUDA
+  kernel would express with threadblock tiling.
+
+Correctness oracle: :mod:`compile.kernels.ref` (pure jnp), swept by
+hypothesis in ``python/tests/test_kernel.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (MXU-friendly).
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, bk: int, fuse_relu: bool):
+    """One (bm × bn) output tile; K is looped in bk-wide slices."""
+    bm, k = x_ref.shape
+    _, bn = w_ref.shape
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    # K is static at trace time, so this unrolls into an MXU-sized chain.
+    for s in range(0, k, bk):
+        xs = x_ref[:, s : s + bk].astype(jnp.float32)
+        ws = w_ref[s : s + bk, :].astype(jnp.float32)
+        acc += xs @ ws
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _bias_matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, bk: int, fuse_relu: bool):
+    bm, k = x_ref.shape
+    _, bn = w_ref.shape
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    for s in range(0, k, bk):
+        xs = x_ref[:, s : s + bk].astype(jnp.float32)
+        ws = w_ref[s : s + bk, :].astype(jnp.float32)
+        acc += xs @ ws
+    acc += b_ref[...].astype(jnp.float32)
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _tile(dim: int, block: int) -> int:
+    """Largest tile ≤ block that divides dim (dims here are powers of two
+    or small; worst case degenerates to 1 which is still correct)."""
+    t = min(dim, block)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _matmul_impl(x, w, bias=None, *, fuse_relu: bool = False):
+    """``relu?(x @ w + bias?)`` via the tiled Pallas kernel.
+
+    ``x: [M, K]``, ``w: [K, N]``, ``bias: [N] | None``. Any M/K/N works;
+    tiles shrink to the largest divisor ≤ the default block size.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm, bn, bk = _tile(m, BM), _tile(n, BN), _tile(k, BK)
+    grid = (m // bm, n // bn)
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+
+    x_spec = pl.BlockSpec((bm, k), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((k, bn), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+
+    if bias is None:
+        kernel = functools.partial(_matmul_kernel, bk=bk, fuse_relu=fuse_relu)
+        in_specs = [x_spec, w_spec]
+        args = (x, w)
+    else:
+        assert bias.shape == (n,), f"bias shape {bias.shape} != ({n},)"
+        kernel = functools.partial(_bias_matmul_kernel, bk=bk, fuse_relu=fuse_relu)
+        b_spec = pl.BlockSpec((bn,), lambda i, j: (j,))
+        in_specs = [x_spec, w_spec, b_spec]
+        args = (x, w, bias)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Reverse-mode autodiff: pallas_call has no built-in transpose rule, so the
+# backward pass is spelled out — as more Pallas matmuls, keeping the L1
+# kernel on the gradient path too (dx = g·Wᵀ, dW = xᵀ·g, db = Σg).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _mm(x, w, fuse_relu):
+    return _matmul_impl(x, w, None, fuse_relu=fuse_relu)
+
+
+def _mm_fwd(x, w, fuse_relu):
+    out = _matmul_impl(x, w, None, fuse_relu=fuse_relu)
+    return out, (x, w, out if fuse_relu else None)
+
+
+def _mm_bwd(fuse_relu, res, g):
+    x, w, out = res
+    if fuse_relu:
+        g = g * (out > 0).astype(g.dtype)
+    dx = _matmul_impl(g, w.T)
+    dw = _matmul_impl(x.T, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _mm_bias(x, w, b, fuse_relu):
+    return _matmul_impl(x, w, b, fuse_relu=fuse_relu)
+
+
+def _mm_bias_fwd(x, w, b, fuse_relu):
+    out = _matmul_impl(x, w, b, fuse_relu=fuse_relu)
+    return out, (x, w, out if fuse_relu else None)
+
+
+def _mm_bias_bwd(fuse_relu, res, g):
+    x, w, out = res
+    if fuse_relu:
+        g = g * (out > 0).astype(g.dtype)
+    dx = _matmul_impl(g, w.T)
+    dw = _matmul_impl(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(g.dtype)
+
+
+_mm_bias.defvjp(_mm_bias_fwd, _mm_bias_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("fuse_relu",))
+def matmul(x, w, bias=None, *, fuse_relu: bool = False):
+    """Public entry: differentiable fused matmul (see `_matmul_impl`)."""
+    if bias is None:
+        return _mm(x, w, fuse_relu)
+    return _mm_bias(x, w, bias, fuse_relu)
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, bytes_per_el: int = 4) -> int:
+    """Estimated VMEM working set of one grid instance (perf reporting)."""
+    return bytes_per_el * (bm * bk + bk * bn + bm * bn) * 2  # ×2: double buffer

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Pallas kernels — the correctness ground truth.
+
+Every kernel in :mod:`compile.kernels` must match its function here to
+float tolerance for all shapes/dtypes the test sweep generates.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, w, bias=None, *, fuse_relu: bool = False):
+    """Reference ``relu?(x @ w + bias?)`` with fp32 accumulation."""
+    acc = jnp.matmul(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc.astype(jnp.promote_types(x.dtype, w.dtype))

@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: numerically-stable row-wise softmax.
+
+Used by the serving path's probability head (`model.predict_proba`).
+Tiled by rows: each grid instance owns a `bm × N` band, computes
+max-shifted exponentials and normalizes in fp32 — the standard
+three-pass-fused-to-one softmax, expressed with TPU-friendly row bands
+instead of CUDA warp shuffles (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def _rows_tile(m: int) -> int:
+    t = min(m, BM)
+    while m % t:
+        t -= 1
+    return t
+
+
+@jax.jit
+def softmax(x):
+    """Row-wise softmax over the last axis of a 2-D array."""
+    m, n = x.shape
+    bm = _rows_tile(m)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def softmax_ref(x):
+    """Oracle: jax.nn.softmax in fp32."""
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)

@@ -1,0 +1,117 @@
+"""Layer-2 JAX model: an MLP classifier whose linear layers run through
+the Layer-1 Pallas matmul kernel.
+
+The Rust coordinator trains/serves this model through PJRT using the HLO
+artifacts :mod:`compile.aot` lowers from the functions here; Python never
+runs on the request path. Parameters travel as a flat tuple so the HLO
+entry signature is stable and easy to drive from Rust.
+
+Functions
+---------
+``init_params(rng, layer_sizes)``       → tuple of (W, b) arrays, flattened
+``predict(params..., x)``               → logits
+``loss(params..., x, y)``               → scalar cross-entropy
+``train_step(params..., x, y)``         → (new_params..., loss)  [SGD]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as pk
+
+# Default architecture: 784 (28×28 synthetic digits) → 256 → 128 → 10.
+LAYER_SIZES = (784, 256, 128, 10)
+LEARNING_RATE = 0.05
+
+
+def n_layers(layer_sizes=LAYER_SIZES) -> int:
+    return len(layer_sizes) - 1
+
+
+def init_params(seed: int = 0, layer_sizes=LAYER_SIZES):
+    """He-initialized weights, zero biases, flattened as (W0,b0,W1,b1,…)."""
+    params = []
+    key = jax.random.PRNGKey(seed)
+    for i, (fan_in, fan_out) in enumerate(zip(layer_sizes[:-1], layer_sizes[1:])):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / fan_in)
+        params.append(jax.random.normal(sub, (fan_in, fan_out), jnp.float32) * scale)
+        params.append(jnp.zeros((fan_out,), jnp.float32))
+        del i
+    return tuple(params)
+
+
+def _unflatten(flat):
+    assert len(flat) % 2 == 0
+    return [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]
+
+
+def predict(*args):
+    """``predict(W0, b0, …, Wn, bn, x)`` → logits ``[batch, classes]``.
+
+    Hidden layers use the fused matmul+bias+ReLU kernel; the output layer
+    the fused matmul+bias.
+    """
+    *flat, x = args
+    layers = _unflatten(tuple(flat))
+    h = x
+    for w, b in layers[:-1]:
+        h = pk.matmul(h, w, b, fuse_relu=True)
+    w, b = layers[-1]
+    return pk.matmul(h, w, b, fuse_relu=False)
+
+
+def predict_proba(*args):
+    """``predict_proba(params..., x)`` → class probabilities, via the L1
+    Pallas softmax kernel (the serving path's probability head)."""
+    from compile.kernels import softmax as sk
+
+    return sk.softmax(predict(*args))
+
+
+def loss(*args):
+    """``loss(params..., x, y_onehot)`` → mean softmax cross-entropy."""
+    *flat, x, y = args
+    logits = predict(*flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y * logp, axis=-1))
+
+
+def train_step(*args):
+    """One SGD step: ``(params..., x, y)`` → ``(new_params..., loss)``."""
+    *flat, x, y = args
+    val, grads = jax.value_and_grad(
+        lambda *p: loss(*p, x, y), argnums=tuple(range(len(flat)))
+    )(*flat)
+    new = tuple(p - LEARNING_RATE * g for p, g in zip(flat, grads))
+    return (*new, val)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp oracle of the whole model (kernel-free), for numeric testing.
+# ---------------------------------------------------------------------------
+
+
+def predict_ref(*args):
+    from compile.kernels import ref
+
+    *flat, x = args
+    layers = _unflatten(tuple(flat))
+    h = x
+    for w, b in layers[:-1]:
+        h = ref.matmul(h, w, b, fuse_relu=True)
+    w, b = layers[-1]
+    return ref.matmul(h, w, b, fuse_relu=False)
+
+
+def synthetic_batch(seed: int, batch: int, layer_sizes=LAYER_SIZES):
+    """Deterministic synthetic classification data: the label is a linear
+    projection of the input pushed through argmax — learnable, non-trivial.
+    """
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (batch, layer_sizes[0]), jnp.float32)
+    w_true = jax.random.normal(kw, (layer_sizes[0], layer_sizes[-1]), jnp.float32)
+    labels = jnp.argmax(x @ w_true, axis=-1)
+    y = jax.nn.one_hot(labels, layer_sizes[-1], dtype=jnp.float32)
+    return x, y

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repository root by putting
+the `python/` package directory (where `compile` lives) on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

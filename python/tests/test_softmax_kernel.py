@@ -1,0 +1,44 @@
+"""Hypothesis sweep of the Pallas softmax kernel vs its oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import softmax as sk
+
+DIMS = st.sampled_from([1, 2, 3, 7, 10, 16, 40, 100, 128, 200])
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, n=DIMS, seed=st.integers(0, 2**16), scale=st.sampled_from([1.0, 10.0, 100.0]))
+def test_softmax_matches_ref(m, n, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.standard_normal((m, n)) * scale).astype(np.float32))
+    got = np.asarray(sk.softmax(x))
+    want = np.asarray(sk.softmax_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_rows_sum_to_one_and_nonnegative():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 10)).astype(np.float32))
+    p = np.asarray(sk.softmax(x))
+    assert (p >= 0).all()
+    np.testing.assert_allclose(p.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_numerically_stable_for_large_logits():
+    # Naive exp overflows at ~88.7 in fp32; max-shifting must not.
+    x = jnp.asarray([[1000.0, 1000.0, 0.0]], jnp.float32)
+    p = np.asarray(sk.softmax(x))
+    assert np.isfinite(p).all()
+    np.testing.assert_allclose(p[0, :2], 0.5, rtol=1e-5)
+    assert p[0, 2] < 1e-30
+
+
+def test_invariant_to_constant_shift():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((8, 12)).astype(np.float32))
+    a = np.asarray(sk.softmax(x))
+    b = np.asarray(sk.softmax(x + 123.0))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,57 @@
+//! Bench: design-choice ablations — block-choice policy (solve time and
+//! packing quality) and the exact solver's node throughput. Supports
+//! DESIGN.md's ablation table with real timings.
+//!
+//! Run: `cargo bench --bench bench_ablations`
+
+use pgmo::dsa::policies::{BlockChoice, Policy};
+use pgmo::dsa::{bestfit, firstfit};
+use pgmo::models::{self, Phase};
+use pgmo::util::stats::bench_loop;
+use std::time::Duration;
+
+fn main() {
+    let cases = [
+        ("alexnet/train/b32", "alexnet", Phase::Training, 32u32),
+        ("resnet50/train/b32", "resnet50", Phase::Training, 32),
+        ("googlenet/infer/b1", "googlenet", Phase::Inference, 1),
+        ("seq2seq/infer/b1", "seq2seq", Phase::Inference, 1),
+    ];
+    println!("ablation: block-choice policy — ns/solve and gap to LB");
+    println!(
+        "{:<20} {:<18} {:>12} {:>10}",
+        "trace", "policy", "ns/solve", "gap %"
+    );
+    for (label, name, phase, batch) in cases {
+        let model = models::by_name(name).unwrap();
+        let inst = models::trace_for(&*model, phase, batch).to_dsa_instance();
+        let lb = inst.lower_bound();
+        for choice in BlockChoice::ALL {
+            let policy = Policy {
+                block_choice: choice,
+            };
+            let sol = bestfit::solve_with(&inst, policy);
+            let mut s = bench_loop(Duration::from_millis(150), || {
+                std::hint::black_box(bestfit::solve_with(std::hint::black_box(&inst), policy));
+            });
+            println!(
+                "{:<20} {:<18} {:>12.0} {:>10.3}",
+                label,
+                choice.name(),
+                s.mean(),
+                (sol.peak as f64 / lb as f64 - 1.0) * 100.0
+            );
+        }
+        let ff = firstfit::solve(&inst);
+        let mut s = bench_loop(Duration::from_millis(150), || {
+            std::hint::black_box(firstfit::solve(std::hint::black_box(&inst)));
+        });
+        println!(
+            "{:<20} {:<18} {:>12.0} {:>10.3}",
+            label,
+            "first-fit(online)",
+            s.mean(),
+            (ff.peak as f64 / lb as f64 - 1.0) * 100.0
+        );
+    }
+}

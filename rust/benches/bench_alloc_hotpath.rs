@@ -1,0 +1,99 @@
+//! Bench: the per-request hot path — the §5.2 mechanism behind Fig 3's
+//! speedups. Measures real nanoseconds per alloc+free round trip for the
+//! replay path (opt), the pool (orig), and network-wise allocation, on
+//! AlexNet-training-shaped request streams.
+//!
+//! Perf target (DESIGN.md §6): replay ≤ ~20 ns/request and ≥10× faster
+//! than the pool search.
+//!
+//! Run: `cargo bench --bench bench_alloc_hotpath`
+
+use pgmo::alloc::network_wise::NetworkWiseAllocator;
+use pgmo::alloc::pool::PoolAllocator;
+use pgmo::alloc::profile_guided::ProfileGuidedAllocator;
+use pgmo::alloc::DeviceAllocator;
+use pgmo::device::SimDevice;
+use pgmo::models::{self, Phase};
+use pgmo::trace::TraceEvent;
+use pgmo::util::stats::bench_loop;
+use std::time::Duration;
+
+/// Extract the request stream (sizes in event order) from a model trace.
+fn request_stream() -> Vec<TraceEvent> {
+    let model = models::by_name("alexnet").unwrap();
+    models::trace_for(&*model, Phase::Training, 32).events
+}
+
+fn drive(alloc: &mut dyn DeviceAllocator, dev: &mut SimDevice, events: &[TraceEvent]) {
+    let mut live: Vec<Option<pgmo::alloc::Ptr>> = vec![None; events.len()];
+    alloc.begin_iteration(dev);
+    for e in events {
+        match *e {
+            TraceEvent::Alloc { id, size, .. } => {
+                live[id] = Some(alloc.alloc(dev, size).expect("alloc"));
+            }
+            TraceEvent::Free { id, .. } => {
+                alloc.free(dev, live[id].take().expect("live"));
+            }
+        }
+    }
+    alloc.end_iteration(dev).expect("end");
+}
+
+fn main() {
+    let events = request_stream();
+    let n_ops = events.len() as f64;
+    println!(
+        "alloc hot path: {} events/iteration (alexnet training b32)",
+        events.len()
+    );
+    println!("{:<16} {:>16} {:>16}", "allocator", "ns/iteration", "ns/request");
+
+    // Replay (after one profiling iteration).
+    {
+        let mut dev = SimDevice::new(1 << 34);
+        let mut a = ProfileGuidedAllocator::new("bench", "t", 32);
+        drive(&mut a, &mut dev, &events); // profile + solve
+        let mut summary = bench_loop(Duration::from_millis(400), || {
+            drive(&mut a, &mut dev, &events);
+        });
+        println!(
+            "{:<16} {:>16.0} {:>16.1}",
+            "opt (replay)",
+            summary.mean(),
+            summary.mean() / n_ops
+        );
+        assert_eq!(a.stats().reopts, 0, "hot stream must not reoptimize");
+    }
+
+    // Pool (steady state: bins warm after first iteration).
+    {
+        let mut dev = SimDevice::new(1 << 34);
+        let mut a = PoolAllocator::chainer();
+        drive(&mut a, &mut dev, &events);
+        let mut summary = bench_loop(Duration::from_millis(400), || {
+            drive(&mut a, &mut dev, &events);
+        });
+        println!(
+            "{:<16} {:>16.0} {:>16.1}",
+            "orig (pool)",
+            summary.mean(),
+            summary.mean() / n_ops
+        );
+    }
+
+    // Network-wise (every request a device call).
+    {
+        let mut dev = SimDevice::new(1 << 34);
+        let mut a = NetworkWiseAllocator::new();
+        let mut summary = bench_loop(Duration::from_millis(400), || {
+            drive(&mut a, &mut dev, &events);
+        });
+        println!(
+            "{:<16} {:>16.0} {:>16.1}",
+            "network-wise",
+            summary.mean(),
+            summary.mean() / n_ops
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench: Figure 3 — simulated per-iteration time, orig vs opt, across
+//! the paper's grid. (The simulated clock is deterministic; this bench
+//! reports it per configuration, plus the real wall time the simulator
+//! itself takes, which bounds experiment-harness turnaround.)
+//!
+//! Run: `cargo bench --bench bench_fig3`
+
+use pgmo::models::{self, Phase};
+use pgmo::sim::{self, AllocKind, SimConfig};
+use std::time::Instant;
+
+fn main() {
+    let cfg = SimConfig {
+        warmup: 2,
+        iterations: 6,
+        ..SimConfig::default()
+    };
+    println!("fig3: simulated iteration time (ms), orig vs opt");
+    println!(
+        "{:<26} {:>10} {:>10} {:>9} {:>12}",
+        "config", "orig ms", "opt ms", "speedup", "sim wall ms"
+    );
+    let mut grid: Vec<(String, &str, Phase, u32)> = Vec::new();
+    for m in models::cnn_names() {
+        grid.push((format!("{m}/train/b32"), m, Phase::Training, 32));
+        grid.push((format!("{m}/infer/b1"), m, Phase::Inference, 1));
+    }
+    grid.push(("seq2seq/train/b32".into(), "seq2seq", Phase::Training, 32));
+    grid.push(("seq2seq/infer/b1".into(), "seq2seq", Phase::Inference, 1));
+
+    for (label, name, phase, batch) in grid {
+        let model = models::by_name(name).unwrap();
+        let wall = Instant::now();
+        let orig = sim::run(&*model, phase, batch, AllocKind::Pool, &cfg);
+        let opt = sim::run(&*model, phase, batch, AllocKind::ProfileGuided, &cfg);
+        let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+        if !orig.ok || !opt.ok {
+            println!("{label:<26} {:>10} {:>10}", "N/A", "N/A");
+            continue;
+        }
+        println!(
+            "{:<26} {:>10.2} {:>10.2} {:>8.2}x {:>12.1}",
+            label,
+            orig.avg_iter_ns / 1e6,
+            opt.avg_iter_ns / 1e6,
+            orig.avg_iter_ns / opt.avg_iter_ns,
+            wall_ms
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench: Figure 4 — wall-clock time of the best-fit heuristic on every
+//! evaluated configuration. This *is* the paper's measurement (their
+//! Python implementation took 10⁻²..10¹ s; the shapes to check are
+//! growth with batch size and seq2seq-inference ≫ seq2seq-training).
+//!
+//! Run: `cargo bench --bench bench_fig4`
+
+use pgmo::dsa::bestfit;
+use pgmo::models::{self, Phase};
+use pgmo::util::stats::bench_loop;
+use std::time::Duration;
+
+fn main() {
+    println!("fig4: best-fit heuristic runtime (ns/solve)");
+    println!("{:<22} {:>8} {:>14} {:>12}", "config", "blocks", "mean", "p50");
+    let mut cases: Vec<(String, &str, Phase, u32)> = Vec::new();
+    for m in models::cnn_names() {
+        cases.push((format!("{m}/I"), m, Phase::Inference, 1));
+        for b in [32u32, 64, 128] {
+            cases.push((format!("{m}/{b}"), m, Phase::Training, b));
+        }
+    }
+    for b in [32u32, 64, 128, 256] {
+        cases.push((format!("seq2seq/{b}"), "seq2seq", Phase::Training, b));
+    }
+    cases.push(("seq2seq/I".into(), "seq2seq", Phase::Inference, 1));
+
+    for (label, name, phase, batch) in cases {
+        let model = models::by_name(name).unwrap();
+        let inst = models::trace_for(&*model, phase, batch).to_dsa_instance();
+        let mut summary = bench_loop(Duration::from_millis(300), || {
+            std::hint::black_box(bestfit::solve(std::hint::black_box(&inst)));
+        });
+        println!(
+            "{:<22} {:>8} {:>12.0}ns {:>10.0}ns",
+            label,
+            inst.len(),
+            summary.mean(),
+            summary.median()
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Host-side arena for the *real* execution path (the PJRT coordinator).
+//!
+//! The simulated allocators manage a fake device; this arena manages one
+//! real, contiguous host allocation that the coordinator carves according
+//! to a solved [`Assignment`](crate::dsa::solution::Assignment) — the same
+//! profile→solve→replay mechanism, exercised on actual memory. Tensor
+//! staging buffers (batches, parameters in transit, logged activations)
+//! live here between PJRT calls.
+
+use crate::dsa::problem::DsaInstance;
+use crate::dsa::solution::Assignment;
+
+/// Alignment of every carved slot (matches typical tensor alignment).
+pub const ALIGN: usize = 64;
+
+/// One contiguous host allocation carved by block offsets.
+#[derive(Debug)]
+pub struct HostArena {
+    storage: Box<[u8]>,
+    /// Per-block (offset, size), indexed by block id (= λ position).
+    slots: Vec<(usize, usize)>,
+}
+
+impl HostArena {
+    /// Build an arena for a solved instance. Offsets come pre-aligned when
+    /// profiled sizes are aligned; the arena additionally validates them.
+    pub fn from_assignment(inst: &DsaInstance, sol: &Assignment) -> HostArena {
+        assert!(sol.validate(inst).is_ok(), "refusing unsound assignment");
+        let slots: Vec<(usize, usize)> = inst
+            .blocks
+            .iter()
+            .map(|b| (sol.offsets[b.id] as usize, b.size as usize))
+            .collect();
+        HostArena {
+            storage: vec![0u8; sol.peak as usize].into_boxed_slice(),
+            slots,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.storage.len()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn slot(&self, id: usize) -> (usize, usize) {
+        self.slots[id]
+    }
+
+    /// Immutable view of block `id`'s bytes.
+    pub fn bytes(&self, id: usize) -> &[u8] {
+        let (off, len) = self.slots[id];
+        &self.storage[off..off + len]
+    }
+
+    /// Mutable view of block `id`'s bytes. The DSA validator guarantees
+    /// lifetime-overlapping blocks are disjoint; *temporal* exclusivity is
+    /// the caller's contract exactly as in the paper.
+    pub fn bytes_mut(&mut self, id: usize) -> &mut [u8] {
+        let (off, len) = self.slots[id];
+        &mut self.storage[off..off + len]
+    }
+
+    /// Copy `src` into block `id` (must fit the profiled size).
+    pub fn write(&mut self, id: usize, src: &[u8]) {
+        let dst = self.bytes_mut(id);
+        assert!(
+            src.len() <= dst.len(),
+            "write of {} bytes into slot of {}",
+            src.len(),
+            dst.len()
+        );
+        dst[..src.len()].copy_from_slice(src);
+    }
+
+    /// Interpret block `id` as little-endian `f32`s.
+    pub fn as_f32(&self, id: usize) -> Vec<f32> {
+        self.bytes(id)
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn write_f32(&mut self, id: usize, values: &[f32]) {
+        let mut raw = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(id, &raw);
+    }
+}
+
+/// Round a byte size up to the arena alignment — profilers on the real
+/// path use this so offsets stay aligned.
+pub fn align_up(size: u64) -> u64 {
+    size.next_multiple_of(ALIGN as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsa::bestfit;
+
+    fn arena() -> HostArena {
+        let inst = DsaInstance::from_triples(&[(64, 0, 4), (128, 2, 6), (64, 5, 7)]);
+        let sol = bestfit::solve(&inst);
+        HostArena::from_assignment(&inst, &sol)
+    }
+
+    #[test]
+    fn capacity_equals_packed_peak() {
+        let inst = DsaInstance::from_triples(&[(64, 0, 4), (128, 2, 6), (64, 5, 7)]);
+        let sol = bestfit::solve(&inst);
+        assert_eq!(arena().capacity(), sol.peak as usize);
+    }
+
+    #[test]
+    fn overlapping_blocks_are_disjoint_in_storage() {
+        let a = arena();
+        let (o0, l0) = a.slot(0);
+        let (o1, l1) = a.slot(1);
+        assert!(o0 + l0 <= o1 || o1 + l1 <= o0);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut a = arena();
+        a.write_f32(0, &[1.0, 2.0, 3.0]);
+        assert_eq!(&a.as_f32(0)[..3], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn serial_blocks_share_storage() {
+        // Blocks 0 and 2 don't overlap in time — best-fit reuses space.
+        let a = arena();
+        let (o0, _) = a.slot(0);
+        let (o2, _) = a.slot(2);
+        assert_eq!(o0, o2, "temporally disjoint equal-size blocks share a slot");
+    }
+
+    #[test]
+    #[should_panic(expected = "write of")]
+    fn oversized_write_panics() {
+        let mut a = arena();
+        a.write(0, &[0u8; 65]);
+    }
+
+    #[test]
+    fn align_up_works() {
+        assert_eq!(align_up(1), 64);
+        assert_eq!(align_up(64), 64);
+        assert_eq!(align_up(65), 128);
+    }
+}

@@ -1,0 +1,102 @@
+//! Device memory allocators: the paper's profile-guided allocator and the
+//! two baselines it is evaluated against.
+//!
+//! * [`network_wise`] — allocate from the physical device per request
+//!   (§5.1 calls this *network-wise* allocation: 1.50 GB for AlexNet b32
+//!   training where the pool needs 1.21 GB);
+//! * [`pool`] — the Chainer/CuPy memory pool (the paper's `orig` baseline);
+//! * [`profile_guided`] — the paper's `opt`: profile → solve DSA → replay
+//!   offsets in O(1), with reoptimization and interrupt/resume (§4);
+//! * [`arena`] — a *host* arena used by the real (PJRT) execution path.
+//!
+//! All allocators implement [`DeviceAllocator`] against the simulated
+//! device, so the simulator can run any model × any allocator × any
+//! device configuration — the full grid of Figures 2 and 3.
+
+pub mod arena;
+pub mod network_wise;
+pub mod pool;
+pub mod profile_guided;
+
+use crate::device::{OutOfMemory, SimDevice};
+
+/// An allocation handle: device address + requested size. Addresses of
+/// live blocks are unique, which allocators rely on for free-side lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ptr {
+    pub addr: u64,
+    pub size: u64,
+}
+
+/// Counters every allocator maintains (reported in experiments).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocStats {
+    pub n_allocs: u64,
+    pub n_frees: u64,
+    /// Requests served without touching the device (pool hit / replay).
+    pub fast_path: u64,
+    /// Requests that called into `cudaMalloc`.
+    pub device_mallocs: u64,
+    /// Times the allocator dumped its cached memory (pool free-all).
+    pub free_alls: u64,
+    /// Reoptimization events (profile-guided only).
+    pub reopts: u64,
+}
+
+/// The allocator interface the execution simulator drives. One iteration =
+/// one propagation (forward, or forward+backward+update for training).
+pub trait DeviceAllocator {
+    fn name(&self) -> &'static str;
+
+    /// Serve a memory request of `size` bytes.
+    fn alloc(&mut self, dev: &mut SimDevice, size: u64) -> Result<Ptr, OutOfMemory>;
+
+    /// Release a previously returned pointer.
+    fn free(&mut self, dev: &mut SimDevice, ptr: Ptr);
+
+    /// Called before each propagation (the paper resets λ here, §4.2).
+    fn begin_iteration(&mut self, _dev: &mut SimDevice) {}
+
+    /// Called after each propagation (the profile-guided allocator solves
+    /// or reoptimizes here; the pool does nothing). Errs when the arena
+    /// for the new plan does not fit on the device.
+    fn end_iteration(&mut self, _dev: &mut SimDevice) -> Result<(), OutOfMemory> {
+        Ok(())
+    }
+
+    /// Enter a non-hot region (§4.3). Default: no-op.
+    fn interrupt(&mut self) {}
+
+    /// Leave a non-hot region (§4.3). Default: no-op.
+    fn resume(&mut self) {}
+
+    /// Bytes of device memory this allocator is holding (in-use + cached).
+    fn held_bytes(&self) -> u64;
+
+    fn stats(&self) -> AllocStats;
+
+    /// Wall-clock nanoseconds spent in offline solving (profile-guided
+    /// only); reported separately in Fig 4.
+    fn solve_ns(&self) -> u64 {
+        0
+    }
+}
+
+/// Round a request up to the pool granularity CuPy uses (512 B).
+pub const ROUND: u64 = 512;
+
+pub fn round_up(size: u64) -> u64 {
+    size.next_multiple_of(ROUND)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_granularity() {
+        assert_eq!(round_up(1), 512);
+        assert_eq!(round_up(512), 512);
+        assert_eq!(round_up(513), 1024);
+    }
+}

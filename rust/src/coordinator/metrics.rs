@@ -1,0 +1,60 @@
+//! Serving/training metrics counters.
+
+use crate::util::stats::Summary;
+use std::time::Duration;
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub latency_ms: Summary,
+    pub batch_sizes: Summary,
+    pub requests: u64,
+    pub batches: u64,
+    pub wall: Duration,
+}
+
+impl ServeMetrics {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.requests as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn report(&mut self) -> String {
+        format!(
+            "requests={} batches={} throughput={:.1} req/s mean_batch={:.1} \
+             latency p50={:.2} ms p99={:.2} ms",
+            self.requests,
+            self.batches,
+            self.throughput_rps(),
+            self.batch_sizes.mean(),
+            self.latency_ms.percentile(50.0),
+            self.latency_ms.percentile(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let mut m = ServeMetrics {
+            requests: 100,
+            wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert_eq!(m.throughput_rps(), 50.0);
+        m.latency_ms.add(1.0);
+        m.batch_sizes.add(8.0);
+        assert!(m.report().contains("throughput=50.0"));
+    }
+
+    #[test]
+    fn zero_wall_is_safe() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+}

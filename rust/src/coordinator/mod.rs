@@ -1,0 +1,234 @@
+//! The L3 coordinator: drives *real* training and serving of the L2 model
+//! through PJRT, with every per-step host staging buffer managed by the
+//! paper's profile→solve→replay mechanism ([`staging`]).
+//!
+//! The paper's contribution is the memory optimizer, so L3 is deliberately
+//! thin on orchestration (CLI + train/serve loops + metrics) and thick on
+//! the memory path: iteration 0 profiles the staging-buffer pattern,
+//! [`dsa::bestfit`](crate::dsa::bestfit) packs it, and every subsequent
+//! step replays fixed offsets in one [`HostArena`]
+//! (crate::alloc::arena::HostArena) — O(1) per request, zero allocation on
+//! the hot path.
+
+pub mod metrics;
+pub mod queue;
+pub mod serve;
+pub mod staging;
+
+use crate::runtime::buffers::{literal_f32, scalar_f32, to_f32};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+use anyhow::{Context, Result};
+use staging::StagingPlanner;
+use std::path::Path;
+use std::time::Instant;
+
+/// Training configuration for the e2e driver.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: u32,
+    pub batch: u32,
+    pub seed: u64,
+    /// Stage a parameter checkpoint every N steps (exercises the §4.3
+    /// interrupt/resume path on the real pipeline: checkpoints are
+    /// non-hot — they do not occur every iteration).
+    pub checkpoint_every: u32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            steps: 200,
+            batch: 32,
+            seed: 7,
+            checkpoint_every: 50,
+        }
+    }
+}
+
+/// Per-run training report.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub avg_step_ms: f64,
+    /// Host staging arena size after planning (bytes).
+    pub arena_bytes: usize,
+    /// Fraction of staging requests served by O(1) replay.
+    pub replay_fraction: f64,
+    pub reopts: u64,
+}
+
+/// Trains the L2 MLP via the `train_step_b{B}` artifact.
+pub struct TrainingCoordinator {
+    runtime: Runtime,
+    layer_sizes: Vec<usize>,
+    params: Vec<Vec<f32>>,
+    staging: StagingPlanner,
+    /// Ground-truth projection for synthetic labels (mirrors
+    /// `model.synthetic_batch` on the Python side).
+    w_true: Vec<f32>,
+    rng: Pcg32,
+}
+
+impl TrainingCoordinator {
+    /// Load artifacts from `dir` and He-initialize parameters.
+    pub fn new(dir: &Path, seed: u64) -> Result<TrainingCoordinator> {
+        let mut runtime = Runtime::cpu()?;
+        runtime.load_artifacts(dir)?;
+        let meta = crate::util::json::Json::parse(&std::fs::read_to_string(
+            dir.join("meta.json"),
+        )?)?;
+        let layer_sizes: Vec<usize> = meta
+            .get("layer_sizes")
+            .as_arr()
+            .context("meta.json: layer_sizes")?
+            .iter()
+            .filter_map(crate::util::json::Json::as_usize)
+            .collect();
+        anyhow::ensure!(layer_sizes.len() >= 2, "need at least one layer");
+
+        let mut rng = Pcg32::seeded(seed);
+        let mut params = Vec::new();
+        for (&fan_in, &fan_out) in layer_sizes.iter().zip(layer_sizes.iter().skip(1)) {
+            let scale = (2.0 / fan_in as f64).sqrt();
+            params.push(
+                (0..fan_in * fan_out)
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect(),
+            );
+            params.push(vec![0f32; fan_out]);
+        }
+        let w_true = {
+            let (d, c) = (layer_sizes[0], *layer_sizes.last().unwrap());
+            (0..d * c).map(|_| rng.normal() as f32).collect()
+        };
+        Ok(TrainingCoordinator {
+            runtime,
+            layer_sizes,
+            params,
+            staging: StagingPlanner::new("mlp", "training"),
+            w_true,
+            rng,
+        })
+    }
+
+    pub fn layer_sizes(&self) -> &[usize] {
+        &self.layer_sizes
+    }
+
+    fn param_dims(&self, idx: usize) -> Vec<usize> {
+        let layer = idx / 2;
+        let (fan_in, fan_out) = (self.layer_sizes[layer], self.layer_sizes[layer + 1]);
+        if idx % 2 == 0 {
+            vec![fan_in, fan_out]
+        } else {
+            vec![fan_out]
+        }
+    }
+
+    /// Synthetic batch: x ~ N(0,1), label = argmax(x · w_true).
+    fn make_batch(&mut self, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let (d, c) = (self.layer_sizes[0], *self.layer_sizes.last().unwrap());
+        let mut x = vec![0f32; batch * d];
+        for v in &mut x {
+            *v = self.rng.normal() as f32;
+        }
+        let mut y = vec![0f32; batch * c];
+        for b in 0..batch {
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for j in 0..c {
+                let mut acc = 0f32;
+                for k in 0..d {
+                    acc += x[b * d + k] * self.w_true[k * c + j];
+                }
+                if acc > best.1 {
+                    best = (j, acc);
+                }
+            }
+            y[b * c + best.0] = 1.0;
+        }
+        (x, y)
+    }
+
+    /// Run the training loop; every host staging buffer goes through the
+    /// profile-guided planner.
+    pub fn train(&mut self, cfg: &TrainConfig) -> Result<TrainReport> {
+        let entry_name = format!("train_step_b{}", cfg.batch);
+        let (d, c) = (self.layer_sizes[0], *self.layer_sizes.last().unwrap());
+        let batch = cfg.batch as usize;
+        let mut losses = Vec::with_capacity(cfg.steps as usize);
+        let mut step_ms = Vec::with_capacity(cfg.steps as usize);
+
+        for step in 0..cfg.steps {
+            let t0 = Instant::now();
+            self.staging.begin_iteration();
+
+            // Stage the input batch through the arena.
+            let (x_host, y_host) = self.make_batch(batch);
+            let x_buf = self.staging.alloc(x_host.len() * 4);
+            self.staging.write_f32(&x_buf, &x_host);
+            let y_buf = self.staging.alloc(y_host.len() * 4);
+            self.staging.write_f32(&y_buf, &y_host);
+
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+            for (i, p) in self.params.iter().enumerate() {
+                inputs.push(literal_f32(p, &self.param_dims(i))?);
+            }
+            inputs.push(literal_f32(&self.staging.read_f32(&x_buf, batch * d), &[batch, d])?);
+            inputs.push(literal_f32(&self.staging.read_f32(&y_buf, batch * c), &[batch, c])?);
+
+            let entry = self.runtime.entry(&entry_name)?;
+            let outputs = entry.execute(&inputs)?;
+            anyhow::ensure!(outputs.len() == self.params.len() + 1);
+
+            // Stage the loss readback, then the updated parameters.
+            let loss = scalar_f32(&outputs[self.params.len()])?;
+            let loss_buf = self.staging.alloc(4);
+            self.staging.write_f32(&loss_buf, &[loss]);
+            for (i, out) in outputs[..self.params.len()].iter().enumerate() {
+                self.params[i] = to_f32(out)?;
+            }
+            self.staging.free(loss_buf);
+            self.staging.free(y_buf);
+            self.staging.free(x_buf);
+
+            // Non-hot checkpoint staging (§4.3: interrupt/resume).
+            if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every == cfg.checkpoint_every - 1
+            {
+                self.staging.interrupt();
+                let bytes: usize = self.params.iter().map(|p| p.len() * 4).sum();
+                let ckpt = self.staging.alloc(bytes);
+                let flat: Vec<f32> = self.params.iter().flatten().copied().collect();
+                self.staging.write_f32(&ckpt, &flat);
+                self.staging.free(ckpt);
+                self.staging.resume();
+            }
+
+            self.staging.end_iteration();
+            losses.push(loss);
+            step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+
+        let stats = self.staging.stats();
+        Ok(TrainReport {
+            losses,
+            avg_step_ms: step_ms.iter().sum::<f64>() / step_ms.len().max(1) as f64,
+            arena_bytes: self.staging.arena_bytes(),
+            replay_fraction: if stats.n_allocs > 0 {
+                stats.fast_path as f64 / stats.n_allocs as f64
+            } else {
+                0.0
+            },
+            reopts: stats.reopts,
+        })
+    }
+
+    /// Current loss-layer parameters, for inspection/checkpointing.
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}

@@ -1,0 +1,32 @@
+//! Dynamic Storage Allocation (DSA) — the optimization core of the paper
+//! (§3). A profiled propagation yields a set of memory blocks, each with a
+//! fixed *lifetime* (allocation/release clock ticks) and size; DSA assigns
+//! each block a fixed *offset* in one arena such that blocks whose lifetimes
+//! overlap never overlap in address space, minimizing the arena peak.
+//!
+//! DSA is a special case of two-dimensional strip packing (2SP) where the
+//! x-extent (lifetime) of every rectangle is fixed; it is NP-hard
+//! [Garey & Johnson 1979]. This module provides:
+//!
+//! * [`problem`] — instance model, colliding pairs, lower bounds;
+//! * [`solution`] — offset assignments and the overlap validator;
+//! * [`skyline`] — the *offset line* structure of §3.2;
+//! * [`bestfit`] — the paper's best-fit heuristic (after Burke et al. 2004);
+//! * [`policies`] — ablatable block-/offset-choice policies;
+//! * [`firstfit`] — address-ordered first-fit baseline (what an idealized
+//!   online allocator achieves);
+//! * [`exact`] — branch-and-bound exact solver standing in for CPLEX;
+//! * [`mip`] — LP-format emitter of the paper's §3.1 MIP formulation.
+
+pub mod bestfit;
+pub mod exact;
+pub mod firstfit;
+pub mod mip;
+pub mod policies;
+pub mod problem;
+pub mod skyline;
+pub mod solution;
+
+pub use bestfit::solve as solve_bestfit;
+pub use problem::{Block, DsaInstance};
+pub use solution::Assignment;

@@ -1,0 +1,126 @@
+//! Ablatable choice policies for the best-fit heuristic.
+//!
+//! The paper fixes *block choice* = longest lifetime and *offset choice* =
+//! lowest-then-leftmost (§3.2). DESIGN.md calls these design choices out
+//! for ablation; `benches/ablations.rs` sweeps them across all model
+//! traces to quantify how much each rule matters.
+
+use super::problem::Block;
+
+/// Which block to place on the chosen offset line, among those whose
+/// lifetimes fit the line's span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockChoice {
+    /// The paper's rule: longest lifetime first (ties: larger size, then
+    /// lower id — deterministic).
+    LongestLifetime,
+    /// Largest size first (classic decreasing-size packing intuition).
+    LargestSize,
+    /// Largest area (size × lifetime) first.
+    LargestArea,
+    /// Profile order: earliest allocation tick first (FIFO-like).
+    EarliestAlloc,
+}
+
+impl BlockChoice {
+    pub const ALL: [BlockChoice; 4] = [
+        BlockChoice::LongestLifetime,
+        BlockChoice::LargestSize,
+        BlockChoice::LargestArea,
+        BlockChoice::EarliestAlloc,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BlockChoice::LongestLifetime => "longest-lifetime",
+            BlockChoice::LargestSize => "largest-size",
+            BlockChoice::LargestArea => "largest-area",
+            BlockChoice::EarliestAlloc => "earliest-alloc",
+        }
+    }
+
+    /// Strict "is `a` preferred over `b`" under this policy.
+    pub fn prefer(self, a: &Block, b: &Block) -> bool {
+        let key_a = self.key(a);
+        let key_b = self.key(b);
+        // Lexicographic: primary policy key, then size, then lower id for
+        // full determinism across runs.
+        (key_a, a.size, std::cmp::Reverse(a.id)) > (key_b, b.size, std::cmp::Reverse(b.id))
+    }
+
+    fn key(self, b: &Block) -> u64 {
+        match self {
+            BlockChoice::LongestLifetime => b.lifetime(),
+            BlockChoice::LargestSize => b.size,
+            BlockChoice::LargestArea => b.size.saturating_mul(b.lifetime()),
+            // Earlier alloc = preferred ⇒ invert for max-comparison.
+            BlockChoice::EarliestAlloc => u64::MAX - b.alloc_at,
+        }
+    }
+}
+
+/// Full solver policy (offset choice is structural in the skyline —
+/// lowest/leftmost — so only block choice varies today; the struct leaves
+/// room for future offset policies without an API break).
+#[derive(Debug, Clone, Copy)]
+pub struct Policy {
+    pub block_choice: BlockChoice,
+}
+
+impl Default for Policy {
+    /// The paper's configuration.
+    fn default() -> Policy {
+        Policy {
+            block_choice: BlockChoice::LongestLifetime,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(id: usize, size: u64, a: u64, f: u64) -> Block {
+        Block::new(id, size, a, f)
+    }
+
+    #[test]
+    fn longest_lifetime_prefers_longer() {
+        let p = BlockChoice::LongestLifetime;
+        assert!(p.prefer(&blk(0, 1, 0, 10), &blk(1, 100, 0, 5)));
+    }
+
+    #[test]
+    fn lifetime_tie_broken_by_size_then_id() {
+        let p = BlockChoice::LongestLifetime;
+        assert!(p.prefer(&blk(0, 9, 0, 5), &blk(1, 3, 0, 5)));
+        // Same lifetime and size → lower id preferred.
+        assert!(p.prefer(&blk(0, 3, 0, 5), &blk(1, 3, 0, 5)));
+        assert!(!p.prefer(&blk(1, 3, 0, 5), &blk(0, 3, 0, 5)));
+    }
+
+    #[test]
+    fn largest_size_policy() {
+        let p = BlockChoice::LargestSize;
+        assert!(p.prefer(&blk(0, 100, 0, 2), &blk(1, 1, 0, 50)));
+    }
+
+    #[test]
+    fn earliest_alloc_policy() {
+        let p = BlockChoice::EarliestAlloc;
+        assert!(p.prefer(&blk(1, 1, 0, 2), &blk(0, 100, 5, 50)));
+    }
+
+    #[test]
+    fn preference_is_asymmetric() {
+        for policy in BlockChoice::ALL {
+            let a = blk(0, 4, 0, 7);
+            let b = blk(1, 9, 1, 3);
+            assert!(
+                policy.prefer(&a, &b) ^ policy.prefer(&b, &a),
+                "policy {} must order distinct blocks",
+                policy.name()
+            );
+        }
+    }
+}

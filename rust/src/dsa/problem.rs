@@ -1,0 +1,301 @@
+//! DSA instance model: blocks with fixed lifetimes, colliding pairs, and
+//! lower bounds on the achievable peak.
+
+use crate::util::json::Json;
+
+/// One profiled memory block (§3.1 parameters): size `w_i` and lifetime
+/// `[alloc_at, free_at)` on the integer profiling clock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Block {
+    /// Dense id; equals the block's index in [`DsaInstance::blocks`].
+    pub id: usize,
+    /// Size `w_i` in bytes (already alignment-padded by the profiler).
+    pub size: u64,
+    /// Request tick `y_i` (inclusive).
+    pub alloc_at: u64,
+    /// Release tick `ȳ_i` (exclusive). `free_at > alloc_at` always holds.
+    pub free_at: u64,
+}
+
+impl Block {
+    pub fn new(id: usize, size: u64, alloc_at: u64, free_at: u64) -> Block {
+        assert!(free_at > alloc_at, "block {id}: empty lifetime");
+        assert!(size > 0, "block {id}: zero size");
+        Block {
+            id,
+            size,
+            alloc_at,
+            free_at,
+        }
+    }
+
+    /// Lifetime length (the "width" of the rectangle).
+    pub fn lifetime(&self) -> u64 {
+        self.free_at - self.alloc_at
+    }
+
+    /// Do two blocks' lifetimes overlap (half-open interval intersection)?
+    pub fn overlaps(&self, other: &Block) -> bool {
+        self.alloc_at < other.free_at && other.alloc_at < self.free_at
+    }
+}
+
+/// A DSA instance: the blocks plus the available device capacity `W`.
+#[derive(Debug, Clone, Default)]
+pub struct DsaInstance {
+    pub blocks: Vec<Block>,
+    /// Available maximum memory size `W`; `None` = unbounded (the MIP's
+    /// big-M still needs a finite W, for which [`Self::big_m`] is used).
+    pub capacity: Option<u64>,
+}
+
+impl DsaInstance {
+    pub fn new(blocks: Vec<Block>) -> DsaInstance {
+        for (i, b) in blocks.iter().enumerate() {
+            assert_eq!(b.id, i, "block ids must be dense and ordered");
+        }
+        DsaInstance {
+            blocks,
+            capacity: None,
+        }
+    }
+
+    pub fn with_capacity(mut self, capacity: u64) -> DsaInstance {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    /// Convenience constructor from `(size, alloc_at, free_at)` triples.
+    pub fn from_triples(triples: &[(u64, u64, u64)]) -> DsaInstance {
+        DsaInstance::new(
+            triples
+                .iter()
+                .enumerate()
+                .map(|(i, &(w, a, f))| Block::new(i, w, a, f))
+                .collect(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// The set `E` of possible colliding pairs (§3.1): pairs with
+    /// overlapping lifetimes, `i < j`. Computed with a sweep over
+    /// allocation order — O(n log n + |E|) rather than the naive O(n²)
+    /// — because Inception-ResNet training traces reach tens of
+    /// thousands of blocks.
+    pub fn colliding_pairs(&self) -> Vec<(usize, usize)> {
+        let mut order: Vec<usize> = (0..self.blocks.len()).collect();
+        order.sort_unstable_by_key(|&i| self.blocks[i].alloc_at);
+        let mut live: Vec<usize> = Vec::new();
+        let mut pairs = Vec::new();
+        for &i in &order {
+            let b = &self.blocks[i];
+            live.retain(|&j| self.blocks[j].free_at > b.alloc_at);
+            for &j in &live {
+                pairs.push((i.min(j), i.max(j)));
+            }
+            live.push(i);
+        }
+        pairs.sort_unstable();
+        pairs
+    }
+
+    /// The liveness lower bound: the maximum, over time, of the total size
+    /// of simultaneously live blocks. No packing can beat this, so it
+    /// certifies heuristic quality (§5.2 compares against CPLEX optima;
+    /// when the heuristic meets this bound it is provably optimal too).
+    pub fn liveness_lower_bound(&self) -> u64 {
+        // Event sweep: +size at alloc, -size at free. Frees sort before
+        // allocs at the same tick (half-open lifetimes don't collide).
+        let mut events: Vec<(u64, i8, u64)> = Vec::with_capacity(self.blocks.len() * 2);
+        for b in &self.blocks {
+            events.push((b.alloc_at, 1, b.size));
+            events.push((b.free_at, 0, b.size));
+        }
+        events.sort_unstable();
+        let (mut cur, mut peak) = (0u64, 0u64);
+        for (_, kind, size) in events {
+            if kind == 1 {
+                cur += size;
+                peak = peak.max(cur);
+            } else {
+                cur -= size;
+            }
+        }
+        peak
+    }
+
+    /// Largest single block — a second trivial lower bound.
+    pub fn max_block_size(&self) -> u64 {
+        self.blocks.iter().map(|b| b.size).max().unwrap_or(0)
+    }
+
+    /// Lower bound used for pruning: max of the liveness and single-block
+    /// bounds.
+    pub fn lower_bound(&self) -> u64 {
+        self.liveness_lower_bound().max(self.max_block_size())
+    }
+
+    /// Sum of all block sizes — the trivial upper bound (every block gets
+    /// its own address space).
+    pub fn total_size(&self) -> u64 {
+        self.blocks.iter().map(|b| b.size).sum()
+    }
+
+    /// Big-M for the MIP formulation: the declared capacity, else the
+    /// trivial upper bound.
+    pub fn big_m(&self) -> u64 {
+        self.capacity.unwrap_or_else(|| self.total_size().max(1))
+    }
+
+    /// Clock horizon (one past the last free tick).
+    pub fn horizon(&self) -> u64 {
+        self.blocks.iter().map(|b| b.free_at).max().unwrap_or(0)
+    }
+
+    // ----- JSON (trace files, experiment fixtures) ------------------------
+
+    pub fn to_json(&self) -> Json {
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|b| {
+                Json::from_pairs(vec![
+                    ("size", Json::Int(b.size as i64)),
+                    ("alloc_at", Json::Int(b.alloc_at as i64)),
+                    ("free_at", Json::Int(b.free_at as i64)),
+                ])
+            })
+            .collect();
+        let mut obj = Json::obj();
+        obj.set("blocks", Json::Arr(blocks));
+        if let Some(c) = self.capacity {
+            obj.set("capacity", Json::Int(c as i64));
+        }
+        obj
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<DsaInstance> {
+        let arr = j
+            .get("blocks")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing blocks array"))?;
+        let mut blocks = Vec::with_capacity(arr.len());
+        for (i, bj) in arr.iter().enumerate() {
+            let size = bj
+                .get("size")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("block {i}: bad size"))?;
+            let alloc_at = bj
+                .get("alloc_at")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("block {i}: bad alloc_at"))?;
+            let free_at = bj
+                .get("free_at")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("block {i}: bad free_at"))?;
+            anyhow::ensure!(free_at > alloc_at, "block {i}: empty lifetime");
+            anyhow::ensure!(size > 0, "block {i}: zero size");
+            blocks.push(Block::new(i, size, alloc_at, free_at));
+        }
+        let mut inst = DsaInstance::new(blocks);
+        inst.capacity = j.get("capacity").as_u64();
+        Ok(inst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst3() -> DsaInstance {
+        // ┌────────┐ 0..4 size 10
+        //     ┌────────┐ 2..6 size 20
+        //            ┌──┐ 5..7 size 5
+        DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (5, 5, 7)])
+    }
+
+    #[test]
+    fn overlap_semantics_half_open() {
+        let a = Block::new(0, 1, 0, 4);
+        let b = Block::new(1, 1, 4, 8); // touching endpoints don't overlap
+        let c = Block::new(2, 1, 3, 5);
+        assert!(!a.overlaps(&b));
+        assert!(a.overlaps(&c));
+        assert!(c.overlaps(&b));
+        assert!(a.overlaps(&a));
+    }
+
+    #[test]
+    fn colliding_pairs_sweep() {
+        assert_eq!(inst3().colliding_pairs(), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn colliding_pairs_matches_naive_quadratic() {
+        // Cross-check the sweep against the O(n²) definition on a
+        // deterministic pseudo-random instance.
+        let mut rng = crate::util::rng::Pcg32::seeded(99);
+        let blocks: Vec<Block> = (0..60)
+            .map(|i| {
+                let a = rng.range(0, 100);
+                Block::new(i, rng.range(1, 50), a, a + rng.range(1, 30))
+            })
+            .collect();
+        let inst = DsaInstance::new(blocks.clone());
+        let mut naive = Vec::new();
+        for i in 0..blocks.len() {
+            for j in i + 1..blocks.len() {
+                if blocks[i].overlaps(&blocks[j]) {
+                    naive.push((i, j));
+                }
+            }
+        }
+        assert_eq!(inst.colliding_pairs(), naive);
+    }
+
+    #[test]
+    fn liveness_lower_bound_sweep() {
+        // Peak is at t in [2,4): blocks 0 and 1 live → 30.
+        assert_eq!(inst3().liveness_lower_bound(), 30);
+        // Free-then-alloc at the same tick must not double-count.
+        let touching = DsaInstance::from_triples(&[(10, 0, 4), (10, 4, 8)]);
+        assert_eq!(touching.liveness_lower_bound(), 10);
+    }
+
+    #[test]
+    fn bounds_ordering() {
+        let i = inst3();
+        assert!(i.lower_bound() <= i.total_size());
+        assert_eq!(i.max_block_size(), 20);
+        assert_eq!(i.total_size(), 35);
+        assert_eq!(i.horizon(), 7);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let i = inst3().with_capacity(1 << 30);
+        let j = i.to_json();
+        let back = DsaInstance::from_json(&j).unwrap();
+        assert_eq!(back.blocks, i.blocks);
+        assert_eq!(back.capacity, i.capacity);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        for src in [
+            r#"{}"#,
+            r#"{"blocks":[{"size":0,"alloc_at":0,"free_at":1}]}"#,
+            r#"{"blocks":[{"size":4,"alloc_at":5,"free_at":5}]}"#,
+        ] {
+            let j = Json::parse(src).unwrap();
+            assert!(DsaInstance::from_json(&j).is_err(), "src={src}");
+        }
+    }
+}

@@ -1,0 +1,303 @@
+//! The *offset line* structure of §3.2.
+//!
+//! The time axis `[0, horizon)` is partitioned into contiguous segments,
+//! each holding the current skyline height (= the lowest free offset over
+//! that time span). Invariant: **adjacent segments have different
+//! heights**, so the lowest segment's neighbours are strictly higher and a
+//! block can be placed on a segment iff its lifetime is contained in the
+//! segment's span — exactly the paper's "can be placed at the chosen offset
+//! without colliding with memory blocks placed already".
+//!
+//! Operations mirror Figure 1 of the paper: choose the lowest (leftmost on
+//! ties) offset line, place a block on it (splitting the segment), or
+//! *lift* the line into its lowest adjacent neighbour when nothing fits.
+
+/// One offset line: skyline height `height` over the time span `[t0, t1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Seg {
+    pub t0: u64,
+    pub t1: u64,
+    pub height: u64,
+}
+
+impl Seg {
+    pub fn span(&self) -> u64 {
+        self.t1 - self.t0
+    }
+
+    /// Is lifetime `[alloc_at, free_at)` contained in this span?
+    pub fn contains(&self, alloc_at: u64, free_at: u64) -> bool {
+        self.t0 <= alloc_at && free_at <= self.t1
+    }
+}
+
+/// The skyline: an ordered, contiguous, height-distinct segment list.
+#[derive(Debug, Clone)]
+pub struct Skyline {
+    segs: Vec<Seg>,
+}
+
+impl Skyline {
+    /// Fresh skyline at height 0 over `[0, horizon)`.
+    pub fn new(horizon: u64) -> Skyline {
+        assert!(horizon > 0, "empty horizon");
+        Skyline {
+            segs: vec![Seg {
+                t0: 0,
+                t1: horizon,
+                height: 0,
+            }],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.segs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    pub fn seg(&self, idx: usize) -> Seg {
+        self.segs[idx]
+    }
+
+    pub fn segments(&self) -> &[Seg] {
+        &self.segs
+    }
+
+    /// Index of the lowest offset line; leftmost wins ties (§3.2).
+    pub fn lowest_leftmost(&self) -> usize {
+        let mut best = 0;
+        for (i, s) in self.segs.iter().enumerate().skip(1) {
+            if s.height < self.segs[best].height {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Skyline height at time `t`.
+    pub fn height_at(&self, t: u64) -> u64 {
+        match self.segs.binary_search_by(|s| {
+            if t < s.t0 {
+                std::cmp::Ordering::Greater
+            } else if t >= s.t1 {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(i) => self.segs[i].height,
+            Err(_) => panic!("height_at({t}) outside horizon"),
+        }
+    }
+
+    /// Highest offset line — after all placements this equals the packing
+    /// peak.
+    pub fn max_height(&self) -> u64 {
+        self.segs.iter().map(|s| s.height).max().unwrap_or(0)
+    }
+
+    /// Place a block with lifetime `[alloc_at, free_at)` and size `size`
+    /// on segment `idx`; returns the assigned offset (the segment height).
+    /// The lifetime must be contained in the segment span.
+    pub fn place(&mut self, idx: usize, alloc_at: u64, free_at: u64, size: u64) -> u64 {
+        let seg = self.segs[idx];
+        assert!(
+            seg.contains(alloc_at, free_at),
+            "block [{alloc_at},{free_at}) not contained in segment [{},{})",
+            seg.t0,
+            seg.t1
+        );
+        assert!(size > 0);
+        let offset = seg.height;
+        let raised = Seg {
+            t0: alloc_at,
+            t1: free_at,
+            height: seg.height + size,
+        };
+        let mut replacement = Vec::with_capacity(3);
+        if alloc_at > seg.t0 {
+            replacement.push(Seg {
+                t0: seg.t0,
+                t1: alloc_at,
+                height: seg.height,
+            });
+        }
+        replacement.push(raised);
+        if free_at < seg.t1 {
+            replacement.push(Seg {
+                t0: free_at,
+                t1: seg.t1,
+                height: seg.height,
+            });
+        }
+        self.segs.splice(idx..=idx, replacement);
+        self.normalize_around(idx);
+        offset
+    }
+
+    /// Lift the offset line `idx` into its lowest adjacent neighbour
+    /// (both, when they tie) — the §3.2 move used when no unplaced block
+    /// fits the chosen line. Panics when the skyline is a single segment
+    /// (the caller's search must have found a block in that case, since
+    /// every lifetime is contained in the full horizon).
+    pub fn lift(&mut self, idx: usize) {
+        let left = idx.checked_sub(1).map(|i| self.segs[i].height);
+        let right = self.segs.get(idx + 1).map(|s| s.height);
+        let target = match (left, right) {
+            (Some(l), Some(r)) => l.min(r),
+            (Some(l), None) => l,
+            (None, Some(r)) => r,
+            (None, None) => panic!("lift on a single-segment skyline"),
+        };
+        debug_assert!(target > self.segs[idx].height, "lift must raise");
+        self.segs[idx].height = target;
+        self.normalize_around(idx);
+    }
+
+    /// Merge equal-height neighbours around position `idx`, restoring the
+    /// height-distinct invariant.
+    fn normalize_around(&mut self, idx: usize) {
+        // Scan a small window; splice may have shifted indices, so clamp.
+        let mut i = idx.saturating_sub(1);
+        while i + 1 < self.segs.len() {
+            if self.segs[i].height == self.segs[i + 1].height {
+                self.segs[i].t1 = self.segs[i + 1].t1;
+                self.segs.remove(i + 1);
+            } else {
+                i += 1;
+                if i > idx + 3 {
+                    break; // outside the affected window
+                }
+            }
+        }
+    }
+
+    /// Check structural invariants (used by tests and debug assertions):
+    /// contiguous cover, positive spans, height-distinct neighbours.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.segs.is_empty() {
+            return Err("empty skyline".into());
+        }
+        for (i, s) in self.segs.iter().enumerate() {
+            if s.t1 <= s.t0 {
+                return Err(format!("segment {i} has empty span"));
+            }
+            if i > 0 {
+                let p = &self.segs[i - 1];
+                if p.t1 != s.t0 {
+                    return Err(format!("gap between segments {} and {i}", i - 1));
+                }
+                if p.height == s.height {
+                    return Err(format!("equal heights at segments {} and {i}", i - 1));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn place_splits_and_returns_offset() {
+        let mut sky = Skyline::new(10);
+        let off = sky.place(0, 2, 6, 5);
+        assert_eq!(off, 0);
+        assert_eq!(
+            sky.segments(),
+            &[
+                Seg { t0: 0, t1: 2, height: 0 },
+                Seg { t0: 2, t1: 6, height: 5 },
+                Seg { t0: 6, t1: 10, height: 0 },
+            ]
+        );
+        sky.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn place_full_span_no_split() {
+        let mut sky = Skyline::new(10);
+        sky.place(0, 0, 10, 3);
+        assert_eq!(sky.len(), 1);
+        assert_eq!(sky.max_height(), 3);
+    }
+
+    #[test]
+    fn equal_height_neighbours_merge_after_place() {
+        let mut sky = Skyline::new(10);
+        sky.place(0, 0, 5, 4); // [0,5)@4, [5,10)@0
+        let idx = sky.lowest_leftmost();
+        assert_eq!(sky.seg(idx).t0, 5);
+        sky.place(idx, 5, 10, 4); // both now height 4 → merge to one
+        assert_eq!(sky.len(), 1);
+        assert_eq!(sky.seg(0), Seg { t0: 0, t1: 10, height: 4 });
+    }
+
+    #[test]
+    fn lowest_leftmost_prefers_left_on_ties() {
+        let mut sky = Skyline::new(12);
+        sky.place(0, 4, 8, 2); // [0,4)@0, [4,8)@2, [8,12)@0
+        assert_eq!(sky.lowest_leftmost(), 0);
+    }
+
+    #[test]
+    fn lift_merges_into_lowest_neighbour() {
+        let mut sky = Skyline::new(12);
+        sky.place(0, 0, 4, 7); // [0,4)@7 [4,12)@0
+        let idx = sky.lowest_leftmost();
+        sky.place(idx, 8, 12, 3); // [0,4)@7 [4,8)@0 [8,12)@3
+        let low = sky.lowest_leftmost();
+        assert_eq!(sky.seg(low).height, 0);
+        sky.lift(low); // raises [4,8) to min(7,3)=3, merges with right
+        sky.check_invariants().unwrap();
+        assert_eq!(
+            sky.segments(),
+            &[Seg { t0: 0, t1: 4, height: 7 }, Seg { t0: 4, t1: 12, height: 3 }]
+        );
+    }
+
+    #[test]
+    fn lift_merges_both_when_neighbours_tie() {
+        let mut sky = Skyline::new(12);
+        sky.place(0, 0, 4, 5);
+        sky.place(sky.lowest_leftmost(), 8, 12, 5);
+        // [0,4)@5 [4,8)@0 [8,12)@5
+        sky.lift(sky.lowest_leftmost());
+        assert_eq!(sky.len(), 1);
+        assert_eq!(sky.seg(0).height, 5);
+    }
+
+    #[test]
+    fn height_at_lookup() {
+        let mut sky = Skyline::new(10);
+        sky.place(0, 3, 7, 9);
+        assert_eq!(sky.height_at(0), 0);
+        assert_eq!(sky.height_at(3), 9);
+        assert_eq!(sky.height_at(6), 9);
+        assert_eq!(sky.height_at(7), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not contained")]
+    fn place_outside_span_panics() {
+        let mut sky = Skyline::new(10);
+        sky.place(0, 0, 5, 1); // [0,5)@1 [5,10)@0
+        let idx = sky.lowest_leftmost();
+        sky.place(idx, 4, 6, 1); // spans into raised segment
+    }
+
+    #[test]
+    fn stacking_on_raised_segment() {
+        let mut sky = Skyline::new(8);
+        sky.place(0, 0, 8, 4);
+        let off = sky.place(0, 2, 6, 3);
+        assert_eq!(off, 4);
+        assert_eq!(sky.max_height(), 7);
+        sky.check_invariants().unwrap();
+    }
+}

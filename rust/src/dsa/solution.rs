@@ -1,0 +1,167 @@
+//! Offset assignments produced by the DSA solvers, plus the validator that
+//! certifies a packing is collision-free — the safety property the whole
+//! optimization rests on.
+
+use super::problem::DsaInstance;
+
+/// A solved packing: `offsets[i]` is `x_i`, `peak = max_i(x_i + w_i)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    pub offsets: Vec<u64>,
+    pub peak: u64,
+}
+
+/// Violations detected by [`Assignment::validate`].
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum Violation {
+    #[error("assignment covers {got} blocks, instance has {want}")]
+    WrongLength { got: usize, want: usize },
+    #[error("blocks {a} and {b} overlap in time and address space")]
+    Collision { a: usize, b: usize },
+    #[error("declared peak {declared} != actual peak {actual}")]
+    WrongPeak { declared: u64, actual: u64 },
+    #[error("peak {peak} exceeds capacity {capacity}")]
+    OverCapacity { peak: u64, capacity: u64 },
+}
+
+impl Assignment {
+    /// Build from offsets, computing the peak.
+    pub fn from_offsets(inst: &DsaInstance, offsets: Vec<u64>) -> Assignment {
+        assert_eq!(offsets.len(), inst.len());
+        let peak = inst
+            .blocks
+            .iter()
+            .map(|b| offsets[b.id] + b.size)
+            .max()
+            .unwrap_or(0);
+        Assignment { offsets, peak }
+    }
+
+    /// Verify the §3.1 constraints: every colliding pair is disjoint in
+    /// address space, the declared peak matches, and capacity (if any)
+    /// is respected.
+    pub fn validate(&self, inst: &DsaInstance) -> Result<(), Violation> {
+        if self.offsets.len() != inst.len() {
+            return Err(Violation::WrongLength {
+                got: self.offsets.len(),
+                want: inst.len(),
+            });
+        }
+        let actual = inst
+            .blocks
+            .iter()
+            .map(|b| self.offsets[b.id] + b.size)
+            .max()
+            .unwrap_or(0);
+        if actual != self.peak {
+            return Err(Violation::WrongPeak {
+                declared: self.peak,
+                actual,
+            });
+        }
+        if let Some(cap) = inst.capacity {
+            if self.peak > cap {
+                return Err(Violation::OverCapacity {
+                    peak: self.peak,
+                    capacity: cap,
+                });
+            }
+        }
+        for (i, j) in inst.colliding_pairs() {
+            let (bi, bj) = (&inst.blocks[i], &inst.blocks[j]);
+            let (xi, xj) = (self.offsets[i], self.offsets[j]);
+            let disjoint = xi + bi.size <= xj || xj + bj.size <= xi;
+            if !disjoint {
+                return Err(Violation::Collision { a: i, b: j });
+            }
+        }
+        Ok(())
+    }
+
+    /// Relative gap to a lower bound: `(peak - lb) / lb`. Zero means the
+    /// solution is provably optimal.
+    pub fn gap_to(&self, lower_bound: u64) -> f64 {
+        if lower_bound == 0 {
+            return 0.0;
+        }
+        (self.peak as f64 - lower_bound as f64) / lower_bound as f64
+    }
+
+    /// Fraction of the trivial no-sharing packing this solution needs —
+    /// the headline "memory reduction" number.
+    pub fn reduction_vs_total(&self, inst: &DsaInstance) -> f64 {
+        let total = inst.total_size();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.peak as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsa::problem::DsaInstance;
+
+    fn inst() -> DsaInstance {
+        DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (5, 5, 7)])
+    }
+
+    #[test]
+    fn valid_assignment_passes() {
+        // 0 at [0,10), 1 at [10,30), 2 at [0,5): 0–1 overlap in time but
+        // not space; 1–2 likewise; 0–2 don't overlap in time.
+        let a = Assignment::from_offsets(&inst(), vec![0, 10, 0]);
+        assert_eq!(a.peak, 30);
+        assert!(a.validate(&inst()).is_ok());
+    }
+
+    #[test]
+    fn collision_detected() {
+        let a = Assignment::from_offsets(&inst(), vec![0, 5, 0]);
+        assert_eq!(
+            a.validate(&inst()),
+            Err(Violation::Collision { a: 0, b: 1 })
+        );
+    }
+
+    #[test]
+    fn wrong_peak_detected() {
+        let mut a = Assignment::from_offsets(&inst(), vec![0, 10, 0]);
+        a.peak = 31;
+        assert!(matches!(
+            a.validate(&inst()),
+            Err(Violation::WrongPeak { .. })
+        ));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let i = inst().with_capacity(25);
+        let a = Assignment::from_offsets(&i, vec![0, 10, 0]);
+        assert_eq!(
+            a.validate(&i),
+            Err(Violation::OverCapacity {
+                peak: 30,
+                capacity: 25
+            })
+        );
+    }
+
+    #[test]
+    fn gap_and_reduction() {
+        let a = Assignment::from_offsets(&inst(), vec![0, 10, 0]);
+        assert_eq!(a.gap_to(30), 0.0);
+        assert!((a.gap_to(20) - 0.5).abs() < 1e-12);
+        assert!((a.reduction_vs_total(&inst()) - (1.0 - 30.0 / 35.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn touching_blocks_same_offset_ok() {
+        // Blocks that touch in time (half-open) may share the same space.
+        let i = DsaInstance::from_triples(&[(10, 0, 4), (10, 4, 8)]);
+        let a = Assignment::from_offsets(&i, vec![0, 0]);
+        assert!(a.validate(&i).is_ok());
+        assert_eq!(a.peak, 10);
+    }
+}

@@ -1,0 +1,221 @@
+//! Figure 2: memory consumption, `orig` (Chainer pool) vs `opt`
+//! (profile-guided), split into preallocated (params/grads/momentum) and
+//! propagation-allocated bytes. Unified Memory is ON so demand beyond the
+//! 16-GiB capacity is measurable (§5.1); the capacity line is marked by
+//! the `fits16G` column instead of a figure's dashed line.
+
+use super::report::{gib, Table};
+use super::ExpConfig;
+use crate::models::{self, Phase};
+use crate::sim::{self, AllocKind, SimConfig};
+
+fn mem_cfg(quick: bool) -> SimConfig {
+    SimConfig {
+        unified_memory: true,
+        warmup: 2,
+        iterations: if quick { 3 } else { 8 },
+        ..SimConfig::default()
+    }
+}
+
+pub(crate) fn cnn_batches(quick: bool) -> Vec<u32> {
+    if quick {
+        vec![32]
+    } else {
+        vec![32, 64, 128]
+    }
+}
+
+pub(crate) fn seq_batches(quick: bool) -> Vec<u32> {
+    if quick {
+        vec![32]
+    } else {
+        vec![32, 64, 128, 256]
+    }
+}
+
+fn mem_grid(
+    id: &str,
+    title: &str,
+    model_names: &[&str],
+    phase: Phase,
+    batches: &[u32],
+    cfg: &ExpConfig,
+) -> Table {
+    let mut t = Table::new(
+        id,
+        title,
+        &[
+            "model", "batch", "alloc", "prealloc GiB", "propagation GiB", "total GiB", "fits16G",
+        ],
+    );
+    let sim_cfg = mem_cfg(cfg.quick);
+    for name in model_names {
+        let model = models::by_name(name).expect("model");
+        for &batch in batches {
+            for kind in [AllocKind::Pool, AllocKind::ProfileGuided] {
+                let r = sim::run(&*model, phase, batch, kind, &sim_cfg);
+                t.row(vec![
+                    name.to_string(),
+                    batch.to_string(),
+                    kind.name().into(),
+                    gib(r.prealloc_bytes, r.ok),
+                    gib(r.propagation_peak, r.ok),
+                    gib(r.peak_device_bytes, r.ok),
+                    if r.ok && r.peak_device_bytes <= sim_cfg.capacity {
+                        "yes".into()
+                    } else {
+                        "no".into()
+                    },
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig 2a: CNN training memory.
+pub fn fig2a(cfg: &ExpConfig) -> Vec<Table> {
+    vec![mem_grid(
+        "fig2a",
+        "CNN training memory consumption",
+        &models::cnn_names(),
+        Phase::Training,
+        &cnn_batches(cfg.quick),
+        cfg,
+    )]
+}
+
+/// Fig 2b: CNN inference memory (single input).
+pub fn fig2b(cfg: &ExpConfig) -> Vec<Table> {
+    vec![mem_grid(
+        "fig2b",
+        "CNN inference memory consumption",
+        &models::cnn_names(),
+        Phase::Inference,
+        &[1],
+        cfg,
+    )]
+}
+
+/// Fig 2c: seq2seq training memory after 10 mini-batches — the pool
+/// accumulates unusable exact-size blocks while `opt` reoptimizes.
+pub fn fig2c(cfg: &ExpConfig) -> Vec<Table> {
+    let mut t = Table::new(
+        "fig2c",
+        "seq2seq training memory after 10 mini-batches",
+        &["batch", "alloc", "after10 GiB", "peak GiB", "reopts"],
+    );
+    let sim_cfg = SimConfig {
+        unified_memory: true,
+        warmup: 1,
+        iterations: if cfg.quick { 12 } else { 40 },
+        ..SimConfig::default()
+    };
+    let model = models::by_name("seq2seq").unwrap();
+    for batch in seq_batches(cfg.quick) {
+        for kind in [AllocKind::Pool, AllocKind::ProfileGuided] {
+            let r = sim::run(&*model, Phase::Training, batch, kind, &sim_cfg);
+            t.row(vec![
+                batch.to_string(),
+                kind.name().into(),
+                gib(r.used_after_10, r.ok),
+                gib(r.peak_device_bytes, r.ok),
+                r.stats.reopts.to_string(),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+/// Fig 2d: seq2seq inference memory (−14.6 % in the paper).
+pub fn fig2d(cfg: &ExpConfig) -> Vec<Table> {
+    vec![mem_grid(
+        "fig2d",
+        "seq2seq inference memory consumption",
+        &["seq2seq"],
+        Phase::Inference,
+        &[1],
+        cfg,
+    )]
+}
+
+/// §5.1 in-text baselines: network-wise 1.50 GB vs pool 1.21 GB on
+/// AlexNet training b32, and where `opt` lands.
+pub fn baselines(cfg: &ExpConfig) -> Vec<Table> {
+    let mut t = Table::new(
+        "baselines",
+        "AlexNet training b32: allocator baselines (§5.1)",
+        &["alloc", "prealloc GiB", "propagation GiB", "total GiB", "vs pool"],
+    );
+    let sim_cfg = mem_cfg(cfg.quick);
+    let model = models::by_name("alexnet").unwrap();
+    let pool = sim::run(&*model, Phase::Training, 32, AllocKind::Pool, &sim_cfg);
+    for kind in [
+        AllocKind::NetworkWise,
+        AllocKind::Pool,
+        AllocKind::PoolBestFit,
+        AllocKind::ProfileGuided,
+    ] {
+        let r = sim::run(&*model, Phase::Training, 32, kind, &sim_cfg);
+        t.row(vec![
+            kind.name().into(),
+            gib(r.prealloc_bytes, r.ok),
+            gib(r.propagation_peak, r.ok),
+            gib(r.peak_device_bytes, r.ok),
+            format!(
+                "{:.2}x",
+                r.peak_device_bytes as f64 / pool.peak_device_bytes as f64
+            ),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpConfig {
+        ExpConfig {
+            quick: true,
+            ..ExpConfig::default()
+        }
+    }
+
+    #[test]
+    fn fig2a_opt_never_exceeds_orig() {
+        let t = &fig2a(&quick())[0];
+        // Rows come in (orig, opt) pairs per model/batch.
+        for pair in t.rows.chunks(2) {
+            let orig: f64 = pair[0][5].parse().unwrap();
+            let opt: f64 = pair[1][5].parse().unwrap();
+            assert!(
+                opt <= orig * 1.01,
+                "{}/{}: opt {opt} > orig {orig}",
+                pair[0][0],
+                pair[0][1]
+            );
+        }
+    }
+
+    #[test]
+    fn fig2c_pool_accumulates() {
+        let t = &fig2c(&quick())[0];
+        let orig_peak: f64 = t.rows[0][3].parse().unwrap();
+        let opt_peak: f64 = t.rows[1][3].parse().unwrap();
+        assert!(opt_peak < orig_peak, "opt {opt_peak} !< orig {orig_peak}");
+        let opt_reopts: u64 = t.rows[1][4].parse().unwrap();
+        assert!(opt_reopts > 0, "variable lengths must reoptimize");
+    }
+
+    #[test]
+    fn baselines_network_wise_worst() {
+        let t = &baselines(&quick())[0];
+        let nw: f64 = t.rows[0][3].parse().unwrap();
+        let pool: f64 = t.rows[1][3].parse().unwrap();
+        let opt: f64 = t.rows[3][3].parse().unwrap();
+        assert!(nw > pool, "network-wise {nw} must exceed pool {pool}");
+        assert!(opt <= pool, "opt {opt} must not exceed pool {pool}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Figure 3: elapsed time per mini-batch (training) / per input
+//! (inference), `orig` vs `opt`. Unified Memory is OFF (§5.1): a
+//! configuration that does not fit the 16-GiB device reports "N/A",
+//! exactly like the paper's bars.
+
+use super::report::{ms, Table};
+use super::ExpConfig;
+use crate::models::{self, Phase};
+use crate::sim::{self, AllocKind, SimConfig};
+
+fn time_cfg(quick: bool) -> SimConfig {
+    SimConfig {
+        unified_memory: false,
+        warmup: 2,
+        iterations: if quick { 4 } else { 10 },
+        ..SimConfig::default()
+    }
+}
+
+fn time_grid(
+    id: &str,
+    title: &str,
+    model_names: &[&str],
+    phase: Phase,
+    batches: &[u32],
+    cfg: &ExpConfig,
+) -> Table {
+    let mut t = Table::new(
+        id,
+        title,
+        &[
+            "model",
+            "batch",
+            "orig ms",
+            "opt ms",
+            "speedup",
+            "orig alloc-overhead ms",
+            "opt alloc-overhead ms",
+        ],
+    );
+    let sim_cfg = time_cfg(cfg.quick);
+    for name in model_names {
+        let model = models::by_name(name).expect("model");
+        for &batch in batches {
+            let orig = sim::run(&*model, phase, batch, AllocKind::Pool, &sim_cfg);
+            let opt = sim::run(&*model, phase, batch, AllocKind::ProfileGuided, &sim_cfg);
+            let speedup = if orig.ok && opt.ok {
+                format!("{:.2}x", orig.avg_iter_ns / opt.avg_iter_ns)
+            } else {
+                "-".into()
+            };
+            t.row(vec![
+                name.to_string(),
+                batch.to_string(),
+                ms(orig.avg_iter_ns, orig.ok),
+                ms(opt.avg_iter_ns, opt.ok),
+                speedup,
+                ms(orig.avg_alloc_overhead_ns, orig.ok),
+                ms(opt.avg_alloc_overhead_ns, opt.ok),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 3a: CNN training time per mini-batch.
+pub fn fig3a(cfg: &ExpConfig) -> Vec<Table> {
+    vec![time_grid(
+        "fig3a",
+        "CNN training time per mini-batch",
+        &models::cnn_names(),
+        Phase::Training,
+        &super::fig2::cnn_batches(cfg.quick),
+        cfg,
+    )]
+}
+
+/// Fig 3b: CNN inference time per input.
+pub fn fig3b(cfg: &ExpConfig) -> Vec<Table> {
+    vec![time_grid(
+        "fig3b",
+        "CNN inference time per input",
+        &models::cnn_names(),
+        Phase::Inference,
+        &[1],
+        cfg,
+    )]
+}
+
+/// Fig 3c: seq2seq training time per mini-batch.
+pub fn fig3c(cfg: &ExpConfig) -> Vec<Table> {
+    vec![time_grid(
+        "fig3c",
+        "seq2seq training time per mini-batch",
+        &["seq2seq"],
+        Phase::Training,
+        &super::fig2::seq_batches(cfg.quick),
+        cfg,
+    )]
+}
+
+/// Fig 3d: seq2seq inference time per input (−23.8 % in the paper).
+pub fn fig3d(cfg: &ExpConfig) -> Vec<Table> {
+    vec![time_grid(
+        "fig3d",
+        "seq2seq inference time per input",
+        &["seq2seq"],
+        Phase::Inference,
+        &[1],
+        cfg,
+    )]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpConfig {
+        ExpConfig {
+            quick: true,
+            ..ExpConfig::default()
+        }
+    }
+
+    #[test]
+    fn inference_speedup_at_least_one() {
+        for t in [fig3b(&quick()), fig3d(&quick())] {
+            for row in &t[0].rows {
+                let orig: f64 = row[2].parse().unwrap();
+                let opt: f64 = row[3].parse().unwrap();
+                assert!(
+                    opt <= orig * 1.001,
+                    "{}: opt {opt} slower than orig {orig}",
+                    row[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn opt_alloc_overhead_is_lower() {
+        let t = &fig3a(&quick())[0];
+        for row in &t.rows {
+            if row[5] == "N/A" || row[6] == "N/A" {
+                continue;
+            }
+            let orig_oh: f64 = row[5].parse().unwrap();
+            let opt_oh: f64 = row[6].parse().unwrap();
+            assert!(
+                opt_oh < orig_oh,
+                "{}: opt overhead {opt_oh} !< orig {orig_oh}",
+                row[0]
+            );
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Figure 4: wall-clock running time of the best-fit heuristic on every
+//! evaluated configuration ("I" = inference, numbers = training batch
+//! sizes). These are *real measurements* of this repository's Rust
+//! implementation — the paper used Python and notes "performance can be
+//! improved by using faster languages such as C and C++"; expect the
+//! absolute numbers here to be far smaller at the same instance sizes,
+//! with the same relative shape (seq2seq inference ≫ training).
+
+use super::report::Table;
+use super::ExpConfig;
+use crate::dsa::bestfit;
+use crate::models::{self, Phase};
+use std::time::Instant;
+
+fn solve_row(model: &str, label: &str, phase: Phase, batch: u32) -> Vec<String> {
+    let m = models::by_name(model).expect("model");
+    let trace = models::trace_for(&*m, phase, batch);
+    let inst = trace.to_dsa_instance();
+    let t0 = Instant::now();
+    let sol = bestfit::solve(&inst);
+    let elapsed = t0.elapsed();
+    sol.validate(&inst).expect("valid packing");
+    vec![
+        model.to_string(),
+        label.to_string(),
+        inst.len().to_string(),
+        format!("{:.3}", elapsed.as_secs_f64() * 1e3),
+        format!("{:.3}", sol.gap_to(inst.lower_bound()) * 100.0),
+    ]
+}
+
+const HEADERS: [&str; 5] = ["model", "config", "blocks", "solve ms", "gap-to-LB %"];
+
+/// Fig 4a: heuristic runtime across the CNN configurations.
+pub fn fig4a(cfg: &ExpConfig) -> Vec<Table> {
+    let mut t = Table::new("fig4a", "best-fit heuristic runtime (CNNs)", &HEADERS);
+    for model in models::cnn_names() {
+        t.rows.push(solve_row(model, "I", Phase::Inference, 1));
+        for batch in super::fig2::cnn_batches(cfg.quick) {
+            t.rows
+                .push(solve_row(model, &batch.to_string(), Phase::Training, batch));
+        }
+    }
+    vec![t]
+}
+
+/// Fig 4b: heuristic runtime for seq2seq — inference instances are much
+/// larger (100-word generation, §5.3) and dominate.
+pub fn fig4b(cfg: &ExpConfig) -> Vec<Table> {
+    let mut t = Table::new("fig4b", "best-fit heuristic runtime (seq2seq)", &HEADERS);
+    for batch in super::fig2::seq_batches(cfg.quick) {
+        t.rows
+            .push(solve_row("seq2seq", &batch.to_string(), Phase::Training, batch));
+    }
+    t.rows.push(solve_row("seq2seq", "I", Phase::Inference, 1));
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ExpConfig {
+        ExpConfig {
+            quick: true,
+            ..ExpConfig::default()
+        }
+    }
+
+    #[test]
+    fn heuristic_is_fast_enough_for_practical_use() {
+        // §5.2: "the heuristic works quickly enough for practical use".
+        for t in [fig4a(&quick()), fig4b(&quick())] {
+            for row in &t[0].rows {
+                let ms: f64 = row[3].parse().unwrap();
+                assert!(ms < 5_000.0, "{}/{} took {ms} ms", row[0], row[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn seq2seq_inference_dominates_training() {
+        let t = &fig4b(&quick())[0];
+        let train_blocks: usize = t.rows[0][2].parse().unwrap();
+        let infer = t.rows.last().unwrap();
+        let infer_blocks: usize = infer[2].parse().unwrap();
+        assert!(
+            infer_blocks > 2 * train_blocks,
+            "inference must request many more blocks ({infer_blocks} vs {train_blocks})"
+        );
+    }
+}

@@ -1,0 +1,127 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§5) on the simulated testbed. See DESIGN.md §5 for the
+//! experiment index mapping each figure to modules and expected shapes.
+
+pub mod ablations;
+pub mod exact_vs_heuristic;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod report;
+
+use report::Table;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Write CSVs here (None = print only).
+    pub out_dir: Option<PathBuf>,
+    /// Reduced grids for CI/tests.
+    pub quick: bool,
+    /// Exact-solver budget (paper: one hour of CPLEX).
+    pub exact_time_limit: Duration,
+}
+
+impl Default for ExpConfig {
+    fn default() -> ExpConfig {
+        ExpConfig {
+            out_dir: None,
+            quick: false,
+            exact_time_limit: Duration::from_secs(60),
+        }
+    }
+}
+
+type ExpFn = fn(&ExpConfig) -> Vec<Table>;
+
+/// Registry of every reproducible experiment, in paper order.
+pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+    vec![
+        ("2a", "CNN training memory", fig2::fig2a as ExpFn),
+        ("2b", "CNN inference memory", fig2::fig2b),
+        ("2c", "seq2seq training memory", fig2::fig2c),
+        ("2d", "seq2seq inference memory", fig2::fig2d),
+        ("3a", "CNN training time", fig3::fig3a),
+        ("3b", "CNN inference time", fig3::fig3b),
+        ("3c", "seq2seq training time", fig3::fig3c),
+        ("3d", "seq2seq inference time", fig3::fig3d),
+        ("4a", "heuristic runtime (CNNs)", fig4::fig4a),
+        ("4b", "heuristic runtime (seq2seq)", fig4::fig4b),
+        (
+            "exact",
+            "heuristic vs exact optimum (§5.2)",
+            exact_vs_heuristic::run,
+        ),
+        (
+            "baselines",
+            "network-wise vs pool vs opt (§5.1)",
+            fig2::baselines,
+        ),
+        ("ablations", "design-choice ablations", ablations::run),
+    ]
+}
+
+/// Run one experiment by id; returns its tables (also printed + saved).
+pub fn run_one(id: &str, cfg: &ExpConfig) -> anyhow::Result<Vec<Table>> {
+    let (_, _, f) = registry()
+        .into_iter()
+        .find(|(eid, _, _)| *eid == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment {id:?}"))?;
+    let tables = f(cfg);
+    for t in &tables {
+        println!("{}", t.render());
+        if let Some(dir) = &cfg.out_dir {
+            t.save_csv(dir)?;
+        }
+    }
+    Ok(tables)
+}
+
+/// Run everything in paper order.
+pub fn run_all(cfg: &ExpConfig) -> anyhow::Result<Vec<Table>> {
+    let mut all = Vec::new();
+    for (id, _, _) in registry() {
+        all.extend(run_one(id, cfg)?);
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let ids: Vec<&str> = registry().iter().map(|(i, _, _)| *i).collect();
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len());
+        for want in ["2a", "2b", "2c", "2d", "3a", "3b", "3c", "3d", "4a", "4b", "exact"] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_one("nope", &ExpConfig::default()).is_err());
+    }
+
+    #[test]
+    fn run_one_writes_csv() {
+        let dir = std::env::temp_dir().join("pgmo_exp_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ExpConfig {
+            out_dir: Some(dir.clone()),
+            quick: true,
+            ..ExpConfig::default()
+        };
+        let tables = run_one("4b", &cfg).unwrap();
+        assert!(!tables.is_empty());
+        let csv = std::fs::read_to_string(dir.join("fig4b.csv")).unwrap();
+        assert!(csv.starts_with("model,config,blocks"));
+        assert!(csv.lines().count() > 2);
+    }
+}

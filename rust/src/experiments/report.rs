@@ -1,0 +1,130 @@
+//! Table rendering + CSV output for the experiment harness.
+
+use std::path::Path;
+
+/// One experiment output table (≈ one paper figure panel).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Table {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Aligned text rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.csv", self.id.replace([' ', '/'], "_")));
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// GiB with two decimals, or "N/A".
+pub fn gib(bytes: u64, ok: bool) -> String {
+    if !ok {
+        return "N/A".into();
+    }
+    format!("{:.2}", bytes as f64 / (1u64 << 30) as f64)
+}
+
+/// Milliseconds with two decimals, or "N/A".
+pub fn ms(ns: f64, ok: bool) -> String {
+    if !ok {
+        return "N/A".into();
+    }
+    format!("{:.2}", ns / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_csv() {
+        let mut t = Table::new("t1", "demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let r = t.render();
+        assert!(r.contains("demo") && r.contains("bb"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(gib(1 << 30, true), "1.00");
+        assert_eq!(gib(0, false), "N/A");
+        assert_eq!(ms(1.5e6, true), "1.50");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", "t", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,68 @@
+//! Compute-time model: FLOPs and bytes → simulated device nanoseconds.
+//!
+//! The paper's timing results (Fig 3) are the sum of GPU compute (same
+//! for `orig` and `opt`) and memory-management overhead (different). The
+//! compute side only needs to be *plausible in magnitude* for the
+//! relative claims to transfer; the model below is a classic roofline:
+//! `time = max(flops / F_eff, bytes / B_eff)` with P100 effective rates.
+
+/// Effective device throughput. Defaults: P100 ≈ 9.3 TFLOP/s fp32 peak at
+/// ~45 % achieved efficiency on cuDNN conv/GEMM workloads, and 732 GB/s
+/// HBM2 peak at ~75 % achieved.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Effective FLOPs per nanosecond.
+    pub flops_per_ns: f64,
+    /// Effective bytes per nanosecond.
+    pub bytes_per_ns: f64,
+    /// Fixed per-kernel launch overhead.
+    pub launch_ns: u64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> ComputeModel {
+        ComputeModel {
+            flops_per_ns: 9300.0 * 0.45,
+            bytes_per_ns: 732.0 * 0.75,
+            launch_ns: 8_000,
+        }
+    }
+}
+
+impl ComputeModel {
+    /// Simulated duration of one kernel.
+    pub fn kernel_ns(&self, flops: u64, moved_bytes: u64) -> u64 {
+        let f = flops as f64 / self.flops_per_ns;
+        let b = moved_bytes as f64 / self.bytes_per_ns;
+        self.launch_ns + f.max(b).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_kernel() {
+        let m = ComputeModel::default();
+        // A big GEMM: 1 GFLOP over 10 MB is compute-bound.
+        let ns = m.kernel_ns(1_000_000_000, 10_000_000);
+        let expect = 1_000_000_000.0 / m.flops_per_ns;
+        assert!((ns as f64 - m.launch_ns as f64 - expect).abs() < 2.0);
+    }
+
+    #[test]
+    fn bandwidth_bound_kernel() {
+        let m = ComputeModel::default();
+        // Elementwise: 1 MFLOP over 100 MB is bandwidth-bound.
+        let ns = m.kernel_ns(1_000_000, 100_000_000);
+        let expect = 100_000_000.0 / m.bytes_per_ns;
+        assert!((ns as f64 - m.launch_ns as f64 - expect).abs() < 2.0);
+    }
+
+    #[test]
+    fn launch_overhead_floors_tiny_kernels() {
+        let m = ComputeModel::default();
+        assert!(m.kernel_ns(1, 1) >= m.launch_ns);
+    }
+}

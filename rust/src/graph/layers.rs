@@ -1,0 +1,639 @@
+//! Layer-level graph construction — the vocabulary the five evaluated
+//! networks are written in (Chainer "links/functions" equivalents).
+//!
+//! Every parameterized layer also registers persistent *state* mirrors of
+//! its parameters (gradient buffer + momentum buffer), matching Chainer's
+//! momentum-SGD training setup where those live for the whole run.
+
+use super::shapes::{conv_out, DType, Shape};
+use super::{Graph, Node, OpKind, TensorId, TensorInfo, TensorKind};
+use crate::util::humansize::MIB;
+
+/// Incremental graph builder. Nodes are appended in execution order, so
+/// the result is topologically sorted by construction.
+#[derive(Debug)]
+pub struct GraphBuilder {
+    g: Graph,
+    dtype: DType,
+    /// cuDNN-style convolution workspace (§5.1: 8 MB default, identical
+    /// for baseline and optimized runs).
+    pub conv_workspace: u64,
+}
+
+impl GraphBuilder {
+    pub fn new(dtype: DType) -> GraphBuilder {
+        GraphBuilder {
+            g: Graph::default(),
+            dtype,
+            conv_workspace: 8 * MIB,
+        }
+    }
+
+    pub fn finish(self, outputs: Vec<TensorId>) -> Graph {
+        let mut g = self.g;
+        g.outputs = outputs;
+        debug_assert!(g.validate().is_ok());
+        g
+    }
+
+    pub fn shape_of(&self, t: TensorId) -> &Shape {
+        &self.g.tensors[t].shape
+    }
+
+    // ----- tensor registration --------------------------------------------
+
+    fn add_tensor(
+        &mut self,
+        name: String,
+        shape: Shape,
+        kind: TensorKind,
+        producer: Option<usize>,
+    ) -> TensorId {
+        self.g.tensors.push(TensorInfo {
+            name,
+            shape,
+            dtype: self.dtype,
+            kind,
+            producer,
+        });
+        self.g.tensors.len() - 1
+    }
+
+    /// Graph input (mini-batch, token ids...): propagation-scoped.
+    pub fn input(&mut self, name: &str, dims: &[usize]) -> TensorId {
+        self.add_tensor(name.to_string(), Shape::of(dims), TensorKind::Input, None)
+    }
+
+    /// Learnable parameter + its persistent grad and momentum mirrors.
+    pub fn param(&mut self, name: &str, dims: &[usize]) -> TensorId {
+        let id = self.add_tensor(name.to_string(), Shape::of(dims), TensorKind::Param, None);
+        self.add_tensor(format!("{name}.grad"), Shape::of(dims), TensorKind::State, None);
+        self.add_tensor(format!("{name}.mom"), Shape::of(dims), TensorKind::State, None);
+        id
+    }
+
+    // ----- node registration ----------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn push_node(
+        &mut self,
+        name: &str,
+        op: OpKind,
+        inputs: Vec<TensorId>,
+        params: Vec<TensorId>,
+        out_shapes: Vec<(String, Shape)>,
+        flops: u64,
+        workspace_bytes: u64,
+        bwd_needs_output: bool,
+    ) -> Vec<TensorId> {
+        let node_id = self.g.nodes.len();
+        let outputs: Vec<TensorId> = out_shapes
+            .into_iter()
+            .map(|(n, s)| self.add_tensor(n, s, TensorKind::Activation, Some(node_id)))
+            .collect();
+        let moved: u64 = inputs
+            .iter()
+            .chain(params.iter())
+            .chain(outputs.iter())
+            .map(|&t| self.g.tensors[t].bytes())
+            .sum();
+        // Which ops differentiate through their *inputs*? Conv/GEMM wgrad
+        // reads x; pooling and LRN read x (and y); BN reads x with saved
+        // statistics; LSTM reads x/h/c. ReLU, add, concat, dropout, and
+        // softmax(-CE) backward need no input activation — Chainer frees
+        // those during the forward pass.
+        let bwd_needs_inputs = match op {
+            OpKind::Conv2d
+            | OpKind::Linear
+            | OpKind::Pool
+            | OpKind::BatchNorm
+            | OpKind::Lrn
+            | OpKind::Embed
+            | OpKind::LstmCell => true,
+            OpKind::Relu
+            | OpKind::Concat
+            | OpKind::Add
+            | OpKind::Dropout
+            | OpKind::SoftmaxLoss
+            | OpKind::Softmax => false,
+        };
+        self.g.nodes.push(Node {
+            name: name.to_string(),
+            op,
+            inputs,
+            params,
+            outputs: outputs.clone(),
+            flops,
+            moved_bytes: moved,
+            workspace_bytes,
+            bwd_needs_output,
+            bwd_needs_inputs,
+        });
+        outputs
+    }
+
+    // ----- CNN layers -------------------------------------------------------
+
+    /// 2-D convolution with bias, NCHW, square kernel.
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+    ) -> TensorId {
+        self.conv2d_rect(name, x, out_ch, (kernel, kernel), stride, (pad, pad))
+    }
+
+    /// 2-D convolution with a rectangular kernel (1×7 / 7×1 factorized
+    /// convolutions in the Inception family).
+    pub fn conv2d_rect(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        out_ch: usize,
+        (kh, kw): (usize, usize),
+        stride: usize,
+        (ph, pw): (usize, usize),
+    ) -> TensorId {
+        let dims = self.shape_of(x).dims().to_vec();
+        let [b, c, h, w] = dims[..] else {
+            panic!("conv2d {name}: input must be NCHW, got {:?}", dims)
+        };
+        let (ho, wo) = (conv_out(h, kh, stride, ph), conv_out(w, kw, stride, pw));
+        let weight = self.param(&format!("{name}.W"), &[out_ch, c, kh, kw]);
+        let bias = self.param(&format!("{name}.b"), &[out_ch]);
+        let out_shape = Shape::of(&[b, out_ch, ho, wo]);
+        let flops = 2 * out_shape.numel() * (c * kh * kw) as u64;
+        let ws = self.conv_workspace;
+        self.push_node(
+            name,
+            OpKind::Conv2d,
+            vec![x],
+            vec![weight, bias],
+            vec![(name.to_string(), out_shape)],
+            flops,
+            ws,
+            false,
+        )[0]
+    }
+
+    /// Fully connected layer; flattens trailing dims.
+    pub fn linear(&mut self, name: &str, x: TensorId, out_features: usize) -> TensorId {
+        let dims = self.shape_of(x).dims().to_vec();
+        let b = dims[0];
+        let in_features: usize = dims[1..].iter().product();
+        let weight = self.param(&format!("{name}.W"), &[out_features, in_features]);
+        let bias = self.param(&format!("{name}.b"), &[out_features]);
+        let out_shape = Shape::of(&[b, out_features]);
+        let flops = 2 * (b * in_features * out_features) as u64;
+        self.push_node(
+            name,
+            OpKind::Linear,
+            vec![x],
+            vec![weight, bias],
+            vec![(name.to_string(), out_shape)],
+            flops,
+            0,
+            false,
+        )[0]
+    }
+
+    /// Fully connected layer with *shared* (pre-created) weights — used
+    /// for projections applied at every timestep of a recurrence, where
+    /// creating per-call parameters would multiply the model size.
+    pub fn linear_with(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        weight: TensorId,
+        bias: TensorId,
+    ) -> TensorId {
+        let dims = self.shape_of(x).dims().to_vec();
+        let b = dims[0];
+        let in_features: usize = dims[1..].iter().product();
+        let w_dims = self.shape_of(weight).dims().to_vec();
+        assert_eq!(w_dims[1], in_features, "linear_with {name}: weight mismatch");
+        let out_features = w_dims[0];
+        let out_shape = Shape::of(&[b, out_features]);
+        let flops = 2 * (b * in_features * out_features) as u64;
+        self.push_node(
+            name,
+            OpKind::Linear,
+            vec![x],
+            vec![weight, bias],
+            vec![(name.to_string(), out_shape)],
+            flops,
+            0,
+            false,
+        )[0]
+    }
+
+    pub fn relu(&mut self, name: &str, x: TensorId) -> TensorId {
+        let shape = self.shape_of(x).clone();
+        let flops = shape.numel();
+        self.push_node(
+            name,
+            OpKind::Relu,
+            vec![x],
+            vec![],
+            vec![(name.to_string(), shape)],
+            flops,
+            0,
+            true, // ReLU backward masks by the output sign
+        )[0]
+    }
+
+    fn pool_impl(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        kernel: usize,
+        stride: usize,
+        pad: usize,
+        ceil: bool,
+    ) -> TensorId {
+        let dims = self.shape_of(x).dims().to_vec();
+        let [b, c, h, w] = dims[..] else {
+            panic!("pool {name}: input must be NCHW")
+        };
+        let out = if ceil {
+            super::shapes::conv_out_ceil
+        } else {
+            conv_out
+        };
+        let (ho, wo) = (out(h, kernel, stride, pad), out(w, kernel, stride, pad));
+        let out_shape = Shape::of(&[b, c, ho, wo]);
+        let flops = out_shape.numel() * (kernel * kernel) as u64;
+        self.push_node(
+            name,
+            OpKind::Pool,
+            vec![x],
+            vec![],
+            vec![(name.to_string(), out_shape)],
+            flops,
+            0,
+            true, // max-pool backward routes by argmax (stored with output)
+        )[0]
+    }
+
+    pub fn max_pool(&mut self, name: &str, x: TensorId, k: usize, s: usize, p: usize) -> TensorId {
+        self.pool_impl(name, x, k, s, p, false)
+    }
+
+    /// Max pooling with ceil rounding (Chainer's `cover_all=True`, the
+    /// behaviour GoogLeNet's published feature-map sizes assume).
+    pub fn max_pool_ceil(
+        &mut self,
+        name: &str,
+        x: TensorId,
+        k: usize,
+        s: usize,
+        p: usize,
+    ) -> TensorId {
+        self.pool_impl(name, x, k, s, p, true)
+    }
+
+    pub fn avg_pool(&mut self, name: &str, x: TensorId, k: usize, s: usize, p: usize) -> TensorId {
+        self.pool_impl(name, x, k, s, p, false)
+    }
+
+    /// Global average pool to 1×1.
+    pub fn global_avg_pool(&mut self, name: &str, x: TensorId) -> TensorId {
+        let dims = self.shape_of(x).dims().to_vec();
+        let [_, _, h, w] = dims[..] else {
+            panic!("global_avg_pool {name}: input must be NCHW")
+        };
+        assert_eq!(h, w, "global pool expects square maps");
+        self.pool_impl(name, x, h, h, 0, false)
+    }
+
+    /// Batch normalization (scale+shift parameters; running stats are
+    /// persistent state).
+    pub fn batch_norm(&mut self, name: &str, x: TensorId) -> TensorId {
+        let shape = self.shape_of(x).clone();
+        let c = shape.dims()[1];
+        let gamma = self.param(&format!("{name}.gamma"), &[c]);
+        let beta = self.param(&format!("{name}.beta"), &[c]);
+        // Running mean/var: persistent but not learnable.
+        self.add_tensor(format!("{name}.mean"), Shape::of(&[c]), TensorKind::State, None);
+        self.add_tensor(format!("{name}.var"), Shape::of(&[c]), TensorKind::State, None);
+        let flops = shape.numel() * 8;
+        self.push_node(
+            name,
+            OpKind::BatchNorm,
+            vec![x],
+            vec![gamma, beta],
+            vec![(name.to_string(), shape)],
+            flops,
+            0,
+            false, // BN backward uses its input + saved statistics
+        )[0]
+    }
+
+    /// Local response normalization (AlexNet / GoogLeNet).
+    pub fn lrn(&mut self, name: &str, x: TensorId) -> TensorId {
+        let shape = self.shape_of(x).clone();
+        let flops = shape.numel() * 10;
+        self.push_node(
+            name,
+            OpKind::Lrn,
+            vec![x],
+            vec![],
+            vec![(name.to_string(), shape)],
+            flops,
+            0,
+            true,
+        )[0]
+    }
+
+    /// Channel-wise concat (inception modules).
+    pub fn concat(&mut self, name: &str, xs: &[TensorId]) -> TensorId {
+        assert!(!xs.is_empty());
+        let first = self.shape_of(xs[0]).dims().to_vec();
+        let mut channels = 0;
+        for &x in xs {
+            let d = self.shape_of(x).dims();
+            assert_eq!(d.len(), first.len(), "concat {name}: rank mismatch");
+            assert_eq!(d[0], first[0], "concat {name}: batch mismatch");
+            if first.len() == 4 {
+                assert_eq!(&d[2..], &first[2..], "concat {name}: spatial mismatch");
+            }
+            channels += d[1];
+        }
+        let mut out = first.clone();
+        out[1] = channels;
+        let out_shape = Shape::of(&out);
+        let flops = out_shape.numel(); // copy cost
+        self.push_node(
+            name,
+            OpKind::Concat,
+            xs.to_vec(),
+            vec![],
+            vec![(name.to_string(), out_shape)],
+            flops,
+            0,
+            false,
+        )[0]
+    }
+
+    /// Elementwise residual add.
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        assert_eq!(
+            self.shape_of(a),
+            self.shape_of(b),
+            "add {name}: shape mismatch"
+        );
+        let shape = self.shape_of(a).clone();
+        let flops = shape.numel();
+        self.push_node(
+            name,
+            OpKind::Add,
+            vec![a, b],
+            vec![],
+            vec![(name.to_string(), shape)],
+            flops,
+            0,
+            false,
+        )[0]
+    }
+
+    /// Dropout: produces the output and a retained mask (Chainer keeps
+    /// the mask for backward).
+    pub fn dropout(&mut self, name: &str, x: TensorId) -> TensorId {
+        let shape = self.shape_of(x).clone();
+        let flops = shape.numel() * 2;
+        let outs = self.push_node(
+            name,
+            OpKind::Dropout,
+            vec![x],
+            vec![],
+            vec![
+                (name.to_string(), shape.clone()),
+                (format!("{name}.mask"), shape),
+            ],
+            flops,
+            0,
+            false,
+        );
+        outs[0]
+    }
+
+    // ----- sequence layers --------------------------------------------------
+
+    /// Embedding lookup: ids `[B]` → vectors `[B, embed_dim]`. The
+    /// embedding matrix is created once via [`GraphBuilder::param`] and
+    /// shared across timesteps.
+    pub fn embed(&mut self, name: &str, table: TensorId, ids: TensorId) -> TensorId {
+        let b = self.shape_of(ids).dims()[0];
+        let e = self.shape_of(table).dims()[1];
+        let out_shape = Shape::of(&[b, e]);
+        let flops = out_shape.numel();
+        self.push_node(
+            name,
+            OpKind::Embed,
+            vec![ids],
+            vec![table],
+            vec![(name.to_string(), out_shape)],
+            flops,
+            0,
+            false,
+        )[0]
+    }
+
+    /// Create shared LSTM weights for one layer: returns (W, b) where W is
+    /// `[in+hidden, 4*hidden]`.
+    pub fn lstm_params(&mut self, name: &str, input: usize, hidden: usize) -> (TensorId, TensorId) {
+        let w = self.param(&format!("{name}.W"), &[input + hidden, 4 * hidden]);
+        let b = self.param(&format!("{name}.b"), &[4 * hidden]);
+        (w, b)
+    }
+
+    /// One LSTM timestep. Produces `(h, c)` plus a retained gates tensor
+    /// `[B, 4*hidden]` (needed by backward — Chainer retains it, a large
+    /// share of seq2seq's propagation memory).
+    pub fn lstm_cell(
+        &mut self,
+        name: &str,
+        weights: (TensorId, TensorId),
+        x: TensorId,
+        h_prev: TensorId,
+        c_prev: TensorId,
+    ) -> (TensorId, TensorId) {
+        let b = self.shape_of(x).dims()[0];
+        let hidden = self.shape_of(h_prev).dims()[1];
+        let in_dim = self.shape_of(x).dims()[1];
+        let flops = 2 * (b * (in_dim + hidden) * 4 * hidden) as u64 + (9 * b * hidden) as u64;
+        let outs = self.push_node(
+            name,
+            OpKind::LstmCell,
+            vec![x, h_prev, c_prev],
+            vec![weights.0, weights.1],
+            vec![
+                (format!("{name}.h"), Shape::of(&[b, hidden])),
+                (format!("{name}.c"), Shape::of(&[b, hidden])),
+                (format!("{name}.gates"), Shape::of(&[b, 4 * hidden])),
+            ],
+            flops,
+            0,
+            true,
+        );
+        (outs[0], outs[1])
+    }
+
+    /// cuDNN-style N-step LSTM: one fused op unrolling a whole layer over
+    /// a packed token sequence `[tokens, units]` (Chainer's `NStepLSTM`).
+    /// Crucially for the paper's §4.3 story, the *op structure* of a
+    /// propagation using N-step RNNs is independent of sentence length —
+    /// only the *sizes* vary — so profile-guided replay stays positionally
+    /// aligned and reoptimization only needs to handle size growth.
+    /// Outputs: sequence output `[tokens, units]` plus the retained gate
+    /// activations `[tokens, 4*units]` backward needs.
+    pub fn nstep_lstm(
+        &mut self,
+        name: &str,
+        weights: (TensorId, TensorId),
+        x: TensorId,
+    ) -> TensorId {
+        let dims = self.shape_of(x).dims().to_vec();
+        let [tokens, in_dim] = dims[..] else {
+            panic!("nstep_lstm {name}: input must be [tokens, units]")
+        };
+        let hidden = self.shape_of(weights.0).dims()[1] / 4;
+        let flops =
+            2 * (tokens * (in_dim + hidden) * 4 * hidden) as u64 + (9 * tokens * hidden) as u64;
+        let outs = self.push_node(
+            name,
+            OpKind::LstmCell,
+            vec![x],
+            vec![weights.0, weights.1],
+            vec![
+                (name.to_string(), Shape::of(&[tokens, hidden])),
+                (format!("{name}.gates"), Shape::of(&[tokens, 4 * hidden])),
+            ],
+            flops,
+            0,
+            true,
+        );
+        outs[0]
+    }
+
+    // ----- heads ------------------------------------------------------------
+
+    /// Softmax cross-entropy loss: retains probabilities for backward.
+    pub fn softmax_loss(&mut self, name: &str, logits: TensorId) -> TensorId {
+        let shape = self.shape_of(logits).clone();
+        let flops = shape.numel() * 5;
+        let outs = self.push_node(
+            name,
+            OpKind::SoftmaxLoss,
+            vec![logits],
+            vec![],
+            vec![
+                (format!("{name}.loss"), Shape::scalar()),
+                (format!("{name}.probs"), shape),
+            ],
+            flops,
+            0,
+            true,
+        );
+        outs[0]
+    }
+
+    /// Plain softmax (inference head).
+    pub fn softmax(&mut self, name: &str, logits: TensorId) -> TensorId {
+        let shape = self.shape_of(logits).clone();
+        let flops = shape.numel() * 5;
+        self.push_node(
+            name,
+            OpKind::Softmax,
+            vec![logits],
+            vec![],
+            vec![(name.to_string(), shape)],
+            flops,
+            0,
+            true,
+        )[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_and_flops() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[2, 3, 227, 227]);
+        let c = b.conv2d("c1", x, 96, 11, 4, 0);
+        assert_eq!(b.shape_of(c).dims(), &[2, 96, 55, 55]);
+        let n = &b.g.nodes[0];
+        assert_eq!(n.flops, 2 * 2 * 96 * 55 * 55 * (3 * 11 * 11));
+        assert_eq!(n.workspace_bytes, 8 * MIB);
+    }
+
+    #[test]
+    fn param_registers_grad_and_momentum() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[1, 8]);
+        b.linear("fc", x, 4);
+        let params: Vec<_> = b
+            .g
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Param)
+            .collect();
+        let state: Vec<_> = b
+            .g
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::State)
+            .collect();
+        assert_eq!(params.len(), 2); // W, b
+        assert_eq!(state.len(), 4); // grad+mom for each
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[4, 8, 14, 14]);
+        let c1 = b.conv2d("a", x, 16, 1, 1, 0);
+        let c2 = b.conv2d("b", x, 32, 3, 1, 1);
+        let cat = b.concat("cat", &[c1, c2]);
+        assert_eq!(b.shape_of(cat).dims(), &[4, 48, 14, 14]);
+    }
+
+    #[test]
+    fn lstm_cell_shapes() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[16, 64]);
+        let h0 = b.input("h0", &[16, 128]);
+        let c0 = b.input("c0", &[16, 128]);
+        let wp = b.lstm_params("l0", 64, 128);
+        let (h, c) = b.lstm_cell("l0.t0", wp, x, h0, c0);
+        assert_eq!(b.shape_of(h).dims(), &[16, 128]);
+        assert_eq!(b.shape_of(c).dims(), &[16, 128]);
+        // Shared weights: (64+128)*512 + 512 params.
+        let g = b.finish(vec![h]);
+        assert_eq!(g.param_count(), (64 + 128) * 4 * 128 + 4 * 128);
+    }
+
+    #[test]
+    fn global_avg_pool_to_1x1() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[2, 64, 7, 7]);
+        let p = b.global_avg_pool("gap", x);
+        assert_eq!(b.shape_of(p).dims(), &[2, 64, 1, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn add_requires_matching_shapes() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[2, 8, 4, 4]);
+        let y = b.input("y", &[2, 4, 4, 4]);
+        b.add("bad", x, y);
+    }
+}

@@ -1,0 +1,249 @@
+//! Computational-graph IR for the evaluated networks.
+//!
+//! The big CNNs and seq2seq are not executed numerically on this testbed
+//! (DESIGN.md §Substitutions) — what the paper's evaluation needs from
+//! them is their *memory behaviour*: the exact sequence and sizes of
+//! allocations and frees that forward/backward propagation issues, plus a
+//! FLOP count for the compute-time model. This IR captures both: tensors
+//! with shapes and roles, nodes with FLOPs and convolution workspace, and
+//! (in [`schedule`]) the Chainer-style execution schedule with reference
+//! counting, gradient accumulation at fan-in points, and progressive
+//! activation release during backward.
+
+pub mod cost;
+pub mod layers;
+pub mod schedule;
+pub mod shapes;
+
+use shapes::{DType, Shape};
+
+/// Index of a tensor in [`Graph::tensors`].
+pub type TensorId = usize;
+/// Index of a node in [`Graph::nodes`].
+pub type NodeId = usize;
+
+/// What role a tensor plays; decides whether its memory is *preallocated*
+/// (persistent across iterations — the dotted red bars of Fig 2) or
+/// *propagation-allocated* (the solid blue bars the paper optimizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Mini-batch input, copied to the device each iteration.
+    Input,
+    /// Intermediate result (activation / feature map). Propagation-scoped.
+    Activation,
+    /// Learnable parameter. Persistent.
+    Param,
+    /// Persistent optimizer/gradient state (grad buffers, momentum).
+    State,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub kind: TensorKind,
+    /// Producing node; `None` for inputs and params.
+    pub producer: Option<NodeId>,
+}
+
+impl TensorInfo {
+    pub fn bytes(&self) -> u64 {
+        self.shape.bytes(self.dtype)
+    }
+}
+
+/// Operator kind — carried for backward-pass behaviour and reporting.
+/// Memory scheduling treats most ops uniformly; the distinctions that
+/// matter (does backward need the *output*? does it use workspace?) are
+/// captured by the node fields below.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Conv2d,
+    Linear,
+    Pool,
+    BatchNorm,
+    Lrn,
+    Relu,
+    Concat,
+    Add,
+    Dropout,
+    Embed,
+    LstmCell,
+    SoftmaxLoss,
+    Softmax,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: OpKind,
+    /// Data inputs (activations / graph inputs).
+    pub inputs: Vec<TensorId>,
+    /// Parameters read (conv filters, biases, LSTM weights...).
+    pub params: Vec<TensorId>,
+    /// Produced tensors (LSTM cells produce two).
+    pub outputs: Vec<TensorId>,
+    /// Forward FLOPs (multiply+add counted as 2).
+    pub flops: u64,
+    /// Bytes read+written by the forward op (for bandwidth-bound costs).
+    pub moved_bytes: u64,
+    /// cuDNN-style temporary workspace, allocated for the duration of the
+    /// op only (§5.1: 8 MB by default, same for baseline and optimized).
+    pub workspace_bytes: u64,
+    /// Does backward need this node's *output* activation (ReLU and
+    /// softmax differentiate through their outputs; dropout retains its
+    /// mask)?
+    pub bwd_needs_output: bool,
+    /// Does backward need this node's *input* activations (conv/GEMM
+    /// wgrad does; ReLU, add, concat, and softmax-CE do not — Chainer
+    /// frees such inputs during the forward pass, which matters for the
+    /// memory scale of deep residual/inception nets)?
+    pub bwd_needs_inputs: bool,
+}
+
+/// A built network: tensors + nodes in topological order.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub tensors: Vec<TensorInfo>,
+    pub nodes: Vec<Node>,
+    /// Final outputs (the loss for training graphs, logits for inference).
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id]
+    }
+
+    /// Total bytes of persistent memory: params, plus (when `training`)
+    /// gradient and optimizer state mirrors. This is Fig 2's red bar.
+    pub fn preallocated_bytes(&self, training: bool) -> u64 {
+        let params: u64 = self
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Param)
+            .map(TensorInfo::bytes)
+            .sum();
+        let state: u64 = self
+            .tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::State)
+            .map(TensorInfo::bytes)
+            .sum();
+        if training {
+            params + state
+        } else {
+            params
+        }
+    }
+
+    /// Parameter count (for checking against published model sizes).
+    pub fn param_count(&self) -> u64 {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Param)
+            .map(|t| t.shape.numel())
+            .sum()
+    }
+
+    /// Total forward FLOPs.
+    pub fn forward_flops(&self) -> u64 {
+        self.nodes.iter().map(|n| n.flops).sum()
+    }
+
+    /// Consumers of each tensor (by data input), as counts.
+    pub fn consumer_counts(&self) -> Vec<u32> {
+        let mut counts = vec![0u32; self.tensors.len()];
+        for n in &self.nodes {
+            for &t in &n.inputs {
+                counts[t] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Validate topological well-formedness: every data input of node `k`
+    /// is a Param/Input/State or produced by a node `< k`; producer links
+    /// are consistent.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (k, n) in self.nodes.iter().enumerate() {
+            for &t in &n.inputs {
+                let info = &self.tensors[t];
+                match info.producer {
+                    Some(p) => anyhow::ensure!(
+                        p < k,
+                        "node {k} ({}) consumes tensor {t} produced later (node {p})",
+                        n.name
+                    ),
+                    None => anyhow::ensure!(
+                        matches!(info.kind, TensorKind::Input | TensorKind::Param | TensorKind::State),
+                        "node {k}: input tensor {t} has no producer and is not a graph input"
+                    ),
+                }
+            }
+            for &t in &n.outputs {
+                anyhow::ensure!(
+                    self.tensors[t].producer == Some(k),
+                    "node {k}: output tensor {t} has wrong producer link"
+                );
+                anyhow::ensure!(
+                    self.tensors[t].kind == TensorKind::Activation,
+                    "node {k}: output tensor {t} must be an activation"
+                );
+            }
+        }
+        for &t in &self.outputs {
+            anyhow::ensure!(t < self.tensors.len(), "dangling graph output {t}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::layers::GraphBuilder;
+    use super::*;
+
+    #[test]
+    fn tiny_graph_validates() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[8, 3, 32, 32]);
+        let c = b.conv2d("conv1", x, 16, 3, 1, 1);
+        let r = b.relu("relu1", c);
+        let p = b.max_pool("pool1", r, 2, 2, 0);
+        let f = b.linear("fc", p, 10);
+        let loss = b.softmax_loss("loss", f);
+        let g = b.finish(vec![loss]);
+        g.validate().unwrap();
+        assert!(g.forward_flops() > 0);
+        assert!(g.param_count() > 0);
+    }
+
+    #[test]
+    fn preallocated_counts_params_and_state() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[1, 4]);
+        let f = b.linear("fc", x, 2);
+        let g = b.finish(vec![f]);
+        // fc: weight 4x2 + bias 2 = 10 params.
+        assert_eq!(g.param_count(), 10);
+        let inference = g.preallocated_bytes(false);
+        let training = g.preallocated_bytes(true);
+        assert_eq!(inference, 40);
+        // Training adds grad + momentum mirrors (2 × params).
+        assert_eq!(training, 40 * 3);
+    }
+
+    #[test]
+    fn validate_rejects_cycles() {
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("x", &[1, 4]);
+        let f = b.linear("fc", x, 4);
+        let mut g = b.finish(vec![f]);
+        // Corrupt: make node 0 consume its own output.
+        let out = g.nodes[0].outputs[0];
+        g.nodes[0].inputs = vec![out];
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Tensor shapes, dtypes, and the shape arithmetic layers need.
+
+/// Element type. The evaluated networks all train in f32 (the paper's
+/// Chainer scripts); f16 exists for ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F16,
+}
+
+impl DType {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F32 => 4,
+            DType::F16 => 2,
+        }
+    }
+}
+
+/// A dense tensor shape (NCHW for images, [T, B, U] for recurrences).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Shape {
+        Shape(vec![])
+    }
+
+    pub fn of(dims: &[usize]) -> Shape {
+        Shape(dims.to_vec())
+    }
+
+    pub fn numel(&self) -> u64 {
+        self.0.iter().map(|&d| d as u64).product()
+    }
+
+    pub fn bytes(&self, dtype: DType) -> u64 {
+        self.numel() * dtype.bytes()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Output spatial size of a convolution/pooling dimension:
+/// `floor((in + 2*pad - kernel) / stride) + 1`.
+pub fn conv_out(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(stride > 0);
+    assert!(
+        input + 2 * pad >= kernel,
+        "conv_out: kernel {kernel} larger than padded input {}",
+        input + 2 * pad
+    );
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+/// Output spatial size with ceil rounding (Chainer's `cover_all`
+/// / GoogLeNet-style pooling).
+pub fn conv_out_ceil(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    assert!(stride > 0);
+    (input + 2 * pad - kernel).div_ceil(stride) + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        let s = Shape::of(&[32, 3, 224, 224]);
+        assert_eq!(s.numel(), 32 * 3 * 224 * 224);
+        assert_eq!(s.bytes(DType::F32), 32 * 3 * 224 * 224 * 4);
+        assert_eq!(s.bytes(DType::F16), 32 * 3 * 224 * 224 * 2);
+        assert_eq!(Shape::scalar().numel(), 1);
+    }
+
+    #[test]
+    fn conv_out_classic_cases() {
+        // AlexNet conv1: 224 + 2*2 - 11, stride 4 → 54+1 = 55... the
+        // canonical AlexNet uses 227 (or pad 2 on 224): check both.
+        assert_eq!(conv_out(227, 11, 4, 0), 55);
+        assert_eq!(conv_out(224, 11, 4, 2), 55);
+        // Same-padding 3x3.
+        assert_eq!(conv_out(56, 3, 1, 1), 56);
+        // Pool /2.
+        assert_eq!(conv_out(56, 2, 2, 0), 28);
+    }
+
+    #[test]
+    fn conv_out_ceil_rounds_up() {
+        assert_eq!(conv_out(55, 3, 2, 0), 27);
+        assert_eq!(conv_out_ceil(55, 3, 2, 0), 27);
+        assert_eq!(conv_out(13, 3, 2, 0), 6);
+        assert_eq!(conv_out_ceil(13, 3, 2, 0), 6);
+        assert_eq!(conv_out_ceil(112, 3, 2, 0), 56);
+        assert_eq!(conv_out(112, 3, 2, 0), 55);
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel")]
+    fn conv_out_rejects_oversized_kernel() {
+        conv_out(2, 5, 1, 0);
+    }
+}

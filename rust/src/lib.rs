@@ -1,0 +1,58 @@
+//! # PGMO — Profile-Guided Memory Optimization for Deep Neural Networks
+//!
+//! A Rust + JAX + Pallas reproduction of *Sekiyama, Imai, Imamichi, Raymond:
+//! "Profile-guided memory optimization for deep neural networks"* (2018).
+//!
+//! The paper's observation: DNN propagation is *hot* — every training or
+//! inference iteration issues the same sequence of memory requests. PGMO
+//! therefore
+//!
+//! 1. **profiles** one sample iteration ([`profiler::MemoryProfiler`]),
+//! 2. **solves** the resulting [Dynamic Storage Allocation](dsa) instance —
+//!    an NP-hard 2-D rectangle-packing special case — with the paper's
+//!    best-fit heuristic ([`dsa::bestfit`]) or an exact branch-and-bound
+//!    solver ([`dsa::exact`]) on small instances, and
+//! 3. **replays** the computed offsets in O(1) per request for all
+//!    subsequent iterations ([`alloc::profile_guided`]).
+//!
+//! The crate ships the complete substrate the paper's evaluation needs:
+//! Chainer/CuPy-style pool and network-wise baseline allocators
+//! ([`alloc`]), a simulated 16-GiB GPU with a cudaMalloc/Unified-Memory
+//! cost model ([`device`]), a computational-graph IR with forward/backward
+//! scheduling and buffer liveness ([`graph`]), the five evaluated network
+//! models ([`models`]), the execution simulator ([`sim`]), a PJRT runtime
+//! that executes AOT-lowered JAX/Pallas artifacts ([`runtime`]), and the
+//! training/serving coordinator ([`coordinator`]).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pgmo::models::{self, Phase};
+//! use pgmo::dsa::{self, bestfit};
+//!
+//! // Build Inception-ResNet's training-memory trace at batch size 32.
+//! let model = models::by_name("alexnet").unwrap();
+//! let trace = models::trace_for(&*model, Phase::Training, 32);
+//! let inst = trace.to_dsa_instance();
+//!
+//! // Solve DSA with the paper's best-fit heuristic and check the packing.
+//! let sol = bestfit::solve(&inst);
+//! assert!(sol.validate(&inst).is_ok());
+//! assert!(sol.peak >= inst.liveness_lower_bound());
+//! ```
+
+pub mod alloc;
+pub mod coordinator;
+pub mod device;
+pub mod dsa;
+pub mod experiments;
+pub mod graph;
+pub mod models;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod trace;
+pub mod util;
+
+pub use dsa::{problem::DsaInstance, solution::Assignment};

@@ -1,0 +1,380 @@
+//! `pgmo` — command-line entry point.
+//!
+//! ```text
+//! pgmo experiments [--fig 2a|...|--all] [--out results/] [--quick]
+//! pgmo sim --model resnet50 --phase training --batch 64 --alloc opt
+//! pgmo trace --model alexnet --phase inference --batch 1 --out t.json
+//! pgmo solve --trace t.json [--exact] [--policy largest-size]
+//! pgmo train [--steps 200] [--batch 32] [--artifacts artifacts/]
+//! pgmo serve [--requests 256] [--artifacts artifacts/]
+//! ```
+
+use anyhow::{Context, Result};
+use pgmo::coordinator::serve::{InferenceServer, Request, ServeConfig};
+use pgmo::coordinator::{TrainConfig, TrainingCoordinator};
+use pgmo::dsa::policies::{BlockChoice, Policy};
+use pgmo::dsa::{bestfit, exact, firstfit};
+use pgmo::experiments::{self, ExpConfig};
+use pgmo::models::{self, Phase};
+use pgmo::sim::{self, AllocKind, SimConfig};
+use pgmo::trace::Trace;
+use pgmo::util::cli::Command;
+use pgmo::util::humansize::format_bytes;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn main() {
+    pgmo::util::log::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "experiments" => cmd_experiments(rest),
+        "sim" => cmd_sim(rest),
+        "trace" => cmd_trace(rest),
+        "solve" => cmd_solve(rest),
+        "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "pgmo — profile-guided memory optimization for DNNs \
+         (Sekiyama et al. 2018 reproduction)\n\n\
+         subcommands:\n  \
+         experiments   regenerate the paper's tables/figures\n  \
+         sim           run one model × allocator simulation\n  \
+         trace         profile a model propagation to a trace file\n  \
+         solve         solve DSA for a trace (heuristic/exact)\n  \
+         train         train the real L2 model via PJRT (e2e driver)\n  \
+         serve         serve batched inference via PJRT\n\n\
+         run `pgmo <subcommand> --help` for options"
+    );
+}
+
+fn parse_phase(s: &str) -> Result<Phase> {
+    match s {
+        "training" | "train" => Ok(Phase::Training),
+        "inference" | "infer" => Ok(Phase::Inference),
+        _ => anyhow::bail!("bad phase {s:?} (training|inference)"),
+    }
+}
+
+fn cmd_experiments(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("pgmo experiments", "regenerate the paper's evaluation")
+        .opt("fig", "experiment id (2a..4b, exact, baselines, ablations)")
+        .flag("all", "run every experiment")
+        .flag("quick", "reduced grids (CI)")
+        .opt_default("exact-limit-s", "60", "exact-solver time limit (seconds)")
+        .opt("out", "directory for CSV output");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    let cfg = ExpConfig {
+        out_dir: a.get("out").map(PathBuf::from),
+        quick: a.flag("quick"),
+        exact_time_limit: Duration::from_secs(a.get_or("exact-limit-s", 60u64)?),
+    };
+    if a.flag("all") || a.get("fig").is_none() {
+        experiments::run_all(&cfg)?;
+    } else {
+        experiments::run_one(a.require("fig")?, &cfg)?;
+    }
+    Ok(())
+}
+
+fn cmd_sim(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("pgmo sim", "simulate one configuration")
+        .opt("config", "JSON config file (device/protocol/cost/runs)")
+        .opt_default("model", "alexnet", "model name")
+        .opt_default("phase", "training", "training|inference")
+        .opt_default("batch", "32", "mini-batch size")
+        .opt_default("alloc", "opt", "orig|opt|network-wise|pool-bestfit")
+        .opt_default("iterations", "10", "measured iterations")
+        .opt_default("warmup", "2", "warmup iterations")
+        .flag("unified-memory", "allow oversubscription (memory runs)");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    if let Some(path) = a.get("config") {
+        let cfg = pgmo::sim::config_file::ConfigFile::load(Path::new(path))?;
+        anyhow::ensure!(!cfg.runs.is_empty(), "config has no runs");
+        for spec in &cfg.runs {
+            let model = models::by_name(&spec.model).expect("validated by config");
+            let r = sim::run(&*model, spec.phase, spec.batch, spec.alloc, &cfg.sim);
+            if r.ok {
+                println!(
+                    "{:<18} {:<9} b{:<4} [{:<12}] peak {:>12}  iter {:>9.3} ms",
+                    r.model,
+                    r.phase.name(),
+                    r.batch,
+                    r.alloc,
+                    format_bytes(r.peak_device_bytes),
+                    r.avg_iter_ns / 1e6
+                );
+            } else {
+                println!(
+                    "{:<18} {:<9} b{:<4} [{:<12}] N/A (OOM)",
+                    spec.model,
+                    spec.phase.name(),
+                    spec.batch,
+                    spec.alloc.name()
+                );
+            }
+        }
+        return Ok(());
+    }
+    let model_name = a.require("model")?;
+    let model = models::by_name(model_name)
+        .with_context(|| format!("unknown model {model_name:?} ({:?})", models::all_names()))?;
+    let phase = parse_phase(a.require("phase")?)?;
+    let kind = match a.require("alloc")? {
+        "orig" | "pool" => AllocKind::Pool,
+        "opt" | "profile-guided" => AllocKind::ProfileGuided,
+        "network-wise" => AllocKind::NetworkWise,
+        "pool-bestfit" => AllocKind::PoolBestFit,
+        other => anyhow::bail!("bad alloc {other:?}"),
+    };
+    let cfg = SimConfig {
+        unified_memory: a.flag("unified-memory"),
+        warmup: a.get_or("warmup", 2u32)?,
+        iterations: a.get_or("iterations", 10u32)?,
+        ..SimConfig::default()
+    };
+    let r = sim::run(&*model, phase, a.get_or("batch", 32u32)?, kind, &cfg);
+    if !r.ok {
+        println!("N/A — out of device memory (try --unified-memory)");
+        return Ok(());
+    }
+    println!(
+        "{} {} b{} [{}]\n  peak device : {}\n  preallocated: {}\n  propagation : {}\n  \
+         iter time   : {:.3} ms (alloc overhead {:.3} ms)\n  \
+         replay hits : {} / {} requests, {} reopts, solve {:.3} ms",
+        r.model,
+        r.phase.name(),
+        r.batch,
+        r.alloc,
+        format_bytes(r.peak_device_bytes),
+        format_bytes(r.prealloc_bytes),
+        format_bytes(r.propagation_peak),
+        r.avg_iter_ns / 1e6,
+        r.avg_alloc_overhead_ns / 1e6,
+        r.stats.fast_path,
+        r.stats.n_allocs,
+        r.stats.reopts,
+        r.solve_ns as f64 / 1e6,
+    );
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("pgmo trace", "profile one propagation to JSON")
+        .opt_default("model", "alexnet", "model name")
+        .opt_default("phase", "inference", "training|inference")
+        .opt_default("batch", "1", "mini-batch size")
+        .opt("out", "output file (default: stdout summary only)")
+        .opt("chrome", "also export a chrome://tracing JSON (with packing)")
+        .flag("ascii", "print a Figure-1-style ASCII packing diagram");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    let model = models::by_name(a.require("model")?).context("unknown model")?;
+    let phase = parse_phase(a.require("phase")?)?;
+    let trace = models::trace_for(&*model, phase, a.get_or("batch", 1u32)?);
+    let stats = trace.stats();
+    println!(
+        "{}: {} blocks, {} events, total {}, peak-live {}, max block {}",
+        trace.label(),
+        stats.n_blocks,
+        stats.n_events,
+        format_bytes(stats.total_bytes),
+        format_bytes(stats.peak_live_bytes),
+        format_bytes(stats.max_block),
+    );
+    if let Some(out) = a.get("out") {
+        trace.save(Path::new(out))?;
+        println!("wrote {out}");
+    }
+    if a.get("chrome").is_some() || a.flag("ascii") {
+        let inst = trace.to_dsa_instance();
+        let sol = bestfit::solve(&inst);
+        if let Some(path) = a.get("chrome") {
+            let doc = pgmo::trace::viz::to_chrome_trace(&trace, Some(&sol));
+            std::fs::write(path, doc.dump())?;
+            println!("wrote chrome trace to {path} (open in chrome://tracing)");
+        }
+        if a.flag("ascii") {
+            print!("{}", pgmo::trace::viz::ascii_packing(&inst, &sol, 100, 24));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_solve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("pgmo solve", "solve DSA for a trace file")
+        .opt("trace", "trace JSON produced by `pgmo trace`")
+        .flag("exact", "also run the branch-and-bound exact solver")
+        .flag("first-fit", "also run the online first-fit baseline")
+        .opt_default("exact-limit-s", "60", "exact time limit (seconds)")
+        .opt_default("policy", "longest-lifetime", "block-choice policy")
+        .opt("lp-out", "write the section-3.1 MIP in LP format here");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    let trace = Trace::load(Path::new(a.require("trace")?))?;
+    let inst = trace.to_dsa_instance();
+    let lb = inst.lower_bound();
+    let policy_name = a.require("policy")?;
+    let policy = BlockChoice::ALL
+        .into_iter()
+        .find(|c| c.name() == policy_name)
+        .with_context(|| format!("bad policy {policy_name:?}"))?;
+    let (sol, dt) = pgmo::util::stats::time_it(|| {
+        bestfit::solve_with(&inst, Policy { block_choice: policy })
+    });
+    sol.validate(&inst).expect("invalid packing");
+    println!(
+        "{} blocks; liveness LB {}\nbest-fit[{}]: peak {} (gap {:.3}%) in {:.3} ms",
+        inst.len(),
+        format_bytes(lb),
+        policy.name(),
+        format_bytes(sol.peak),
+        sol.gap_to(lb) * 100.0,
+        dt.as_secs_f64() * 1e3
+    );
+    if a.flag("first-fit") {
+        let ff = firstfit::solve(&inst);
+        println!(
+            "first-fit: peak {} (gap {:.3}%)",
+            format_bytes(ff.peak),
+            ff.gap_to(lb) * 100.0
+        );
+    }
+    if a.flag("exact") {
+        let r = exact::solve(&inst, Duration::from_secs(a.get_or("exact-limit-s", 60u64)?));
+        println!(
+            "exact: peak {} ({}; {} nodes in {:.3} s)",
+            format_bytes(r.assignment.peak),
+            if r.proved_optimal { "optimal" } else { "timeout" },
+            r.nodes,
+            r.elapsed.as_secs_f64()
+        );
+    }
+    if let Some(out) = a.get("lp-out") {
+        std::fs::write(out, pgmo::dsa::mip::to_lp(&inst))?;
+        println!("wrote MIP to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("pgmo train", "train the L2 model via PJRT")
+        .opt_default("steps", "200", "training steps")
+        .opt_default("batch", "32", "batch size (must match an artifact)")
+        .opt_default("seed", "7", "RNG seed")
+        .opt_default("artifacts", "artifacts", "artifact directory");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    let dir = PathBuf::from(a.require("artifacts")?);
+    let mut coord = TrainingCoordinator::new(&dir, a.get_or("seed", 7u64)?)?;
+    let cfg = TrainConfig {
+        steps: a.get_or("steps", 200u32)?,
+        batch: a.get_or("batch", 32u32)?,
+        ..TrainConfig::default()
+    };
+    let report = coord.train(&cfg)?;
+    for (i, loss) in report.losses.iter().enumerate() {
+        if i % 20 == 0 || i + 1 == report.losses.len() {
+            println!("step {i:>5}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "avg step {:.2} ms; staging arena {}; replay fraction {:.1}%; {} reopts",
+        report.avg_step_ms,
+        format_bytes(report.arena_bytes as u64),
+        report.replay_fraction * 100.0,
+        report.reopts
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("pgmo serve", "serve batched inference via PJRT")
+        .opt_default("requests", "256", "number of synthetic requests")
+        .opt_default("producers", "4", "load-generator threads")
+        .opt_default("artifacts", "artifacts", "artifact directory");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    let dir = PathBuf::from(a.require("artifacts")?);
+    let n_requests: usize = a.get_or("requests", 256usize)?;
+    let producers: usize = a.get_or("producers", 4usize)?;
+
+    let mut server = InferenceServer::new(&dir, 11, ServeConfig::default())?;
+    let dim = server.input_dim();
+    let (tx, rx) = std::sync::mpsc::channel::<Request>();
+
+    let pool = pgmo::coordinator::queue::ThreadPool::new(producers);
+    let per = n_requests / producers;
+    for p in 0..producers {
+        let tx = tx.clone();
+        pool.execute(move || {
+            let mut rng = pgmo::util::rng::Pcg32::seeded(100 + p as u64);
+            for _ in 0..per {
+                let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                let (rtx, rrx) = std::sync::mpsc::channel();
+                let _ = tx.send(Request {
+                    x,
+                    created: std::time::Instant::now(),
+                    reply: rtx,
+                });
+                let _ = rrx.recv();
+            }
+        });
+    }
+    drop(tx);
+    let mut metrics = server.run(rx)?;
+    drop(pool);
+    println!("{}", metrics.report());
+    let s = server.staging_stats();
+    println!(
+        "staging: {} requests, {:.1}% replayed, {} reopts",
+        s.n_allocs,
+        100.0 * s.fast_path as f64 / s.n_allocs.max(1) as f64,
+        s.reopts
+    );
+    Ok(())
+}

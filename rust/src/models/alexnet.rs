@@ -1,0 +1,95 @@
+//! AlexNet (Krizhevsky et al. 2012), after Chainer's `alex.py` — the
+//! single-column variant with 227×227 inputs, LRN, and dropout on the
+//! fully connected layers. ≈ 62.4 M parameters.
+
+use super::{Model, Phase};
+use crate::graph::layers::GraphBuilder;
+use crate::graph::shapes::DType;
+use crate::graph::Graph;
+use crate::util::rng::Pcg32;
+
+pub struct AlexNet;
+
+impl Model for AlexNet {
+    fn name(&self) -> &'static str {
+        "alexnet"
+    }
+
+    fn build(&self, phase: Phase, batch: u32, _rng: &mut Pcg32) -> Graph {
+        let training = phase == Phase::Training;
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("data", &[batch as usize, 3, 227, 227]);
+
+        let c1 = b.conv2d("conv1", x, 96, 11, 4, 0); // 55×55
+        let r1 = b.relu("relu1", c1);
+        let n1 = b.lrn("norm1", r1);
+        let p1 = b.max_pool("pool1", n1, 3, 2, 0); // 27×27
+
+        let c2 = b.conv2d("conv2", p1, 256, 5, 1, 2);
+        let r2 = b.relu("relu2", c2);
+        let n2 = b.lrn("norm2", r2);
+        let p2 = b.max_pool("pool2", n2, 3, 2, 0); // 13×13
+
+        let c3 = b.conv2d("conv3", p2, 384, 3, 1, 1);
+        let r3 = b.relu("relu3", c3);
+        let c4 = b.conv2d("conv4", r3, 384, 3, 1, 1);
+        let r4 = b.relu("relu4", c4);
+        let c5 = b.conv2d("conv5", r4, 256, 3, 1, 1);
+        let r5 = b.relu("relu5", c5);
+        let p5 = b.max_pool("pool5", r5, 3, 2, 0); // 6×6
+
+        let f6 = b.linear("fc6", p5, 4096);
+        let r6 = b.relu("relu6", f6);
+        let d6 = if training { b.dropout("drop6", r6) } else { r6 };
+        let f7 = b.linear("fc7", d6, 4096);
+        let r7 = b.relu("relu7", f7);
+        let d7 = if training { b.dropout("drop7", r7) } else { r7 };
+        let f8 = b.linear("fc8", d7, 1000);
+
+        let out = if training {
+            b.softmax_loss("loss", f8)
+        } else {
+            b.softmax("prob", f8)
+        };
+        b.finish(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::schedule::{self};
+    use crate::util::humansize::MIB;
+
+    #[test]
+    fn parameter_count_matches_published() {
+        let g = AlexNet.build(Phase::Training, 32, &mut Pcg32::seeded(0));
+        let m = g.param_count() as f64 / 1e6;
+        // Single-column AlexNet: ≈62.4 M parameters.
+        assert!((60.0..65.0).contains(&m), "got {m} M params");
+    }
+
+    #[test]
+    fn training_graph_validates_and_schedules() {
+        let g = AlexNet.build(Phase::Training, 32, &mut Pcg32::seeded(0));
+        g.validate().unwrap();
+        let s = schedule::build(&g, Phase::Training);
+        let peak = s.validate().unwrap();
+        // Activations at b32 land in the hundreds-of-MB range.
+        assert!(peak > 100 * MIB, "peak {} too small", peak);
+    }
+
+    #[test]
+    fn inference_has_no_dropout() {
+        let g = AlexNet.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        assert!(g.nodes.iter().all(|n| n.name != "drop6"));
+    }
+
+    #[test]
+    fn flops_magnitude() {
+        // Single-image forward ≈ 0.7–1.5 GFLOP·2 (MACs×2) for AlexNet.
+        let g = AlexNet.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let gf = g.forward_flops() as f64 / 1e9;
+        assert!((1.0..4.0).contains(&gf), "got {gf} GFLOP");
+    }
+}

@@ -1,0 +1,161 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al. 2015), after Chainer's
+//! `googlenet.py`: LRN stem, nine inception modules, and — in training —
+//! the two auxiliary classifier heads. ≈ 13.4 M parameters with aux heads
+//! (≈ 7 M for the inference graph, matching the published main column).
+
+use super::{Model, Phase};
+use crate::graph::layers::GraphBuilder;
+use crate::graph::shapes::DType;
+use crate::graph::{Graph, TensorId};
+use crate::util::rng::Pcg32;
+
+pub struct GoogLeNet;
+
+/// One inception module: 1×1, 3×3 (reduced), 5×5 (reduced), pool-proj.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    c1: usize,
+    c3r: usize,
+    c3: usize,
+    c5r: usize,
+    c5: usize,
+    pp: usize,
+) -> TensorId {
+    let b1 = {
+        let c = b.conv2d(&format!("{name}.1x1"), x, c1, 1, 1, 0);
+        b.relu(&format!("{name}.relu1"), c)
+    };
+    let b3 = {
+        let r = b.conv2d(&format!("{name}.3x3r"), x, c3r, 1, 1, 0);
+        let r = b.relu(&format!("{name}.relu3r"), r);
+        let c = b.conv2d(&format!("{name}.3x3"), r, c3, 3, 1, 1);
+        b.relu(&format!("{name}.relu3"), c)
+    };
+    let b5 = {
+        let r = b.conv2d(&format!("{name}.5x5r"), x, c5r, 1, 1, 0);
+        let r = b.relu(&format!("{name}.relu5r"), r);
+        let c = b.conv2d(&format!("{name}.5x5"), r, c5, 5, 1, 2);
+        b.relu(&format!("{name}.relu5"), c)
+    };
+    let bp = {
+        let p = b.max_pool_ceil(&format!("{name}.pool"), x, 3, 1, 1);
+        let c = b.conv2d(&format!("{name}.proj"), p, pp, 1, 1, 0);
+        b.relu(&format!("{name}.relup"), c)
+    };
+    b.concat(&format!("{name}.cat"), &[b1, b3, b5, bp])
+}
+
+/// Auxiliary classifier head (training only).
+fn aux_head(b: &mut GraphBuilder, name: &str, x: TensorId) -> TensorId {
+    let p = b.avg_pool(&format!("{name}.pool"), x, 5, 3, 0);
+    let c = b.conv2d(&format!("{name}.conv"), p, 128, 1, 1, 0);
+    let r = b.relu(&format!("{name}.relu"), c);
+    let f1 = b.linear(&format!("{name}.fc1"), r, 1024);
+    let r1 = b.relu(&format!("{name}.relu1"), f1);
+    let d = b.dropout(&format!("{name}.drop"), r1);
+    let f2 = b.linear(&format!("{name}.fc2"), d, 1000);
+    b.softmax_loss(&format!("{name}.loss"), f2)
+}
+
+impl Model for GoogLeNet {
+    fn name(&self) -> &'static str {
+        "googlenet"
+    }
+
+    fn build(&self, phase: Phase, batch: u32, _rng: &mut Pcg32) -> Graph {
+        let training = phase == Phase::Training;
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("data", &[batch as usize, 3, 224, 224]);
+
+        // Stem.
+        let c1 = b.conv2d("conv1", x, 64, 7, 2, 3); // 112
+        let r1 = b.relu("relu1", c1);
+        let p1 = b.max_pool_ceil("pool1", r1, 3, 2, 0); // 56
+        let n1 = b.lrn("norm1", p1);
+        let c2r = b.conv2d("conv2r", n1, 64, 1, 1, 0);
+        let r2r = b.relu("relu2r", c2r);
+        let c2 = b.conv2d("conv2", r2r, 192, 3, 1, 1);
+        let r2 = b.relu("relu2", c2);
+        let n2 = b.lrn("norm2", r2);
+        let p2 = b.max_pool_ceil("pool2", n2, 3, 2, 0); // 28
+
+        // Inception 3.
+        let i3a = inception(&mut b, "inc3a", p2, 64, 96, 128, 16, 32, 32);
+        let i3b = inception(&mut b, "inc3b", i3a, 128, 128, 192, 32, 96, 64);
+        let p3 = b.max_pool_ceil("pool3", i3b, 3, 2, 0); // 14
+
+        // Inception 4 (+aux heads at 4a and 4d in training).
+        let i4a = inception(&mut b, "inc4a", p3, 192, 96, 208, 16, 48, 64);
+        let aux1 = training.then(|| aux_head(&mut b, "aux1", i4a));
+        let i4b = inception(&mut b, "inc4b", i4a, 160, 112, 224, 24, 64, 64);
+        let i4c = inception(&mut b, "inc4c", i4b, 128, 128, 256, 24, 64, 64);
+        let i4d = inception(&mut b, "inc4d", i4c, 112, 144, 288, 32, 64, 64);
+        let aux2 = training.then(|| aux_head(&mut b, "aux2", i4d));
+        let i4e = inception(&mut b, "inc4e", i4d, 256, 160, 320, 32, 128, 128);
+        let p4 = b.max_pool_ceil("pool4", i4e, 3, 2, 0); // 7
+
+        // Inception 5 + head.
+        let i5a = inception(&mut b, "inc5a", p4, 256, 160, 320, 32, 128, 128);
+        let i5b = inception(&mut b, "inc5b", i5a, 384, 192, 384, 48, 128, 128);
+        let gap = b.global_avg_pool("gap", i5b);
+        let head = if training {
+            let d = b.dropout("drop", gap);
+            let f = b.linear("fc", d, 1000);
+            b.softmax_loss("loss", f)
+        } else {
+            let f = b.linear("fc", gap, 1000);
+            b.softmax("prob", f)
+        };
+
+        let mut outputs = vec![head];
+        outputs.extend(aux1);
+        outputs.extend(aux2);
+        b.finish(outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::schedule;
+
+    #[test]
+    fn inference_parameter_count_matches_published() {
+        let g = GoogLeNet.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let m = g.param_count() as f64 / 1e6;
+        // Published GoogLeNet main column: ~7.0 M params.
+        assert!((6.0..8.0).contains(&m), "got {m} M params");
+    }
+
+    #[test]
+    fn training_adds_aux_heads() {
+        let g = GoogLeNet.build(Phase::Training, 32, &mut Pcg32::seeded(0));
+        assert_eq!(g.outputs.len(), 3, "main + two aux losses");
+        let m = g.param_count() as f64 / 1e6;
+        assert!((12.0..15.0).contains(&m), "got {m} M params with aux");
+    }
+
+    #[test]
+    fn spatial_pyramid_is_correct() {
+        // The final inception output must be 7×7×1024.
+        let g = GoogLeNet.build(Phase::Inference, 2, &mut Pcg32::seeded(0));
+        let i5b_cat = g
+            .tensors
+            .iter()
+            .find(|t| t.name == "inc5b.cat")
+            .expect("inc5b.cat");
+        assert_eq!(i5b_cat.shape.dims(), &[2, 1024, 7, 7]);
+    }
+
+    #[test]
+    fn schedules_validate_both_phases() {
+        for phase in [Phase::Training, Phase::Inference] {
+            let g = GoogLeNet.build(phase, 8, &mut Pcg32::seeded(0));
+            g.validate().unwrap();
+            schedule::build(&g, phase).validate().unwrap();
+        }
+    }
+}

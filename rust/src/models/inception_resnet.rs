@@ -1,0 +1,244 @@
+//! Inception-ResNet-v2 (Szegedy et al. 2017) — the paper's largest and
+//! headline model ("the most effective" for the optimization; training at
+//! batch 64 fits in 16 GB only with `opt`). Structure follows the
+//! published v2 configuration: stem → mixed_5b → 10×block35 → mixed_6a →
+//! 20×block17 → mixed_7a → 10×block8 → conv_7b → GAP → fc.
+//! ≈ 55.8 M parameters.
+
+use super::{Model, Phase};
+use crate::graph::layers::GraphBuilder;
+use crate::graph::shapes::DType;
+use crate::graph::{Graph, TensorId};
+use crate::util::rng::Pcg32;
+
+pub struct InceptionResNetV2;
+
+/// conv → BN → ReLU, the "basic conv" unit of the Inception family.
+fn bconv(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    ch: usize,
+    k: (usize, usize),
+    s: usize,
+    p: (usize, usize),
+) -> TensorId {
+    let c = b.conv2d_rect(&format!("{name}.conv"), x, ch, k, s, p);
+    let n = b.batch_norm(&format!("{name}.bn"), c);
+    b.relu(&format!("{name}.relu"), n)
+}
+
+fn sq(k: usize) -> (usize, usize) {
+    (k, k)
+}
+
+/// Residual inception block: branches → concat → 1×1 linear projection →
+/// add → ReLU. The projection conv carries no BN/ReLU (it is the "linear"
+/// residual path of the paper).
+fn residual_block(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    branches: Vec<TensorId>,
+    out_ch: usize,
+) -> TensorId {
+    let cat = b.concat(&format!("{name}.cat"), &branches);
+    let proj = b.conv2d(&format!("{name}.proj"), cat, out_ch, 1, 1, 0);
+    let sum = b.add(&format!("{name}.add"), x, proj);
+    b.relu(&format!("{name}.relu"), sum)
+}
+
+/// Inception-ResNet-A (35×35, 320 ch).
+fn block35(b: &mut GraphBuilder, name: &str, x: TensorId) -> TensorId {
+    let b0 = bconv(b, &format!("{name}.b0"), x, 32, sq(1), 1, sq(0));
+    let b1 = {
+        let c = bconv(b, &format!("{name}.b1a"), x, 32, sq(1), 1, sq(0));
+        bconv(b, &format!("{name}.b1b"), c, 32, sq(3), 1, sq(1))
+    };
+    let b2 = {
+        let c = bconv(b, &format!("{name}.b2a"), x, 32, sq(1), 1, sq(0));
+        let c = bconv(b, &format!("{name}.b2b"), c, 48, sq(3), 1, sq(1));
+        bconv(b, &format!("{name}.b2c"), c, 64, sq(3), 1, sq(1))
+    };
+    residual_block(b, name, x, vec![b0, b1, b2], 320)
+}
+
+/// Inception-ResNet-B (17×17, 1088 ch) with 1×7/7×1 factorization.
+fn block17(b: &mut GraphBuilder, name: &str, x: TensorId) -> TensorId {
+    let b0 = bconv(b, &format!("{name}.b0"), x, 192, sq(1), 1, sq(0));
+    let b1 = {
+        let c = bconv(b, &format!("{name}.b1a"), x, 128, sq(1), 1, sq(0));
+        let c = bconv(b, &format!("{name}.b1b"), c, 160, (1, 7), 1, (0, 3));
+        bconv(b, &format!("{name}.b1c"), c, 192, (7, 1), 1, (3, 0))
+    };
+    residual_block(b, name, x, vec![b0, b1], 1088)
+}
+
+/// Inception-ResNet-C (8×8, 2080 ch) with 1×3/3×1 factorization.
+fn block8(b: &mut GraphBuilder, name: &str, x: TensorId) -> TensorId {
+    let b0 = bconv(b, &format!("{name}.b0"), x, 192, sq(1), 1, sq(0));
+    let b1 = {
+        let c = bconv(b, &format!("{name}.b1a"), x, 192, sq(1), 1, sq(0));
+        let c = bconv(b, &format!("{name}.b1b"), c, 224, (1, 3), 1, (0, 1));
+        bconv(b, &format!("{name}.b1c"), c, 256, (3, 1), 1, (1, 0))
+    };
+    residual_block(b, name, x, vec![b0, b1], 2080)
+}
+
+impl Model for InceptionResNetV2 {
+    fn name(&self) -> &'static str {
+        "inception-resnet"
+    }
+
+    fn build(&self, phase: Phase, batch: u32, _rng: &mut Pcg32) -> Graph {
+        let training = phase == Phase::Training;
+        let mut b = GraphBuilder::new(DType::F32);
+        let n = batch as usize;
+        let x = b.input("data", &[n, 3, 299, 299]);
+
+        // Stem: 299 → 35.
+        let c = bconv(&mut b, "conv1a", x, 32, sq(3), 2, sq(0)); // 149
+        let c = bconv(&mut b, "conv2a", c, 32, sq(3), 1, sq(0)); // 147
+        let c = bconv(&mut b, "conv2b", c, 64, sq(3), 1, sq(1)); // 147
+        let c = b.max_pool("pool3a", c, 3, 2, 0); // 73
+        let c = bconv(&mut b, "conv3b", c, 80, sq(1), 1, sq(0));
+        let c = bconv(&mut b, "conv4a", c, 192, sq(3), 1, sq(0)); // 71
+        let c = b.max_pool("pool5a", c, 3, 2, 0); // 35
+
+        // mixed_5b: → 320 ch.
+        let m5 = {
+            let b0 = bconv(&mut b, "m5b.b0", c, 96, sq(1), 1, sq(0));
+            let b1 = {
+                let t = bconv(&mut b, "m5b.b1a", c, 48, sq(1), 1, sq(0));
+                bconv(&mut b, "m5b.b1b", t, 64, sq(5), 1, sq(2))
+            };
+            let b2 = {
+                let t = bconv(&mut b, "m5b.b2a", c, 64, sq(1), 1, sq(0));
+                let t = bconv(&mut b, "m5b.b2b", t, 96, sq(3), 1, sq(1));
+                bconv(&mut b, "m5b.b2c", t, 96, sq(3), 1, sq(1))
+            };
+            let b3 = {
+                let p = b.avg_pool("m5b.pool", c, 3, 1, 1);
+                bconv(&mut b, "m5b.b3", p, 64, sq(1), 1, sq(0))
+            };
+            b.concat("m5b.cat", &[b0, b1, b2, b3])
+        };
+
+        // 10 × Inception-ResNet-A.
+        let mut t = m5;
+        for i in 0..10 {
+            t = block35(&mut b, &format!("a{i}"), t);
+        }
+
+        // mixed_6a reduction: 35 → 17, → 1088 ch.
+        let m6 = {
+            let b0 = bconv(&mut b, "m6a.b0", t, 384, sq(3), 2, sq(0)); // 17
+            let b1 = {
+                let c1 = bconv(&mut b, "m6a.b1a", t, 256, sq(1), 1, sq(0));
+                let c1 = bconv(&mut b, "m6a.b1b", c1, 256, sq(3), 1, sq(1));
+                bconv(&mut b, "m6a.b1c", c1, 384, sq(3), 2, sq(0))
+            };
+            let b2 = b.max_pool("m6a.pool", t, 3, 2, 0);
+            b.concat("m6a.cat", &[b0, b1, b2])
+        };
+
+        // 20 × Inception-ResNet-B.
+        let mut t = m6;
+        for i in 0..20 {
+            t = block17(&mut b, &format!("b{i}"), t);
+        }
+
+        // mixed_7a reduction: 17 → 8, → 2080 ch.
+        let m7 = {
+            let b0 = {
+                let c1 = bconv(&mut b, "m7a.b0a", t, 256, sq(1), 1, sq(0));
+                bconv(&mut b, "m7a.b0b", c1, 384, sq(3), 2, sq(0)) // 8
+            };
+            let b1 = {
+                let c1 = bconv(&mut b, "m7a.b1a", t, 256, sq(1), 1, sq(0));
+                bconv(&mut b, "m7a.b1b", c1, 288, sq(3), 2, sq(0))
+            };
+            let b2 = {
+                let c1 = bconv(&mut b, "m7a.b2a", t, 256, sq(1), 1, sq(0));
+                let c1 = bconv(&mut b, "m7a.b2b", c1, 288, sq(3), 1, sq(1));
+                bconv(&mut b, "m7a.b2c", c1, 320, sq(3), 2, sq(0))
+            };
+            let b3 = b.max_pool("m7a.pool", t, 3, 2, 0);
+            b.concat("m7a.cat", &[b0, b1, b2, b3])
+        };
+
+        // 10 × Inception-ResNet-C.
+        let mut t = m7;
+        for i in 0..10 {
+            t = block8(&mut b, &format!("c{i}"), t);
+        }
+
+        let t = bconv(&mut b, "conv7b", t, 1536, sq(1), 1, sq(0));
+        let gap = b.global_avg_pool("gap", t);
+        let head = if training {
+            let d = b.dropout("drop", gap);
+            let f = b.linear("fc", d, 1000);
+            b.softmax_loss("loss", f)
+        } else {
+            let f = b.linear("fc", gap, 1000);
+            b.softmax("prob", f)
+        };
+        b.finish(vec![head])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::schedule;
+    use crate::util::humansize::GIB;
+
+    #[test]
+    fn parameter_count_matches_published() {
+        let g = InceptionResNetV2.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let m = g.param_count() as f64 / 1e6;
+        // Published: ≈55.8 M.
+        assert!((52.0..60.0).contains(&m), "got {m} M params");
+    }
+
+    #[test]
+    fn stage_channel_progression() {
+        let g = InceptionResNetV2.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let dims = |name: &str| {
+            g.tensors
+                .iter()
+                .find(|t| t.name == name)
+                .unwrap_or_else(|| panic!("{name} missing"))
+                .shape
+                .dims()
+                .to_vec()
+        };
+        assert_eq!(dims("m5b.cat"), vec![1, 320, 35, 35]);
+        assert_eq!(dims("m6a.cat"), vec![1, 1088, 17, 17]);
+        assert_eq!(dims("m7a.cat"), vec![1, 2080, 8, 8]);
+        assert_eq!(dims("conv7b.relu"), vec![1, 1536, 8, 8]);
+    }
+
+    #[test]
+    fn training_memory_dwarfs_alexnet() {
+        // §1: Inception-ResNet training consumes ~12.5× AlexNet's memory.
+        let ir = InceptionResNetV2.build(Phase::Training, 32, &mut Pcg32::seeded(0));
+        let ax = super::super::alexnet::AlexNet.build(Phase::Training, 32, &mut Pcg32::seeded(0));
+        let ir_peak = schedule::build(&ir, Phase::Training).validate().unwrap()
+            + ir.preallocated_bytes(true);
+        let ax_peak = schedule::build(&ax, Phase::Training).validate().unwrap()
+            + ax.preallocated_bytes(true);
+        let ratio = ir_peak as f64 / ax_peak as f64;
+        assert!(ratio > 5.0, "ratio {ratio} too small");
+        assert!(ir_peak > 4 * GIB);
+    }
+
+    #[test]
+    fn schedules_validate_both_phases() {
+        for phase in [Phase::Training, Phase::Inference] {
+            let g = InceptionResNetV2.build(phase, 4, &mut Pcg32::seeded(0));
+            g.validate().unwrap();
+            schedule::build(&g, phase).validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! The five networks of the paper's evaluation (§5.1): AlexNet, GoogLeNet,
+//! ResNet-50, Inception-ResNet(-v2), and seq2seq — expressed in the
+//! [`graph`](crate::graph) IR, built from their published configurations.
+//!
+//! CNNs are *hot* (§3): the same graph every iteration. seq2seq is not —
+//! its unroll depth depends on sampled sentence lengths, which is exactly
+//! the case §4.3's reoptimization handles; its builder therefore takes
+//! the RNG.
+
+pub mod alexnet;
+pub mod googlenet;
+pub mod inception_resnet;
+pub mod resnet;
+pub mod seq2seq;
+pub mod vgg;
+
+use crate::graph::schedule::{self, BufKey, Step};
+use crate::graph::Graph;
+use crate::profiler::MemoryProfiler;
+use crate::trace::Trace;
+use crate::util::rng::Pcg32;
+
+pub use crate::graph::schedule::Phase;
+
+/// A buildable network model.
+pub trait Model {
+    fn name(&self) -> &'static str;
+
+    /// Build the propagation graph for one iteration. Hot models ignore
+    /// `rng`; seq2seq samples its sentence lengths from it.
+    fn build(&self, phase: Phase, batch: u32, rng: &mut Pcg32) -> Graph;
+
+    /// Is every iteration's propagation identical (§3's *hot* property)?
+    fn is_hot(&self) -> bool {
+        true
+    }
+}
+
+/// Look up a model by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn Model>> {
+    Some(match name {
+        "alexnet" => Box::new(alexnet::AlexNet),
+        "googlenet" => Box::new(googlenet::GoogLeNet),
+        "resnet50" => Box::new(resnet::ResNet50),
+        "inception-resnet" | "inception_resnet" => {
+            Box::new(inception_resnet::InceptionResNetV2)
+        }
+        "seq2seq" => Box::new(seq2seq::Seq2Seq::default()),
+        "vgg16" => Box::new(vgg::Vgg16),
+        _ => return None,
+    })
+}
+
+/// The paper's four CNNs, in its presentation order.
+pub fn cnn_names() -> [&'static str; 4] {
+    ["alexnet", "googlenet", "resnet50", "inception-resnet"]
+}
+
+/// The paper's five evaluated models (the registry additionally carries
+/// extension models such as `vgg16` — see [`by_name`]).
+pub fn all_names() -> [&'static str; 5] {
+    ["alexnet", "googlenet", "resnet50", "inception-resnet", "seq2seq"]
+}
+
+/// Profile one propagation of `model` into a [`Trace`] without running
+/// any allocator — the direct route from a model to a DSA instance, used
+/// by the heuristic/exact experiments (Fig 4, §5.2) and the docs.
+pub fn trace_for(model: &dyn Model, phase: Phase, batch: u32) -> Trace {
+    let mut rng = Pcg32::seeded(0x9e3779b97f4a7c15);
+    trace_for_seeded(model, phase, batch, &mut rng)
+}
+
+/// As [`trace_for`] with caller-controlled RNG (variable-length models).
+pub fn trace_for_seeded(
+    model: &dyn Model,
+    phase: Phase,
+    batch: u32,
+    rng: &mut Pcg32,
+) -> Trace {
+    let graph = model.build(phase, batch, rng);
+    let sched = schedule::build(&graph, phase);
+    trace_of_schedule(&sched, model.name(), phase, batch)
+}
+
+/// Feed a schedule through the profiler, producing its memory trace.
+pub fn trace_of_schedule(
+    sched: &schedule::Schedule,
+    model: &str,
+    phase: Phase,
+    batch: u32,
+) -> Trace {
+    let mut prof = MemoryProfiler::new(model, phase.name(), batch);
+    let mut handles: std::collections::HashMap<BufKey, crate::profiler::BlockHandle> =
+        Default::default();
+    for step in &sched.steps {
+        match *step {
+            Step::Alloc { key, bytes } => {
+                handles.insert(key, prof.on_alloc(bytes));
+            }
+            Step::Free { key } => {
+                let h = handles.remove(&key).expect("free before alloc");
+                prof.on_free(h);
+            }
+            Step::Compute { .. } => {}
+        }
+    }
+    prof.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in all_names() {
+            let m = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(!m.name().is_empty());
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn cnns_are_hot_seq2seq_is_not() {
+        for name in cnn_names() {
+            assert!(by_name(name).unwrap().is_hot(), "{name} must be hot");
+        }
+        assert!(!by_name("seq2seq").unwrap().is_hot());
+    }
+
+    #[test]
+    fn trace_for_produces_valid_traces() {
+        let m = by_name("alexnet").unwrap();
+        let t = trace_for(&*m, Phase::Inference, 1);
+        t.validate().unwrap();
+        assert!(t.n_blocks() > 10);
+        let inst = t.to_dsa_instance();
+        let sol = crate::dsa::bestfit::solve(&inst);
+        sol.validate(&inst).unwrap();
+    }
+}

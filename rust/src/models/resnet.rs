@@ -1,0 +1,158 @@
+//! ResNet-50 (He et al. 2016): bottleneck residual blocks [3, 4, 6, 3]
+//! with batch normalization. ≈ 25.6 M parameters.
+
+use super::{Model, Phase};
+use crate::graph::layers::GraphBuilder;
+use crate::graph::shapes::DType;
+use crate::graph::{Graph, TensorId};
+use crate::util::rng::Pcg32;
+
+pub struct ResNet50;
+
+/// conv → BN → (optional) ReLU.
+fn conv_bn(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    ch: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    relu: bool,
+) -> TensorId {
+    let c = b.conv2d(&format!("{name}.conv"), x, ch, k, s, p);
+    let n = b.batch_norm(&format!("{name}.bn"), c);
+    if relu {
+        b.relu(&format!("{name}.relu"), n)
+    } else {
+        n
+    }
+}
+
+/// Bottleneck block: 1×1(mid, stride) → 3×3(mid) → 1×1(out), with a
+/// projection shortcut when the shape changes.
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    mid: usize,
+    out: usize,
+    stride: usize,
+) -> TensorId {
+    let in_ch = b.shape_of(x).dims()[1];
+    let c1 = conv_bn(b, &format!("{name}.a"), x, mid, 1, stride, 0, true);
+    let c2 = conv_bn(b, &format!("{name}.b"), c1, mid, 3, 1, 1, true);
+    let c3 = conv_bn(b, &format!("{name}.c"), c2, out, 1, 1, 0, false);
+    let shortcut = if in_ch != out || stride != 1 {
+        conv_bn(b, &format!("{name}.proj"), x, out, 1, stride, 0, false)
+    } else {
+        x
+    };
+    let sum = b.add(&format!("{name}.add"), c3, shortcut);
+    b.relu(&format!("{name}.relu"), sum)
+}
+
+/// A stage of `n` bottlenecks; the first downsamples by `stride`.
+fn stage(
+    b: &mut GraphBuilder,
+    name: &str,
+    mut x: TensorId,
+    n: usize,
+    mid: usize,
+    out: usize,
+    stride: usize,
+) -> TensorId {
+    for i in 0..n {
+        let s = if i == 0 { stride } else { 1 };
+        x = bottleneck(b, &format!("{name}.{i}"), x, mid, out, s);
+    }
+    x
+}
+
+impl Model for ResNet50 {
+    fn name(&self) -> &'static str {
+        "resnet50"
+    }
+
+    fn build(&self, phase: Phase, batch: u32, _rng: &mut Pcg32) -> Graph {
+        let training = phase == Phase::Training;
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("data", &[batch as usize, 3, 224, 224]);
+
+        let stem = conv_bn(&mut b, "conv1", x, 64, 7, 2, 3, true); // 112
+        let p1 = b.max_pool("pool1", stem, 3, 2, 1); // 56
+
+        let s1 = stage(&mut b, "res2", p1, 3, 64, 256, 1); // 56
+        let s2 = stage(&mut b, "res3", s1, 4, 128, 512, 2); // 28
+        let s3 = stage(&mut b, "res4", s2, 6, 256, 1024, 2); // 14
+        let s4 = stage(&mut b, "res5", s3, 3, 512, 2048, 2); // 7
+
+        let gap = b.global_avg_pool("gap", s4);
+        let f = b.linear("fc", gap, 1000);
+        let out = if training {
+            b.softmax_loss("loss", f)
+        } else {
+            b.softmax("prob", f)
+        };
+        b.finish(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::schedule;
+    use crate::util::humansize::GIB;
+
+    #[test]
+    fn parameter_count_matches_published() {
+        let g = ResNet50.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let m = g.param_count() as f64 / 1e6;
+        assert!((25.0..26.5).contains(&m), "got {m} M params");
+    }
+
+    #[test]
+    fn depth_is_50_convs() {
+        let g = ResNet50.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let convs = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == crate::graph::OpKind::Conv2d)
+            .count();
+        // 49 in the main path + 1 fc = ResNet-*50*; projection shortcuts
+        // add 4 more convs.
+        assert_eq!(convs, 49 + 4);
+    }
+
+    #[test]
+    fn final_feature_map_is_7x7x2048() {
+        let g = ResNet50.build(Phase::Inference, 2, &mut Pcg32::seeded(0));
+        let last_relu = g
+            .tensors
+            .iter()
+            .find(|t| t.name == "res5.2.relu")
+            .unwrap();
+        assert_eq!(last_relu.shape.dims(), &[2, 2048, 7, 7]);
+    }
+
+    #[test]
+    fn training_schedule_peak_is_plausible() {
+        // Training at batch 32 keeps multi-GiB of activations live.
+        let g = ResNet50.build(Phase::Training, 32, &mut Pcg32::seeded(0));
+        let s = schedule::build(&g, Phase::Training);
+        let peak = s.validate().unwrap();
+        assert!(
+            peak > 3 * GIB / 2 && peak < 16 * GIB,
+            "peak {} out of expected range",
+            peak
+        );
+    }
+
+    #[test]
+    fn flops_magnitude() {
+        // ResNet-50 forward ≈ 3.8–4.1 GFLOP (2×MACs) per 224×224 image.
+        let g = ResNet50.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let gf = g.forward_flops() as f64 / 1e9;
+        assert!((7.0..9.0).contains(&gf), "got {gf} GFLOP");
+    }
+}

@@ -1,0 +1,218 @@
+//! seq2seq (Sutskever et al. 2014), after Chainer's `examples/seq2seq`
+//! on WMT15 En–Fr: stacked N-step LSTM encoder/decoder (cuDNN-fused, as
+//! Chainer's `NStepLSTM` links are) with a shared output projection.
+//!
+//! This is the paper's *non-hot* model (§4.3/§5.3): every training
+//! iteration packs a different number of tokens, so the **sizes** of the
+//! requested blocks differ across iterations while the op *structure*
+//! stays fixed — exactly the deviation §4.3's reoptimization handles.
+//! Per the paper's scripts, training sentences are cut at 50 words and
+//! inference generates exactly 100 words token-by-token, which is why
+//! inference requests many more (and smaller) blocks than training and
+//! Fig 4b's inference heuristic times dwarf the training ones.
+
+use super::{Model, Phase};
+use crate::graph::layers::GraphBuilder;
+use crate::graph::shapes::DType;
+use crate::graph::{Graph, TensorId};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct Seq2Seq {
+    pub vocab: usize,
+    pub units: usize,
+    pub layers: usize,
+    /// Training sentences are cut to at most this many words (§5.3).
+    pub max_train_len: usize,
+    /// Inference always generates exactly this many words (§5.3).
+    pub infer_len: usize,
+}
+
+impl Default for Seq2Seq {
+    fn default() -> Seq2Seq {
+        // Chainer example defaults: 1024 units, 3 layers; 40 k vocabulary.
+        Seq2Seq {
+            vocab: 40_000,
+            units: 1024,
+            layers: 3,
+            max_train_len: 50,
+            infer_len: 100,
+        }
+    }
+}
+
+impl Seq2Seq {
+    /// Sample one sentence length: log-normal-ish corpus distribution,
+    /// cut at `max_train_len` like the training script does.
+    pub fn sentence_len(&self, rng: &mut Pcg32) -> usize {
+        let raw = (rng.normal() * 0.7 + 2.9).exp() as usize + 5;
+        raw.clamp(5, self.max_train_len)
+    }
+
+    /// Total tokens in a packed mini-batch of `batch` sampled sentences.
+    fn batch_tokens(&self, batch: u32, rng: &mut Pcg32) -> usize {
+        (0..batch.max(1)).map(|_| self.sentence_len(rng)).sum()
+    }
+}
+
+impl Model for Seq2Seq {
+    fn name(&self) -> &'static str {
+        "seq2seq"
+    }
+
+    fn is_hot(&self) -> bool {
+        false
+    }
+
+    fn build(&self, phase: Phase, batch: u32, rng: &mut Pcg32) -> Graph {
+        let mut b = GraphBuilder::new(DType::F32);
+
+        // Shared parameters.
+        let emb_src = b.param("embed.src", &[self.vocab, self.units]);
+        let emb_tgt = b.param("embed.tgt", &[self.vocab, self.units]);
+        let enc_w: Vec<_> = (0..self.layers)
+            .map(|l| b.lstm_params(&format!("enc.l{l}"), self.units, self.units))
+            .collect();
+        let dec_w: Vec<_> = (0..self.layers)
+            .map(|l| b.lstm_params(&format!("dec.l{l}"), self.units, self.units))
+            .collect();
+        let proj_w = b.param("proj.W", &[self.vocab, self.units]);
+        let proj_b = b.param("proj.b", &[self.vocab]);
+
+        match phase {
+            Phase::Training => {
+                // Packed variable-token batches through fused N-step ops:
+                // fixed structure, variable sizes.
+                let src_tokens = self.batch_tokens(batch, rng);
+                let tgt_tokens = self.batch_tokens(batch, rng);
+
+                let src_ids = b.input("src.ids", &[src_tokens]);
+                let mut h = b.embed("enc.embed", emb_src, src_ids);
+                for (l, &w) in enc_w.iter().enumerate() {
+                    h = b.nstep_lstm(&format!("enc.l{l}.rnn"), w, h);
+                }
+
+                let tgt_ids = b.input("tgt.ids", &[tgt_tokens]);
+                let mut d = b.embed("dec.embed", emb_tgt, tgt_ids);
+                for (l, &w) in dec_w.iter().enumerate() {
+                    d = b.nstep_lstm(&format!("dec.l{l}.rnn"), w, d);
+                }
+
+                // One big projection + loss over all target tokens
+                // (Chainer concats the step outputs).
+                let logits = b.linear_with("proj", d, proj_w, proj_b);
+                let loss = b.softmax_loss("loss", logits);
+                b.finish(vec![loss])
+            }
+            Phase::Inference => {
+                // One input sentence (§5.1); greedy generation of exactly
+                // `infer_len` words, one small step at a time.
+                let src_tokens = self.sentence_len(rng);
+                let src_ids = b.input("src.ids", &[src_tokens]);
+                let mut h = b.embed("enc.embed", emb_src, src_ids);
+                for (l, &w) in enc_w.iter().enumerate() {
+                    h = b.nstep_lstm(&format!("enc.l{l}.rnn"), w, h);
+                }
+
+                let mut state: Vec<(TensorId, TensorId)> = (0..self.layers)
+                    .map(|l| {
+                        let h0 = b.input(&format!("dec.h0.{l}"), &[1, self.units]);
+                        let c0 = b.input(&format!("dec.c0.{l}"), &[1, self.units]);
+                        (h0, c0)
+                    })
+                    .collect();
+                let mut outputs = Vec::new();
+                for t in 0..self.infer_len {
+                    let ids = b.input(&format!("dec.ids{t}"), &[1]);
+                    let mut x = b.embed(&format!("dec.emb{t}"), emb_tgt, ids);
+                    for (l, &w) in dec_w.iter().enumerate() {
+                        let (hp, cp) = state[l];
+                        let (hn, cn) =
+                            b.lstm_cell(&format!("dec.l{l}.t{t}"), w, x, hp, cp);
+                        state[l] = (hn, cn);
+                        x = hn;
+                    }
+                    let logits = b.linear_with(&format!("dec.proj{t}"), x, proj_w, proj_b);
+                    outputs.push(b.softmax(&format!("dec.prob{t}"), logits));
+                }
+                b.finish(outputs)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::schedule;
+
+    #[test]
+    fn parameter_count() {
+        let m = Seq2Seq::default();
+        let g = m.build(Phase::Training, 4, &mut Pcg32::seeded(1));
+        // 2 embeddings (40k×1024) + 6 LSTMs ((2048)×4096+4096) + proj
+        // (40k×1024 + 40k) ≈ 173 M.
+        let mm = g.param_count() as f64 / 1e6;
+        assert!((165.0..180.0).contains(&mm), "got {mm} M params");
+    }
+
+    #[test]
+    fn training_structure_is_fixed_sizes_vary() {
+        let m = Seq2Seq::default();
+        let mut rng = Pcg32::seeded(7);
+        let runs: Vec<(usize, usize)> = (0..6)
+            .map(|_| {
+                let g = m.build(Phase::Training, 8, &mut rng);
+                let s = schedule::build(&g, Phase::Training);
+                (g.nodes.len(), s.total_alloc_bytes() as usize)
+            })
+            .collect();
+        // Node count identical; total bytes vary — the §4.3 size-only case.
+        assert!(runs.windows(2).all(|w| w[0].0 == w[1].0), "{runs:?}");
+        assert!(runs.windows(2).any(|w| w[0].1 != w[1].1), "{runs:?}");
+    }
+
+    #[test]
+    fn training_lengths_cut_at_50() {
+        let m = Seq2Seq::default();
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..200 {
+            assert!(m.sentence_len(&mut rng) <= 50);
+        }
+    }
+
+    #[test]
+    fn inference_has_100_decode_steps_and_batch_1() {
+        let m = Seq2Seq::default();
+        let g = m.build(Phase::Inference, 32, &mut Pcg32::seeded(5));
+        assert_eq!(g.outputs.len(), 100);
+        let ids0 = g.tensors.iter().find(|t| t.name == "dec.ids0").unwrap();
+        assert_eq!(ids0.shape.dims(), &[1]);
+    }
+
+    #[test]
+    fn inference_requests_many_more_blocks_than_training() {
+        // §5.3: the token-by-token inference loop requests many more
+        // blocks than the fused training propagation — the root cause of
+        // Fig 4b's asymmetry.
+        let m = Seq2Seq::default();
+        let tr = super::super::trace_for(&m, Phase::Training, 64);
+        let inf = super::super::trace_for(&m, Phase::Inference, 1);
+        assert!(
+            inf.n_blocks() > 3 * tr.n_blocks(),
+            "inference {} vs training {}",
+            inf.n_blocks(),
+            tr.n_blocks()
+        );
+    }
+
+    #[test]
+    fn schedules_validate_both_phases() {
+        let m = Seq2Seq::default();
+        for phase in [Phase::Training, Phase::Inference] {
+            let g = m.build(phase, 4, &mut Pcg32::seeded(2));
+            g.validate().unwrap();
+            schedule::build(&g, phase).validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! VGG-16 (Simonyan & Zisserman 2015) — an *extension* model beyond the
+//! paper's evaluated five. Its memory profile is the opposite extreme of
+//! Inception-ResNet: very few, very large blocks (the 224×224×64 early
+//! activations and the 102M-parameter fc6), making it a useful stress of
+//! the packing heuristic's behaviour on few-large-rectangle instances.
+//! ≈ 138 M parameters.
+
+use super::{Model, Phase};
+use crate::graph::layers::GraphBuilder;
+use crate::graph::shapes::DType;
+use crate::graph::{Graph, TensorId};
+use crate::util::rng::Pcg32;
+
+pub struct Vgg16;
+
+fn block(b: &mut GraphBuilder, name: &str, mut x: TensorId, convs: usize, ch: usize) -> TensorId {
+    for i in 0..convs {
+        let c = b.conv2d(&format!("{name}.conv{i}"), x, ch, 3, 1, 1);
+        x = b.relu(&format!("{name}.relu{i}"), c);
+    }
+    b.max_pool(&format!("{name}.pool"), x, 2, 2, 0)
+}
+
+impl Model for Vgg16 {
+    fn name(&self) -> &'static str {
+        "vgg16"
+    }
+
+    fn build(&self, phase: Phase, batch: u32, _rng: &mut Pcg32) -> Graph {
+        let training = phase == Phase::Training;
+        let mut b = GraphBuilder::new(DType::F32);
+        let x = b.input("data", &[batch as usize, 3, 224, 224]);
+
+        let s1 = block(&mut b, "b1", x, 2, 64); // 112
+        let s2 = block(&mut b, "b2", s1, 2, 128); // 56
+        let s3 = block(&mut b, "b3", s2, 3, 256); // 28
+        let s4 = block(&mut b, "b4", s3, 3, 512); // 14
+        let s5 = block(&mut b, "b5", s4, 3, 512); // 7
+
+        let f6 = b.linear("fc6", s5, 4096);
+        let r6 = b.relu("relu6", f6);
+        let d6 = if training { b.dropout("drop6", r6) } else { r6 };
+        let f7 = b.linear("fc7", d6, 4096);
+        let r7 = b.relu("relu7", f7);
+        let d7 = if training { b.dropout("drop7", r7) } else { r7 };
+        let f8 = b.linear("fc8", d7, 1000);
+
+        let out = if training {
+            b.softmax_loss("loss", f8)
+        } else {
+            b.softmax("prob", f8)
+        };
+        b.finish(vec![out])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::schedule;
+
+    #[test]
+    fn parameter_count_matches_published() {
+        let g = Vgg16.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let m = g.param_count() as f64 / 1e6;
+        assert!((135.0..141.0).contains(&m), "got {m} M params");
+    }
+
+    #[test]
+    fn conv_depth_is_13_plus_3_fc() {
+        let g = Vgg16.build(Phase::Inference, 1, &mut Pcg32::seeded(0));
+        let convs = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == crate::graph::OpKind::Conv2d)
+            .count();
+        let fcs = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == crate::graph::OpKind::Linear)
+            .count();
+        assert_eq!((convs, fcs), (13, 3));
+    }
+
+    #[test]
+    fn schedules_validate_and_pack() {
+        for phase in [Phase::Training, Phase::Inference] {
+            let g = Vgg16.build(phase, 8, &mut Pcg32::seeded(0));
+            g.validate().unwrap();
+            schedule::build(&g, phase).validate().unwrap();
+        }
+        let inst =
+            super::super::trace_for(&Vgg16, Phase::Training, 16).to_dsa_instance();
+        let sol = crate::dsa::bestfit::solve(&inst);
+        sol.validate(&inst).unwrap();
+        assert!(sol.gap_to(inst.lower_bound()) < 0.1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Memory-usage profiling of a sample run (§4.1), including the
+//! `interrupt`/`resume` escape hatch for non-hot propagation parts (§4.3).
+//!
+//! The profiler mirrors the paper's two global counters: the clock `y`
+//! (incremented after *every* allocation and free, including frees of
+//! unprofiled blocks — the clock orders all memory activity) and the block
+//! id `λ` (incremented per *profiled* allocation; replay later identifies
+//! requests purely by this position).
+
+use crate::trace::{Trace, TraceEvent};
+
+/// Handle the profiler hands back for each allocation, so the matching
+/// free can be attributed. Unprofiled (interrupted-region) allocations get
+/// [`BlockHandle::UNPROFILED`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockHandle(usize);
+
+impl BlockHandle {
+    pub const UNPROFILED: BlockHandle = BlockHandle(usize::MAX);
+
+    pub fn is_profiled(self) -> bool {
+        self != BlockHandle::UNPROFILED
+    }
+
+    /// The paper's λ id of this block. Panics on unprofiled handles.
+    pub fn id(self) -> usize {
+        assert!(self.is_profiled(), "id() on unprofiled handle");
+        self.0
+    }
+}
+
+/// Records the memory events of one propagation.
+#[derive(Debug)]
+pub struct MemoryProfiler {
+    /// The global clock `y` (§4.1): starts at 1, bumped after every event.
+    clock: u64,
+    /// The next block id `λ`: starts at 0 (paper says 1; zero-based here
+    /// to index vectors directly — an implementation detail).
+    next_id: usize,
+    /// Nesting depth of interrupt() calls (§4.3): > 0 ⇒ not monitoring.
+    interrupt_depth: u32,
+    trace: Trace,
+}
+
+impl MemoryProfiler {
+    pub fn new(model: &str, phase: &str, batch: u32) -> MemoryProfiler {
+        MemoryProfiler {
+            clock: 1,
+            next_id: 0,
+            interrupt_depth: 0,
+            trace: Trace::new(model, phase, batch),
+        }
+    }
+
+    /// Is monitoring currently suspended?
+    pub fn interrupted(&self) -> bool {
+        self.interrupt_depth > 0
+    }
+
+    /// Suspend monitoring (entering a non-hot propagation part). Nests.
+    pub fn interrupt(&mut self) {
+        self.interrupt_depth += 1;
+    }
+
+    /// Resume monitoring. Panics when not interrupted (an unbalanced
+    /// resume is a caller bug that would silently corrupt the profile).
+    pub fn resume(&mut self) {
+        assert!(self.interrupt_depth > 0, "resume without interrupt");
+        self.interrupt_depth -= 1;
+    }
+
+    /// Record an allocation of `size` bytes; returns the block handle.
+    pub fn on_alloc(&mut self, size: u64) -> BlockHandle {
+        if self.interrupted() {
+            // Out of optimization scope, but the clock still advances so
+            // profiled lifetimes around the region stay ordered.
+            self.clock += 1;
+            return BlockHandle::UNPROFILED;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.trace.events.push(TraceEvent::Alloc {
+            id,
+            size,
+            tick: self.clock,
+        });
+        self.clock += 1;
+        BlockHandle(id)
+    }
+
+    /// Record the free of a previously returned handle.
+    pub fn on_free(&mut self, handle: BlockHandle) {
+        if handle.is_profiled() {
+            self.trace.events.push(TraceEvent::Free {
+                id: handle.id(),
+                tick: self.clock,
+            });
+        }
+        self.clock += 1;
+    }
+
+    /// Number of profiled blocks so far.
+    pub fn n_blocks(&self) -> usize {
+        self.next_id
+    }
+
+    /// Finish profiling and return the trace.
+    pub fn finish(self) -> Trace {
+        debug_assert!(self.trace.validate().is_ok());
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_allocs_and_frees_with_increasing_clock() {
+        let mut p = MemoryProfiler::new("m", "training", 8);
+        let a = p.on_alloc(100);
+        let b = p.on_alloc(200);
+        p.on_free(a);
+        p.on_free(b);
+        let t = p.finish();
+        t.validate().unwrap();
+        assert_eq!(t.n_blocks(), 2);
+        let ticks: Vec<u64> = t.events.iter().map(|e| e.tick()).collect();
+        assert_eq!(ticks, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn handles_are_positional() {
+        let mut p = MemoryProfiler::new("m", "t", 1);
+        assert_eq!(p.on_alloc(1).id(), 0);
+        assert_eq!(p.on_alloc(1).id(), 1);
+        assert_eq!(p.on_alloc(1).id(), 2);
+    }
+
+    #[test]
+    fn interrupted_region_is_unprofiled_but_clock_advances() {
+        let mut p = MemoryProfiler::new("m", "t", 1);
+        let a = p.on_alloc(10); // tick 1
+        p.interrupt();
+        let u = p.on_alloc(999); // unprofiled, tick advances to 3
+        assert!(!u.is_profiled());
+        p.on_free(u); // unprofiled free, clock advances
+        p.resume();
+        let b = p.on_alloc(20); // profiled again
+        p.on_free(a);
+        p.on_free(b);
+        let t = p.finish();
+        t.validate().unwrap();
+        assert_eq!(t.n_blocks(), 2, "interrupted alloc excluded");
+        // Block b must have a tick later than the interrupted events.
+        assert!(matches!(t.events[1], TraceEvent::Alloc { id: 1, size: 20, tick } if tick >= 4));
+    }
+
+    #[test]
+    fn interrupt_nests() {
+        let mut p = MemoryProfiler::new("m", "t", 1);
+        p.interrupt();
+        p.interrupt();
+        p.resume();
+        assert!(p.interrupted());
+        p.resume();
+        assert!(!p.interrupted());
+    }
+
+    #[test]
+    #[should_panic(expected = "resume without interrupt")]
+    fn unbalanced_resume_panics() {
+        MemoryProfiler::new("m", "t", 1).resume();
+    }
+
+    #[test]
+    fn roundtrips_through_dsa() {
+        let mut p = MemoryProfiler::new("m", "t", 1);
+        let a = p.on_alloc(64);
+        let b = p.on_alloc(32);
+        p.on_free(b);
+        let c = p.on_alloc(16);
+        p.on_free(a);
+        p.on_free(c);
+        let inst = p.finish().to_dsa_instance();
+        let sol = crate::dsa::bestfit::solve(&inst);
+        sol.validate(&inst).unwrap();
+        // b and c can share space; a cannot overlap either.
+        assert_eq!(sol.peak, inst.liveness_lower_bound());
+    }
+}

@@ -1,0 +1,30 @@
+//! Tensor staging between the PGMO host arena and PJRT literals.
+//!
+//! This is where the paper's mechanism touches *real* memory on the real
+//! execution path: every per-step host buffer (input batch, labels,
+//! parameter snapshots, readbacks) lives at a profile-guided offset in
+//! one [`HostArena`](crate::alloc::arena::HostArena).
+
+use anyhow::Result;
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal: {} elements for shape {dims:?}", data.len());
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims_i64)?)
+}
+
+/// Copy a literal's f32 contents out.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read back a scalar f32 (e.g. the loss).
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

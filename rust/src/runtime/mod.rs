@@ -1,0 +1,130 @@
+//! PJRT runtime: load the AOT-lowered HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust. Python never runs
+//! on this path — after `make artifacts`, the `pgmo` binary is
+//! self-contained.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: HLO *text* → `HloModuleProto`
+//! → `XlaComputation` → `PjRtClient::compile` → `execute`. Text (not the
+//! serialized proto) is the interchange format because jax ≥ 0.5 emits
+//! 64-bit instruction ids the bundled xla_extension 0.5.1 rejects.
+
+pub mod buffers;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled entry point (e.g. `train_step_b32`).
+pub struct Entry {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shapes, in call order (from `meta.json`).
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl Entry {
+    /// Execute with the given inputs; returns the flattened output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.input_shapes.len(),
+            "{}: got {} inputs, expected {}",
+            self.name,
+            inputs.len(),
+            self.input_shapes.len()
+        );
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// The PJRT client plus every compiled artifact entry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    entries: HashMap<String, Entry>,
+}
+
+impl Runtime {
+    /// CPU PJRT client with no artifacts loaded yet.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            entries: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile every entry listed in `<dir>/meta.json`.
+    pub fn load_artifacts(&mut self, dir: &Path) -> Result<()> {
+        let meta_path = dir.join("meta.json");
+        let meta = Json::parse(
+            &std::fs::read_to_string(&meta_path)
+                .with_context(|| format!("reading {meta_path:?} — run `make artifacts`"))?,
+        )?;
+        let entries = meta
+            .get("entries")
+            .as_obj()
+            .context("meta.json: missing entries")?
+            .clone();
+        for (name, spec) in entries {
+            let input_shapes: Vec<Vec<usize>> = spec
+                .get("inputs")
+                .as_arr()
+                .context("entry without inputs")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .context("bad shape")
+                })
+                .collect::<Result<_>>()?;
+            let path = dir.join(format!("{name}.hlo.txt"));
+            self.load_hlo_text(&name, &path, input_shapes)?;
+        }
+        Ok(())
+    }
+
+    /// Load + compile a single HLO-text file.
+    pub fn load_hlo_text(
+        &mut self,
+        name: &str,
+        path: &Path,
+        input_shapes: Vec<Vec<usize>>,
+    ) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.entries.insert(
+            name.to_string(),
+            Entry {
+                name: name.to_string(),
+                exe,
+                input_shapes,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("no artifact entry {name:?} (loaded: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+}

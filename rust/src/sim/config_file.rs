@@ -1,0 +1,268 @@
+//! JSON configuration files for simulations and experiment sweeps — the
+//! framework-style config system (`pgmo sim --config run.json`,
+//! `pgmo experiments --config suite.json`).
+//!
+//! ```json
+//! {
+//!   "device": { "capacity": "16GiB", "unified_memory": true },
+//!   "protocol": { "warmup": 2, "iterations": 10, "seed": 7 },
+//!   "cost": { "pool_hit_ns": 30000, "replay_ns": 1500 },
+//!   "compute": { "flops_per_ns": 4185.0, "bytes_per_ns": 549.0 },
+//!   "runs": [
+//!     { "model": "resnet50", "phase": "training", "batch": 64, "alloc": "opt" }
+//!   ]
+//! }
+//! ```
+//!
+//! Every field is optional and overlays [`SimConfig::default`]; unknown
+//! keys are rejected (catching typos is most of a config system's value).
+
+use super::{AllocKind, SimConfig};
+use crate::graph::schedule::Phase;
+use crate::util::humansize::parse_bytes;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One requested run from a config file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunSpec {
+    pub model: String,
+    pub phase: Phase,
+    pub batch: u32,
+    pub alloc: AllocKind,
+}
+
+/// Parsed configuration file.
+#[derive(Debug, Clone)]
+pub struct ConfigFile {
+    pub sim: SimConfig,
+    pub runs: Vec<RunSpec>,
+}
+
+fn check_keys(obj: &Json, allowed: &[&str], section: &str) -> Result<()> {
+    if let Some(map) = obj.as_obj() {
+        for key in map.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!("config: unknown key {key:?} in {section} (allowed: {allowed:?})");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn get_u64(obj: &Json, key: &str, into: &mut u64) -> Result<()> {
+    match obj.get(key) {
+        Json::Null => Ok(()),
+        v => {
+            *into = v
+                .as_u64()
+                .or_else(|| v.as_str().and_then(parse_bytes))
+                .with_context(|| format!("config: bad value for {key:?}"))?;
+            Ok(())
+        }
+    }
+}
+
+fn get_f64(obj: &Json, key: &str, into: &mut f64) -> Result<()> {
+    match obj.get(key) {
+        Json::Null => Ok(()),
+        v => {
+            *into = v
+                .as_f64()
+                .with_context(|| format!("config: bad value for {key:?}"))?;
+            Ok(())
+        }
+    }
+}
+
+pub fn parse_alloc(s: &str) -> Result<AllocKind> {
+    Ok(match s {
+        "orig" | "pool" => AllocKind::Pool,
+        "opt" | "profile-guided" => AllocKind::ProfileGuided,
+        "network-wise" => AllocKind::NetworkWise,
+        "pool-bestfit" => AllocKind::PoolBestFit,
+        other => bail!("config: unknown allocator {other:?}"),
+    })
+}
+
+pub fn parse_phase(s: &str) -> Result<Phase> {
+    Ok(match s {
+        "training" | "train" => Phase::Training,
+        "inference" | "infer" => Phase::Inference,
+        other => bail!("config: unknown phase {other:?}"),
+    })
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let doc = Json::parse(text).context("config: invalid JSON")?;
+        check_keys(&doc, &["device", "protocol", "cost", "compute", "runs"], "root")?;
+
+        let mut sim = SimConfig::default();
+
+        let device = doc.get("device");
+        check_keys(device, &["capacity", "unified_memory"], "device")?;
+        get_u64(device, "capacity", &mut sim.capacity)?;
+        if let Some(b) = device.get("unified_memory").as_bool() {
+            sim.unified_memory = b;
+        }
+
+        let protocol = doc.get("protocol");
+        check_keys(protocol, &["warmup", "iterations", "seed"], "protocol")?;
+        let mut tmp = sim.warmup as u64;
+        get_u64(protocol, "warmup", &mut tmp)?;
+        sim.warmup = tmp as u32;
+        let mut tmp = sim.iterations as u64;
+        get_u64(protocol, "iterations", &mut tmp)?;
+        sim.iterations = tmp as u32;
+        get_u64(protocol, "seed", &mut sim.seed)?;
+
+        let cost = doc.get("cost");
+        check_keys(
+            cost,
+            &[
+                "cuda_malloc_ns",
+                "cuda_free_ns",
+                "pool_hit_ns",
+                "pool_miss_ns",
+                "pool_search_per_bin_ns",
+                "pool_free_ns",
+                "replay_ns",
+                "free_all_per_block_ns",
+                "um_migration_ns_per_mib",
+            ],
+            "cost",
+        )?;
+        get_u64(cost, "cuda_malloc_ns", &mut sim.cost.cuda_malloc_ns)?;
+        get_u64(cost, "cuda_free_ns", &mut sim.cost.cuda_free_ns)?;
+        get_u64(cost, "pool_hit_ns", &mut sim.cost.pool_hit_ns)?;
+        get_u64(cost, "pool_miss_ns", &mut sim.cost.pool_miss_ns)?;
+        get_u64(
+            cost,
+            "pool_search_per_bin_ns",
+            &mut sim.cost.pool_search_per_bin_ns,
+        )?;
+        get_u64(cost, "pool_free_ns", &mut sim.cost.pool_free_ns)?;
+        get_u64(cost, "replay_ns", &mut sim.cost.replay_ns)?;
+        get_u64(
+            cost,
+            "free_all_per_block_ns",
+            &mut sim.cost.free_all_per_block_ns,
+        )?;
+        get_u64(
+            cost,
+            "um_migration_ns_per_mib",
+            &mut sim.cost.um_migration_ns_per_mib,
+        )?;
+
+        let compute = doc.get("compute");
+        check_keys(compute, &["flops_per_ns", "bytes_per_ns", "launch_ns"], "compute")?;
+        get_f64(compute, "flops_per_ns", &mut sim.compute.flops_per_ns)?;
+        get_f64(compute, "bytes_per_ns", &mut sim.compute.bytes_per_ns)?;
+        get_u64(compute, "launch_ns", &mut sim.compute.launch_ns)?;
+
+        let mut runs = Vec::new();
+        if let Some(arr) = doc.get("runs").as_arr() {
+            for (i, r) in arr.iter().enumerate() {
+                check_keys(r, &["model", "phase", "batch", "alloc"], "runs[]")?;
+                let model = r
+                    .get("model")
+                    .as_str()
+                    .with_context(|| format!("config: runs[{i}] missing model"))?
+                    .to_string();
+                anyhow::ensure!(
+                    crate::models::by_name(&model).is_some(),
+                    "config: runs[{i}]: unknown model {model:?}"
+                );
+                runs.push(RunSpec {
+                    model,
+                    phase: parse_phase(r.get("phase").as_str().unwrap_or("training"))?,
+                    batch: r.get("batch").as_u64().unwrap_or(32) as u32,
+                    alloc: parse_alloc(r.get("alloc").as_str().unwrap_or("opt"))?,
+                });
+            }
+        }
+
+        Ok(ConfigFile { sim, runs })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile> {
+        ConfigFile::parse(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path:?}"))?,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::humansize::GIB;
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = ConfigFile::parse(
+            r#"{
+              "device": { "capacity": "32GiB", "unified_memory": true },
+              "protocol": { "warmup": 1, "iterations": 5, "seed": 42 },
+              "cost": { "pool_hit_ns": 9999 },
+              "compute": { "flops_per_ns": 1000.0 },
+              "runs": [
+                { "model": "alexnet", "phase": "inference", "batch": 1, "alloc": "orig" },
+                { "model": "vgg16" }
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sim.capacity, 32 * GIB);
+        assert!(cfg.sim.unified_memory);
+        assert_eq!(cfg.sim.warmup, 1);
+        assert_eq!(cfg.sim.seed, 42);
+        assert_eq!(cfg.sim.cost.pool_hit_ns, 9999);
+        assert_eq!(cfg.sim.compute.flops_per_ns, 1000.0);
+        assert_eq!(cfg.runs.len(), 2);
+        assert_eq!(cfg.runs[0].alloc, AllocKind::Pool);
+        assert_eq!(cfg.runs[1].batch, 32, "defaults applied");
+    }
+
+    #[test]
+    fn empty_config_is_all_defaults() {
+        let cfg = ConfigFile::parse("{}").unwrap();
+        assert_eq!(cfg.sim.capacity, SimConfig::default().capacity);
+        assert!(cfg.runs.is_empty());
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        for bad in [
+            r#"{"devicee": {}}"#,
+            r#"{"device": {"capacityy": 1}}"#,
+            r#"{"runs": [{"model": "alexnet", "batchh": 3}]}"#,
+        ] {
+            assert!(ConfigFile::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(ConfigFile::parse(r#"{"device": {"capacity": "wat"}}"#).is_err());
+        assert!(ConfigFile::parse(r#"{"runs": [{"model": "nope"}]}"#).is_err());
+        assert!(ConfigFile::parse(r#"{"runs": [{"model": "alexnet", "alloc": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn config_drives_a_run() {
+        let cfg = ConfigFile::parse(
+            r#"{
+              "protocol": { "warmup": 1, "iterations": 2 },
+              "device": { "unified_memory": true },
+              "runs": [{ "model": "alexnet", "phase": "inference", "batch": 1, "alloc": "opt" }]
+            }"#,
+        )
+        .unwrap();
+        let spec = &cfg.runs[0];
+        let model = crate::models::by_name(&spec.model).unwrap();
+        let r = crate::sim::run(&*model, spec.phase, spec.batch, spec.alloc, &cfg.sim);
+        assert!(r.ok);
+    }
+}

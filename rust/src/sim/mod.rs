@@ -1,0 +1,351 @@
+//! Execution simulator: walks a model's propagation schedule against an
+//! allocator and the simulated device, reproducing the measurement
+//! protocol of §5.1 (warmup iterations, then measured iterations;
+//! Unified Memory on for memory readings, off for timing readings; OOM
+//! without UM ⇒ the paper's "N/A").
+
+pub mod config_file;
+
+use crate::alloc::network_wise::NetworkWiseAllocator;
+use crate::alloc::pool::{PoolAllocator, PoolMode};
+use crate::alloc::profile_guided::ProfileGuidedAllocator;
+use crate::alloc::{AllocStats, DeviceAllocator, Ptr};
+use crate::device::{CostModel, SimDevice};
+use crate::graph::cost::ComputeModel;
+use crate::graph::schedule::{self, BufKey, Phase, Schedule, Step};
+use crate::models::Model;
+use crate::util::humansize::GIB;
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+/// Which allocator to drive (the paper's `orig` is [`AllocKind::Pool`],
+/// `opt` is [`AllocKind::ProfileGuided`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocKind {
+    NetworkWise,
+    Pool,
+    PoolBestFit,
+    ProfileGuided,
+}
+
+impl AllocKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocKind::NetworkWise => "network-wise",
+            AllocKind::Pool => "orig",
+            AllocKind::PoolBestFit => "pool-bestfit",
+            AllocKind::ProfileGuided => "opt",
+        }
+    }
+
+    fn build(self, model: &str, phase: Phase, batch: u32) -> Box<dyn DeviceAllocator> {
+        match self {
+            AllocKind::NetworkWise => Box::new(NetworkWiseAllocator::new()),
+            AllocKind::Pool => Box::new(PoolAllocator::new(PoolMode::ExactSize)),
+            AllocKind::PoolBestFit => Box::new(PoolAllocator::new(PoolMode::BestFit)),
+            AllocKind::ProfileGuided => {
+                Box::new(ProfileGuidedAllocator::new(model, phase.name(), batch))
+            }
+        }
+    }
+}
+
+/// Simulation configuration (defaults = the paper's testbed).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Device capacity (P100: 16 GiB).
+    pub capacity: u64,
+    /// CUDA Unified Memory: §5.1 turns it on to *measure memory* beyond
+    /// capacity and off to *measure time*.
+    pub unified_memory: bool,
+    pub warmup: u32,
+    pub iterations: u32,
+    pub seed: u64,
+    pub compute: ComputeModel,
+    pub cost: CostModel,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            capacity: 16 * GIB,
+            unified_memory: false,
+            warmup: 3,
+            iterations: 12,
+            seed: 0x5e95_eed1,
+            compute: ComputeModel::default(),
+            cost: CostModel::default(),
+        }
+    }
+}
+
+/// Result of one simulated run — one bar of Fig 2 / one point of Fig 3.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub model: String,
+    pub phase: Phase,
+    pub batch: u32,
+    pub alloc: &'static str,
+    /// False = ran out of device memory (the paper's "N/A").
+    pub ok: bool,
+    /// Peak bytes resident on the device (Fig 2 total height).
+    pub peak_device_bytes: u64,
+    /// Persistent bytes (params/grads/momentum — Fig 2 red bar).
+    pub prealloc_bytes: u64,
+    /// Peak of propagation-scoped memory (Fig 2 blue bar).
+    pub propagation_peak: u64,
+    /// Device bytes held right after iteration 10 (Fig 2c's metric).
+    pub used_after_10: u64,
+    /// Mean measured-iteration time, simulated ns (Fig 3).
+    pub avg_iter_ns: f64,
+    /// Mean memory-management overhead per iteration, simulated ns.
+    pub avg_alloc_overhead_ns: f64,
+    /// Total wall-clock spent in DSA solving (Fig 4).
+    pub solve_ns: u64,
+    pub stats: AllocStats,
+    pub iterations: u32,
+}
+
+impl RunReport {
+    fn not_applicable(model: &str, phase: Phase, batch: u32, kind: AllocKind) -> RunReport {
+        RunReport {
+            model: model.to_string(),
+            phase,
+            batch,
+            alloc: kind.name(),
+            ok: false,
+            peak_device_bytes: 0,
+            prealloc_bytes: 0,
+            propagation_peak: 0,
+            used_after_10: 0,
+            avg_iter_ns: 0.0,
+            avg_alloc_overhead_ns: 0.0,
+            solve_ns: 0,
+            stats: AllocStats::default(),
+            iterations: 0,
+        }
+    }
+}
+
+/// Run `model` × `phase` × `batch` under allocator `kind`.
+pub fn run(model: &dyn Model, phase: Phase, batch: u32, kind: AllocKind, cfg: &SimConfig) -> RunReport {
+    let mut dev = SimDevice::new(cfg.capacity)
+        .with_unified_memory(cfg.unified_memory)
+        .with_cost_model(cfg.cost.clone());
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut alloc = kind.build(model.name(), phase, batch);
+
+    // Persistent memory: parameters (+ training state), allocated once.
+    let graph0 = model.build(phase, batch, &mut rng.clone());
+    let prealloc = graph0.preallocated_bytes(phase == Phase::Training);
+    if prealloc > 0 && dev.malloc(prealloc).is_err() {
+        return RunReport::not_applicable(model.name(), phase, batch, kind);
+    }
+    let setup_clock = dev.clock_ns; // exclude setup from iteration timing
+
+    // Hot models reuse one schedule; seq2seq rebuilds per iteration.
+    let hot_schedule: Option<Schedule> = model
+        .is_hot()
+        .then(|| schedule::build(&graph0, phase));
+
+    let total_iters = cfg.warmup + cfg.iterations;
+    debug_assert!(
+        kind != AllocKind::ProfileGuided || cfg.warmup >= 1,
+        "profile-guided needs ≥1 warmup iteration for the sample run"
+    );
+    let mut iter_ns: Vec<u64> = Vec::with_capacity(cfg.iterations as usize);
+    let mut overhead_ns: Vec<u64> = Vec::with_capacity(cfg.iterations as usize);
+    let mut used_after_10 = 0u64;
+    let mut solve_wall_before = 0u64;
+
+    for iter in 0..total_iters {
+        let built;
+        let sched = match &hot_schedule {
+            Some(s) => s,
+            None => {
+                built = schedule::build(&model.build(phase, batch, &mut rng), phase);
+                &built
+            }
+        };
+
+        let clock_start = dev.clock_ns;
+        let mut compute_ns_this_iter = 0u64;
+        alloc.begin_iteration(&mut dev);
+        let mut live: HashMap<BufKey, Ptr> = HashMap::new();
+        let mut oom = false;
+        for step in &sched.steps {
+            match *step {
+                Step::Alloc { key, bytes } => match alloc.alloc(&mut dev, bytes) {
+                    Ok(ptr) => {
+                        live.insert(key, ptr);
+                    }
+                    Err(_) => {
+                        oom = true;
+                        break;
+                    }
+                },
+                Step::Free { key } => {
+                    let ptr = live.remove(&key).expect("schedule freed dead buffer");
+                    alloc.free(&mut dev, ptr);
+                }
+                Step::Compute { flops, moved_bytes } => {
+                    let ns = cfg.compute.kernel_ns(flops, moved_bytes);
+                    compute_ns_this_iter += ns;
+                    dev.charge_ns(ns);
+                }
+            }
+        }
+        if oom {
+            return RunReport::not_applicable(model.name(), phase, batch, kind);
+        }
+        if alloc.end_iteration(&mut dev).is_err() {
+            return RunReport::not_applicable(model.name(), phase, batch, kind);
+        }
+
+        // Per-iteration accounting: simulated device time + real solver
+        // wall time (the reoptimization happens on the training thread).
+        let solve_now = alloc.solve_ns();
+        let solve_delta = solve_now - solve_wall_before;
+        solve_wall_before = solve_now;
+        let this_iter = (dev.clock_ns - clock_start) + solve_delta;
+
+        if iter == 10.min(total_iters - 1) {
+            used_after_10 = dev.extent();
+        }
+        if iter + 1 == cfg.warmup {
+            // §5.1 protocol: warmup first, then measure. Resetting the
+            // watermarks excludes the sample-run transient (the paper's
+            // profile run may even use Unified Memory, §1 last ¶).
+            dev.reset_watermarks();
+        }
+        if iter >= cfg.warmup {
+            iter_ns.push(this_iter);
+            overhead_ns.push(this_iter - compute_ns_this_iter);
+        }
+    }
+
+    let _ = setup_clock;
+    let n = iter_ns.len().max(1) as f64;
+    RunReport {
+        model: model.name().to_string(),
+        phase,
+        batch,
+        alloc: kind.name(),
+        ok: true,
+        peak_device_bytes: dev.peak(),
+        prealloc_bytes: prealloc,
+        propagation_peak: dev.peak().saturating_sub(prealloc),
+        used_after_10,
+        avg_iter_ns: iter_ns.iter().sum::<u64>() as f64 / n,
+        avg_alloc_overhead_ns: overhead_ns.iter().sum::<u64>() as f64 / n,
+        solve_ns: alloc.solve_ns(),
+        stats: alloc.stats(),
+        iterations: iter_ns.len() as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::util::humansize::GIB;
+
+    fn cfg_mem() -> SimConfig {
+        SimConfig {
+            unified_memory: true,
+            warmup: 2,
+            iterations: 6,
+            ..SimConfig::default()
+        }
+    }
+
+    fn cfg_time() -> SimConfig {
+        SimConfig {
+            warmup: 2,
+            iterations: 6,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn opt_uses_less_memory_than_orig_on_alexnet_training() {
+        let m = models::by_name("alexnet").unwrap();
+        let orig = run(&*m, Phase::Training, 32, AllocKind::Pool, &cfg_mem());
+        let opt = run(&*m, Phase::Training, 32, AllocKind::ProfileGuided, &cfg_mem());
+        assert!(orig.ok && opt.ok);
+        assert!(
+            opt.peak_device_bytes <= orig.peak_device_bytes,
+            "opt {} > orig {}",
+            opt.peak_device_bytes,
+            orig.peak_device_bytes
+        );
+        assert!(opt.propagation_peak < orig.propagation_peak);
+    }
+
+    #[test]
+    fn network_wise_uses_most_memory() {
+        let m = models::by_name("alexnet").unwrap();
+        let nw = run(&*m, Phase::Training, 32, AllocKind::NetworkWise, &cfg_mem());
+        let pool = run(&*m, Phase::Training, 32, AllocKind::Pool, &cfg_mem());
+        assert!(nw.peak_device_bytes >= pool.peak_device_bytes);
+    }
+
+    #[test]
+    fn opt_is_faster_per_iteration_after_warmup() {
+        let m = models::by_name("alexnet").unwrap();
+        let orig = run(&*m, Phase::Inference, 1, AllocKind::Pool, &cfg_time());
+        let opt = run(&*m, Phase::Inference, 1, AllocKind::ProfileGuided, &cfg_time());
+        assert!(orig.ok && opt.ok);
+        assert!(
+            opt.avg_alloc_overhead_ns < orig.avg_alloc_overhead_ns,
+            "opt overhead {} >= orig {}",
+            opt.avg_alloc_overhead_ns,
+            orig.avg_alloc_overhead_ns
+        );
+        assert!(opt.avg_iter_ns <= orig.avg_iter_ns);
+    }
+
+    #[test]
+    fn oom_reports_not_applicable() {
+        let m = models::by_name("resnet50").unwrap();
+        let tiny = SimConfig {
+            capacity: GIB, // 1 GiB cannot hold ResNet-50 training at b32
+            ..cfg_time()
+        };
+        let r = run(&*m, Phase::Training, 32, AllocKind::Pool, &tiny);
+        assert!(!r.ok, "expected N/A");
+    }
+
+    #[test]
+    fn seq2seq_pool_accumulates_opt_does_not() {
+        let m = models::by_name("seq2seq").unwrap();
+        let cfg = SimConfig {
+            unified_memory: true,
+            warmup: 2,
+            iterations: 25,
+            ..SimConfig::default()
+        };
+        let orig = run(&*m, Phase::Training, 32, AllocKind::Pool, &cfg);
+        let opt = run(&*m, Phase::Training, 32, AllocKind::ProfileGuided, &cfg);
+        assert!(orig.ok && opt.ok);
+        // The pool's exact-size bins strand memory as lengths vary (§5.3);
+        // profile-guided reoptimizes and keeps one arena.
+        assert!(
+            opt.peak_device_bytes < orig.peak_device_bytes,
+            "opt {} !< orig {}",
+            opt.peak_device_bytes,
+            orig.peak_device_bytes
+        );
+        assert!(opt.stats.reopts > 0, "variable lengths must reoptimize");
+    }
+
+    #[test]
+    fn profile_guided_replays_after_first_iteration() {
+        let m = models::by_name("googlenet").unwrap();
+        let r = run(&*m, Phase::Inference, 1, AllocKind::ProfileGuided, &cfg_time());
+        assert!(r.ok);
+        assert!(r.stats.fast_path > 0);
+        assert_eq!(r.stats.reopts, 0, "hot model never reoptimizes");
+        assert!(r.solve_ns > 0, "the heuristic ran at least once");
+    }
+}

@@ -1,0 +1,204 @@
+//! Composable random-value generators with shrink candidates.
+
+use crate::util::rng::Pcg32;
+use std::ops::RangeInclusive;
+use std::rc::Rc;
+
+/// A generator produces values from an RNG and proposes smaller variants of
+/// a failing value ("shrinks"). Clone is cheap (Rc-backed closures).
+#[derive(Clone)]
+pub struct Gen<T> {
+    generate: Rc<dyn Fn(&mut Pcg32) -> T>,
+    shrink: Rc<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(
+        generate: impl Fn(&mut Pcg32) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Gen<T> {
+        Gen {
+            generate: Rc::new(generate),
+            shrink: Rc::new(shrink),
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> T {
+        (self.generate)(rng)
+    }
+
+    pub fn shrinks(&self, value: &T) -> Vec<T> {
+        (self.shrink)(value)
+    }
+
+    /// Map the output; shrinking is lost unless the mapping is re-derivable,
+    /// so mapped generators shrink by regenerating nothing (identity-free).
+    pub fn map<U: 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        let g = self.generate.clone();
+        Gen::new(move |rng| f(g(rng)), |_| Vec::new())
+    }
+}
+
+/// Uniform `u64` in `[0, max]`, shrinking toward zero by halving.
+pub fn u64_up_to(max: u64) -> Gen<u64> {
+    Gen::new(
+        move |rng| rng.below(max + 1),
+        |&v| {
+            let mut out = Vec::new();
+            if v > 0 {
+                out.push(0);
+                out.push(v / 2);
+                out.push(v - 1);
+            }
+            out.sort_unstable();
+            out.dedup();
+            out.retain(|&s| s != v);
+            out
+        },
+    )
+}
+
+/// Uniform `u64` in an inclusive range, shrinking toward the low end.
+pub fn u64_in(range: RangeInclusive<u64>) -> Gen<u64> {
+    let (lo, hi) = (*range.start(), *range.end());
+    assert!(lo <= hi);
+    Gen::new(
+        move |rng| rng.range(lo, hi),
+        move |&v| {
+            let mut out = Vec::new();
+            if v > lo {
+                out.push(lo);
+                out.push(lo + (v - lo) / 2);
+                out.push(v - 1);
+            }
+            out.sort_unstable();
+            out.dedup();
+            out.retain(|&s| s != v);
+            out
+        },
+    )
+}
+
+pub fn usize_in(range: RangeInclusive<usize>) -> Gen<usize> {
+    u64_in(*range.start() as u64..=*range.end() as u64).map(|v| v as usize)
+}
+
+/// `bool` with probability `p` of `true`, shrinking toward `false`.
+pub fn bool_with(p: f64) -> Gen<bool> {
+    Gen::new(
+        move |rng| rng.bool(p),
+        |&v| if v { vec![false] } else { vec![] },
+    )
+}
+
+/// Vector of `item`s with a length drawn from `len`. Shrinks by removing
+/// elements (halves, then singles) and by shrinking individual elements.
+pub fn vec<T: Clone + 'static>(item: Gen<T>, len: RangeInclusive<usize>) -> Gen<Vec<T>> {
+    let (lo, hi) = (*len.start(), *len.end());
+    let item2 = item.clone();
+    Gen::new(
+        move |rng| {
+            let n = rng.range_usize(lo, hi);
+            (0..n).map(|_| item.sample(rng)).collect()
+        },
+        move |v: &Vec<T>| {
+            let mut out: Vec<Vec<T>> = Vec::new();
+            // Remove chunks.
+            if v.len() > lo {
+                let half = lo.max(v.len() / 2);
+                out.push(v[..half].to_vec());
+                let mut minus_last = v.clone();
+                minus_last.pop();
+                out.push(minus_last);
+                if v.len() > 1 {
+                    out.push(v[1..].to_vec());
+                }
+            }
+            // Shrink one element at a time (first few positions only, to
+            // bound the candidate set).
+            for i in 0..v.len().min(8) {
+                for candidate in item2.shrinks(&v[i]) {
+                    let mut w = v.clone();
+                    w[i] = candidate;
+                    out.push(w);
+                }
+            }
+            out
+        },
+    )
+}
+
+/// Pair of independent generators.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let (a2, b2) = (a.clone(), b.clone());
+    Gen::new(
+        move |rng| (a.sample(rng), b.sample(rng)),
+        move |(x, y)| {
+            let mut out: Vec<(A, B)> = Vec::new();
+            for xs in a2.shrinks(x) {
+                out.push((xs, y.clone()));
+            }
+            for ys in b2.shrinks(y) {
+                out.push((x.clone(), ys));
+            }
+            out
+        },
+    )
+}
+
+/// Pick uniformly from a fixed set of values; shrinks toward earlier entries.
+pub fn one_of<T: Clone + PartialEq + 'static>(choices: Vec<T>) -> Gen<T> {
+    assert!(!choices.is_empty());
+    let c2 = choices.clone();
+    Gen::new(
+        move |rng| rng.choose(&choices).clone(),
+        move |v| {
+            match c2.iter().position(|c| c == v) {
+                Some(0) | None => vec![],
+                Some(i) => vec![c2[0].clone(), c2[i - 1].clone()],
+            }
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_bounds() {
+        let g = u64_in(5..=10);
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..200 {
+            let v = g.sample(&mut rng);
+            assert!((5..=10).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shrinks_move_down() {
+        let g = u64_in(5..=100);
+        for s in g.shrinks(&50) {
+            assert!(s < 50 && s >= 5);
+        }
+        assert!(g.shrinks(&5).is_empty());
+    }
+
+    #[test]
+    fn vec_len_bounds_and_shrinks() {
+        let g = vec(u64_up_to(9), 2..=6);
+        let mut rng = Pcg32::seeded(2);
+        let v = g.sample(&mut rng);
+        assert!((2..=6).contains(&v.len()));
+        for s in g.shrinks(&v) {
+            assert!(s.len() <= v.len());
+        }
+    }
+
+    #[test]
+    fn one_of_shrinks_toward_head() {
+        let g = one_of(vec!["a", "b", "c"]);
+        assert_eq!(g.shrinks(&"c"), vec!["a", "b"]);
+        assert!(g.shrinks(&"a").is_empty());
+    }
+}

@@ -1,0 +1,21 @@
+//! In-repo property-based testing harness (proptest substitute; the offline
+//! image has no proptest/quickcheck). Provides composable generators over a
+//! deterministic [`Pcg32`](crate::util::rng::Pcg32) stream, a runner that
+//! reports the failing seed, and greedy shrinking for the common shapes
+//! PGMO tests (integers, vectors, DSA instances).
+//!
+//! ```no_run
+//! use pgmo::testkit::{self, gen};
+//!
+//! testkit::check("sorted after sort", 100, gen::vec(gen::u64_up_to(99), 0..=20), |v| {
+//!     let mut s = v.clone();
+//!     s.sort_unstable();
+//!     s.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+
+pub mod gen;
+pub mod prop;
+
+pub use gen::Gen;
+pub use prop::{check, check_seeded};

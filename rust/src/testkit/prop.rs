@@ -1,0 +1,114 @@
+//! Property-test runner with seed reporting and greedy shrinking.
+
+use super::gen::Gen;
+use crate::util::rng::Pcg32;
+
+/// Maximum shrink steps before reporting the best counterexample found.
+const MAX_SHRINK_STEPS: usize = 500;
+
+/// Check `prop` over `cases` random values of `gen`. Panics with the seed
+/// and the (shrunk) counterexample on failure. The seed can be pinned with
+/// the `PGMO_PROPTEST_SEED` environment variable for reproduction.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let seed = std::env::var("PGMO_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_cafe_f00d_0001);
+    check_seeded(name, seed, cases, gen, prop)
+}
+
+/// As [`check`] with an explicit base seed.
+pub fn check_seeded<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg32::seeded(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork();
+        let value = gen.sample(&mut case_rng);
+        if !run_prop(&prop, &value) {
+            let shrunk = shrink(&gen, &prop, value.clone());
+            panic!(
+                "property {name:?} failed (seed={seed}, case={case})\n\
+                 original: {value:?}\n\
+                 shrunk:   {shrunk:?}\n\
+                 reproduce with PGMO_PROPTEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+fn run_prop<T>(prop: &impl Fn(&T) -> bool, value: &T) -> bool {
+    prop(value)
+}
+
+/// Greedy descent: repeatedly take the first shrink candidate that still
+/// fails until no candidate fails or the step budget is exhausted.
+fn shrink<T: Clone + std::fmt::Debug + 'static>(
+    gen: &Gen<T>,
+    prop: &impl Fn(&T) -> bool,
+    start: T,
+) -> T {
+    let mut current = start;
+    let mut steps = 0;
+    'outer: while steps < MAX_SHRINK_STEPS {
+        for candidate in gen.shrinks(&current) {
+            steps += 1;
+            if !run_prop(prop, &candidate) {
+                current = candidate;
+                continue 'outer;
+            }
+            if steps >= MAX_SHRINK_STEPS {
+                break;
+            }
+        }
+        break;
+    }
+    current
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::gen;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check("add commutes", 50, gen::pair(gen::u64_up_to(100), gen::u64_up_to(100)), |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            check_seeded("all below 10", 7, 200, gen::u64_up_to(1000), |&v| v < 10)
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink must land exactly on the boundary counterexample.
+        assert!(msg.contains("shrunk:   10"), "msg={msg}");
+    }
+
+    #[test]
+    fn vec_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check_seeded(
+                "short vecs",
+                3,
+                200,
+                gen::vec(gen::u64_up_to(5), 0..=50),
+                |v| v.len() < 4,
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("failed"));
+    }
+}

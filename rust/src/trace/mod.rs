@@ -1,0 +1,298 @@
+//! Memory traces: the profile a sample run produces (§4.1) and the bridge
+//! to a [`DsaInstance`](crate::dsa::problem::DsaInstance).
+//!
+//! A trace is the ordered list of memory events of one *hot* propagation.
+//! Ticks follow the paper's global clock `y`: a single integer incremented
+//! after every allocation and every free, so every event has a unique
+//! tick. Block ids follow the paper's counter `λ`: dense, in first-request
+//! order — replay identifies blocks purely by this position.
+
+pub mod viz;
+
+use crate::dsa::problem::{Block, DsaInstance};
+use crate::util::json::Json;
+
+/// One profiled memory event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// Block `id` of `size` bytes requested at `tick`.
+    Alloc { id: usize, size: u64, tick: u64 },
+    /// Block `id` released at `tick`.
+    Free { id: usize, tick: u64 },
+}
+
+impl TraceEvent {
+    pub fn tick(&self) -> u64 {
+        match self {
+            TraceEvent::Alloc { tick, .. } | TraceEvent::Free { tick, .. } => *tick,
+        }
+    }
+}
+
+/// A profiled propagation: events plus descriptive metadata.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Descriptive labels for reports ("resnet50", "training", batch 64).
+    pub model: String,
+    pub phase: String,
+    pub batch: u32,
+}
+
+/// Summary statistics used by reports and tests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceStats {
+    pub n_blocks: usize,
+    pub n_events: usize,
+    pub total_bytes: u64,
+    /// Peak of simultaneously live bytes (the liveness lower bound).
+    pub peak_live_bytes: u64,
+    pub max_block: u64,
+}
+
+impl Trace {
+    pub fn new(model: &str, phase: &str, batch: u32) -> Trace {
+        Trace {
+            events: Vec::new(),
+            model: model.to_string(),
+            phase: phase.to_string(),
+            batch,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}/{}/b{}", self.model, self.phase, self.batch)
+    }
+
+    /// Number of distinct blocks (= number of Alloc events).
+    pub fn n_blocks(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Alloc { .. }))
+            .count()
+    }
+
+    /// Convert to a DSA instance. Blocks never freed within the trace get
+    /// a synthetic free at the horizon (they stay live to the end of the
+    /// propagation — e.g. the loss output), which is the conservative
+    /// choice: their space cannot be reused.
+    pub fn to_dsa_instance(&self) -> DsaInstance {
+        let mut alloc_at = Vec::new();
+        let mut size = Vec::new();
+        let mut free_at = Vec::new();
+        for e in &self.events {
+            match *e {
+                TraceEvent::Alloc { id, size: w, tick } => {
+                    assert_eq!(id, alloc_at.len(), "ids must be dense, in order");
+                    alloc_at.push(tick);
+                    size.push(w);
+                    free_at.push(None);
+                }
+                TraceEvent::Free { id, tick } => {
+                    assert!(free_at[id].is_none(), "double free in trace (block {id})");
+                    free_at[id] = Some(tick);
+                }
+            }
+        }
+        let horizon = self
+            .events
+            .last()
+            .map(|e| e.tick() + 1)
+            .unwrap_or(0);
+        let blocks = (0..alloc_at.len())
+            .map(|i| Block::new(i, size[i], alloc_at[i], free_at[i].unwrap_or(horizon)))
+            .collect();
+        DsaInstance::new(blocks)
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        let inst = self.to_dsa_instance();
+        TraceStats {
+            n_blocks: inst.len(),
+            n_events: self.events.len(),
+            total_bytes: inst.total_size(),
+            peak_live_bytes: inst.liveness_lower_bound(),
+            max_block: inst.max_block_size(),
+        }
+    }
+
+    /// Validate well-formedness: strictly increasing ticks, dense ids,
+    /// frees only of allocated-and-not-yet-freed blocks.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut last_tick = None;
+        let mut next_id = 0usize;
+        let mut live = vec![];
+        for (n, e) in self.events.iter().enumerate() {
+            if let Some(t) = last_tick {
+                anyhow::ensure!(e.tick() > t, "event {n}: tick not increasing");
+            }
+            last_tick = Some(e.tick());
+            match *e {
+                TraceEvent::Alloc { id, size, .. } => {
+                    anyhow::ensure!(id == next_id, "event {n}: non-dense id {id}");
+                    anyhow::ensure!(size > 0, "event {n}: zero-size alloc");
+                    next_id += 1;
+                    live.push(true);
+                }
+                TraceEvent::Free { id, .. } => {
+                    anyhow::ensure!(id < next_id, "event {n}: free of unknown id {id}");
+                    anyhow::ensure!(live[id], "event {n}: double free of id {id}");
+                    live[id] = false;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ----- JSON persistence ------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| match *e {
+                TraceEvent::Alloc { id, size, tick } => Json::Arr(vec![
+                    Json::Str("a".into()),
+                    Json::Int(id as i64),
+                    Json::Int(size as i64),
+                    Json::Int(tick as i64),
+                ]),
+                TraceEvent::Free { id, tick } => Json::Arr(vec![
+                    Json::Str("f".into()),
+                    Json::Int(id as i64),
+                    Json::Int(tick as i64),
+                ]),
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("phase", Json::Str(self.phase.clone())),
+            ("batch", Json::Int(self.batch as i64)),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let mut t = Trace::new(
+            j.get("model").as_str().unwrap_or(""),
+            j.get("phase").as_str().unwrap_or(""),
+            j.get("batch").as_u64().unwrap_or(0) as u32,
+        );
+        let events = j
+            .get("events")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing events"))?;
+        for (n, e) in events.iter().enumerate() {
+            let a = e.as_arr().ok_or_else(|| anyhow::anyhow!("event {n}: not an array"))?;
+            let kind = a
+                .first()
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("event {n}: missing kind"))?;
+            let get = |i: usize| -> anyhow::Result<u64> {
+                a.get(i)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("event {n}: bad field {i}"))
+            };
+            match kind {
+                "a" => t.events.push(TraceEvent::Alloc {
+                    id: get(1)? as usize,
+                    size: get(2)?,
+                    tick: get(3)?,
+                }),
+                "f" => t.events.push(TraceEvent::Free {
+                    id: get(1)? as usize,
+                    tick: get(2)?,
+                }),
+                k => anyhow::bail!("event {n}: unknown kind {k:?}"),
+            }
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        Trace::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_trace() -> Trace {
+        let mut t = Trace::new("toy", "training", 32);
+        t.events = vec![
+            TraceEvent::Alloc { id: 0, size: 100, tick: 1 },
+            TraceEvent::Alloc { id: 1, size: 50, tick: 2 },
+            TraceEvent::Free { id: 0, tick: 3 },
+            TraceEvent::Alloc { id: 2, size: 70, tick: 4 },
+            TraceEvent::Free { id: 2, tick: 5 },
+            // id 1 intentionally never freed (stays live to horizon)
+        ];
+        t
+    }
+
+    #[test]
+    fn to_dsa_instance_lifetimes() {
+        let inst = simple_trace().to_dsa_instance();
+        assert_eq!(inst.len(), 3);
+        assert_eq!(inst.blocks[0], Block::new(0, 100, 1, 3));
+        assert_eq!(inst.blocks[1], Block::new(1, 50, 2, 6), "freed at horizon");
+        assert_eq!(inst.blocks[2], Block::new(2, 70, 4, 5));
+    }
+
+    #[test]
+    fn stats() {
+        let s = simple_trace().stats();
+        assert_eq!(s.n_blocks, 3);
+        assert_eq!(s.total_bytes, 220);
+        assert_eq!(s.peak_live_bytes, 150); // blocks 0+1 at tick 2
+        assert_eq!(s.max_block, 100);
+    }
+
+    #[test]
+    fn validate_catches_malformed() {
+        let mut t = simple_trace();
+        t.validate().unwrap();
+        t.events.push(TraceEvent::Free { id: 2, tick: 9 });
+        assert!(t.validate().is_err(), "double free");
+
+        let mut t2 = simple_trace();
+        t2.events[1] = TraceEvent::Alloc { id: 5, size: 1, tick: 2 };
+        assert!(t2.validate().is_err(), "non-dense id");
+
+        let mut t3 = simple_trace();
+        t3.events[1] = TraceEvent::Alloc { id: 1, size: 1, tick: 1 };
+        assert!(t3.validate().is_err(), "non-increasing tick");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = simple_trace();
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = simple_trace();
+        let dir = std::env::temp_dir().join("pgmo_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json");
+        t.save(&path).unwrap();
+        assert_eq!(Trace::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn empty_trace_is_fine() {
+        let t = Trace::new("x", "inference", 1);
+        assert_eq!(t.to_dsa_instance().len(), 0);
+        t.validate().unwrap();
+    }
+}

@@ -1,0 +1,184 @@
+//! Trace and packing visualization:
+//!
+//! * [`to_chrome_trace`] — export a trace (plus optionally its solved
+//!   packing) as a `chrome://tracing` / Perfetto-compatible JSON file,
+//!   one slice per block lifetime;
+//! * [`ascii_packing`] — render a solved packing as the paper's Figure 1
+//!   style time×offset diagram, for docs and debugging;
+//! * [`memory_timeline`] — live-bytes per tick, for CSV plotting.
+
+use crate::dsa::problem::DsaInstance;
+use crate::dsa::solution::Assignment;
+use crate::trace::Trace;
+use crate::util::json::Json;
+
+/// Export as Chrome-trace "complete" (`ph: "X"`) events. `tid` carries
+/// the assigned offset when a solution is supplied (so Perfetto's track
+/// ordering mirrors the packing), else the block id.
+pub fn to_chrome_trace(trace: &Trace, sol: Option<&Assignment>) -> Json {
+    let inst = trace.to_dsa_instance();
+    let events: Vec<Json> = inst
+        .blocks
+        .iter()
+        .map(|b| {
+            let mut e = Json::obj();
+            e.set("name", Json::Str(format!("block {} ({} B)", b.id, b.size)));
+            e.set("cat", Json::Str("memory".into()));
+            e.set("ph", Json::Str("X".into()));
+            e.set("ts", Json::Int(b.alloc_at as i64));
+            e.set("dur", Json::Int(b.lifetime() as i64));
+            e.set("pid", Json::Int(1));
+            e.set(
+                "tid",
+                Json::Int(match sol {
+                    Some(s) => s.offsets[b.id] as i64,
+                    None => b.id as i64,
+                }),
+            );
+            let mut args = Json::obj();
+            args.set("bytes", Json::Int(b.size as i64));
+            if let Some(s) = sol {
+                args.set("offset", Json::Int(s.offsets[b.id] as i64));
+            }
+            e.set("args", args);
+            e
+        })
+        .collect();
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(events));
+    doc.set("displayTimeUnit", Json::Str("ms".into()));
+    doc.set(
+        "otherData",
+        Json::from_pairs(vec![("trace", Json::Str(trace.label()))]),
+    );
+    doc
+}
+
+/// Live bytes after every event tick: `(tick, live_bytes)` pairs.
+pub fn memory_timeline(trace: &Trace) -> Vec<(u64, u64)> {
+    let inst = trace.to_dsa_instance();
+    let mut events: Vec<(u64, i64)> = Vec::with_capacity(inst.len() * 2);
+    for b in &inst.blocks {
+        events.push((b.alloc_at, b.size as i64));
+        events.push((b.free_at, -(b.size as i64)));
+    }
+    events.sort_unstable();
+    let mut out = Vec::with_capacity(events.len());
+    let mut cur = 0i64;
+    for (tick, delta) in events {
+        cur += delta;
+        if let Some(last) = out.last_mut() {
+            let (t, _): &mut (u64, u64) = last;
+            if *t == tick {
+                last.1 = cur as u64;
+                continue;
+            }
+        }
+        out.push((tick, cur as u64));
+    }
+    out
+}
+
+/// ASCII rendering of a packing (Figure 1 style): rows are offset bands
+/// (top = highest), columns are time; each block paints its id (mod 36,
+/// as 0-9a-z). Intended for small instances / teaching output.
+pub fn ascii_packing(inst: &DsaInstance, sol: &Assignment, width: usize, height: usize) -> String {
+    assert!(width >= 2 && height >= 2);
+    if inst.is_empty() {
+        return String::from("(empty instance)\n");
+    }
+    let horizon = inst.horizon().max(1);
+    let peak = sol.peak.max(1);
+    let mut grid = vec![vec![' '; width]; height];
+    for b in &inst.blocks {
+        let x0 = (b.alloc_at as usize * width) / horizon as usize;
+        let x1 = (((b.free_at as usize * width) / horizon as usize).max(x0 + 1)).min(width);
+        let y0 = (sol.offsets[b.id] as usize * height) / peak as usize;
+        let y1 = ((((sol.offsets[b.id] + b.size) as usize * height) / peak as usize)
+            .max(y0 + 1))
+        .min(height);
+        let ch = char::from_digit((b.id % 36) as u32, 36).unwrap();
+        for row in grid.iter_mut().take(y1).skip(y0) {
+            for cell in row.iter_mut().take(x1).skip(x0) {
+                *cell = ch;
+            }
+        }
+    }
+    // Rows top-down (offset grows upward, like the paper's Figure 1).
+    let mut out = String::new();
+    for row in grid.iter().rev() {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "time → (peak {} over {} ticks)\n",
+        crate::util::humansize::format_bytes(sol.peak),
+        horizon
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsa::bestfit;
+    use crate::trace::TraceEvent;
+
+    fn trace() -> Trace {
+        let mut t = Trace::new("viz", "t", 1);
+        t.events = vec![
+            TraceEvent::Alloc { id: 0, size: 100, tick: 1 },
+            TraceEvent::Alloc { id: 1, size: 50, tick: 2 },
+            TraceEvent::Free { id: 0, tick: 3 },
+            TraceEvent::Alloc { id: 2, size: 100, tick: 4 },
+            TraceEvent::Free { id: 1, tick: 5 },
+            TraceEvent::Free { id: 2, tick: 6 },
+        ];
+        t
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let t = trace();
+        let inst = t.to_dsa_instance();
+        let sol = bestfit::solve(&inst);
+        let doc = to_chrome_trace(&t, Some(&sol));
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].get("ph").as_str(), Some("X"));
+        assert_eq!(events[0].get("dur").as_i64(), Some(2));
+        // Round-trips through the JSON serializer.
+        assert!(Json::parse(&doc.dump()).is_ok());
+    }
+
+    #[test]
+    fn timeline_tracks_live_bytes() {
+        let tl = memory_timeline(&trace());
+        // Peak at tick 2: 150 live.
+        assert!(tl.contains(&(2, 150)));
+        assert_eq!(tl.last().unwrap().1, 0, "everything freed at horizon");
+    }
+
+    #[test]
+    fn ascii_renders_all_blocks() {
+        let t = trace();
+        let inst = t.to_dsa_instance();
+        let sol = bestfit::solve(&inst);
+        let art = ascii_packing(&inst, &sol, 24, 8);
+        for ch in ['0', '1', '2'] {
+            assert!(art.contains(ch), "missing block {ch} in:\n{art}");
+        }
+        assert!(art.contains("peak"));
+    }
+
+    #[test]
+    fn ascii_handles_empty() {
+        let inst = DsaInstance::new(vec![]);
+        let sol = bestfit::solve(&inst);
+        assert!(ascii_packing(&inst, &sol, 10, 4).contains("empty"));
+    }
+}

@@ -1,0 +1,258 @@
+//! Tiny declarative command-line argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands; generates `--help` text from declared options.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Parsed arguments: flag presence, key→value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: Vec<String>,
+    opts: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    BadValue {
+        key: String,
+        value: String,
+        why: String,
+    },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+/// Declares one named option for parsing + help generation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// A declarative CLI command: parses argv against a set of [`OptSpec`]s.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command {
+            name,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Command {
+        self.specs.push(OptSpec {
+            name,
+            takes_value: false,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Command {
+        self.specs.push(OptSpec {
+            name,
+            takes_value: true,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Command {
+        self.specs.push(OptSpec {
+            name,
+            takes_value: true,
+            help,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n\nOptions:", self.name, self.about);
+        for spec in &self.specs {
+            let arg = if spec.takes_value {
+                format!("--{} <value>", spec.name)
+            } else {
+                format!("--{}", spec.name)
+            };
+            let default = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {arg:<28} {}{default}", spec.help);
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program/subcommand name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.opts.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError::BadValue {
+                            key,
+                            value: inline_val.unwrap(),
+                            why: "flag takes no value".into(),
+                        });
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError::MissingRequired(name.to_string()))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|e| CliError::BadValue {
+                key: name.to_string(),
+                value: raw.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, fallback: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(fallback))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("test", "testing")
+            .flag("verbose", "noisy output")
+            .opt("model", "model name")
+            .opt_default("batch", "32", "batch size")
+    }
+
+    #[test]
+    fn parses_flags_opts_positionals() {
+        let a = cmd()
+            .parse(&argv(&["--verbose", "--model", "resnet50", "pos1"]))
+            .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("model"), Some("resnet50"));
+        assert_eq!(a.get_or::<u32>("batch", 0).unwrap(), 32);
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cmd().parse(&argv(&["--model=alexnet", "--batch=64"])).unwrap();
+        assert_eq!(a.get("model"), Some("alexnet"));
+        assert_eq!(a.get_or::<u32>("batch", 0).unwrap(), 64);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--nope"])),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            cmd().parse(&argv(&["--model"])),
+            Err(CliError::MissingValue(_))
+        ));
+        let a = cmd().parse(&argv(&["--batch", "abc"])).unwrap();
+        assert!(matches!(
+            a.get_parsed::<u32>("batch"),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cmd().help_text();
+        assert!(h.contains("--model"));
+        assert!(h.contains("[default: 32]"));
+    }
+}

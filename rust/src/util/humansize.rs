@@ -1,0 +1,66 @@
+//! Byte-count formatting/parsing in the binary units the paper reports
+//! (e.g. "the optimized version fits within the physical 16 GB memory").
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// Render a byte count with binary units, two decimals ("1.21 GiB").
+pub fn format_bytes(bytes: u64) -> String {
+    if bytes >= GIB {
+        format!("{:.2} GiB", bytes as f64 / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", bytes as f64 / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", bytes as f64 / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Parse "16GiB", "8 MB", "512", "1.5g" (case-insensitive, SI treated
+/// binary — matches how GPU memory capacities are colloquially quoted).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let split = t
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(t.len());
+    let (num, unit) = t.split_at(split);
+    let num: f64 = num.trim().parse().ok()?;
+    let mult = match unit.trim() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        _ => return None,
+    };
+    Some((num * mult as f64).round() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(8 * MIB), "8.00 MiB");
+        assert_eq!(format_bytes(16 * GIB), "16.00 GiB");
+    }
+
+    #[test]
+    fn parses() {
+        assert_eq!(parse_bytes("16GiB"), Some(16 * GIB));
+        assert_eq!(parse_bytes("8 MB"), Some(8 * MIB));
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("1.5g"), Some(3 * GIB / 2));
+        assert_eq!(parse_bytes("x"), None);
+    }
+
+    #[test]
+    fn roundtrip_whole_units() {
+        for v in [1, KIB, 3 * MIB, 7 * GIB] {
+            assert_eq!(parse_bytes(&format_bytes(v)).unwrap(), v);
+        }
+    }
+}

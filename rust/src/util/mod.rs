@@ -1,0 +1,9 @@
+//! Shared substrates built in-repo (the offline image ships only the `xla`
+//! crate closure, so serde / clap / rand / criterion equivalents live here).
+
+pub mod cli;
+pub mod humansize;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,155 @@
+//! Summary statistics and wall-clock timing helpers used by the simulator,
+//! the coordinator's metrics, and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Online accumulator plus retained samples for percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Summary {
+        Summary::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.samples.iter().map(|v| (v - m) * (v - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+        let idx = q / 100.0 * (self.samples.len() - 1) as f64;
+        let lo = idx.floor() as usize;
+        let hi = idx.ceil() as usize;
+        let frac = idx - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Measure the wall-clock duration of a closure.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Run `f` repeatedly for at least `budget`, returning per-iteration nanos.
+/// This is the measurement core of the in-repo criterion substitute.
+pub fn bench_loop(budget: Duration, mut f: impl FnMut()) -> Summary {
+    // Warmup: one-tenth of budget.
+    let warm_until = Instant::now() + budget / 10;
+    while Instant::now() < warm_until {
+        f();
+    }
+    // Batch so that each sample is ≥ ~50 µs, amortizing timer overhead.
+    let (_, one) = time_it(&mut f);
+    let per = one.as_nanos().max(1) as u64;
+    let iters_per_batch = (50_000 / per).clamp(1, 1_000_000);
+
+    let mut summary = Summary::new();
+    let end = Instant::now() + budget;
+    while Instant::now() < end {
+        let start = Instant::now();
+        for _ in 0..iters_per_batch {
+            f();
+        }
+        let elapsed = start.elapsed().as_nanos() as f64;
+        summary.add(elapsed / iters_per_batch as f64);
+    }
+    summary
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.median(), 3.0);
+        assert!((s.std() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Summary::new();
+        for v in [0.0, 10.0] {
+            s.add(v);
+        }
+        assert_eq!(s.percentile(25.0), 2.5);
+        assert_eq!(s.percentile(100.0), 10.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_summary_is_safe() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn bench_loop_produces_samples() {
+        let s = bench_loop(Duration::from_millis(20), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(!s.is_empty());
+    }
+}

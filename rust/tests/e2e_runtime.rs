@@ -1,0 +1,123 @@
+//! End-to-end tests over the real PJRT path. These need the AOT artifacts
+//! (`make artifacts`); they are skipped with a message when absent so
+//! `cargo test` works in a fresh checkout.
+
+use pgmo::coordinator::serve::{InferenceServer, Request, ServeConfig};
+use pgmo::coordinator::{TrainConfig, TrainingCoordinator};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_and_lists_all_entries() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = pgmo::runtime::Runtime::cpu().unwrap();
+    rt.load_artifacts(&dir).unwrap();
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("train_step")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("predict")), "{names:?}");
+}
+
+#[test]
+fn training_reduces_loss_and_replays_staging() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut coord = TrainingCoordinator::new(&dir, 7).unwrap();
+    let report = coord
+        .train(&TrainConfig {
+            steps: 60,
+            batch: 32,
+            seed: 7,
+            checkpoint_every: 25,
+        })
+        .unwrap();
+    let first = report.losses[0];
+    let last = *report.losses.last().unwrap();
+    assert!(last < first, "loss {first} → {last} must decrease");
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        report.replay_fraction > 0.9,
+        "hot staging must replay ({:.2})",
+        report.replay_fraction
+    );
+    assert!(report.arena_bytes > 0);
+    // Checkpoints are interrupted (§4.3) — they must not reoptimize.
+    assert_eq!(report.reopts, 0);
+}
+
+#[test]
+fn training_is_deterministic_for_a_seed() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run = |seed| {
+        let mut c = TrainingCoordinator::new(&dir, seed).unwrap();
+        c.train(&TrainConfig {
+            steps: 5,
+            batch: 32,
+            seed,
+            checkpoint_every: 0,
+        })
+        .unwrap()
+        .losses
+    };
+    assert_eq!(run(3), run(3));
+    assert_ne!(run(3), run(4));
+}
+
+#[test]
+fn serving_answers_every_request_with_correct_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut server = InferenceServer::new(&dir, 5, ServeConfig::default()).unwrap();
+    let dim = server.input_dim();
+    let (tx, rx) = std::sync::mpsc::channel::<Request>();
+    let mut replies = Vec::new();
+    for i in 0..40 {
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(Request {
+            x: vec![i as f32 / 40.0; dim],
+            created: std::time::Instant::now(),
+            reply: rtx,
+        })
+        .unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let metrics = server.run(rx).unwrap();
+    assert_eq!(metrics.requests, 40);
+    for r in replies {
+        let resp = r.recv().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    let s = server.staging_stats();
+    assert!(s.fast_path > 0, "serving staging must replay");
+}
+
+#[test]
+fn identical_inputs_get_identical_logits_across_batches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut server = InferenceServer::new(&dir, 5, ServeConfig::default()).unwrap();
+    let dim = server.input_dim();
+    let ask = |server: &mut InferenceServer| {
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        tx.send(Request {
+            x: vec![0.5; dim],
+            created: std::time::Instant::now(),
+            reply: rtx,
+        })
+        .unwrap();
+        drop(tx);
+        server.run(rx).unwrap();
+        rrx.recv().unwrap().logits
+    };
+    let a = ask(&mut server);
+    let b = ask(&mut server);
+    assert_eq!(a, b, "stateless serving must be deterministic");
+}

@@ -1,0 +1,144 @@
+//! Cross-module integration tests: model traces → DSA → allocators →
+//! simulator, exercised together the way the paper's pipeline runs.
+
+use pgmo::dsa::{bestfit, exact, firstfit};
+use pgmo::models::{self, Phase};
+use pgmo::sim::{self, AllocKind, SimConfig};
+use pgmo::trace::Trace;
+use std::time::Duration;
+
+/// Profile → solve → validate for every model × phase the paper evaluates.
+#[test]
+fn every_model_trace_packs_validly() {
+    for name in models::all_names() {
+        let model = models::by_name(name).unwrap();
+        for phase in [Phase::Training, Phase::Inference] {
+            let batch = if phase == Phase::Training { 32 } else { 1 };
+            let trace = models::trace_for(&*model, phase, batch);
+            trace.validate().unwrap();
+            let inst = trace.to_dsa_instance();
+            let sol = bestfit::solve(&inst);
+            sol.validate(&inst)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", phase.name()));
+            assert!(sol.peak >= inst.lower_bound());
+            assert!(
+                sol.gap_to(inst.lower_bound()) < 0.25,
+                "{name}/{}: gap {:.1}% too large",
+                phase.name(),
+                sol.gap_to(inst.lower_bound()) * 100.0
+            );
+        }
+    }
+}
+
+/// The §3 memory claim, end to end: opt ≤ orig for every CNN config.
+#[test]
+fn opt_beats_orig_across_the_cnn_grid() {
+    let cfg = SimConfig {
+        unified_memory: true,
+        warmup: 2,
+        iterations: 4,
+        ..SimConfig::default()
+    };
+    for name in models::cnn_names() {
+        let model = models::by_name(name).unwrap();
+        for (phase, batch) in [(Phase::Training, 32), (Phase::Inference, 1)] {
+            let orig = sim::run(&*model, phase, batch, AllocKind::Pool, &cfg);
+            let opt = sim::run(&*model, phase, batch, AllocKind::ProfileGuided, &cfg);
+            assert!(orig.ok && opt.ok, "{name}: run failed");
+            assert!(
+                opt.peak_device_bytes <= orig.peak_device_bytes,
+                "{name}/{}: opt {} > orig {}",
+                phase.name(),
+                opt.peak_device_bytes,
+                orig.peak_device_bytes
+            );
+        }
+    }
+}
+
+/// The §5.2 speed claim: replay is faster than pool search everywhere.
+#[test]
+fn opt_alloc_overhead_always_lower() {
+    let cfg = SimConfig {
+        warmup: 2,
+        iterations: 4,
+        ..SimConfig::default()
+    };
+    for name in ["alexnet", "googlenet"] {
+        let model = models::by_name(name).unwrap();
+        let orig = sim::run(&*model, Phase::Inference, 1, AllocKind::Pool, &cfg);
+        let opt = sim::run(&*model, Phase::Inference, 1, AllocKind::ProfileGuided, &cfg);
+        assert!(opt.avg_alloc_overhead_ns < orig.avg_alloc_overhead_ns, "{name}");
+    }
+}
+
+/// Trace files round-trip and re-solve identically (profile persistence).
+#[test]
+fn trace_file_roundtrip_preserves_solution() {
+    let model = models::by_name("googlenet").unwrap();
+    let trace = models::trace_for(&*model, Phase::Inference, 1);
+    let dir = std::env::temp_dir().join("pgmo_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("googlenet_i.json");
+    trace.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded, trace);
+    let a = bestfit::solve(&trace.to_dsa_instance());
+    let b = bestfit::solve(&loaded.to_dsa_instance());
+    assert_eq!(a, b);
+}
+
+/// §5.2's optimality check on the two paper instances, end to end.
+#[test]
+fn heuristic_matches_exact_on_paper_inference_instances() {
+    for name in ["alexnet", "googlenet"] {
+        let model = models::by_name(name).unwrap();
+        let inst = models::trace_for(&*model, Phase::Inference, 1).to_dsa_instance();
+        let heur = bestfit::solve(&inst);
+        let ex = exact::solve(&inst, Duration::from_secs(60));
+        assert!(
+            ex.proved_optimal,
+            "{name}: exact solver should finish on inference instances"
+        );
+        assert_eq!(heur.peak, ex.assignment.peak, "{name}: §5.2 match");
+    }
+}
+
+/// Offline best-fit never loses to the online first-fit baseline on the
+/// evaluated traces (the value of knowing lifetimes ahead of time).
+#[test]
+fn bestfit_not_worse_than_firstfit_on_model_traces() {
+    for name in models::all_names() {
+        let model = models::by_name(name).unwrap();
+        let inst = models::trace_for(&*model, Phase::Inference, 1).to_dsa_instance();
+        let bf = bestfit::solve(&inst);
+        let ff = firstfit::solve(&inst);
+        assert!(
+            bf.peak <= ff.peak * 101 / 100,
+            "{name}: best-fit {} ≫ first-fit {}",
+            bf.peak,
+            ff.peak
+        );
+    }
+}
+
+/// seq2seq end-to-end: reoptimization keeps memory bounded while the pool
+/// ratchets (Fig 2c's phenomenon), and replay still dominates.
+#[test]
+fn seq2seq_reoptimization_pipeline() {
+    let cfg = SimConfig {
+        unified_memory: true,
+        warmup: 1,
+        iterations: 20,
+        ..SimConfig::default()
+    };
+    let model = models::by_name("seq2seq").unwrap();
+    let orig = sim::run(&*model, Phase::Training, 64, AllocKind::Pool, &cfg);
+    let opt = sim::run(&*model, Phase::Training, 64, AllocKind::ProfileGuided, &cfg);
+    assert!(orig.ok && opt.ok);
+    assert!(opt.peak_device_bytes < orig.peak_device_bytes);
+    assert!(opt.stats.reopts > 0);
+    assert!(opt.stats.fast_path > 0, "matching prefixes must replay");
+    assert!(opt.solve_ns > 0);
+}

@@ -1,0 +1,163 @@
+//! Property-based tests (in-repo `testkit` harness — proptest substitute)
+//! over the solver and allocator invariants the whole system rests on.
+
+use pgmo::alloc::profile_guided::ProfileGuidedAllocator;
+use pgmo::alloc::DeviceAllocator;
+use pgmo::device::SimDevice;
+use pgmo::dsa::problem::DsaInstance;
+use pgmo::dsa::{bestfit, exact, firstfit};
+use pgmo::testkit::{self, gen};
+use std::time::Duration;
+
+/// Random DSA instances as (size, alloc, len) triples.
+fn instance_gen(max_n: usize) -> gen::Gen<Vec<(u64, u64, u64)>> {
+    gen::vec(
+        gen::pair(
+            gen::u64_in(1..=4096),
+            gen::pair(gen::u64_in(0..=200), gen::u64_in(1..=50)),
+        )
+        .map(|(size, (start, len))| (size, start, start + len)),
+        1..=max_n,
+    )
+}
+
+fn to_instance(triples: &[(u64, u64, u64)]) -> DsaInstance {
+    DsaInstance::from_triples(triples)
+}
+
+#[test]
+fn prop_bestfit_packing_is_always_sound() {
+    testkit::check("bestfit sound", 200, instance_gen(80), |t| {
+        let inst = to_instance(t);
+        let sol = bestfit::solve(&inst);
+        sol.validate(&inst).is_ok()
+    });
+}
+
+#[test]
+fn prop_bestfit_bounded_by_lb_and_total() {
+    testkit::check("bestfit bounds", 200, instance_gen(80), |t| {
+        let inst = to_instance(t);
+        let sol = bestfit::solve(&inst);
+        sol.peak >= inst.lower_bound() && sol.peak <= inst.total_size()
+    });
+}
+
+#[test]
+fn prop_firstfit_sound_and_bounded() {
+    testkit::check("firstfit sound", 200, instance_gen(80), |t| {
+        let inst = to_instance(t);
+        let sol = firstfit::solve(&inst);
+        sol.validate(&inst).is_ok() && sol.peak >= inst.lower_bound()
+    });
+}
+
+#[test]
+fn prop_exact_never_worse_than_heuristic() {
+    testkit::check("exact ≤ heuristic", 40, instance_gen(10), |t| {
+        let inst = to_instance(t);
+        let heur = bestfit::solve(&inst);
+        let ex = exact::solve(&inst, Duration::from_secs(5));
+        ex.assignment.validate(&inst).is_ok() && ex.assignment.peak <= heur.peak
+    });
+}
+
+#[test]
+fn prop_solver_is_deterministic() {
+    testkit::check("deterministic", 60, instance_gen(60), |t| {
+        let inst = to_instance(t);
+        bestfit::solve(&inst) == bestfit::solve(&inst)
+    });
+}
+
+/// Replay returns identical addresses across iterations for any hot
+/// request pattern — the soundness core of §4.2.
+#[test]
+fn prop_replay_addresses_stable_for_hot_patterns() {
+    // A pattern: sizes, with LIFO frees (well-nested), run twice.
+    let pattern = gen::vec(gen::u64_in(64..=8192), 1..=30);
+    testkit::check("replay stable", 100, pattern, |sizes| {
+        let mut dev = SimDevice::new(1 << 30);
+        let mut a = ProfileGuidedAllocator::new("prop", "t", 1);
+        let run = |a: &mut ProfileGuidedAllocator, dev: &mut SimDevice| -> Vec<u64> {
+            a.begin_iteration(dev);
+            let ptrs: Vec<_> = sizes.iter().map(|&s| a.alloc(dev, s).unwrap()).collect();
+            for p in ptrs.iter().rev() {
+                a.free(dev, *p);
+            }
+            a.end_iteration(dev).unwrap();
+            ptrs.iter().map(|p| p.addr).collect()
+        };
+        run(&mut a, &mut dev); // profile
+        let first = run(&mut a, &mut dev);
+        let second = run(&mut a, &mut dev);
+        first == second
+    });
+}
+
+/// Live planned blocks never overlap, for any interleaving of allocs and
+/// frees (not just well-nested ones) and any per-iteration size jitter
+/// *below* the profiled sizes.
+#[test]
+fn prop_no_live_overlap_under_replay() {
+    let pattern = gen::vec(
+        gen::pair(gen::u64_in(64..=4096), gen::bool_with(0.5)),
+        2..=24,
+    );
+    testkit::check("no live overlap", 100, pattern, |ops| {
+        let mut dev = SimDevice::new(1 << 30);
+        let mut a = ProfileGuidedAllocator::new("prop", "t", 1);
+        for iter in 0..3u32 {
+            a.begin_iteration(&mut dev);
+            let mut live: Vec<pgmo::alloc::Ptr> = Vec::new();
+            for &(size, free_oldest) in ops {
+                // Shrink sizes a bit after profiling: still replayable.
+                let s = if iter == 0 { size } else { size.max(65) - 1 };
+                let p = a.alloc(&mut dev, s).unwrap();
+                // Invariant: p does not overlap any live block.
+                for q in &live {
+                    let disjoint = p.addr + p.size <= q.addr || q.addr + q.size <= p.addr;
+                    if !disjoint {
+                        return false;
+                    }
+                }
+                live.push(p);
+                if free_oldest && live.len() > 1 {
+                    let victim = live.remove(0);
+                    a.free(&mut dev, victim);
+                }
+            }
+            for p in live.drain(..) {
+                a.free(&mut dev, p);
+            }
+            if a.end_iteration(&mut dev).is_err() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// The device allocator conserves bytes: used == Σ live segment sizes,
+/// and frees always coalesce back to zero.
+#[test]
+fn prop_device_conservation() {
+    let ops = gen::vec(gen::u64_in(1..=100_000), 1..=60);
+    testkit::check("device conservation", 100, ops, |sizes| {
+        let mut dev = SimDevice::new(1 << 40);
+        let mut segs = Vec::new();
+        let mut total = 0u64;
+        for &s in sizes {
+            let seg = dev.malloc(s).unwrap();
+            total += seg.size;
+            segs.push(seg);
+        }
+        if dev.used() != total {
+            return false;
+        }
+        for seg in segs {
+            dev.free(seg);
+        }
+        dev.used() == 0 && dev.extent() == 0 && dev.fragmented_bytes() == 0
+    });
+}
