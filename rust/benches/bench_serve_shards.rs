@@ -1,0 +1,96 @@
+//! Bench: serve throughput vs shard count — pins the scaling win of the
+//! sharded serving path (one runtime + one hot replay plan per worker).
+//!
+//! Needs the AOT artifacts (`make artifacts`) and real PJRT bindings;
+//! prints a skip message and exits cleanly when they are absent so the
+//! bench target always builds and runs.
+//!
+//! Run: `cargo bench --bench bench_serve_shards`
+
+use pgmo::coordinator::queue::ThreadPool;
+use pgmo::coordinator::serve::{InferenceServer, Request, ServeConfig};
+use pgmo::util::rng::Pcg32;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+fn main() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("bench_serve_shards: skipped — artifacts/ missing (run `make artifacts`)");
+        return;
+    };
+    let n_requests = 2048usize;
+    let producers = 8usize;
+    println!("serve scaling: {n_requests} requests, {producers} closed-loop producers");
+    println!(
+        "{:<8} {:>12} {:>10} {:>10} {:>10}",
+        "shards", "req/s", "p50 ms", "p99 ms", "replay%"
+    );
+
+    for shards in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            shards,
+            ..ServeConfig::default()
+        };
+        let mut server = match InferenceServer::new(&dir, 11, cfg) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("bench_serve_shards: skipped — {e:#}");
+                return;
+            }
+        };
+        let dim = server.input_dim();
+        let (tx, rx) = mpsc::channel::<Request>();
+
+        let pool = ThreadPool::new(producers);
+        let per = n_requests / producers;
+        for p in 0..producers {
+            let tx = tx.clone();
+            pool.execute(move || {
+                let mut rng = Pcg32::seeded(7 + p as u64);
+                for _ in 0..per {
+                    let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+                    let (rtx, rrx) = mpsc::channel();
+                    if tx
+                        .send(Request {
+                            x,
+                            created: Instant::now(),
+                            reply: rtx,
+                        })
+                        .is_err()
+                    {
+                        return;
+                    }
+                    let _ = rrx.recv(); // closed loop: wait for the answer
+                }
+            });
+        }
+        drop(tx);
+        let mut metrics = match server.run(rx) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("bench_serve_shards: skipped — {e:#}");
+                return;
+            }
+        };
+        drop(pool);
+        let staging = server.staging_stats();
+        println!(
+            "{:<8} {:>12.1} {:>10.2} {:>10.2} {:>10.1}",
+            shards,
+            metrics.throughput_rps(),
+            metrics.latency_ms.percentile(50.0),
+            metrics.latency_ms.percentile(99.0),
+            100.0 * staging.replay_fraction(),
+        );
+    }
+}

@@ -5,8 +5,10 @@
 //!   (§5.1 calls this *network-wise* allocation: 1.50 GB for AlexNet b32
 //!   training where the pool needs 1.21 GB);
 //! * [`pool`] — the Chainer/CuPy memory pool (the paper's `orig` baseline);
-//! * [`profile_guided`] — the paper's `opt`: profile → solve DSA → replay
-//!   offsets in O(1), with reoptimization and interrupt/resume (§4);
+//! * [`profile_guided`] — the paper's `opt`: a thin [`DeviceAllocator`]
+//!   adapter over the shared replay engine
+//!   ([`plan::ReplayEngine`](crate::plan::ReplayEngine)) with the
+//!   simulated-device backend;
 //! * [`arena`] — a *host* arena used by the real (PJRT) execution path.
 //!
 //! All allocators implement [`DeviceAllocator`] against the simulated
@@ -39,8 +41,34 @@ pub struct AllocStats {
     pub device_mallocs: u64,
     /// Times the allocator dumped its cached memory (pool free-all).
     pub free_alls: u64,
-    /// Reoptimization events (profile-guided only).
+    /// Reoptimization events (replay engine only).
     pub reopts: u64,
+    /// Requests served dynamically by the replay engine's escape route
+    /// (profiling iteration, interrupted regions, deviations).
+    pub escape_allocs: u64,
+}
+
+impl AllocStats {
+    /// Fraction of requests served by the O(1) fast path (replay hit /
+    /// pool hit); 0 when nothing was requested.
+    pub fn replay_fraction(&self) -> f64 {
+        if self.n_allocs == 0 {
+            return 0.0;
+        }
+        self.fast_path as f64 / self.n_allocs as f64
+    }
+
+    /// Sum counters from another stats block (used when merging shard- or
+    /// component-level counters into one report).
+    pub fn absorb(&mut self, other: &AllocStats) {
+        self.n_allocs += other.n_allocs;
+        self.n_frees += other.n_frees;
+        self.fast_path += other.fast_path;
+        self.device_mallocs += other.device_mallocs;
+        self.free_alls += other.free_alls;
+        self.reopts += other.reopts;
+        self.escape_allocs += other.escape_allocs;
+    }
 }
 
 /// The allocator interface the execution simulator drives. One iteration =

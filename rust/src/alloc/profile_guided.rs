@@ -1,285 +1,49 @@
 //! The paper's profile-guided allocator (§4): profile a sample iteration,
 //! solve DSA, then serve request λ at `arena_base + x_λ` in O(1).
 //!
-//! Lifecycle:
-//!
-//! * **Iteration 0 (profiling)**: requests are served by an *escape pool*
-//!   (ordinary dynamic allocation) while the profiler records the trace.
-//!   At `end_iteration` the trace becomes a DSA instance, the best-fit
-//!   heuristic packs it, and one arena of the packed peak size is
-//!   `cudaMalloc`ed.
-//! * **Iterations 1..**: `alloc` returns `arena + offsets[λ]` and bumps λ
-//!   — no search, no device call (§4.2). Monitoring continues cheaply so
-//!   deviations can be detected.
-//! * **Reoptimization (§4.3)**: a request larger than profiled at its
-//!   position, or more requests than profiled, routes to the escape pool
-//!   for the rest of the iteration; at `end_iteration` the plan is
-//!   re-solved against the positional maximum of observed sizes (and the
-//!   longer tick skeleton). Smaller-than-profiled requests need no
-//!   reoptimization — they are served from the planned slot.
-//! * **interrupt/resume (§4.3)**: requests inside an interrupted region
-//!   bypass both λ and the plan entirely, living in the escape pool.
-//!
-//! Soundness: replay identifies blocks positionally, so it is only sound
-//! as-is for hot propagation (§4.2). The paper leaves the
-//! structure-changing case (shorter seq2seq batches) under-specified; this
-//! implementation hardens it: before handing out a planned slot, the
-//! allocator checks the slot against the *currently live* arena intervals
-//! (one `BTreeMap` lookup), and on overlap serves the request dynamically
-//! and schedules reoptimization — never corrupting memory, while keeping
-//! the paper's replay savings for matching prefixes.
+//! Since the plan-core refactor this type is a *thin adapter*: the entire
+//! profile→solve→replay lifecycle — sample-run profiling, DSA solve,
+//! in-sync O(1) fast path, size-overrun ratcheting, structural-deviation
+//! fallback with the arena-interval soundness check, interrupt/resume,
+//! and reoptimization — lives in the shared
+//! [`ReplayEngine`](crate::plan::ReplayEngine), instantiated here with
+//! the simulated-device backend ([`DeviceBackend`]): the arena is one
+//! `cudaMalloc`ed segment, the escape route is the Chainer-style pool,
+//! and replays charge the simulated `replay_ns`. The host staging planner
+//! ([`StagingPlanner`](crate::coordinator::staging::StagingPlanner)) is
+//! the same engine over real host memory, so the two paths' deviation
+//! semantics are identical by construction.
 
-use super::pool::PoolAllocator;
 use super::{AllocStats, DeviceAllocator, Ptr};
-use crate::device::{OutOfMemory, Segment, SimDevice};
-use crate::dsa::bestfit;
-use crate::profiler::{BlockHandle, MemoryProfiler};
-use crate::trace::{Trace, TraceEvent};
-use std::collections::HashMap;
-use std::time::Instant;
-
-/// One expected event of a hot iteration, in plan order.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum PlanEvent {
-    Alloc(usize),
-    Free(usize),
-}
-
-/// A solved allocation plan.
-#[derive(Debug)]
-struct Plan {
-    /// Tick skeleton + per-position sizes the offsets were solved for.
-    trace: Trace,
-    /// Cached per-position sizes (index = λ).
-    sizes: Vec<u64>,
-    offsets: Vec<u64>,
-    peak: u64,
-    arena: Option<Segment>,
-    /// The expected event sequence of a hot iteration — drives the
-    /// *in-sync* O(1) fast path (§Perf): while the incoming stream
-    /// matches this prefix, no profiler recording, hashing, or interval
-    /// checking is needed at all.
-    events: Vec<PlanEvent>,
-    /// Precomputed absolute address per position (arena base + offset).
-    addrs: Vec<u64>,
-}
-
-impl Plan {
-    fn arena_range(&self) -> (u64, u64) {
-        match self.arena {
-            Some(seg) => (seg.addr, seg.addr + seg.size),
-            None => (0, 0),
-        }
-    }
-}
-
-#[derive(Debug, Clone, Copy)]
-enum LiveEntry {
-    /// Served from the arena at plan position `pos`.
-    Arena { handle: BlockHandle, pos: usize },
-    /// Served by the escape pool.
-    Escape { handle: BlockHandle, inner: Ptr },
-}
+use crate::device::{OutOfMemory, SimDevice};
+use crate::plan::{DeviceBackend, MemoryBackend, ReplayEngine};
+use crate::trace::Trace;
 
 #[derive(Debug)]
 pub struct ProfileGuidedAllocator {
-    escape: PoolAllocator,
-    profiler: MemoryProfiler,
-    plan: Option<Plan>,
-    live: HashMap<u64, LiveEntry>,
-    /// Live arena intervals (offset → end offset), for the soundness
-    /// check on structure-deviating iterations.
-    arena_live: std::collections::BTreeMap<u64, u64>,
-    /// Set when this iteration deviated from the plan (size overrun or
-    /// more requests than planned) → reoptimize at iteration end.
-    deviated: bool,
-    /// Set when the deviation changed the propagation *structure* (count
-    /// overflow or slot collision), not just sizes. A structural change
-    /// replaces the plan with the observed trace instead of taking a
-    /// positional size maximum — positions of different structures do not
-    /// correspond, and ratcheting across them inflates the arena
-    /// unboundedly.
-    structure_changed: bool,
-    /// In-sync fast path state: while true, the iteration so far matches
-    /// `plan.events[..event_idx]` exactly (profiled events only —
-    /// interrupted-region requests bypass the stream by design, §4.3).
-    in_sync: bool,
-    event_idx: usize,
-    /// Own interrupt nesting (mirrors the profiler's, which is rebuilt on
-    /// desynchronization).
-    interrupt_depth: u32,
-    stats: AllocStats,
-    solve_ns: u64,
-    /// Labels forwarded to traces/diagnostics.
-    model: String,
-    phase: String,
-    batch: u32,
+    engine: ReplayEngine<DeviceBackend>,
 }
 
 impl ProfileGuidedAllocator {
     pub fn new(model: &str, phase: &str, batch: u32) -> ProfileGuidedAllocator {
         ProfileGuidedAllocator {
-            escape: PoolAllocator::chainer(),
-            profiler: MemoryProfiler::new(model, phase, batch),
-            plan: None,
-            live: HashMap::new(),
-            arena_live: Default::default(),
-            deviated: false,
-            structure_changed: false,
-            in_sync: false,
-            event_idx: 0,
-            interrupt_depth: 0,
-            stats: AllocStats::default(),
-            solve_ns: 0,
-            model: model.to_string(),
-            phase: phase.to_string(),
-            batch,
+            engine: ReplayEngine::new(DeviceBackend::new(), model, phase, batch),
         }
     }
 
     /// Is the allocator still in its profiling (sample-run) iteration?
     pub fn is_profiling(&self) -> bool {
-        self.plan.is_none()
+        self.engine.is_profiling()
     }
 
     /// Peak (arena size) of the current plan, if solved.
     pub fn planned_peak(&self) -> Option<u64> {
-        self.plan.as_ref().map(|p| p.peak)
+        self.engine.planned_peak()
     }
 
     /// The current plan's trace (for reports / persisting profiles).
     pub fn plan_trace(&self) -> Option<&Trace> {
-        self.plan.as_ref().map(|p| &p.trace)
-    }
-
-    fn fresh_profiler(&self) -> MemoryProfiler {
-        MemoryProfiler::new(&self.model, &self.phase, self.batch)
-    }
-
-    /// Merge the plan skeleton with an observed trace: "the new observed
-    /// parameters" (§4.3) win — the observed trace provides the tick
-    /// skeleton unless the old plan covers strictly more positions — and
-    /// shared positions take the maximum size.
-    fn merge(plan: &Trace, observed: &Trace) -> Trace {
-        let (skeleton, other) = if observed.n_blocks() >= plan.n_blocks() {
-            (observed, plan)
-        } else {
-            (plan, observed)
-        };
-        let mut other_sizes = vec![None; other.n_blocks()];
-        for e in &other.events {
-            if let TraceEvent::Alloc { id, size, .. } = *e {
-                other_sizes[id] = Some(size);
-            }
-        }
-        let mut merged = skeleton.clone();
-        for e in &mut merged.events {
-            if let TraceEvent::Alloc { id, size, .. } = e {
-                if let Some(Some(o)) = other_sizes.get(*id) {
-                    *size = (*size).max(*o);
-                }
-            }
-        }
-        merged
-    }
-
-    /// Solve (or re-solve) the plan from `trace`, reallocating the arena
-    /// when the packed peak changed. Returns Err on arena OOM.
-    fn solve_plan(&mut self, dev: &mut SimDevice, trace: Trace) -> Result<(), OutOfMemory> {
-        let inst = trace.to_dsa_instance();
-        let t0 = Instant::now();
-        let sol = bestfit::solve(&inst);
-        self.solve_ns += t0.elapsed().as_nanos() as u64;
-        debug_assert!(sol.validate(&inst).is_ok());
-
-        let old_arena = self.plan.as_mut().and_then(|p| p.arena.take());
-        let need_realloc = match (&old_arena, sol.peak) {
-            (Some(seg), peak) => seg.size != peak,
-            (None, _) => true,
-        };
-        let arena = if need_realloc {
-            if let Some(seg) = old_arena {
-                dev.free(seg);
-            }
-            if sol.peak > 0 {
-                Some(dev.malloc(sol.peak)?)
-            } else {
-                None
-            }
-        } else {
-            old_arena
-        };
-
-        let sizes: Vec<u64> = inst.blocks.iter().map(|b| b.size).collect();
-        let events: Vec<PlanEvent> = trace
-            .events
-            .iter()
-            .map(|e| match *e {
-                TraceEvent::Alloc { id, .. } => PlanEvent::Alloc(id),
-                TraceEvent::Free { id, .. } => PlanEvent::Free(id),
-            })
-            .collect();
-        let base = arena.map(|s| s.addr).unwrap_or(0);
-        let addrs: Vec<u64> = sol.offsets.iter().map(|&o| base + o).collect();
-        self.plan = Some(Plan {
-            trace,
-            sizes,
-            offsets: sol.offsets,
-            peak: sol.peak,
-            arena,
-            events,
-            addrs,
-        });
-        Ok(())
-    }
-
-    /// Leave the in-sync fast path: reconstruct the profiler, live map,
-    /// and live-interval set from the plan prefix already replayed (the
-    /// profiled prefix is, by definition of in-sync, identical to the
-    /// plan's — sizes conservatively taken from the plan).
-    #[cold]
-    fn desync(&mut self) {
-        debug_assert!(self.in_sync);
-        self.in_sync = false;
-        let plan = self.plan.as_ref().expect("desync without plan");
-        let mut prof = self.fresh_profiler();
-        self.live.clear();
-        self.arena_live.clear();
-        let mut handles: Vec<Option<BlockHandle>> = vec![None; plan.sizes.len()];
-        for &e in &plan.events[..self.event_idx] {
-            match e {
-                PlanEvent::Alloc(pos) => {
-                    let h = prof.on_alloc(plan.sizes[pos]);
-                    handles[pos] = Some(h);
-                    self.live
-                        .insert(plan.addrs[pos], LiveEntry::Arena { handle: h, pos });
-                    self.arena_live
-                        .insert(plan.offsets[pos], plan.offsets[pos] + plan.sizes[pos]);
-                }
-                PlanEvent::Free(pos) => {
-                    let h = handles[pos].take().expect("plan free before alloc");
-                    prof.on_free(h);
-                    self.live.remove(&plan.addrs[pos]);
-                    self.arena_live.remove(&plan.offsets[pos]);
-                }
-            }
-        }
-        for _ in 0..self.interrupt_depth {
-            prof.interrupt();
-        }
-        self.profiler = prof;
-    }
-
-    fn alloc_escape(
-        &mut self,
-        dev: &mut SimDevice,
-        size: u64,
-        handle: BlockHandle,
-    ) -> Result<Ptr, OutOfMemory> {
-        let inner = self.escape.alloc(dev, size)?;
-        self.live
-            .insert(inner.addr, LiveEntry::Escape { handle, inner });
-        Ok(inner)
+        self.engine.plan_trace()
     }
 }
 
@@ -289,225 +53,45 @@ impl DeviceAllocator for ProfileGuidedAllocator {
     }
 
     fn alloc(&mut self, dev: &mut SimDevice, size: u64) -> Result<Ptr, OutOfMemory> {
-        self.stats.n_allocs += 1;
-
-        // The in-sync O(1) fast path: the expected next event is a known
-        // allocation position — no recording, no hashing, no interval
-        // check needed (§4.2's "just returns a memory address").
-        if self.in_sync && self.interrupt_depth == 0 {
-            let plan = self.plan.as_ref().expect("in_sync without plan");
-            if let Some(&PlanEvent::Alloc(pos)) = plan.events.get(self.event_idx) {
-                if size <= plan.sizes[pos] {
-                    self.event_idx += 1;
-                    self.stats.fast_path += 1;
-                    dev.charge_ns(dev.cost().replay_ns);
-                    return Ok(Ptr {
-                        addr: plan.addrs[pos],
-                        size,
-                    });
-                }
-            }
-            self.desync(); // mismatch: rebuild slow-path state, continue
-        }
-
-        // Non-hot region: out of scope of the optimization (§4.3).
-        if self.interrupt_depth > 0 {
-            if self.in_sync {
-                // Interrupted requests bypass the plan stream entirely;
-                // the profiled stream stays in sync.
-                return self.escape.alloc(dev, size);
-            }
-            let handle = self.profiler.on_alloc(size); // advances the clock only
-            return self.alloc_escape(dev, size, handle);
-        }
-
-        let handle = self.profiler.on_alloc(size);
-        let pos = handle.id();
-
-        let Some(plan) = &self.plan else {
-            // Profiling iteration: dynamic allocation while recording.
-            return self.alloc_escape(dev, size, handle);
-        };
-
-        if pos < plan.sizes.len() && size <= plan.sizes[pos] {
-            let (off, end) = (plan.offsets[pos], plan.offsets[pos] + plan.sizes[pos]);
-            // Soundness check: the planned slot must not overlap a live
-            // planned block. Disjoint sorted intervals ⇒ it suffices to
-            // inspect the predecessor by start < end.
-            let collides = self
-                .arena_live
-                .range(..end)
-                .next_back()
-                .is_some_and(|(_, &e)| e > off);
-            if !collides {
-                // The O(1) replay hot path (§4.2).
-                let arena = plan.arena.expect("plan with blocks but no arena");
-                let addr = arena.addr + off;
-                dev.charge_ns(dev.cost().replay_ns);
-                self.stats.fast_path += 1;
-                self.arena_live.insert(off, end);
-                self.live.insert(addr, LiveEntry::Arena { handle, pos });
-                return Ok(Ptr { addr, size });
-            }
-            // Non-hot structure detected: fall through to dynamic serve.
-            self.structure_changed = true;
-        } else if pos >= plan.sizes.len() {
-            self.structure_changed = true;
-        }
-
-        // Deviation: larger than profiled, or more requests than planned.
-        // Serve dynamically now; reoptimize at iteration end (§4.3).
-        self.deviated = true;
-        self.alloc_escape(dev, size, handle)
+        self.engine
+            .alloc(dev, size)
+            .map(|p| Ptr { addr: p.addr, size })
     }
 
     fn free(&mut self, dev: &mut SimDevice, ptr: Ptr) {
-        self.stats.n_frees += 1;
-
-        if self.in_sync {
-            let plan = self.plan.as_ref().expect("in_sync without plan");
-            let (lo, hi) = plan.arena_range();
-            if ptr.addr >= lo && ptr.addr < hi {
-                // In-sync arena free: must match the expected event.
-                if let Some(&PlanEvent::Free(pos)) = plan.events.get(self.event_idx) {
-                    if plan.addrs[pos] == ptr.addr {
-                        self.event_idx += 1;
-                        dev.charge_ns(dev.cost().replay_ns);
-                        return;
-                    }
-                }
-                self.desync(); // out-of-plan free order
-            } else {
-                // Escape block from an interrupted region: direct return.
-                self.escape.free(dev, ptr);
-                return;
-            }
-        }
-
-        if let Some(entry) = self.live.remove(&ptr.addr) {
-            match entry {
-                LiveEntry::Arena { handle, pos } => {
-                    // Replay free is pure bookkeeping — no device call.
-                    dev.charge_ns(dev.cost().replay_ns);
-                    let plan = self.plan.as_ref().expect("arena entry without plan");
-                    self.arena_live.remove(&plan.offsets[pos]);
-                    self.profiler.on_free(handle);
-                }
-                LiveEntry::Escape { handle, inner } => {
-                    self.profiler.on_free(handle);
-                    self.escape.free(dev, inner);
-                }
-            }
-        } else {
-            // Block allocated through the interrupted-region bypass while
-            // still in sync; the clock still advances (§4.1).
-            self.profiler.on_free(BlockHandle::UNPROFILED);
-            self.escape.free(dev, ptr);
-        }
+        self.engine.free(dev, ptr.addr, ptr.size);
     }
 
     fn begin_iteration(&mut self, _dev: &mut SimDevice) {
-        // λ reset (§4.2): positional ids restart each propagation.
-        debug_assert_eq!(self.interrupt_depth, 0, "unbalanced interrupt");
-        self.event_idx = 0;
-        self.in_sync = self.plan.is_some();
-        if !self.in_sync {
-            self.profiler = self.fresh_profiler();
-        }
-        self.deviated = false;
-        self.structure_changed = false;
+        self.engine.begin_iteration();
     }
 
     fn end_iteration(&mut self, dev: &mut SimDevice) -> Result<(), OutOfMemory> {
-        if self.in_sync {
-            let plan = self.plan.as_ref().expect("in_sync without plan");
-            if self.event_idx == plan.events.len() {
-                // A perfect hot iteration: nothing to recompute. Drop any
-                // interrupted-region pool cache and return — this is the
-                // steady state for the paper's CNNs.
-                self.escape.free_all(dev);
-                return Ok(());
-            }
-            // Ended early: fewer profiled events than planned — a
-            // structural deviation (shorter propagation).
-            self.desync();
-            self.deviated = true;
-            self.structure_changed = true;
-        }
-        debug_assert!(
-            self.live.is_empty(),
-            "blocks must not outlive the propagation ({} leaked)",
-            self.live.len()
-        );
-        let fresh = self.fresh_profiler();
-        let observed = std::mem::replace(&mut self.profiler, fresh).finish();
-
-        // Drop dynamic memory cached during profiling/deviation *before*
-        // (re)allocating the arena, so the plan has room: the paper's
-        // allocator holds only the arena between iterations.
-        self.escape.free_all(dev);
-
-        let result = match &self.plan {
-            None => {
-                // First solve from the sample run.
-                self.solve_plan(dev, observed)
-            }
-            Some(_) if self.deviated && self.structure_changed => {
-                // Structural change: positions no longer correspond, so
-                // the new plan is built from "the new observed
-                // parameters" (§4.3) alone.
-                self.stats.reopts += 1;
-                self.solve_plan(dev, observed)
-            }
-            Some(plan) if self.deviated => {
-                // Pure size growth: ratchet the per-position maxima so
-                // reoptimization becomes rarer as training proceeds
-                // (§5.3: "the recomputation becomes less frequent").
-                self.stats.reopts += 1;
-                let merged = Self::merge(&plan.trace, &observed);
-                self.solve_plan(dev, merged)
-            }
-            Some(_) => Ok(()),
-        };
-        self.deviated = false;
-        self.structure_changed = false;
-        result
+        self.engine.end_iteration(dev)
     }
 
     fn interrupt(&mut self) {
-        self.interrupt_depth += 1;
-        if !self.in_sync {
-            self.profiler.interrupt();
-        }
+        self.engine.interrupt();
     }
 
     fn resume(&mut self) {
-        assert!(self.interrupt_depth > 0, "resume without interrupt");
-        self.interrupt_depth -= 1;
-        if !self.in_sync {
-            self.profiler.resume();
-        }
+        self.engine.resume();
     }
 
     fn held_bytes(&self) -> u64 {
-        let arena = self
-            .plan
-            .as_ref()
-            .and_then(|p| p.arena.as_ref())
-            .map(|s| s.size)
-            .unwrap_or(0);
-        arena + self.escape.held_bytes()
+        self.engine.backend().held_bytes()
     }
 
     fn stats(&self) -> AllocStats {
-        let mut s = self.stats;
-        s.device_mallocs += self.escape.stats().device_mallocs;
-        s.free_alls += self.escape.stats().free_alls;
+        let mut s = self.engine.stats();
+        let pool = self.engine.backend().escape_stats();
+        s.device_mallocs += pool.device_mallocs;
+        s.free_alls += pool.free_alls;
         s
     }
 
     fn solve_ns(&self) -> u64 {
-        self.solve_ns
+        self.engine.solve_ns()
     }
 }
 
@@ -528,7 +112,7 @@ mod tests {
         let p3 = a.alloc(d, 1500).unwrap();
         a.free(d, p1);
         a.free(d, p3);
-        a.end_iteration(d);
+        a.end_iteration(d).unwrap();
         vec![p1.addr, p2.addr, p3.addr]
     }
 
@@ -845,5 +429,18 @@ mod tests {
             solve_after_profile,
             "in-sync iterations must not re-run the solver"
         );
+    }
+
+    // ----- adapter-level invariants ----------------------------------------
+
+    #[test]
+    fn escape_allocs_counted_for_dynamic_requests() {
+        let mut d = dev();
+        let mut a = ProfileGuidedAllocator::new("toy", "t", 1);
+        hot_iteration(&mut a, &mut d); // 3 profiling-iteration escapes
+        assert_eq!(a.stats().escape_allocs, 3);
+        hot_iteration(&mut a, &mut d); // pure replay: no new escapes
+        assert_eq!(a.stats().escape_allocs, 3);
+        assert_eq!(a.stats().replay_fraction(), 0.5, "3 of 6 requests replayed");
     }
 }

@@ -1,7 +1,29 @@
 //! Serving/training metrics counters.
 
+use crate::alloc::AllocStats;
 use crate::util::stats::Summary;
 use std::time::Duration;
+
+/// Per-shard serving counters: one executor loop = one PJRT runtime = one
+/// replay plan, so replay effectiveness is a per-shard property.
+#[derive(Debug, Clone, Default)]
+pub struct ShardMetrics {
+    pub shard: usize,
+    pub requests: u64,
+    pub batches: u64,
+    /// Counters of this shard's staging replay engine (replay hits,
+    /// escape allocations, reoptimizations).
+    pub staging: AllocStats,
+    /// Host staging arena bytes after planning.
+    pub arena_bytes: usize,
+}
+
+impl ShardMetrics {
+    /// Fraction of this shard's staging requests served by O(1) replay.
+    pub fn replay_fraction(&self) -> f64 {
+        self.staging.replay_fraction()
+    }
+}
 
 /// Aggregated serving metrics.
 #[derive(Debug, Default)]
@@ -11,6 +33,8 @@ pub struct ServeMetrics {
     pub requests: u64,
     pub batches: u64,
     pub wall: Duration,
+    /// Per-shard breakdown (empty before the first `run`).
+    pub shards: Vec<ShardMetrics>,
 }
 
 impl ServeMetrics {
@@ -22,16 +46,32 @@ impl ServeMetrics {
     }
 
     pub fn report(&mut self) -> String {
-        format!(
-            "requests={} batches={} throughput={:.1} req/s mean_batch={:.1} \
+        let mut out = format!(
+            "requests={} batches={} shards={} throughput={:.1} req/s mean_batch={:.1} \
              latency p50={:.2} ms p99={:.2} ms",
             self.requests,
             self.batches,
+            self.shards.len().max(1),
             self.throughput_rps(),
             self.batch_sizes.mean(),
             self.latency_ms.percentile(50.0),
             self.latency_ms.percentile(99.0),
-        )
+        );
+        for s in &self.shards {
+            out.push_str(&format!(
+                "\n  shard {}: {} reqs in {} batches, replay {:.1}% \
+                 ({} hits / {} escapes), {} reopts, arena {} B",
+                s.shard,
+                s.requests,
+                s.batches,
+                s.replay_fraction() * 100.0,
+                s.staging.fast_path,
+                s.staging.escape_allocs,
+                s.staging.reopts,
+                s.arena_bytes,
+            ));
+        }
+        out
     }
 }
 
@@ -56,5 +96,45 @@ mod tests {
     fn zero_wall_is_safe() {
         let m = ServeMetrics::default();
         assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn report_includes_per_shard_replay_fractions() {
+        let mut m = ServeMetrics {
+            requests: 64,
+            batches: 4,
+            wall: Duration::from_secs(1),
+            shards: vec![
+                ShardMetrics {
+                    shard: 0,
+                    requests: 32,
+                    batches: 2,
+                    staging: AllocStats {
+                        n_allocs: 4,
+                        fast_path: 2,
+                        escape_allocs: 2,
+                        ..Default::default()
+                    },
+                    arena_bytes: 4096,
+                },
+                ShardMetrics {
+                    shard: 1,
+                    requests: 32,
+                    batches: 2,
+                    staging: AllocStats {
+                        n_allocs: 4,
+                        fast_path: 4,
+                        ..Default::default()
+                    },
+                    arena_bytes: 4096,
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(m.shards[0].replay_fraction(), 0.5);
+        let report = m.report();
+        assert!(report.contains("shard 0"), "{report}");
+        assert!(report.contains("replay 50.0%"), "{report}");
+        assert!(report.contains("replay 100.0%"), "{report}");
     }
 }

@@ -1,6 +1,7 @@
 //! The L3 coordinator: drives *real* training and serving of the L2 model
 //! through PJRT, with every per-step host staging buffer managed by the
-//! paper's profile→solve→replay mechanism ([`staging`]).
+//! paper's profile→solve→replay mechanism ([`staging`], an adapter over
+//! the shared [`plan::ReplayEngine`](crate::plan::ReplayEngine)).
 //!
 //! The paper's contribution is the memory optimizer, so L3 is deliberately
 //! thin on orchestration (CLI + train/serve loops + metrics) and thick on
@@ -8,7 +9,8 @@
 //! [`dsa::bestfit`](crate::dsa::bestfit) packs it, and every subsequent
 //! step replays fixed offsets in one [`HostArena`]
 //! (crate::alloc::arena::HostArena) — O(1) per request, zero allocation on
-//! the hot path.
+//! the hot path. The serving path ([`serve`]) shards this across N
+//! workers, each with its own runtime and hot replay plan.
 
 pub mod metrics;
 pub mod queue;
@@ -56,6 +58,9 @@ pub struct TrainReport {
     /// Fraction of staging requests served by O(1) replay.
     pub replay_fraction: f64,
     pub reopts: u64,
+    /// Staging requests served dynamically by the engine's escape route
+    /// (profiling step, checkpoints, deviations).
+    pub escape_allocs: u64,
 }
 
 /// Trains the L2 MLP via the `train_step_b{B}` artifact.
@@ -214,12 +219,9 @@ impl TrainingCoordinator {
             losses,
             avg_step_ms: step_ms.iter().sum::<f64>() / step_ms.len().max(1) as f64,
             arena_bytes: self.staging.arena_bytes(),
-            replay_fraction: if stats.n_allocs > 0 {
-                stats.fast_path as f64 / stats.n_allocs as f64
-            } else {
-                0.0
-            },
+            replay_fraction: stats.replay_fraction(),
             reopts: stats.reopts,
+            escape_allocs: stats.escape_allocs,
         })
     }
 

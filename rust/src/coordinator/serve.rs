@@ -1,22 +1,29 @@
-//! Batched inference serving over the `predict_b{B}` artifact.
+//! Sharded batched inference serving over the `predict_b{B}` artifact.
 //!
-//! A single executor loop owns the PJRT runtime (PJRT handles are not
-//! `Send`); producers submit requests over an mpsc channel from any
-//! thread. Requests are coalesced into fixed-size padded batches (the
-//! artifact's batch dimension is static), staged through the
-//! profile-guided host arena, executed, and answered individually.
-//! Because every batch stages the same padded buffer, the serving path is
-//! *hot* and replays in O(1) after the first batch — the inference
-//! speedups of Fig 3b/3d come from exactly this effect.
+//! The serving path scales across cores by running N *shard workers*.
+//! Each shard owns its own PJRT runtime (PJRT handles are not `Send`, so
+//! every runtime is created inside its worker thread), its own copy of
+//! the model parameters, and — crucially — its own
+//! [`StagingPlanner`](super::staging::StagingPlanner) replay plan: after
+//! a shard's first batch, every subsequent batch on that shard stages
+//! through fixed O(1) offsets. Requests enter through one mpsc channel
+//! and are fanned out round-robin to the shards; each shard coalesces its
+//! stream into fixed-size padded batches (the artifact's batch dimension
+//! is static), executes, and answers every request individually. Because
+//! every batch stages the same padded buffer, the serving path is *hot*
+//! and replays in O(1) after each shard's first batch — the inference
+//! speedups of Fig 3b/3d, multiplied across workers.
 
-use super::metrics::ServeMetrics;
+use super::metrics::{ServeMetrics, ShardMetrics};
 use super::staging::StagingPlanner;
 use crate::runtime::buffers::{literal_f32, to_f32};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg32;
+use crate::util::stats::Summary;
 use anyhow::{Context, Result};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
+use std::thread;
 use std::time::{Duration, Instant};
 
 /// One inference request.
@@ -39,6 +46,9 @@ pub struct ServeConfig {
     /// How long to wait for more requests before dispatching a partial
     /// batch.
     pub batch_window: Duration,
+    /// Number of shard workers. Each shard owns one runtime and one
+    /// replay plan; requests are fanned out round-robin.
+    pub shards: usize,
 }
 
 impl Default for ServeConfig {
@@ -46,28 +56,35 @@ impl Default for ServeConfig {
         ServeConfig {
             max_batch: 32,
             batch_window: Duration::from_millis(2),
+            shards: 2,
         }
     }
 }
 
-/// The serving loop. Owns the runtime and model parameters.
+/// The serving front end: validates artifacts metadata, owns the model
+/// parameters, and fans requests out to shard workers on [`run`].
+///
+/// [`run`]: InferenceServer::run
 pub struct InferenceServer {
-    runtime: Runtime,
+    dir: PathBuf,
     params: Vec<Vec<f32>>,
     param_dims: Vec<Vec<usize>>,
     input_dim: usize,
     classes: usize,
-    staging: StagingPlanner,
     cfg: ServeConfig,
+    /// Per-shard staging counters of the most recent `run`.
+    shard_stats: Vec<crate::alloc::AllocStats>,
 }
 
 impl InferenceServer {
-    /// Load artifacts and (He-)initialize parameters; real deployments
-    /// would load trained weights — [`crate::coordinator::TrainingCoordinator`]
-    /// produces them.
+    /// Read artifact metadata and (He-)initialize parameters; real
+    /// deployments would load trained weights —
+    /// [`crate::coordinator::TrainingCoordinator`] produces them. The
+    /// per-shard PJRT runtimes are created lazily inside [`run`]'s worker
+    /// threads.
+    ///
+    /// [`run`]: InferenceServer::run
     pub fn new(dir: &Path, seed: u64, cfg: ServeConfig) -> Result<InferenceServer> {
-        let mut runtime = Runtime::cpu()?;
-        runtime.load_artifacts(dir)?;
         let meta = crate::util::json::Json::parse(&std::fs::read_to_string(
             dir.join("meta.json"),
         )?)?;
@@ -78,6 +95,7 @@ impl InferenceServer {
             .iter()
             .filter_map(crate::util::json::Json::as_usize)
             .collect();
+        anyhow::ensure!(layer_sizes.len() >= 2, "meta.json: need at least one layer");
         let mut rng = Pcg32::seeded(seed);
         let mut params = Vec::new();
         let mut param_dims = Vec::new();
@@ -93,13 +111,13 @@ impl InferenceServer {
             param_dims.push(vec![fan_out]);
         }
         Ok(InferenceServer {
-            runtime,
+            dir: dir.to_path_buf(),
             params,
             param_dims,
             input_dim: layer_sizes[0],
             classes: *layer_sizes.last().unwrap(),
-            staging: StagingPlanner::new("mlp", "serving"),
             cfg,
+            shard_stats: Vec::new(),
         })
     }
 
@@ -113,17 +131,147 @@ impl InferenceServer {
         self.input_dim
     }
 
-    /// Serve until the request channel closes; returns metrics.
+    /// Serve until the request channel closes; returns merged metrics
+    /// with a per-shard breakdown.
     pub fn run(&mut self, rx: mpsc::Receiver<Request>) -> Result<ServeMetrics> {
-        let mut metrics = ServeMetrics::default();
+        let n = self.cfg.shards.max(1);
         let start = Instant::now();
-        let entry_name = format!("predict_b{}", self.cfg.max_batch);
+
+        let outcomes: Vec<Result<ShardOutcome>> = thread::scope(|scope| {
+            let mut txs = Vec::with_capacity(n);
+            let mut handles = Vec::with_capacity(n);
+            for shard in 0..n {
+                let (tx, shard_rx) = mpsc::channel::<Request>();
+                txs.push(tx);
+                let dir = self.dir.as_path();
+                let params = &self.params;
+                let param_dims = &self.param_dims;
+                let (input_dim, classes) = (self.input_dim, self.classes);
+                let cfg = self.cfg.clone();
+                handles.push(scope.spawn(move || {
+                    // The PJRT runtime must be created *inside* the worker
+                    // thread: PJRT handles are not `Send`. Parameters are
+                    // shared read-only — no per-shard copy.
+                    let worker = ShardWorker::new(
+                        shard, dir, params, param_dims, input_dim, classes, cfg,
+                    )?;
+                    worker.run(shard_rx)
+                }));
+            }
+
+            // Round-robin fan-out on the caller's thread. A dead shard
+            // (worker errored → receiver dropped) hands the request back
+            // through the SendError; try the next shard.
+            let mut next = 0usize;
+            for req in rx.iter() {
+                let mut undelivered = Some(req);
+                for attempt in 0..n {
+                    match txs[(next + attempt) % n].send(undelivered.take().expect("requeued")) {
+                        Ok(()) => break,
+                        Err(mpsc::SendError(back)) => undelivered = Some(back),
+                    }
+                }
+                next = (next + 1) % n;
+                if undelivered.is_some() {
+                    break; // every shard has exited; surface errors below
+                }
+            }
+            drop(txs); // close shard queues so workers drain and exit
+
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+
+        let mut metrics = ServeMetrics::default();
+        self.shard_stats.clear();
+        for outcome in outcomes {
+            let o = outcome?;
+            metrics.requests += o.metrics.requests;
+            metrics.batches += o.metrics.batches;
+            metrics.latency_ms.merge(&o.latency_ms);
+            metrics.batch_sizes.merge(&o.batch_sizes);
+            self.shard_stats.push(o.metrics.staging);
+            metrics.shards.push(o.metrics);
+        }
+        metrics.shards.sort_by_key(|s| s.shard);
+        metrics.wall = start.elapsed();
+        Ok(metrics)
+    }
+
+    /// Staging stats (replay fraction etc.) summed across the shards of
+    /// the most recent `run`.
+    pub fn staging_stats(&self) -> crate::alloc::AllocStats {
+        let mut total = crate::alloc::AllocStats::default();
+        for s in &self.shard_stats {
+            total.absorb(s);
+        }
+        total
+    }
+}
+
+/// What one shard worker hands back when its queue closes.
+struct ShardOutcome {
+    metrics: ShardMetrics,
+    latency_ms: Summary,
+    batch_sizes: Summary,
+}
+
+/// One executor loop: owns a runtime and a hot replay plan for its
+/// staging buffers; model parameters are borrowed from the server
+/// (read-only, shared across shards).
+struct ShardWorker<'a> {
+    shard: usize,
+    runtime: Runtime,
+    entry_name: String,
+    params: &'a [Vec<f32>],
+    param_dims: &'a [Vec<usize>],
+    input_dim: usize,
+    classes: usize,
+    staging: StagingPlanner,
+    cfg: ServeConfig,
+}
+
+impl<'a> ShardWorker<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        shard: usize,
+        dir: &Path,
+        params: &'a [Vec<f32>],
+        param_dims: &'a [Vec<usize>],
+        input_dim: usize,
+        classes: usize,
+        cfg: ServeConfig,
+    ) -> Result<ShardWorker<'a>> {
+        let mut runtime = Runtime::cpu().with_context(|| format!("shard {shard}: PJRT client"))?;
+        runtime
+            .load_artifacts(dir)
+            .with_context(|| format!("shard {shard}: loading artifacts"))?;
+        Ok(ShardWorker {
+            shard,
+            runtime,
+            entry_name: format!("predict_b{}", cfg.max_batch),
+            params,
+            param_dims,
+            input_dim,
+            classes,
+            staging: StagingPlanner::new("mlp", &format!("serving-s{shard}")),
+            cfg,
+        })
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<Request>) -> Result<ShardOutcome> {
+        let mut requests = 0u64;
+        let mut batches = 0u64;
+        let mut latency_ms = Summary::new();
+        let mut batch_sizes = Summary::new();
 
         loop {
             // Block for the first request of the batch.
             let first = match rx.recv() {
                 Ok(r) => r,
-                Err(_) => break, // producers done
+                Err(_) => break, // dispatcher done
             };
             let mut batch = vec![first];
             let window_end = Instant::now() + self.cfg.batch_window;
@@ -139,19 +287,26 @@ impl InferenceServer {
                 }
             }
 
-            self.execute_batch(&entry_name, &mut batch, &mut metrics)?;
+            batch_sizes.add(batch.len() as f64);
+            requests += batch.len() as u64;
+            batches += 1;
+            self.execute_batch(&mut batch, &mut latency_ms)?;
         }
 
-        metrics.wall = start.elapsed();
-        Ok(metrics)
+        Ok(ShardOutcome {
+            metrics: ShardMetrics {
+                shard: self.shard,
+                requests,
+                batches,
+                staging: self.staging.stats(),
+                arena_bytes: self.staging.arena_bytes(),
+            },
+            latency_ms,
+            batch_sizes,
+        })
     }
 
-    fn execute_batch(
-        &mut self,
-        entry_name: &str,
-        batch: &mut Vec<Request>,
-        metrics: &mut ServeMetrics,
-    ) -> Result<()> {
+    fn execute_batch(&mut self, batch: &mut Vec<Request>, latency_ms: &mut Summary) -> Result<()> {
         let b = self.cfg.max_batch;
         let d = self.input_dim;
         self.staging.begin_iteration();
@@ -160,18 +315,22 @@ impl InferenceServer {
         let x_buf = self.staging.alloc(b * d * 4);
         let mut flat = vec![0f32; b * d];
         for (i, req) in batch.iter().enumerate() {
-            anyhow::ensure!(req.x.len() == d, "request {i}: wrong input dim");
+            anyhow::ensure!(
+                req.x.len() == d,
+                "shard {}: request {i}: wrong input dim",
+                self.shard
+            );
             flat[i * d..(i + 1) * d].copy_from_slice(&req.x);
         }
         self.staging.write_f32(&x_buf, &flat);
 
         let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
-        for (p, dims) in self.params.iter().zip(&self.param_dims) {
+        for (p, dims) in self.params.iter().zip(self.param_dims.iter()) {
             inputs.push(literal_f32(p, dims)?);
         }
         inputs.push(literal_f32(&self.staging.read_f32(&x_buf, b * d), &[b, d])?);
 
-        let outputs = self.runtime.entry(entry_name)?.execute(&inputs)?;
+        let outputs = self.runtime.entry(&self.entry_name)?.execute(&inputs)?;
         let logits = to_f32(&outputs[0])?;
 
         // Stage the readback, reply per request.
@@ -180,24 +339,16 @@ impl InferenceServer {
         let now = Instant::now();
         for (i, req) in batch.drain(..).enumerate() {
             let latency = now - req.created;
-            metrics.latency_ms.add(latency.as_secs_f64() * 1e3);
-            metrics.requests += 1;
+            latency_ms.add(latency.as_secs_f64() * 1e3);
             let _ = req.reply.send(Response {
                 logits: logits[i * self.classes..(i + 1) * self.classes].to_vec(),
                 latency,
             });
         }
-        metrics.batches += 1;
-        metrics.batch_sizes.add(metrics.requests as f64 / metrics.batches as f64);
 
         self.staging.free(out_buf);
         self.staging.free(x_buf);
         self.staging.end_iteration();
         Ok(())
-    }
-
-    /// Staging stats (replay fraction etc.) for reporting.
-    pub fn staging_stats(&self) -> crate::alloc::AllocStats {
-        self.staging.stats()
     }
 }

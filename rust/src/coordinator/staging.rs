@@ -1,20 +1,21 @@
 //! Profile-guided host staging: the paper's mechanism applied to the real
 //! execution path's host buffers.
 //!
-//! Iteration 0 records the request pattern; `end_iteration` packs it with
-//! the best-fit heuristic and materializes one [`HostArena`]; subsequent
-//! iterations replay offsets positionally in O(1). Deviations follow §4.3:
-//! `interrupt`/`resume` routes non-hot requests (e.g. periodic checkpoint
-//! staging) to plain heap buffers, and oversized/overflow requests fall
-//! back to the heap and trigger a re-solve at iteration end.
+//! Since the plan-core refactor this type is a *thin adapter* over the
+//! shared [`ReplayEngine`](crate::plan::ReplayEngine) with the
+//! [`HostBackend`]: iteration 0 records the request pattern;
+//! `end_iteration` packs it with the best-fit heuristic and materializes
+//! one [`HostArena`](crate::alloc::arena::HostArena); subsequent
+//! iterations replay offsets positionally in O(1). Deviations follow
+//! §4.3 with *exactly* the device allocator's semantics (including the
+//! arena-interval soundness check): `interrupt`/`resume` routes non-hot
+//! requests (e.g. periodic checkpoint staging) to plain heap buffers, and
+//! oversized/overflow requests fall back to the heap and trigger a
+//! re-solve at iteration end.
 
-use crate::alloc::arena::{align_up, HostArena};
+use crate::alloc::arena::align_up;
 use crate::alloc::AllocStats;
-use crate::dsa::bestfit;
-use crate::dsa::problem::DsaInstance;
-use crate::profiler::MemoryProfiler;
-use crate::trace::TraceEvent;
-use std::collections::HashMap;
+use crate::plan::{HostBackend, ReplayEngine};
 
 /// A staged host buffer handle.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -41,133 +42,88 @@ impl HostBuf {
     }
 }
 
+/// Unwrap a host-backend engine result (its error type is uninhabited).
+fn ok<T>(r: Result<T, std::convert::Infallible>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => match e {},
+    }
+}
+
 #[derive(Debug)]
 pub struct StagingPlanner {
-    profiler: MemoryProfiler,
-    model: String,
-    phase: String,
-    /// Solved plan: per-position sizes + arena.
-    plan_sizes: Vec<u64>,
-    plan_trace: Option<crate::trace::Trace>,
-    arena: Option<HostArena>,
-    heap: HashMap<u64, Vec<u8>>,
-    next_heap_key: u64,
-    handles: HashMap<HostBuf, crate::profiler::BlockHandle>,
-    deviated: bool,
-    stats: AllocStats,
-    solve_ns: u64,
+    engine: ReplayEngine<HostBackend>,
 }
 
 impl StagingPlanner {
     pub fn new(model: &str, phase: &str) -> StagingPlanner {
         StagingPlanner {
-            profiler: MemoryProfiler::new(model, phase, 0),
-            model: model.to_string(),
-            phase: phase.to_string(),
-            plan_sizes: Vec::new(),
-            plan_trace: None,
-            arena: None,
-            heap: HashMap::new(),
-            next_heap_key: 0,
-            handles: HashMap::new(),
-            deviated: false,
-            stats: AllocStats::default(),
-            solve_ns: 0,
+            engine: ReplayEngine::new(HostBackend::new(), model, phase, 0),
         }
     }
 
     pub fn is_replaying(&self) -> bool {
-        self.arena.is_some()
+        !self.engine.is_profiling()
     }
 
     pub fn arena_bytes(&self) -> usize {
-        self.arena.as_ref().map(HostArena::capacity).unwrap_or(0)
+        self.engine.backend().arena_bytes()
     }
 
     pub fn stats(&self) -> AllocStats {
-        self.stats
+        self.engine.stats()
     }
 
     pub fn solve_ns(&self) -> u64 {
-        self.solve_ns
+        self.engine.solve_ns()
     }
 
     pub fn interrupt(&mut self) {
-        self.profiler.interrupt();
+        self.engine.interrupt();
     }
 
     pub fn resume(&mut self) {
-        self.profiler.resume();
+        self.engine.resume();
     }
 
     pub fn begin_iteration(&mut self) {
-        self.profiler = MemoryProfiler::new(&self.model, &self.phase, 0);
-        self.deviated = false;
+        self.engine.begin_iteration();
     }
 
-    /// Request a staging buffer of `bytes`.
+    /// Request a staging buffer of `bytes`. Sizes are profiled rounded up
+    /// to the arena alignment so replayed offsets stay aligned.
     pub fn alloc(&mut self, bytes: usize) -> HostBuf {
-        self.stats.n_allocs += 1;
         let padded = align_up(bytes as u64);
-
-        if self.profiler.interrupted() {
-            self.profiler.on_alloc(padded);
-            return self.heap_alloc(bytes, None);
+        let placement = ok(self.engine.alloc(&mut (), padded));
+        match placement.pos {
+            Some(pos) => HostBuf::Slot { pos, len: bytes },
+            None => HostBuf::Heap {
+                key: placement.addr,
+                len: bytes,
+            },
         }
-
-        let handle = self.profiler.on_alloc(padded);
-        let pos = handle.id();
-
-        if self.arena.is_some() && pos < self.plan_sizes.len() && padded <= self.plan_sizes[pos] {
-            self.stats.fast_path += 1;
-            let buf = HostBuf::Slot { pos, len: bytes };
-            self.handles.insert(buf.clone(), handle);
-            return buf;
-        }
-        if self.arena.is_some() {
-            self.deviated = true;
-        }
-        self.heap_alloc(bytes, Some(handle))
-    }
-
-    fn heap_alloc(
-        &mut self,
-        bytes: usize,
-        handle: Option<crate::profiler::BlockHandle>,
-    ) -> HostBuf {
-        let key = self.next_heap_key;
-        self.next_heap_key += 1;
-        self.heap.insert(key, vec![0u8; bytes]);
-        let buf = HostBuf::Heap { key, len: bytes };
-        if let Some(h) = handle {
-            self.handles.insert(buf.clone(), h);
-        }
-        buf
     }
 
     pub fn free(&mut self, buf: HostBuf) {
-        self.stats.n_frees += 1;
-        if let Some(h) = self.handles.remove(&buf) {
-            self.profiler.on_free(h);
-        } else if !matches!(buf, HostBuf::Heap { .. }) {
-            panic!("staging: free of unknown buffer {buf:?}");
-        }
-        if let HostBuf::Heap { key, .. } = buf {
-            self.heap.remove(&key);
-        }
+        let (addr, len) = match buf {
+            HostBuf::Slot { pos, len } => (self.engine.planned_addr(pos), len),
+            HostBuf::Heap { key, len } => (key, len),
+        };
+        self.engine.free(&mut (), addr, align_up(len as u64));
     }
 
     pub fn write_f32(&mut self, buf: &HostBuf, values: &[f32]) {
         assert!(values.len() * 4 <= buf.len(), "staging write overflow");
         match buf {
             HostBuf::Slot { pos, .. } => {
-                self.arena
-                    .as_mut()
+                self.engine
+                    .backend_mut()
+                    .arena_mut()
                     .expect("slot without arena")
                     .write_f32(*pos, values);
             }
             HostBuf::Heap { key, .. } => {
-                let dst = self.heap.get_mut(key).expect("dead heap buffer");
+                let dst = self.engine.backend_mut().heap_bytes_mut(*key);
                 for (i, v) in values.iter().enumerate() {
                     dst[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
                 }
@@ -180,15 +136,16 @@ impl StagingPlanner {
         match buf {
             HostBuf::Slot { pos, .. } => {
                 let mut v = self
-                    .arena
-                    .as_ref()
+                    .engine
+                    .backend()
+                    .arena()
                     .expect("slot without arena")
                     .as_f32(*pos);
                 v.truncate(count);
                 v
             }
             HostBuf::Heap { key, .. } => {
-                let src = &self.heap[key];
+                let src = self.engine.backend().heap_bytes(*key);
                 (0..count)
                     .map(|i| {
                         f32::from_le_bytes([
@@ -205,48 +162,7 @@ impl StagingPlanner {
 
     /// Solve (first iteration) or re-solve (after deviation) the plan.
     pub fn end_iteration(&mut self) {
-        debug_assert!(self.handles.is_empty(), "staged buffers leaked");
-        let fresh = MemoryProfiler::new(&self.model, &self.phase, 0);
-        let observed = std::mem::replace(&mut self.profiler, fresh).finish();
-
-        let needs_solve = match (&self.plan_trace, self.deviated) {
-            (None, _) => true,
-            (_, true) => {
-                self.stats.reopts += 1;
-                true
-            }
-            _ => false,
-        };
-        if !needs_solve {
-            return;
-        }
-
-        // Positional size max against the previous plan (§4.3).
-        let mut merged = observed;
-        if let Some(prev) = &self.plan_trace {
-            let mut prev_sizes = vec![0u64; prev.n_blocks()];
-            for e in &prev.events {
-                if let TraceEvent::Alloc { id, size, .. } = *e {
-                    prev_sizes[id] = size;
-                }
-            }
-            for e in &mut merged.events {
-                if let TraceEvent::Alloc { id, size, .. } = e {
-                    if let Some(&p) = prev_sizes.get(*id) {
-                        *size = (*size).max(p);
-                    }
-                }
-            }
-        }
-
-        let inst: DsaInstance = merged.to_dsa_instance();
-        let t0 = std::time::Instant::now();
-        let sol = bestfit::solve(&inst);
-        self.solve_ns += t0.elapsed().as_nanos() as u64;
-        self.plan_sizes = inst.blocks.iter().map(|b| b.size).collect();
-        self.arena = Some(HostArena::from_assignment(&inst, &sol));
-        self.plan_trace = Some(merged);
-        self.deviated = false;
+        ok(self.engine.end_iteration(&mut ()));
     }
 }
 
@@ -340,5 +256,46 @@ mod tests {
         s.free(a);
         s.end_iteration();
         assert_eq!(s.stats().reopts, 0);
+    }
+
+    // ----- unified-semantics additions -------------------------------------
+
+    #[test]
+    #[should_panic(expected = "free of unknown buffer")]
+    fn double_free_fails_fast() {
+        let mut s = StagingPlanner::new("m", "t");
+        s.begin_iteration();
+        let a = s.alloc(64);
+        s.free(a.clone());
+        s.free(a); // caller bug: must panic, not corrupt the profile
+    }
+
+    #[test]
+    fn slot_collision_is_served_soundly_like_the_device_path() {
+        let mut s = StagingPlanner::new("m", "t");
+        // Profile: two serial buffers share one slot.
+        s.begin_iteration();
+        let a = s.alloc(1024);
+        s.free(a);
+        let b = s.alloc(1024);
+        s.free(b);
+        s.end_iteration();
+        assert_eq!(s.arena_bytes(), 1024);
+
+        // Replay with both simultaneously live: the second must NOT get
+        // the same slot (the arena-interval soundness check the staging
+        // path previously lacked).
+        s.begin_iteration();
+        let a = s.alloc(1024);
+        let b = s.alloc(1024);
+        s.write_f32(&a, &[1.0; 256]);
+        s.write_f32(&b, &[2.0; 256]);
+        assert_eq!(s.read_f32(&a, 256)[0], 1.0, "slot not clobbered");
+        assert_eq!(s.read_f32(&b, 256)[0], 2.0);
+        s.free(a);
+        s.free(b);
+        s.end_iteration();
+        assert_eq!(s.stats().reopts, 1);
+        assert_eq!(s.arena_bytes(), 2048, "new plan covers both live");
     }
 }

@@ -70,13 +70,26 @@ impl Default for CostModel {
 }
 
 /// Out-of-memory error carrying the shortfall for diagnostics.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("device OOM: requested {}, used {} of {}", format_bytes(*.requested), format_bytes(*.used), format_bytes(*.capacity))]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OutOfMemory {
     pub requested: u64,
     pub used: u64,
     pub capacity: u64,
 }
+
+impl std::fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "device OOM: requested {}, used {} of {}",
+            format_bytes(self.requested),
+            format_bytes(self.used),
+            format_bytes(self.capacity)
+        )
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
 
 /// A device memory segment handle (address + rounded size).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

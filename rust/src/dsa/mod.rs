@@ -29,4 +29,4 @@ pub mod solution;
 
 pub use bestfit::solve as solve_bestfit;
 pub use problem::{Block, DsaInstance};
-pub use solution::Assignment;
+pub use solution::{Assignment, Violation};

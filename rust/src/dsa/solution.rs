@@ -12,17 +12,34 @@ pub struct Assignment {
 }
 
 /// Violations detected by [`Assignment::validate`].
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Violation {
-    #[error("assignment covers {got} blocks, instance has {want}")]
     WrongLength { got: usize, want: usize },
-    #[error("blocks {a} and {b} overlap in time and address space")]
     Collision { a: usize, b: usize },
-    #[error("declared peak {declared} != actual peak {actual}")]
     WrongPeak { declared: u64, actual: u64 },
-    #[error("peak {peak} exceeds capacity {capacity}")]
     OverCapacity { peak: u64, capacity: u64 },
 }
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Violation::WrongLength { got, want } => {
+                write!(f, "assignment covers {got} blocks, instance has {want}")
+            }
+            Violation::Collision { a, b } => {
+                write!(f, "blocks {a} and {b} overlap in time and address space")
+            }
+            Violation::WrongPeak { declared, actual } => {
+                write!(f, "declared peak {declared} != actual peak {actual}")
+            }
+            Violation::OverCapacity { peak, capacity } => {
+                write!(f, "peak {peak} exceeds capacity {capacity}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Violation {}
 
 impl Assignment {
     /// Build from offsets, computing the peak.

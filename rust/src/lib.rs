@@ -13,16 +13,32 @@
 //!    best-fit heuristic ([`dsa::bestfit`]) or an exact branch-and-bound
 //!    solver ([`dsa::exact`]) on small instances, and
 //! 3. **replays** the computed offsets in O(1) per request for all
-//!    subsequent iterations ([`alloc::profile_guided`]).
+//!    subsequent iterations ([`plan::ReplayEngine`]).
 //!
-//! The crate ships the complete substrate the paper's evaluation needs:
-//! Chainer/CuPy-style pool and network-wise baseline allocators
-//! ([`alloc`]), a simulated 16-GiB GPU with a cudaMalloc/Unified-Memory
-//! cost model ([`device`]), a computational-graph IR with forward/backward
-//! scheduling and buffer liveness ([`graph`]), the five evaluated network
-//! models ([`models`]), the execution simulator ([`sim`]), a PJRT runtime
-//! that executes AOT-lowered JAX/Pallas artifacts ([`runtime`]), and the
-//! training/serving coordinator ([`coordinator`]).
+//! The profile→solve→replay lifecycle is implemented **once**, in the
+//! backend-agnostic [`plan`] layer: `ReplayEngine<M: MemoryBackend>` owns
+//! profiling, the solved event skeleton and address table, the in-sync
+//! O(1) fast path, size-overrun ratcheting, the structural-deviation
+//! escape route with the arena-interval soundness check, interrupt/resume,
+//! and reoptimization. Two thin adapters instantiate it:
+//!
+//! * [`alloc::profile_guided::ProfileGuidedAllocator`] — the paper's
+//!   `opt` allocator over *simulated device memory*
+//!   ([`plan::DeviceBackend`]);
+//! * [`coordinator::staging::StagingPlanner`] — host staging buffers on
+//!   the *real* PJRT execution path ([`plan::HostBackend`]).
+//!
+//! Around that core the crate ships the complete substrate the paper's
+//! evaluation needs: Chainer/CuPy-style pool and network-wise baseline
+//! allocators ([`alloc`]), a simulated 16-GiB GPU with a
+//! cudaMalloc/Unified-Memory cost model ([`device`]), a
+//! computational-graph IR with forward/backward scheduling and buffer
+//! liveness ([`graph`]), the five evaluated network models ([`models`]),
+//! the execution simulator ([`sim`]), a PJRT runtime that executes
+//! AOT-lowered JAX/Pallas artifacts ([`runtime`]), and the
+//! training/serving coordinator ([`coordinator`]) whose serving path is
+//! sharded across N workers — one runtime + one hot replay plan per
+//! shard ([`coordinator::serve`]).
 //!
 //! ## Quickstart
 //!
@@ -48,6 +64,7 @@ pub mod dsa;
 pub mod experiments;
 pub mod graph;
 pub mod models;
+pub mod plan;
 pub mod profiler;
 pub mod runtime;
 pub mod sim;
@@ -55,4 +72,5 @@ pub mod testkit;
 pub mod trace;
 pub mod util;
 
-pub use dsa::{problem::DsaInstance, solution::Assignment};
+pub use dsa::{problem::DsaInstance, solution::Assignment, solution::Violation};
+pub use plan::{MemoryBackend, ReplayEngine};

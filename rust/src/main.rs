@@ -320,11 +320,13 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         }
     }
     println!(
-        "avg step {:.2} ms; staging arena {}; replay fraction {:.1}%; {} reopts",
+        "avg step {:.2} ms; staging arena {}; replay fraction {:.1}%; \
+         {} reopts; {} escape allocs",
         report.avg_step_ms,
         format_bytes(report.arena_bytes as u64),
         report.replay_fraction * 100.0,
-        report.reopts
+        report.reopts,
+        report.escape_allocs
     );
     Ok(())
 }
@@ -333,6 +335,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("pgmo serve", "serve batched inference via PJRT")
         .opt_default("requests", "256", "number of synthetic requests")
         .opt_default("producers", "4", "load-generator threads")
+        .opt_default("shards", "2", "executor shards (each owns a runtime + replay plan)")
         .opt_default("artifacts", "artifacts", "artifact directory");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.help_text());
@@ -343,7 +346,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let n_requests: usize = a.get_or("requests", 256usize)?;
     let producers: usize = a.get_or("producers", 4usize)?;
 
-    let mut server = InferenceServer::new(&dir, 11, ServeConfig::default())?;
+    let cfg = ServeConfig {
+        shards: a.get_or("shards", 2usize)?,
+        ..ServeConfig::default()
+    };
+    let mut server = InferenceServer::new(&dir, 11, cfg)?;
     let dim = server.input_dim();
     let (tx, rx) = std::sync::mpsc::channel::<Request>();
 
@@ -371,9 +378,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("{}", metrics.report());
     let s = server.staging_stats();
     println!(
-        "staging: {} requests, {:.1}% replayed, {} reopts",
+        "staging: {} requests, {:.1}% replayed, {} escapes, {} reopts",
         s.n_allocs,
-        100.0 * s.fast_path as f64 / s.n_allocs.max(1) as f64,
+        100.0 * s.replay_fraction(),
+        s.escape_allocs,
         s.reopts
     );
     Ok(())

@@ -1,0 +1,281 @@
+//! Memory backends for the generic replay engine.
+//!
+//! A [`MemoryBackend`] answers exactly three questions the
+//! profile→solve→replay state machine cannot answer by itself: where does
+//! the solved arena live, how is a request served *dynamically* (the
+//! escape route of §4.3), and what does one replayed request cost. Two
+//! implementations ship:
+//!
+//! * [`DeviceBackend`] — simulated GPU memory: the arena is one
+//!   `cudaMalloc`ed [`Segment`], the escape route is the Chainer-style
+//!   [`PoolAllocator`], and replays charge the simulated `replay_ns`;
+//! * [`HostBackend`] — real host memory on the PJRT path: the arena is a
+//!   [`HostArena`] carved from the solved assignment, the escape route is
+//!   plain heap buffers.
+//!
+//! Everything else — profiling, DSA solving, the in-sync fast path,
+//! deviation handling, reoptimization — is backend-independent and lives
+//! in [`ReplayEngine`](super::ReplayEngine).
+
+use crate::alloc::arena::HostArena;
+use crate::alloc::pool::PoolAllocator;
+use crate::alloc::{AllocStats, DeviceAllocator, Ptr};
+use crate::device::{OutOfMemory, Segment, SimDevice};
+use crate::dsa::problem::DsaInstance;
+use crate::dsa::solution::Assignment;
+use std::collections::HashMap;
+
+/// Where the bytes live. The engine identifies every block by a `u64`
+/// address: planned blocks live at `arena_base + offset`, escape blocks at
+/// whatever unique address the backend hands out (disjoint from the arena
+/// range).
+pub trait MemoryBackend {
+    /// External resource threaded through every engine call (the simulated
+    /// device for [`DeviceBackend`]; `()` when the backend is
+    /// self-contained).
+    type Ctx;
+
+    /// Failure mode of arena reservation / escape allocation
+    /// ([`OutOfMemory`] on the device; [`std::convert::Infallible`] on the
+    /// host).
+    type Error: std::fmt::Debug;
+
+    /// (Re)materialize the arena for a freshly solved plan, releasing any
+    /// previous arena first; returns the arena base address (0 when the
+    /// plan is empty).
+    fn reserve_arena(
+        &mut self,
+        ctx: &mut Self::Ctx,
+        inst: &DsaInstance,
+        sol: &Assignment,
+    ) -> Result<u64, Self::Error>;
+
+    /// Serve a request dynamically (profiling iteration, interrupted
+    /// region, or deviation); the returned address must be unique among
+    /// live blocks and disjoint from the arena range.
+    fn escape_alloc(&mut self, ctx: &mut Self::Ctx, size: u64) -> Result<u64, Self::Error>;
+
+    /// Release an escape block. `size` is the originally requested size
+    /// (backends that key blocks by address may ignore it).
+    fn escape_free(&mut self, ctx: &mut Self::Ctx, addr: u64, size: u64);
+
+    /// Iteration-end trim: drop escape memory cached beyond live blocks,
+    /// so the arena (re)allocation has headroom — the paper's allocator
+    /// holds only the arena between iterations.
+    fn escape_trim(&mut self, ctx: &mut Self::Ctx);
+
+    /// Accounting hook for one O(1) replayed request (§5.2's "just returns
+    /// a memory address"). Default: free.
+    fn on_replay(&mut self, _ctx: &mut Self::Ctx) {}
+
+    /// Bytes currently held by this backend (arena + escape cache).
+    fn held_bytes(&self) -> u64;
+}
+
+// ----- simulated device -----------------------------------------------------
+
+/// Backend over the simulated GPU: arena via `cudaMalloc`, escape route
+/// via the Chainer-style pool (so profiling iterations behave exactly like
+/// the paper's baseline while the monitor records).
+#[derive(Debug)]
+pub struct DeviceBackend {
+    escape: PoolAllocator,
+    arena: Option<Segment>,
+    /// The solved peak the current arena was reserved for (the segment
+    /// itself is rounded up to device alignment, so `Segment::size` alone
+    /// cannot tell whether the plan's peak changed).
+    arena_peak: u64,
+}
+
+impl DeviceBackend {
+    pub fn new() -> DeviceBackend {
+        DeviceBackend {
+            escape: PoolAllocator::chainer(),
+            arena: None,
+            arena_peak: 0,
+        }
+    }
+
+    /// The currently reserved arena segment, if any.
+    pub fn arena(&self) -> Option<Segment> {
+        self.arena
+    }
+
+    /// Counters of the escape pool (device mallocs, free-alls).
+    pub fn escape_stats(&self) -> AllocStats {
+        self.escape.stats()
+    }
+}
+
+impl Default for DeviceBackend {
+    fn default() -> DeviceBackend {
+        DeviceBackend::new()
+    }
+}
+
+impl MemoryBackend for DeviceBackend {
+    type Ctx = SimDevice;
+    type Error = OutOfMemory;
+
+    fn reserve_arena(
+        &mut self,
+        dev: &mut SimDevice,
+        _inst: &DsaInstance,
+        sol: &Assignment,
+    ) -> Result<u64, OutOfMemory> {
+        let need_realloc = self.arena.is_none() || self.arena_peak != sol.peak;
+        if need_realloc {
+            if let Some(seg) = self.arena.take() {
+                dev.free(seg);
+            }
+            self.arena = if sol.peak > 0 {
+                Some(dev.malloc(sol.peak)?)
+            } else {
+                None
+            };
+            self.arena_peak = sol.peak;
+        }
+        Ok(self.arena.map(|s| s.addr).unwrap_or(0))
+    }
+
+    fn escape_alloc(&mut self, dev: &mut SimDevice, size: u64) -> Result<u64, OutOfMemory> {
+        self.escape.alloc(dev, size).map(|p| p.addr)
+    }
+
+    fn escape_free(&mut self, dev: &mut SimDevice, addr: u64, size: u64) {
+        self.escape.free(dev, Ptr { addr, size });
+    }
+
+    fn escape_trim(&mut self, dev: &mut SimDevice) {
+        self.escape.free_all(dev);
+    }
+
+    fn on_replay(&mut self, dev: &mut SimDevice) {
+        dev.charge_ns(dev.cost().replay_ns);
+    }
+
+    fn held_bytes(&self) -> u64 {
+        self.arena.map(|s| s.size).unwrap_or(0) + self.escape.held_bytes()
+    }
+}
+
+// ----- real host memory -----------------------------------------------------
+
+/// Escape addresses start here so they can never collide with arena
+/// offsets (a host arena past 256 TiB is not a thing).
+pub const HOST_ESCAPE_BASE: u64 = 1 << 48;
+
+/// Backend over real host memory: the arena is a [`HostArena`] carved
+/// from the assignment (base address 0 = slot offsets), escape blocks are
+/// plain zeroed heap buffers keyed by synthetic addresses.
+#[derive(Debug, Default)]
+pub struct HostBackend {
+    arena: Option<HostArena>,
+    heap: HashMap<u64, Vec<u8>>,
+    next_key: u64,
+}
+
+impl HostBackend {
+    pub fn new() -> HostBackend {
+        HostBackend::default()
+    }
+
+    pub fn arena(&self) -> Option<&HostArena> {
+        self.arena.as_ref()
+    }
+
+    pub fn arena_mut(&mut self) -> Option<&mut HostArena> {
+        self.arena.as_mut()
+    }
+
+    /// Arena capacity in bytes (0 before the first solve).
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.as_ref().map(HostArena::capacity).unwrap_or(0)
+    }
+
+    /// Bytes of a live escape block. Panics on a dead buffer — a
+    /// use-after-free is a caller bug.
+    pub fn heap_bytes(&self, addr: u64) -> &[u8] {
+        self.heap.get(&addr).expect("dead heap buffer")
+    }
+
+    pub fn heap_bytes_mut(&mut self, addr: u64) -> &mut [u8] {
+        self.heap.get_mut(&addr).expect("dead heap buffer")
+    }
+}
+
+impl MemoryBackend for HostBackend {
+    type Ctx = ();
+    type Error = std::convert::Infallible;
+
+    fn reserve_arena(
+        &mut self,
+        _ctx: &mut (),
+        inst: &DsaInstance,
+        sol: &Assignment,
+    ) -> Result<u64, Self::Error> {
+        self.arena = Some(HostArena::from_assignment(inst, sol));
+        Ok(0)
+    }
+
+    fn escape_alloc(&mut self, _ctx: &mut (), size: u64) -> Result<u64, Self::Error> {
+        let addr = HOST_ESCAPE_BASE + self.next_key;
+        self.next_key += 1;
+        self.heap.insert(addr, vec![0u8; size as usize]);
+        Ok(addr)
+    }
+
+    fn escape_free(&mut self, _ctx: &mut (), addr: u64, _size: u64) {
+        // Every legitimate escape free names a live heap buffer; a miss is
+        // a caller double-free/unknown-buffer bug that would otherwise
+        // silently corrupt the profile. Fail fast, like the device pool.
+        self.heap
+            .remove(&addr)
+            .expect("staging: free of unknown buffer");
+    }
+
+    fn escape_trim(&mut self, _ctx: &mut ()) {
+        // Heap buffers are returned to the OS on free; nothing is cached.
+    }
+
+    fn held_bytes(&self) -> u64 {
+        self.arena_bytes() as u64 + self.heap.values().map(|v| v.len() as u64).sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsa::bestfit;
+
+    fn solved() -> (DsaInstance, Assignment) {
+        let inst = DsaInstance::from_triples(&[(1000, 0, 4), (2000, 2, 6)]);
+        let sol = bestfit::solve(&inst);
+        (inst, sol)
+    }
+
+    #[test]
+    fn device_backend_reuses_same_size_arena() {
+        let mut dev = SimDevice::new(1 << 24);
+        let mut b = DeviceBackend::new();
+        let (inst, sol) = solved();
+        let base1 = b.reserve_arena(&mut dev, &inst, &sol).unwrap();
+        let mallocs = dev.n_mallocs;
+        let base2 = b.reserve_arena(&mut dev, &inst, &sol).unwrap();
+        assert_eq!(base1, base2, "same peak keeps the same arena");
+        assert_eq!(dev.n_mallocs, mallocs, "no extra device call");
+    }
+
+    #[test]
+    fn host_backend_escape_addresses_clear_arena_range() {
+        let mut b = HostBackend::new();
+        let (inst, sol) = solved();
+        let base = b.reserve_arena(&mut (), &inst, &sol).unwrap();
+        assert_eq!(base, 0);
+        let a = b.escape_alloc(&mut (), 64).unwrap();
+        assert!(a >= HOST_ESCAPE_BASE);
+        assert_eq!(b.heap_bytes(a).len(), 64);
+        b.escape_free(&mut (), a, 64);
+        assert_eq!(b.held_bytes(), b.arena_bytes() as u64);
+    }
+}

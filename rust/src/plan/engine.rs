@@ -1,0 +1,605 @@
+//! The generic profile→solve→replay engine (§4), parameterized over a
+//! [`MemoryBackend`].
+//!
+//! One state machine, every backend. The lifecycle:
+//!
+//! * **Iteration 0 (profiling)**: requests go through the backend's
+//!   escape route while the profiler records the trace. At
+//!   `end_iteration` the trace becomes a DSA instance, the best-fit
+//!   heuristic packs it, and the backend reserves one arena of the packed
+//!   peak size.
+//! * **Iterations 1.. (replay)**: while the request stream matches the
+//!   profiled event skeleton, `alloc` returns a precomputed address and
+//!   bumps λ — no recording, no hashing, no device call (§4.2).
+//! * **Reoptimization (§4.3)**: an oversized request or more requests
+//!   than profiled routes to the escape route for the rest of the
+//!   iteration; `end_iteration` re-solves against the positional maximum
+//!   of observed sizes (pure growth) or against the observed trace alone
+//!   (structural change).
+//! * **interrupt/resume (§4.3)**: requests inside an interrupted region
+//!   bypass both λ and the plan, living on the escape route.
+//!
+//! Soundness: replay identifies blocks positionally, which is only sound
+//! for hot propagation. Before handing out a planned slot off the fast
+//! path, the engine checks the slot against the currently live arena
+//! intervals (one `BTreeMap` lookup) and on overlap serves the request
+//! dynamically and schedules reoptimization — never corrupting memory,
+//! for *any* backend, while keeping the replay savings for matching
+//! prefixes.
+
+use super::backend::MemoryBackend;
+use crate::alloc::AllocStats;
+use crate::dsa::bestfit;
+use crate::profiler::{BlockHandle, MemoryProfiler};
+use crate::trace::{Trace, TraceEvent};
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+/// One expected event of a hot iteration, in plan order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PlanEvent {
+    Alloc(usize),
+    Free(usize),
+}
+
+/// A solved allocation plan.
+#[derive(Debug)]
+struct Plan {
+    /// Tick skeleton + per-position sizes the offsets were solved for.
+    trace: Trace,
+    /// Cached per-position sizes (index = λ).
+    sizes: Vec<u64>,
+    offsets: Vec<u64>,
+    peak: u64,
+    /// Arena base address the backend reserved for this plan.
+    base: u64,
+    /// The expected event sequence of a hot iteration — drives the
+    /// *in-sync* O(1) fast path: while the incoming stream matches this
+    /// prefix, no profiler recording, hashing, or interval checking is
+    /// needed at all.
+    events: Vec<PlanEvent>,
+    /// Precomputed absolute address per position (base + offset).
+    addrs: Vec<u64>,
+}
+
+impl Plan {
+    fn arena_range(&self) -> (u64, u64) {
+        (self.base, self.base + self.peak)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum LiveEntry {
+    /// Served from the arena at plan position `pos`.
+    Arena { handle: BlockHandle, pos: usize },
+    /// Served by the backend's escape route.
+    Escape { handle: BlockHandle },
+}
+
+/// Result of one engine allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Address of the block (arena or escape).
+    pub addr: u64,
+    /// Plan position when served from the arena; `None` = escape route.
+    pub pos: Option<usize>,
+}
+
+impl Placement {
+    /// Was this request served by O(1) replay from the arena?
+    pub fn is_replayed(&self) -> bool {
+        self.pos.is_some()
+    }
+}
+
+/// The backend-agnostic replay engine. [`ProfileGuidedAllocator`]
+/// (crate::alloc::profile_guided::ProfileGuidedAllocator) and
+/// [`StagingPlanner`](crate::coordinator::staging::StagingPlanner) are
+/// thin adapters over this type, so their deviation and soundness
+/// semantics are identical by construction.
+#[derive(Debug)]
+pub struct ReplayEngine<M: MemoryBackend> {
+    backend: M,
+    profiler: MemoryProfiler,
+    plan: Option<Plan>,
+    /// Live blocks by address (slow path only).
+    live: HashMap<u64, LiveEntry>,
+    /// Live arena intervals (offset → end offset), for the soundness
+    /// check on structure-deviating iterations.
+    arena_live: BTreeMap<u64, u64>,
+    /// Set when this iteration deviated from the plan (size overrun or
+    /// more requests than planned) → reoptimize at iteration end.
+    deviated: bool,
+    /// Set when the deviation changed the propagation *structure* (count
+    /// overflow or slot collision), not just sizes. A structural change
+    /// replaces the plan with the observed trace instead of taking a
+    /// positional size maximum — positions of different structures do not
+    /// correspond, and ratcheting across them inflates the arena
+    /// unboundedly.
+    structure_changed: bool,
+    /// In-sync fast path state: while true, the iteration so far matches
+    /// `plan.events[..event_idx]` exactly (profiled events only —
+    /// interrupted-region requests bypass the stream by design, §4.3).
+    in_sync: bool,
+    event_idx: usize,
+    /// Own interrupt nesting (mirrors the profiler's, which is rebuilt on
+    /// desynchronization).
+    interrupt_depth: u32,
+    stats: AllocStats,
+    solve_ns: u64,
+    /// Labels forwarded to traces/diagnostics.
+    model: String,
+    phase: String,
+    batch: u32,
+}
+
+impl<M: MemoryBackend> ReplayEngine<M> {
+    pub fn new(backend: M, model: &str, phase: &str, batch: u32) -> ReplayEngine<M> {
+        ReplayEngine {
+            backend,
+            profiler: MemoryProfiler::new(model, phase, batch),
+            plan: None,
+            live: HashMap::new(),
+            arena_live: BTreeMap::new(),
+            deviated: false,
+            structure_changed: false,
+            in_sync: false,
+            event_idx: 0,
+            interrupt_depth: 0,
+            stats: AllocStats::default(),
+            solve_ns: 0,
+            model: model.to_string(),
+            phase: phase.to_string(),
+            batch,
+        }
+    }
+
+    // ----- accessors -------------------------------------------------------
+
+    pub fn backend(&self) -> &M {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut M {
+        &mut self.backend
+    }
+
+    /// Is the engine still in its profiling (sample-run) iteration?
+    pub fn is_profiling(&self) -> bool {
+        self.plan.is_none()
+    }
+
+    /// Peak (arena size) of the current plan, if solved.
+    pub fn planned_peak(&self) -> Option<u64> {
+        self.plan.as_ref().map(|p| p.peak)
+    }
+
+    /// The current plan's trace (for reports / persisting profiles).
+    pub fn plan_trace(&self) -> Option<&Trace> {
+        self.plan.as_ref().map(|p| &p.trace)
+    }
+
+    /// Solved per-position offsets of the current plan.
+    pub fn planned_offsets(&self) -> Option<&[u64]> {
+        self.plan.as_ref().map(|p| p.offsets.as_slice())
+    }
+
+    /// Absolute address of plan position `pos` (base + offset). Panics
+    /// without a plan — callers hold a [`Placement`] that proves one.
+    pub fn planned_addr(&self, pos: usize) -> u64 {
+        self.plan.as_ref().expect("planned_addr without plan").addrs[pos]
+    }
+
+    pub fn stats(&self) -> AllocStats {
+        self.stats
+    }
+
+    /// Wall-clock nanoseconds spent in offline DSA solving.
+    pub fn solve_ns(&self) -> u64 {
+        self.solve_ns
+    }
+
+    // ----- plan construction ------------------------------------------------
+
+    fn fresh_profiler(&self) -> MemoryProfiler {
+        MemoryProfiler::new(&self.model, &self.phase, self.batch)
+    }
+
+    /// Merge the plan skeleton with an observed trace: "the new observed
+    /// parameters" (§4.3) win — the observed trace provides the tick
+    /// skeleton unless the old plan covers strictly more positions — and
+    /// shared positions take the maximum size.
+    fn merge(plan: &Trace, observed: &Trace) -> Trace {
+        let (skeleton, other) = if observed.n_blocks() >= plan.n_blocks() {
+            (observed, plan)
+        } else {
+            (plan, observed)
+        };
+        let mut other_sizes = vec![None; other.n_blocks()];
+        for e in &other.events {
+            if let TraceEvent::Alloc { id, size, .. } = *e {
+                other_sizes[id] = Some(size);
+            }
+        }
+        let mut merged = skeleton.clone();
+        for e in &mut merged.events {
+            if let TraceEvent::Alloc { id, size, .. } = e {
+                if let Some(Some(o)) = other_sizes.get(*id) {
+                    *size = (*size).max(*o);
+                }
+            }
+        }
+        merged
+    }
+
+    /// Solve (or re-solve) the plan from `trace`; the backend reserves the
+    /// arena. Returns Err when the arena cannot be reserved.
+    fn solve_plan(&mut self, ctx: &mut M::Ctx, trace: Trace) -> Result<(), M::Error> {
+        let inst = trace.to_dsa_instance();
+        let t0 = Instant::now();
+        let sol = bestfit::solve(&inst);
+        self.solve_ns += t0.elapsed().as_nanos() as u64;
+        debug_assert!(sol.validate(&inst).is_ok());
+
+        let base = self.backend.reserve_arena(ctx, &inst, &sol)?;
+        let sizes: Vec<u64> = inst.blocks.iter().map(|b| b.size).collect();
+        let events: Vec<PlanEvent> = trace
+            .events
+            .iter()
+            .map(|e| match *e {
+                TraceEvent::Alloc { id, .. } => PlanEvent::Alloc(id),
+                TraceEvent::Free { id, .. } => PlanEvent::Free(id),
+            })
+            .collect();
+        let addrs: Vec<u64> = sol.offsets.iter().map(|&o| base + o).collect();
+        self.plan = Some(Plan {
+            trace,
+            sizes,
+            offsets: sol.offsets,
+            peak: sol.peak,
+            base,
+            events,
+            addrs,
+        });
+        Ok(())
+    }
+
+    /// Leave the in-sync fast path: reconstruct the profiler, live map,
+    /// and live-interval set from the plan prefix already replayed (the
+    /// profiled prefix is, by definition of in-sync, identical to the
+    /// plan's — sizes conservatively taken from the plan).
+    #[cold]
+    fn desync(&mut self) {
+        debug_assert!(self.in_sync);
+        self.in_sync = false;
+        let plan = self.plan.as_ref().expect("desync without plan");
+        let mut prof = MemoryProfiler::new(&self.model, &self.phase, self.batch);
+        self.live.clear();
+        self.arena_live.clear();
+        let mut handles: Vec<Option<BlockHandle>> = vec![None; plan.sizes.len()];
+        for &e in &plan.events[..self.event_idx] {
+            match e {
+                PlanEvent::Alloc(pos) => {
+                    let h = prof.on_alloc(plan.sizes[pos]);
+                    handles[pos] = Some(h);
+                    self.live
+                        .insert(plan.addrs[pos], LiveEntry::Arena { handle: h, pos });
+                    self.arena_live
+                        .insert(plan.offsets[pos], plan.offsets[pos] + plan.sizes[pos]);
+                }
+                PlanEvent::Free(pos) => {
+                    let h = handles[pos].take().expect("plan free before alloc");
+                    prof.on_free(h);
+                    self.live.remove(&plan.addrs[pos]);
+                    self.arena_live.remove(&plan.offsets[pos]);
+                }
+            }
+        }
+        prof.set_interrupt_depth(self.interrupt_depth);
+        self.profiler = prof;
+    }
+
+    fn alloc_escape(
+        &mut self,
+        ctx: &mut M::Ctx,
+        size: u64,
+        handle: BlockHandle,
+    ) -> Result<Placement, M::Error> {
+        self.stats.escape_allocs += 1;
+        let addr = self.backend.escape_alloc(ctx, size)?;
+        self.live.insert(addr, LiveEntry::Escape { handle });
+        Ok(Placement { addr, pos: None })
+    }
+
+    // ----- the per-iteration state machine ---------------------------------
+
+    /// λ reset (§4.2): positional ids restart each propagation.
+    pub fn begin_iteration(&mut self) {
+        debug_assert_eq!(self.interrupt_depth, 0, "unbalanced interrupt");
+        self.event_idx = 0;
+        self.in_sync = self.plan.is_some();
+        if !self.in_sync {
+            self.profiler = self.fresh_profiler();
+        }
+        self.deviated = false;
+        self.structure_changed = false;
+    }
+
+    /// Serve a memory request of `size` bytes.
+    pub fn alloc(&mut self, ctx: &mut M::Ctx, size: u64) -> Result<Placement, M::Error> {
+        self.stats.n_allocs += 1;
+
+        // The in-sync O(1) fast path: the expected next event is a known
+        // allocation position — no recording, no hashing, no interval
+        // check needed (§4.2's "just returns a memory address").
+        if self.in_sync && self.interrupt_depth == 0 {
+            let plan = self.plan.as_ref().expect("in_sync without plan");
+            if let Some(&PlanEvent::Alloc(pos)) = plan.events.get(self.event_idx) {
+                if size <= plan.sizes[pos] {
+                    let addr = plan.addrs[pos];
+                    self.event_idx += 1;
+                    self.stats.fast_path += 1;
+                    self.backend.on_replay(ctx);
+                    return Ok(Placement {
+                        addr,
+                        pos: Some(pos),
+                    });
+                }
+            }
+            self.desync(); // mismatch: rebuild slow-path state, continue
+        }
+
+        // Non-hot region: out of scope of the optimization (§4.3).
+        if self.interrupt_depth > 0 {
+            if self.in_sync {
+                // Interrupted requests bypass the plan stream entirely;
+                // the profiled stream stays in sync.
+                self.stats.escape_allocs += 1;
+                let addr = self.backend.escape_alloc(ctx, size)?;
+                return Ok(Placement { addr, pos: None });
+            }
+            let handle = self.profiler.on_alloc(size); // advances the clock only
+            return self.alloc_escape(ctx, size, handle);
+        }
+
+        let handle = self.profiler.on_alloc(size);
+        let pos = handle.id();
+
+        if self.plan.is_none() {
+            // Profiling iteration: dynamic allocation while recording.
+            return self.alloc_escape(ctx, size, handle);
+        }
+
+        let plan = self.plan.as_ref().expect("checked above");
+        if pos < plan.sizes.len() && size <= plan.sizes[pos] {
+            let (off, end) = (plan.offsets[pos], plan.offsets[pos] + plan.sizes[pos]);
+            // Soundness check: the planned slot must not overlap a live
+            // planned block. Disjoint sorted intervals ⇒ it suffices to
+            // inspect the predecessor by start < end.
+            let collides = self
+                .arena_live
+                .range(..end)
+                .next_back()
+                .is_some_and(|(_, &e)| e > off);
+            if !collides {
+                // The O(1) replay hot path (§4.2).
+                let addr = plan.addrs[pos];
+                self.stats.fast_path += 1;
+                self.backend.on_replay(ctx);
+                self.arena_live.insert(off, end);
+                self.live.insert(addr, LiveEntry::Arena { handle, pos });
+                return Ok(Placement {
+                    addr,
+                    pos: Some(pos),
+                });
+            }
+            // Non-hot structure detected: fall through to dynamic serve.
+            self.structure_changed = true;
+        } else if pos >= plan.sizes.len() {
+            self.structure_changed = true;
+        }
+
+        // Deviation: larger than profiled, or more requests than planned.
+        // Serve dynamically now; reoptimize at iteration end (§4.3).
+        self.deviated = true;
+        self.alloc_escape(ctx, size, handle)
+    }
+
+    /// Release the block at `addr` (`size` = originally requested bytes).
+    pub fn free(&mut self, ctx: &mut M::Ctx, addr: u64, size: u64) {
+        self.stats.n_frees += 1;
+
+        if self.in_sync {
+            let plan = self.plan.as_ref().expect("in_sync without plan");
+            let (lo, hi) = plan.arena_range();
+            if addr >= lo && addr < hi {
+                // In-sync arena free: must match the expected event.
+                if let Some(&PlanEvent::Free(pos)) = plan.events.get(self.event_idx) {
+                    if plan.addrs[pos] == addr {
+                        self.event_idx += 1;
+                        self.backend.on_replay(ctx);
+                        return;
+                    }
+                }
+                self.desync(); // out-of-plan free order
+            } else {
+                // Escape block from an interrupted region: direct return.
+                self.backend.escape_free(ctx, addr, size);
+                return;
+            }
+        }
+
+        if let Some(entry) = self.live.remove(&addr) {
+            match entry {
+                LiveEntry::Arena { handle, pos } => {
+                    // Replay free is pure bookkeeping — no device call.
+                    self.backend.on_replay(ctx);
+                    let off = self.plan.as_ref().expect("arena entry without plan").offsets[pos];
+                    self.arena_live.remove(&off);
+                    self.profiler.on_free(handle);
+                }
+                LiveEntry::Escape { handle } => {
+                    self.profiler.on_free(handle);
+                    self.backend.escape_free(ctx, addr, size);
+                }
+            }
+        } else {
+            // Block allocated through the interrupted-region bypass while
+            // still in sync; the clock still advances (§4.1).
+            self.profiler.on_free(BlockHandle::UNPROFILED);
+            self.backend.escape_free(ctx, addr, size);
+        }
+    }
+
+    /// Close the propagation: solve (first iteration), reoptimize (after a
+    /// deviation), or — on a perfect hot iteration — do nothing at all.
+    pub fn end_iteration(&mut self, ctx: &mut M::Ctx) -> Result<(), M::Error> {
+        if self.in_sync {
+            let complete =
+                self.event_idx == self.plan.as_ref().expect("in_sync without plan").events.len();
+            if complete {
+                // A perfect hot iteration: nothing to recompute. Drop any
+                // interrupted-region escape cache and return — this is
+                // the steady state for the paper's CNNs.
+                self.backend.escape_trim(ctx);
+                return Ok(());
+            }
+            // Ended early: fewer profiled events than planned — a
+            // structural deviation (shorter propagation).
+            self.desync();
+            self.deviated = true;
+            self.structure_changed = true;
+        }
+        debug_assert!(
+            self.live.is_empty(),
+            "blocks must not outlive the propagation ({} leaked)",
+            self.live.len()
+        );
+        let fresh = self.fresh_profiler();
+        let observed = std::mem::replace(&mut self.profiler, fresh).finish();
+
+        // Drop dynamic memory cached during profiling/deviation *before*
+        // (re)reserving the arena, so the plan has room: the paper's
+        // allocator holds only the arena between iterations.
+        self.backend.escape_trim(ctx);
+
+        let result = if self.plan.is_none() {
+            // First solve from the sample run.
+            self.solve_plan(ctx, observed)
+        } else if self.deviated && self.structure_changed {
+            // Structural change: positions no longer correspond, so the
+            // new plan is built from "the new observed parameters" (§4.3)
+            // alone.
+            self.stats.reopts += 1;
+            self.solve_plan(ctx, observed)
+        } else if self.deviated {
+            // Pure size growth: ratchet the per-position maxima so
+            // reoptimization becomes rarer as training proceeds (§5.3:
+            // "the recomputation becomes less frequent").
+            self.stats.reopts += 1;
+            let merged = Self::merge(&self.plan.as_ref().expect("deviated").trace, &observed);
+            self.solve_plan(ctx, merged)
+        } else {
+            Ok(())
+        };
+        self.deviated = false;
+        self.structure_changed = false;
+        result
+    }
+
+    /// Enter a non-hot region (§4.3). Nests.
+    pub fn interrupt(&mut self) {
+        self.interrupt_depth += 1;
+        if !self.in_sync {
+            self.profiler.interrupt();
+        }
+    }
+
+    /// Leave a non-hot region (§4.3).
+    pub fn resume(&mut self) {
+        assert!(self.interrupt_depth > 0, "resume without interrupt");
+        self.interrupt_depth -= 1;
+        if !self.in_sync {
+            self.profiler.resume();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::backend::{HostBackend, HOST_ESCAPE_BASE};
+
+    fn host_engine() -> ReplayEngine<HostBackend> {
+        ReplayEngine::new(HostBackend::new(), "toy", "t", 1)
+    }
+
+    fn ok<T>(r: Result<T, std::convert::Infallible>) -> T {
+        match r {
+            Ok(v) => v,
+            Err(e) => match e {},
+        }
+    }
+
+    #[test]
+    fn host_engine_profiles_then_replays_offsets() {
+        let mut e = host_engine();
+        for iter in 0..3 {
+            e.begin_iteration();
+            let a = ok(e.alloc(&mut (), 1000));
+            let b = ok(e.alloc(&mut (), 2000));
+            e.free(&mut (), b.addr, 2000);
+            let c = ok(e.alloc(&mut (), 1500));
+            e.free(&mut (), a.addr, 1000);
+            e.free(&mut (), c.addr, 1500);
+            ok(e.end_iteration(&mut ()));
+            if iter == 0 {
+                assert!(!a.is_replayed(), "profiling iteration is dynamic");
+                assert!(a.addr >= HOST_ESCAPE_BASE);
+            } else {
+                assert!(a.is_replayed() && b.is_replayed() && c.is_replayed());
+                assert!(a.addr < HOST_ESCAPE_BASE, "arena addresses are offsets");
+            }
+        }
+        // b frees before c allocs, so they share space.
+        assert_eq!(e.planned_peak(), Some(3000));
+        assert_eq!(e.stats().fast_path, 6);
+        assert_eq!(e.stats().reopts, 0);
+    }
+
+    #[test]
+    fn host_engine_oversize_ratchets() {
+        let mut e = host_engine();
+        e.begin_iteration();
+        let p = ok(e.alloc(&mut (), 1000));
+        e.free(&mut (), p.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        assert_eq!(e.planned_peak(), Some(1000));
+
+        e.begin_iteration();
+        let p = ok(e.alloc(&mut (), 5000));
+        assert!(!p.is_replayed(), "oversize must take the escape route");
+        e.free(&mut (), p.addr, 5000);
+        ok(e.end_iteration(&mut ()));
+        assert_eq!(e.stats().reopts, 1);
+        assert_eq!(e.planned_peak(), Some(5000), "plan grew to observed max");
+    }
+
+    #[test]
+    fn host_engine_interrupted_region_bypasses_plan() {
+        let mut e = host_engine();
+        for iter in 0..2 {
+            e.begin_iteration();
+            let a = ok(e.alloc(&mut (), 1024));
+            e.interrupt();
+            let u = ok(e.alloc(&mut (), 999_999 + iter));
+            assert!(!u.is_replayed());
+            e.free(&mut (), u.addr, 999_999 + iter);
+            e.resume();
+            e.free(&mut (), a.addr, 1024);
+            ok(e.end_iteration(&mut ()));
+        }
+        assert_eq!(e.plan_trace().unwrap().n_blocks(), 1, "only hot blocks planned");
+        assert_eq!(e.stats().reopts, 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! The generic plan core: one profile→solve→replay engine, many memory
+//! backends.
+//!
+//! The paper's whole contribution is a single mechanism — profile a hot
+//! iteration (§4.1), solve the DSA rectangle packing (§3), replay fixed
+//! offsets in O(1) (§4.2), reoptimize on deviation (§4.3). This module
+//! implements that mechanism exactly once:
+//!
+//! * [`ReplayEngine`] — the full lifecycle state machine: profiling
+//!   iteration, DSA solve via [`bestfit`](crate::dsa::bestfit),
+//!   precomputed event skeleton + address table, in-sync O(1) fast path,
+//!   size-overrun ratcheting, structural-deviation fallback with the
+//!   arena-interval soundness check, interrupt/resume, reoptimization;
+//! * [`MemoryBackend`] — the small trait answering where the bytes live:
+//!   arena reservation, the dynamic escape route, per-replay cost;
+//! * [`DeviceBackend`] / [`HostBackend`] — the two shipped backends
+//!   (simulated GPU memory; real host staging memory).
+//!
+//! [`ProfileGuidedAllocator`](crate::alloc::profile_guided::ProfileGuidedAllocator)
+//! and [`StagingPlanner`](crate::coordinator::staging::StagingPlanner)
+//! are thin adapters over `ReplayEngine<DeviceBackend>` and
+//! `ReplayEngine<HostBackend>` respectively — their semantics are
+//! identical by construction, which `tests/properties.rs` asserts over
+//! random traces.
+
+pub mod backend;
+pub mod engine;
+
+pub use backend::{DeviceBackend, HostBackend, MemoryBackend};
+pub use engine::{Placement, ReplayEngine};

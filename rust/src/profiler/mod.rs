@@ -69,6 +69,14 @@ impl MemoryProfiler {
         self.interrupt_depth -= 1;
     }
 
+    /// Restore a pre-existing interrupt nesting depth. Used by the replay
+    /// engine when it reconstructs a profiler mid-iteration on
+    /// desynchronization: the rebuilt profiler must agree with the
+    /// caller's current `interrupt`/`resume` nesting.
+    pub fn set_interrupt_depth(&mut self, depth: u32) {
+        self.interrupt_depth = depth;
+    }
+
     /// Record an allocation of `size` bytes; returns the block handle.
     pub fn on_alloc(&mut self, size: u64) -> BlockHandle {
         if self.interrupted() {

@@ -14,21 +14,32 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({why})")]
     BadValue {
         key: String,
         value: String,
         why: String,
     },
-    #[error("missing required option --{0}")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::BadValue { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value:?} ({why})")
+            }
+            CliError::MissingRequired(name) => write!(f, "missing required option --{name}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declares one named option for parsing + help generation.
 #[derive(Debug, Clone)]

@@ -75,6 +75,13 @@ impl Summary {
     pub fn median(&mut self) -> f64 {
         self.percentile(50.0)
     }
+
+    /// Fold another summary's samples into this one (used when merging
+    /// per-shard metrics into a fleet-wide report).
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
 }
 
 /// Measure the wall-clock duration of a closure.
@@ -136,6 +143,19 @@ mod tests {
         assert_eq!(s.percentile(25.0), 2.5);
         assert_eq!(s.percentile(100.0), 10.0);
         assert_eq!(s.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn merge_folds_samples() {
+        let mut a = Summary::new();
+        a.add(1.0);
+        a.add(3.0);
+        let mut b = Summary::new();
+        b.add(5.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.mean(), 3.0);
+        assert_eq!(a.max(), 5.0);
     }
 
     #[test]

@@ -73,14 +73,19 @@ fn training_is_deterministic_for_a_seed() {
 #[test]
 fn serving_answers_every_request_with_correct_shape() {
     let Some(dir) = artifacts_dir() else { return };
-    let mut server = InferenceServer::new(&dir, 5, ServeConfig::default()).unwrap();
+    // Default config = 2 shards: each shard must see several batches so
+    // its own replay plan goes hot.
+    let cfg = ServeConfig::default();
+    assert!(cfg.shards >= 2, "serving must default to a sharded path");
+    let n_requests = 160u64;
+    let mut server = InferenceServer::new(&dir, 5, cfg.clone()).unwrap();
     let dim = server.input_dim();
     let (tx, rx) = std::sync::mpsc::channel::<Request>();
     let mut replies = Vec::new();
-    for i in 0..40 {
+    for i in 0..n_requests {
         let (rtx, rrx) = std::sync::mpsc::channel();
         tx.send(Request {
-            x: vec![i as f32 / 40.0; dim],
+            x: vec![i as f32 / n_requests as f32; dim],
             created: std::time::Instant::now(),
             reply: rtx,
         })
@@ -89,11 +94,28 @@ fn serving_answers_every_request_with_correct_shape() {
     }
     drop(tx);
     let metrics = server.run(rx).unwrap();
-    assert_eq!(metrics.requests, 40);
+    assert_eq!(metrics.requests, n_requests);
     for r in replies {
         let resp = r.recv().unwrap();
         assert_eq!(resp.logits.len(), 10);
         assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    // Per-shard breakdown: every shard served work and replayed its
+    // staging after its first (profiling) batch.
+    assert_eq!(metrics.shards.len(), cfg.shards);
+    assert_eq!(
+        metrics.shards.iter().map(|s| s.requests).sum::<u64>(),
+        n_requests,
+        "round-robin must cover every request"
+    );
+    for sm in &metrics.shards {
+        assert!(sm.requests > 0, "shard {} starved", sm.shard);
+        assert!(
+            sm.staging.fast_path > 0,
+            "shard {} staging must replay ({:?})",
+            sm.shard,
+            sm.staging
+        );
     }
     let s = server.staging_stats();
     assert!(s.fast_path > 0, "serving staging must replay");

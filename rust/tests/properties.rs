@@ -2,10 +2,11 @@
 //! over the solver and allocator invariants the whole system rests on.
 
 use pgmo::alloc::profile_guided::ProfileGuidedAllocator;
-use pgmo::alloc::DeviceAllocator;
+use pgmo::alloc::{AllocStats, DeviceAllocator};
 use pgmo::device::SimDevice;
 use pgmo::dsa::problem::DsaInstance;
 use pgmo::dsa::{bestfit, exact, firstfit};
+use pgmo::plan::{DeviceBackend, HostBackend, MemoryBackend, ReplayEngine};
 use pgmo::testkit::{self, gen};
 use std::time::Duration;
 
@@ -133,6 +134,117 @@ fn prop_no_live_overlap_under_replay() {
             if a.end_iteration(&mut dev).is_err() {
                 return false;
             }
+        }
+        true
+    });
+}
+
+/// What one engine iteration looks like from the outside: which requests
+/// replayed (and at which plan position), the solved plan, and the
+/// engine's counters. Two backends are behaviorally equivalent iff these
+/// observations match for every iteration of every request pattern.
+type IterObservation = (Vec<Option<usize>>, Option<u64>, Vec<u64>, AllocStats);
+
+/// Drive one iteration of `ops` ((size, free-oldest) pairs) through an
+/// engine; `bump` quadruples the size at one index to force a deviation.
+fn drive_iteration<M: MemoryBackend>(
+    engine: &mut ReplayEngine<M>,
+    ctx: &mut M::Ctx,
+    ops: &[(u64, bool)],
+    bump: Option<usize>,
+) -> IterObservation {
+    engine.begin_iteration();
+    let mut live: Vec<(u64, u64)> = Vec::new();
+    let mut positions = Vec::new();
+    for (i, &(size, free_oldest)) in ops.iter().enumerate() {
+        let size = if bump == Some(i) { size * 4 + 64 } else { size };
+        let p = engine.alloc(ctx, size).expect("engine alloc");
+        positions.push(p.pos);
+        live.push((p.addr, size));
+        if free_oldest && live.len() > 1 {
+            let (addr, sz) = live.remove(0);
+            engine.free(ctx, addr, sz);
+        }
+    }
+    for (addr, sz) in live.drain(..) {
+        engine.free(ctx, addr, sz);
+    }
+    engine.end_iteration(ctx).expect("engine end_iteration");
+    (
+        positions,
+        engine.planned_peak(),
+        engine.planned_offsets().map(|o| o.to_vec()).unwrap_or_default(),
+        engine.stats(),
+    )
+}
+
+/// The tentpole equivalence property: for a random trace, the shared
+/// replay engine produces the same offsets, peak, replay/escape/reopt
+/// outcomes regardless of which [`MemoryBackend`] backs it — simulated
+/// device memory or real host memory. (Addresses differ by arena base;
+/// everything observable about the *plan* and the *decisions* must not.)
+#[test]
+fn prop_replay_engine_backend_equivalence() {
+    let pattern = gen::vec(
+        gen::pair(gen::u64_in(64..=4096), gen::bool_with(0.4)),
+        2..=20,
+    );
+    testkit::check("backend equivalence", 60, pattern, |ops| {
+        let mut dev = SimDevice::new(1 << 30);
+        let mut device_engine = ReplayEngine::new(DeviceBackend::new(), "prop", "t", 1);
+        let mut host_engine = ReplayEngine::new(HostBackend::new(), "prop", "t", 1);
+        // Iterations: profile, hot replay, forced deviation (one request
+        // ×4 oversize), post-reoptimization replay.
+        let bump_at = ops.len() / 2;
+        for bump in [None, None, Some(bump_at), None] {
+            let d = drive_iteration(&mut device_engine, &mut dev, ops, bump);
+            let h = drive_iteration(&mut host_engine, &mut (), ops, bump);
+            if d != h {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// The host engine upholds the same no-overlap safety the device engine
+/// does: concurrently live *arena* placements never alias arena storage,
+/// even when the request stream deviates from the plan. (Escape blocks
+/// are separate heap allocations — disjoint by construction.)
+#[test]
+fn prop_host_engine_live_arena_slots_disjoint() {
+    let pattern = gen::vec(
+        gen::pair(gen::u64_in(64..=4096), gen::bool_with(0.5)),
+        2..=24,
+    );
+    testkit::check("host live disjoint", 100, pattern, |ops| {
+        let mut e = ReplayEngine::new(HostBackend::new(), "prop", "t", 1);
+        for iter in 0..3u32 {
+            e.begin_iteration();
+            // (addr, size, in-arena) of every live placement.
+            let mut live: Vec<(u64, u64, bool)> = Vec::new();
+            for &(size, free_oldest) in ops {
+                // Grow sizes on iteration 2 to force deviations.
+                let s = if iter == 2 { size * 2 } else { size };
+                let p = e.alloc(&mut (), s).expect("host alloc");
+                if p.pos.is_some() {
+                    for &(qa, qs, q_arena) in &live {
+                        let disjoint = p.addr + s <= qa || qa + qs <= p.addr;
+                        if q_arena && !disjoint {
+                            return false;
+                        }
+                    }
+                }
+                live.push((p.addr, s, p.pos.is_some()));
+                if free_oldest && live.len() > 1 {
+                    let (addr, sz, _) = live.remove(0);
+                    e.free(&mut (), addr, sz);
+                }
+            }
+            for (addr, sz, _) in live.drain(..) {
+                e.free(&mut (), addr, sz);
+            }
+            e.end_iteration(&mut ()).expect("host end");
         }
         true
     });

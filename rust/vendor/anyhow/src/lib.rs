@@ -1,0 +1,207 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored because
+//! the build image has no network access to crates.io.
+//!
+//! Supported surface (exactly what this repo uses):
+//!
+//! * [`Error`] / [`Result`] — a boxed, context-carrying error;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`s of
+//!   standard errors and on `Option`s.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: an outermost message plus the chain of causes
+/// beneath it (`chain[0]` is the outermost).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a plain message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    fn from_std(e: &(dyn StdError + 'static)) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, colon-separated (anyhow's format).
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// Attach context to failure values, converting them to [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(format!(
+                "Condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(5).unwrap(), 5);
+        assert_eq!(inner(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(inner(11).unwrap_err().to_string(), "x too big: 11");
+
+        fn bare(x: u32) -> Result<()> {
+            ensure!(x != 0);
+            Ok(())
+        }
+        assert!(bare(1).is_ok());
+        assert!(bare(0).unwrap_err().to_string().contains("x != 0"));
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.root_cause(), "plain 7");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn run() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(run().unwrap_err().to_string(), "missing file");
+    }
+}
