@@ -25,7 +25,10 @@ from jax._src.lib import xla_client as xc
 from compile import model
 
 TRAIN_BATCHES = (32,)
-PREDICT_BATCHES = (32, 1)
+# One predict artifact per serving batch bucket: the Rust PlanRegistry
+# routes each request batch to the smallest covering bucket, so the
+# ladder here must match ServeConfig's default bucket ladder.
+PREDICT_BATCHES = (32, 16, 8, 4, 1)
 
 
 def to_hlo_text(lowered) -> str:

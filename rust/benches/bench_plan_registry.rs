@@ -1,0 +1,160 @@
+//! Bench: padded single-plan staging vs the bucketed plan registry on a
+//! mixed batch-size stream — the serving-memory win of `PlanRegistry`.
+//!
+//! Drives the *host staging* layer only (no PJRT, no artifacts needed, so
+//! this bench always runs): the single-plan baseline stages every batch
+//! padded to `MAX_BATCH`, exactly like the pre-registry server; the
+//! bucketed configuration routes each batch to the smallest covering
+//! bucket of the 1/4/8/16/32 ladder, one replay plan per bucket. A third
+//! run adds a tight byte budget to show LRU eviction trading hit rate for
+//! residency.
+//!
+//! Reported per mode: staging throughput (batches/s), total padded
+//! elements (the waste the acceptance criterion bounds), resident arena
+//! bytes, and registry counters.
+//!
+//! Run: `cargo bench --bench bench_plan_registry`
+
+use pgmo::coordinator::staging::{StagingPlanner, StagingRegistry};
+use pgmo::plan::registry::{RegistryConfig, DEFAULT_LADDER};
+use pgmo::util::humansize::format_bytes;
+use pgmo::util::rng::Pcg32;
+use std::time::Instant;
+
+const DIM: usize = 784;
+const CLASSES: usize = 10;
+const MAX_BATCH: usize = 32;
+const BATCHES: usize = 4000;
+
+/// Mixed, small-skewed batch sizes (real serving traffic is heavy-tailed
+/// toward small requests — exactly where padding to 32 hurts most).
+fn mixed_sizes() -> Vec<usize> {
+    let mut rng = Pcg32::seeded(0xb0c3);
+    (0..BATCHES)
+        .map(|_| match rng.range(1, 100) {
+            1..=50 => rng.range_usize(1, 4),
+            51..=80 => rng.range_usize(5, 16),
+            _ => rng.range_usize(17, MAX_BATCH),
+        })
+        .collect()
+}
+
+/// One serving batch staged at `slots` padded rows: input up, logits back.
+fn stage_one(planner: &mut StagingPlanner, slots: usize, flat: &[f32]) {
+    planner.begin_iteration();
+    let x = planner.alloc(slots * DIM * 4);
+    planner.write_f32(&x, &flat[..slots * DIM]);
+    let y = planner.alloc(slots * CLASSES * 4);
+    planner.free(y);
+    planner.free(x);
+    planner.end_iteration();
+}
+
+struct Outcome {
+    label: &'static str,
+    wall_s: f64,
+    padded_elems: u64,
+    arena_bytes: u64,
+    note: String,
+}
+
+fn run_single(sizes: &[usize], flat: &[f32]) -> Outcome {
+    let mut planner = StagingPlanner::new("mlp", "bench-single");
+    let mut padded_elems = 0u64;
+    let t0 = Instant::now();
+    for &n in sizes {
+        stage_one(&mut planner, MAX_BATCH, flat);
+        padded_elems += ((MAX_BATCH - n) * (DIM + CLASSES)) as u64;
+    }
+    Outcome {
+        label: "single-plan (pad to 32)",
+        wall_s: t0.elapsed().as_secs_f64(),
+        padded_elems,
+        arena_bytes: planner.arena_bytes() as u64,
+        note: format!("replay {:.1}%", planner.stats().replay_fraction() * 100.0),
+    }
+}
+
+fn run_bucketed(sizes: &[usize], flat: &[f32], budget: u64, label: &'static str) -> Outcome {
+    let cfg = RegistryConfig::new(&DEFAULT_LADDER).with_budget(budget);
+    let mut reg = StagingRegistry::new("mlp", "bench-bucketed", cfg);
+    let mut padded_elems = 0u64;
+    let t0 = Instant::now();
+    for &n in sizes {
+        let bucket = reg.bucket_for(n as u32);
+        stage_one(reg.planner(bucket), bucket as usize, flat);
+        reg.enforce_budget();
+        padded_elems += ((bucket as usize - n) * (DIM + CLASSES)) as u64;
+    }
+    let st = reg.stats();
+    Outcome {
+        label,
+        wall_s: t0.elapsed().as_secs_f64(),
+        padded_elems,
+        arena_bytes: reg.held_bytes(),
+        note: format!(
+            "{} plans resident, {} hits / {} misses ({:.1}%), {} evictions",
+            reg.resident_plans(),
+            st.hits,
+            st.misses,
+            st.hit_rate() * 100.0,
+            st.evictions
+        ),
+    }
+}
+
+fn main() {
+    let sizes = mixed_sizes();
+    let flat = vec![0f32; MAX_BATCH * DIM];
+    let distinct: usize = {
+        let cfg = RegistryConfig::new(&DEFAULT_LADDER);
+        let mut used: Vec<u32> = sizes.iter().map(|&n| cfg.bucket_for(n as u32)).collect();
+        used.sort_unstable();
+        used.dedup();
+        used.len()
+    };
+    println!(
+        "plan registry: {BATCHES} mixed batches (1..={MAX_BATCH}), ladder {:?}, \
+         {distinct} distinct buckets routed",
+        DEFAULT_LADDER
+    );
+    assert!(
+        distinct >= 3,
+        "acceptance: a mixed stream must route through ≥ 3 bucket plans"
+    );
+
+    let single = run_single(&sizes, &flat);
+    let bucketed = run_bucketed(&sizes, &flat, u64::MAX, "bucketed registry");
+    // Budget ≈ 1.25 large arenas — too small for the full ladder to stay
+    // resident, so cold buckets are LRU-evicted.
+    let budget = (MAX_BATCH * (DIM + CLASSES) * 4) as u64 * 5 / 4;
+    let budgeted = run_bucketed(&sizes, &flat, budget, "bucketed + byte budget");
+
+    println!(
+        "{:<26} {:>12} {:>16} {:>12}   {}",
+        "mode", "batches/s", "padded elems", "arena", "notes"
+    );
+    for o in [&single, &bucketed, &budgeted] {
+        println!(
+            "{:<26} {:>12.0} {:>16} {:>12}   {}",
+            o.label,
+            BATCHES as f64 / o.wall_s.max(1e-9),
+            o.padded_elems,
+            format_bytes(o.arena_bytes),
+            o.note
+        );
+    }
+
+    let reduction = 1.0 - bucketed.padded_elems as f64 / single.padded_elems.max(1) as f64;
+    println!(
+        "padded-element waste: {} → {} ({:.1}% less than the single-plan baseline)",
+        single.padded_elems,
+        bucketed.padded_elems,
+        reduction * 100.0
+    );
+    // The acceptance criterion: bucketing must strictly reduce padding.
+    assert!(
+        bucketed.padded_elems < single.padded_elems,
+        "bucketed registry must waste less than padding to max_batch"
+    );
+}

@@ -69,6 +69,21 @@ impl AllocStats {
         self.reopts += other.reopts;
         self.escape_allocs += other.escape_allocs;
     }
+
+    /// Counter-wise difference `self − earlier`, for windowed deltas of a
+    /// cumulative counter set (e.g. per-batch staging attribution).
+    /// Saturates at zero so a reset counter never underflows.
+    pub fn since(&self, earlier: &AllocStats) -> AllocStats {
+        AllocStats {
+            n_allocs: self.n_allocs.saturating_sub(earlier.n_allocs),
+            n_frees: self.n_frees.saturating_sub(earlier.n_frees),
+            fast_path: self.fast_path.saturating_sub(earlier.fast_path),
+            device_mallocs: self.device_mallocs.saturating_sub(earlier.device_mallocs),
+            free_alls: self.free_alls.saturating_sub(earlier.free_alls),
+            reopts: self.reopts.saturating_sub(earlier.reopts),
+            escape_allocs: self.escape_allocs.saturating_sub(earlier.escape_allocs),
+        }
+    }
 }
 
 /// The allocator interface the execution simulator drives. One iteration =

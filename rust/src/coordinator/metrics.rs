@@ -1,21 +1,74 @@
 //! Serving/training metrics counters.
 
 use crate::alloc::AllocStats;
+use crate::plan::registry::RegistryStats;
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
+/// Per-bucket serving counters: one registry plan = one batch bucket, so
+/// padding waste and replay effectiveness are per-bucket properties.
+#[derive(Debug, Clone, Default)]
+pub struct BucketMetrics {
+    pub bucket: u32,
+    pub batches: u64,
+    pub requests: u64,
+    /// Executed batch slots not backed by a real request (bucket padding).
+    /// With smallest-covering routing this is `< bucket` per batch — the
+    /// single-plan server padded every batch to `max_batch` instead.
+    pub padded_slots: u64,
+    /// Staging counters attributed to this bucket's plan (survives
+    /// registry eviction of the plan itself).
+    pub staging: AllocStats,
+    /// Arena bytes of this bucket's resident plan (0 while the plan is
+    /// evicted).
+    pub arena_bytes: usize,
+}
+
+impl BucketMetrics {
+    /// Fraction of this bucket's staging requests served by O(1) replay.
+    pub fn replay_fraction(&self) -> f64 {
+        self.staging.replay_fraction()
+    }
+
+    /// Fraction of executed slots carrying real requests (1 − padding
+    /// waste).
+    pub fn fill_fraction(&self) -> f64 {
+        let slots = self.batches * self.bucket as u64;
+        if slots == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / slots as f64
+    }
+
+    /// Fold another shard's counters for the same bucket in.
+    pub fn absorb(&mut self, other: &BucketMetrics) {
+        debug_assert_eq!(self.bucket, other.bucket);
+        self.batches += other.batches;
+        self.requests += other.requests;
+        self.padded_slots += other.padded_slots;
+        self.staging.absorb(&other.staging);
+        self.arena_bytes += other.arena_bytes;
+    }
+}
+
 /// Per-shard serving counters: one executor loop = one PJRT runtime = one
-/// replay plan, so replay effectiveness is a per-shard property.
+/// plan registry, so replay effectiveness is a per-shard property.
 #[derive(Debug, Clone, Default)]
 pub struct ShardMetrics {
     pub shard: usize,
     pub requests: u64,
     pub batches: u64,
-    /// Counters of this shard's staging replay engine (replay hits,
-    /// escape allocations, reoptimizations).
+    /// Counters of this shard's staging replay plans, summed across
+    /// buckets (replay hits, escape allocations, reoptimizations).
     pub staging: AllocStats,
-    /// Host staging arena bytes after planning.
+    /// Total bytes resident in this shard's plan registry at shutdown
+    /// (sum of per-bucket arenas).
     pub arena_bytes: usize,
+    /// Per-bucket breakdown, ascending by bucket.
+    pub buckets: Vec<BucketMetrics>,
+    /// Plan-registry counters (bucket-plan hits/misses/evictions).
+    pub plans: RegistryStats,
 }
 
 impl ShardMetrics {
@@ -45,6 +98,37 @@ impl ServeMetrics {
         self.requests as f64 / self.wall.as_secs_f64()
     }
 
+    /// Per-bucket metrics merged across shards, ascending by bucket.
+    pub fn bucket_rollup(&self) -> Vec<BucketMetrics> {
+        let mut map: BTreeMap<u32, BucketMetrics> = BTreeMap::new();
+        for s in &self.shards {
+            for b in &s.buckets {
+                map.entry(b.bucket)
+                    .and_modify(|m| m.absorb(b))
+                    .or_insert_with(|| b.clone());
+            }
+        }
+        map.into_values().collect()
+    }
+
+    /// Registry counters summed across shards.
+    pub fn plan_stats(&self) -> RegistryStats {
+        let mut total = RegistryStats::default();
+        for s in &self.shards {
+            total.absorb(&s.plans);
+        }
+        total
+    }
+
+    /// Total padded (wasted) batch slots across shards and buckets.
+    pub fn padded_slots(&self) -> u64 {
+        self.shards
+            .iter()
+            .flat_map(|s| s.buckets.iter())
+            .map(|b| b.padded_slots)
+            .sum()
+    }
+
     pub fn report(&mut self) -> String {
         let mut out = format!(
             "requests={} batches={} shards={} throughput={:.1} req/s mean_batch={:.1} \
@@ -69,6 +153,29 @@ impl ServeMetrics {
                 s.staging.escape_allocs,
                 s.staging.reopts,
                 s.arena_bytes,
+            ));
+        }
+        for b in self.bucket_rollup() {
+            out.push_str(&format!(
+                "\n  bucket b={}: {} reqs in {} batches, {} padded slots \
+                 (fill {:.1}%), replay {:.1}%, arena {} B",
+                b.bucket,
+                b.requests,
+                b.batches,
+                b.padded_slots,
+                b.fill_fraction() * 100.0,
+                b.replay_fraction() * 100.0,
+                b.arena_bytes,
+            ));
+        }
+        let plans = self.plan_stats();
+        if plans.lookups() > 0 {
+            out.push_str(&format!(
+                "\n  plans: {} hits / {} misses ({:.1}% hit rate), {} evictions",
+                plans.hits,
+                plans.misses,
+                plans.hit_rate() * 100.0,
+                plans.evictions,
             ));
         }
         out
@@ -116,6 +223,7 @@ mod tests {
                         ..Default::default()
                     },
                     arena_bytes: 4096,
+                    ..Default::default()
                 },
                 ShardMetrics {
                     shard: 1,
@@ -127,6 +235,7 @@ mod tests {
                         ..Default::default()
                     },
                     arena_bytes: 4096,
+                    ..Default::default()
                 },
             ],
             ..Default::default()
@@ -136,5 +245,59 @@ mod tests {
         assert!(report.contains("shard 0"), "{report}");
         assert!(report.contains("replay 50.0%"), "{report}");
         assert!(report.contains("replay 100.0%"), "{report}");
+    }
+
+    fn bucket(bucket: u32, batches: u64, requests: u64) -> BucketMetrics {
+        BucketMetrics {
+            bucket,
+            batches,
+            requests,
+            padded_slots: batches * bucket as u64 - requests,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fill_fraction_math() {
+        let b = bucket(8, 4, 24);
+        assert_eq!(b.fill_fraction(), 0.75);
+        assert_eq!(b.padded_slots, 8);
+        assert_eq!(BucketMetrics::default().fill_fraction(), 0.0);
+    }
+
+    #[test]
+    fn bucket_rollup_merges_across_shards() {
+        let mut m = ServeMetrics::default();
+        m.shards.push(ShardMetrics {
+            shard: 0,
+            buckets: vec![bucket(4, 2, 7), bucket(32, 1, 30)],
+            plans: RegistryStats {
+                hits: 2,
+                misses: 2,
+                evictions: 0,
+            },
+            ..Default::default()
+        });
+        m.shards.push(ShardMetrics {
+            shard: 1,
+            buckets: vec![bucket(4, 3, 10)],
+            plans: RegistryStats {
+                hits: 3,
+                misses: 1,
+                evictions: 1,
+            },
+            ..Default::default()
+        });
+        let rollup = m.bucket_rollup();
+        assert_eq!(rollup.len(), 2);
+        assert_eq!(rollup[0].bucket, 4);
+        assert_eq!((rollup[0].batches, rollup[0].requests), (5, 17));
+        assert_eq!(rollup[1].bucket, 32);
+        assert_eq!(m.padded_slots(), 1 + 2 + 2);
+        let plans = m.plan_stats();
+        assert_eq!((plans.hits, plans.misses, plans.evictions), (5, 3, 1));
+        let report = m.report();
+        assert!(report.contains("bucket b=4"), "{report}");
+        assert!(report.contains("evictions"), "{report}");
     }
 }

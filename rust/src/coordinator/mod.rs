@@ -10,7 +10,9 @@
 //! step replays fixed offsets in one [`HostArena`]
 //! (crate::alloc::arena::HostArena) — O(1) per request, zero allocation on
 //! the hot path. The serving path ([`serve`]) shards this across N
-//! workers, each with its own runtime and hot replay plan.
+//! workers, each with its own runtime and a registry of per-batch-bucket
+//! replay plans ([`staging::StagingRegistry`]): batches route to the
+//! smallest covering bucket instead of padding to `max_batch`.
 
 pub mod metrics;
 pub mod queue;

@@ -1,26 +1,34 @@
-//! Sharded batched inference serving over the `predict_b{B}` artifact.
+//! Sharded, bucket-routed batched inference serving over the
+//! `predict_b{B}` artifacts.
 //!
 //! The serving path scales across cores by running N *shard workers*.
 //! Each shard owns its own PJRT runtime (PJRT handles are not `Send`, so
-//! every runtime is created inside its worker thread), its own copy of
+//! every runtime is created inside its worker thread), a borrowed view of
 //! the model parameters, and — crucially — its own
-//! [`StagingPlanner`](super::staging::StagingPlanner) replay plan: after
-//! a shard's first batch, every subsequent batch on that shard stages
-//! through fixed O(1) offsets. Requests enter through one mpsc channel
-//! and are fanned out round-robin to the shards; each shard coalesces its
-//! stream into fixed-size padded batches (the artifact's batch dimension
-//! is static), executes, and answers every request individually. Because
-//! every batch stages the same padded buffer, the serving path is *hot*
-//! and replays in O(1) after each shard's first batch — the inference
-//! speedups of Fig 3b/3d, multiplied across workers.
+//! [`StagingRegistry`](super::staging::StagingRegistry): a registry of
+//! replay plans keyed by *batch bucket*. Requests enter through one mpsc
+//! channel and are fanned out round-robin to the shards; each shard
+//! coalesces its stream into batches and routes every batch to the
+//! **smallest covering bucket** of the configured ladder (falling back to
+//! the largest bucket for oversized batches) instead of padding to
+//! `max_batch`. The matching `predict_b{B}` artifact executes the batch,
+//! and the bucket's own plan stages it — the first batch per bucket
+//! profiles, every later one replays in O(1). Cold bucket plans are
+//! LRU-evicted under [`ServeConfig::plan_budget_bytes`]. The result is
+//! the paper's inference replay speedups (Fig 3b/3d) multiplied across
+//! workers, minus the padding waste the single-plan server paid on every
+//! small batch.
 
-use super::metrics::{ServeMetrics, ShardMetrics};
-use super::staging::StagingPlanner;
+use super::metrics::{BucketMetrics, ServeMetrics, ShardMetrics};
+use super::staging::StagingRegistry;
+use crate::alloc::AllocStats;
+use crate::plan::registry::RegistryConfig;
 use crate::runtime::buffers::{literal_f32, to_f32};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg32;
 use crate::util::stats::Summary;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread;
@@ -41,14 +49,23 @@ pub struct Response {
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Static batch dimension of the compiled artifact.
+    /// Largest compiled batch dimension (the ladder's fallback bucket).
     pub max_batch: usize,
     /// How long to wait for more requests before dispatching a partial
     /// batch.
     pub batch_window: Duration,
-    /// Number of shard workers. Each shard owns one runtime and one
-    /// replay plan; requests are fanned out round-robin.
+    /// Number of shard workers. Each shard owns one runtime and one plan
+    /// registry; requests are fanned out round-robin.
     pub shards: usize,
+    /// Batch-bucket ladder for the per-shard plan registry: a batch is
+    /// padded to the smallest covering bucket instead of to `max_batch`.
+    /// Entries above `max_batch` are dropped; `max_batch` itself is
+    /// always a bucket. Buckets without a compiled `predict_b{B}`
+    /// artifact are skipped at runtime.
+    pub bucket_ladder: Vec<usize>,
+    /// Total host staging arena budget per shard registry; least recently
+    /// used bucket plans are evicted beyond it. `u64::MAX` = unlimited.
+    pub plan_budget_bytes: u64,
 }
 
 impl Default for ServeConfig {
@@ -57,7 +74,31 @@ impl Default for ServeConfig {
             max_batch: 32,
             batch_window: Duration::from_millis(2),
             shards: 2,
+            bucket_ladder: crate::plan::registry::DEFAULT_LADDER
+                .iter()
+                .map(|&b| b as usize)
+                .collect(),
+            plan_budget_bytes: u64::MAX,
         }
+    }
+}
+
+impl ServeConfig {
+    /// The normalized ladder: clamped to `max_batch` and always
+    /// containing `max_batch` as the fallback; sorting/dedup/zero-drop
+    /// are owned by [`RegistryConfig::new`] so the routing rule lives in
+    /// exactly one place.
+    pub fn ladder(&self) -> Vec<u32> {
+        let max = self.max_batch.max(1);
+        let mut l: Vec<u32> = self
+            .bucket_ladder
+            .iter()
+            .copied()
+            .filter(|&b| b <= max)
+            .map(|b| b as u32)
+            .collect();
+        l.push(max as u32);
+        RegistryConfig::new(&l).buckets().to_vec()
     }
 }
 
@@ -132,7 +173,7 @@ impl InferenceServer {
     }
 
     /// Serve until the request channel closes; returns merged metrics
-    /// with a per-shard breakdown.
+    /// with per-shard and per-bucket breakdowns.
     pub fn run(&mut self, rx: mpsc::Receiver<Request>) -> Result<ServeMetrics> {
         let n = self.cfg.shards.max(1);
         let start = Instant::now();
@@ -218,18 +259,20 @@ struct ShardOutcome {
     batch_sizes: Summary,
 }
 
-/// One executor loop: owns a runtime and a hot replay plan for its
-/// staging buffers; model parameters are borrowed from the server
-/// (read-only, shared across shards).
+/// One executor loop: owns a runtime and a registry of per-bucket replay
+/// plans for its staging buffers; model parameters are borrowed from the
+/// server (read-only, shared across shards).
 struct ShardWorker<'a> {
     shard: usize,
     runtime: Runtime,
-    entry_name: String,
     params: &'a [Vec<f32>],
     param_dims: &'a [Vec<usize>],
     input_dim: usize,
     classes: usize,
-    staging: StagingPlanner,
+    staging: StagingRegistry,
+    /// Precomputed `predict_b{B}` artifact name per executable bucket —
+    /// keeps the per-batch dispatch allocation-free.
+    entry_names: BTreeMap<u32, String>,
     cfg: ServeConfig,
 }
 
@@ -248,15 +291,34 @@ impl<'a> ShardWorker<'a> {
         runtime
             .load_artifacts(dir)
             .with_context(|| format!("shard {shard}: loading artifacts"))?;
+        // The usable ladder: configured buckets with a compiled
+        // `predict_b{B}` artifact to execute them.
+        let buckets: Vec<u32> = {
+            let names = runtime.names();
+            cfg.ladder()
+                .into_iter()
+                .filter(|b| names.contains(&format!("predict_b{b}").as_str()))
+                .collect()
+        };
+        anyhow::ensure!(
+            !buckets.is_empty(),
+            "shard {shard}: no compiled predict_b{{B}} artifact matches bucket ladder {:?}",
+            cfg.ladder()
+        );
+        let registry_cfg = RegistryConfig::new(&buckets).with_budget(cfg.plan_budget_bytes);
+        let entry_names = buckets
+            .iter()
+            .map(|&b| (b, format!("predict_b{b}")))
+            .collect();
         Ok(ShardWorker {
             shard,
             runtime,
-            entry_name: format!("predict_b{}", cfg.max_batch),
             params,
             param_dims,
             input_dim,
             classes,
-            staging: StagingPlanner::new("mlp", &format!("serving-s{shard}")),
+            staging: StagingRegistry::new("mlp", &format!("serving-s{shard}"), registry_cfg),
+            entry_names,
             cfg,
         })
     }
@@ -266,6 +328,9 @@ impl<'a> ShardWorker<'a> {
         let mut batches = 0u64;
         let mut latency_ms = Summary::new();
         let mut batch_sizes = Summary::new();
+        let mut per_bucket: BTreeMap<u32, BucketMetrics> = BTreeMap::new();
+        // Coalesce up to the largest executable bucket.
+        let cap = *self.staging.ladder().last().expect("non-empty ladder") as usize;
 
         loop {
             // Block for the first request of the batch.
@@ -275,7 +340,7 @@ impl<'a> ShardWorker<'a> {
             };
             let mut batch = vec![first];
             let window_end = Instant::now() + self.cfg.batch_window;
-            while batch.len() < self.cfg.max_batch {
+            while batch.len() < cap {
                 let now = Instant::now();
                 if now >= window_end {
                     break;
@@ -290,30 +355,56 @@ impl<'a> ShardWorker<'a> {
             batch_sizes.add(batch.len() as f64);
             requests += batch.len() as u64;
             batches += 1;
-            self.execute_batch(&mut batch, &mut latency_ms)?;
+            self.execute_batch(&mut batch, &mut latency_ms, &mut per_bucket)?;
         }
 
+        let mut staging_total = AllocStats::default();
+        for m in per_bucket.values() {
+            staging_total.absorb(&m.staging);
+        }
         Ok(ShardOutcome {
             metrics: ShardMetrics {
                 shard: self.shard,
                 requests,
                 batches,
-                staging: self.staging.stats(),
-                arena_bytes: self.staging.arena_bytes(),
+                staging: staging_total,
+                arena_bytes: self.staging.held_bytes() as usize,
+                buckets: per_bucket.into_values().collect(),
+                plans: self.staging.stats(),
             },
             latency_ms,
             batch_sizes,
         })
     }
 
-    fn execute_batch(&mut self, batch: &mut Vec<Request>, latency_ms: &mut Summary) -> Result<()> {
-        let b = self.cfg.max_batch;
+    fn execute_batch(
+        &mut self,
+        batch: &mut Vec<Request>,
+        latency_ms: &mut Summary,
+        per_bucket: &mut BTreeMap<u32, BucketMetrics>,
+    ) -> Result<()> {
+        let n = batch.len();
         let d = self.input_dim;
-        self.staging.begin_iteration();
+        // The routing rule: smallest covering bucket (the registry falls
+        // back to the largest bucket for oversized batches, but `run`
+        // already caps coalescing at the largest bucket).
+        let bucket = self.staging.bucket_for(n as u32);
+        let slots = bucket as usize;
+        let entry_name = self
+            .entry_names
+            .get(&bucket)
+            .expect("routing only targets executable buckets");
 
-        // Stage the padded input batch (constant shape ⇒ hot ⇒ replayed).
-        let x_buf = self.staging.alloc(b * d * 4);
-        let mut flat = vec![0f32; b * d];
+        // One registry lookup per batch: a miss creates the bucket's plan
+        // (its first iteration profiles), a hit replays the hot plan.
+        let planner = self.staging.planner(bucket);
+        let before = planner.stats();
+        planner.begin_iteration();
+
+        // Stage the bucket-padded input batch (constant shape per bucket
+        // ⇒ hot ⇒ replayed).
+        let x_buf = planner.alloc(slots * d * 4);
+        let mut flat = vec![0f32; slots * d];
         for (i, req) in batch.iter().enumerate() {
             anyhow::ensure!(
                 req.x.len() == d,
@@ -322,20 +413,20 @@ impl<'a> ShardWorker<'a> {
             );
             flat[i * d..(i + 1) * d].copy_from_slice(&req.x);
         }
-        self.staging.write_f32(&x_buf, &flat);
+        planner.write_f32(&x_buf, &flat);
 
         let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
         for (p, dims) in self.params.iter().zip(self.param_dims.iter()) {
             inputs.push(literal_f32(p, dims)?);
         }
-        inputs.push(literal_f32(&self.staging.read_f32(&x_buf, b * d), &[b, d])?);
+        inputs.push(literal_f32(&planner.read_f32(&x_buf, slots * d), &[slots, d])?);
 
-        let outputs = self.runtime.entry(&self.entry_name)?.execute(&inputs)?;
+        let outputs = self.runtime.entry(entry_name)?.execute(&inputs)?;
         let logits = to_f32(&outputs[0])?;
 
         // Stage the readback, reply per request.
-        let out_buf = self.staging.alloc(b * self.classes * 4);
-        self.staging.write_f32(&out_buf, &logits);
+        let out_buf = planner.alloc(slots * self.classes * 4);
+        planner.write_f32(&out_buf, &logits);
         let now = Instant::now();
         for (i, req) in batch.drain(..).enumerate() {
             let latency = now - req.created;
@@ -346,9 +437,30 @@ impl<'a> ShardWorker<'a> {
             });
         }
 
-        self.staging.free(out_buf);
-        self.staging.free(x_buf);
-        self.staging.end_iteration();
+        planner.free(out_buf);
+        planner.free(x_buf);
+        planner.end_iteration();
+        let delta = planner.stats().since(&before);
+        let arena_bytes = planner.arena_bytes();
+
+        // Budget enforcement may drop cold bucket plans; their counters
+        // already live in `per_bucket` — only the residency reporting of
+        // an evicted bucket goes to zero.
+        for evicted in self.staging.enforce_budget() {
+            if let Some(cold) = per_bucket.get_mut(&evicted) {
+                cold.arena_bytes = 0;
+            }
+        }
+
+        let m = per_bucket.entry(bucket).or_insert_with(|| BucketMetrics {
+            bucket,
+            ..BucketMetrics::default()
+        });
+        m.batches += 1;
+        m.requests += n as u64;
+        m.padded_slots += (slots - n) as u64;
+        m.staging.absorb(&delta);
+        m.arena_bytes = arena_bytes;
         Ok(())
     }
 }

@@ -15,7 +15,8 @@
 
 use crate::alloc::arena::align_up;
 use crate::alloc::AllocStats;
-use crate::plan::{HostBackend, ReplayEngine};
+use crate::plan::registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
+use crate::plan::{HostBackend, MemoryBackend, ReplayEngine};
 
 /// A staged host buffer handle.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -166,6 +167,84 @@ impl StagingPlanner {
     }
 }
 
+impl PlanFootprint for StagingPlanner {
+    fn plan_bytes(&self) -> u64 {
+        self.engine.backend().held_bytes()
+    }
+}
+
+/// A registry-managed family of [`StagingPlanner`]s, one per batch
+/// bucket — the serving integration of
+/// [`PlanRegistry`](crate::plan::PlanRegistry).
+///
+/// [`planner`](StagingRegistry::planner) is one registry lookup: a miss
+/// creates the bucket's planner (whose first iteration profiles, per the
+/// engine's normal lifecycle), a hit returns the resident hot plan.
+/// [`enforce_budget`](StagingRegistry::enforce_budget) LRU-evicts bucket
+/// plans once the total resident arena bytes exceed the configured
+/// budget; dropping a `StagingPlanner` frees its host arena and heap
+/// buffers, so evicted plans need no further release step.
+#[derive(Debug)]
+pub struct StagingRegistry {
+    model: String,
+    phase: String,
+    registry: PlanRegistry<StagingPlanner>,
+}
+
+impl StagingRegistry {
+    pub fn new(model: &str, phase: &str, cfg: RegistryConfig) -> StagingRegistry {
+        StagingRegistry {
+            model: model.to_string(),
+            phase: phase.to_string(),
+            registry: PlanRegistry::new(cfg),
+        }
+    }
+
+    /// The normalized bucket ladder, ascending.
+    pub fn ladder(&self) -> &[u32] {
+        self.registry.ladder()
+    }
+
+    /// Smallest bucket covering `batch`; the largest bucket when
+    /// `batch` is oversized.
+    pub fn bucket_for(&self, batch: u32) -> u32 {
+        self.registry.bucket_for(batch)
+    }
+
+    /// The bucket's planner, created lazily on first use. Counts one
+    /// registry hit or miss.
+    pub fn planner(&mut self, bucket: u32) -> &mut StagingPlanner {
+        let key = PlanKey::new(&self.model, &self.phase, bucket);
+        self.registry.get_or_insert_with(&key, |k| {
+            StagingPlanner::new(&k.model, &format!("{}-b{}", k.phase, k.batch_bucket))
+        })
+    }
+
+    /// LRU-evict bucket plans beyond the byte budget; returns the evicted
+    /// buckets so callers can zero any per-bucket residency reporting.
+    pub fn enforce_budget(&mut self) -> Vec<u32> {
+        self.registry
+            .evict_over_budget()
+            .into_iter()
+            .map(|(k, _)| k.batch_bucket)
+            .collect()
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        self.registry.stats()
+    }
+
+    /// Total bytes held across resident bucket plans (arenas + any live
+    /// heap escapes).
+    pub fn held_bytes(&self) -> u64 {
+        self.registry.held_bytes()
+    }
+
+    pub fn resident_plans(&self) -> usize {
+        self.registry.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +376,54 @@ mod tests {
         s.end_iteration();
         assert_eq!(s.stats().reopts, 1);
         assert_eq!(s.arena_bytes(), 2048, "new plan covers both live");
+    }
+
+    // ----- registry-managed staging plans -----------------------------------
+
+    fn one_registry_iteration(r: &mut StagingRegistry, bucket: u32, bytes: usize) -> bool {
+        let p = r.planner(bucket);
+        p.begin_iteration();
+        let buf = p.alloc(bytes);
+        let replayed = buf.is_replayed();
+        p.free(buf);
+        p.end_iteration();
+        replayed
+    }
+
+    #[test]
+    fn registry_routes_buckets_and_replays_per_bucket() {
+        let mut r = StagingRegistry::new("m", "serve", RegistryConfig::new(&[1, 4, 8]));
+        assert_eq!(r.bucket_for(1), 1);
+        assert_eq!(r.bucket_for(3), 4);
+        assert_eq!(r.bucket_for(9), 8, "oversized → largest bucket");
+        for round in 0..2 {
+            for &b in &[1u32, 4, 8] {
+                let replayed = one_registry_iteration(&mut r, b, b as usize * 256);
+                assert_eq!(replayed, round > 0, "bucket {b} round {round}");
+            }
+        }
+        assert_eq!(r.resident_plans(), 3);
+        let st = r.stats();
+        assert_eq!((st.misses, st.hits, st.evictions), (3, 3, 0));
+        // Buckets keep distinct arenas sized to their own shape.
+        assert_eq!(r.planner(1).arena_bytes(), 256);
+        assert_eq!(r.planner(8).arena_bytes(), 2048);
+    }
+
+    #[test]
+    fn registry_evicts_lru_beyond_budget() {
+        // Budget fits one ~1 KiB arena: cold bucket plans must go.
+        let mut r =
+            StagingRegistry::new("m", "serve", RegistryConfig::new(&[1, 2, 4]).with_budget(1024));
+        for &b in &[1u32, 2, 4] {
+            one_registry_iteration(&mut r, b, 1024);
+            r.enforce_budget();
+        }
+        assert_eq!(r.resident_plans(), 1, "only the most recent plan fits");
+        assert_eq!(r.stats().evictions, 2);
+        assert!(r.held_bytes() <= 1024);
+        // A re-requested bucket is rebuilt lazily: a miss, profiling again.
+        assert!(!r.planner(1).is_replaying());
+        assert_eq!(r.stats().misses, 4);
     }
 }

@@ -28,6 +28,18 @@
 //! * [`coordinator::staging::StagingPlanner`] — host staging buffers on
 //!   the *real* PJRT execution path ([`plan::HostBackend`]).
 //!
+//! One engine covers one computation shape. The [`plan::registry`] layer
+//! scales the mechanism to a *family* of shapes:
+//! [`plan::PlanRegistry`] owns many plans keyed by
+//! [`plan::PlanKey`] `{ model, phase, batch_bucket }`, quantizes batch
+//! sizes onto a configurable bucket ladder (smallest covering bucket;
+//! largest bucket for oversized batches), builds plans lazily on first
+//! use, LRU-evicts under a total-arena-bytes budget, and reports
+//! hit/miss/evict counters. The serving path instantiates it as
+//! [`coordinator::staging::StagingRegistry`] — one bucketed plan
+//! registry per shard, so small request batches stop paying
+//! `max_batch` padding.
+//!
 //! Around that core the crate ships the complete substrate the paper's
 //! evaluation needs: Chainer/CuPy-style pool and network-wise baseline
 //! allocators ([`alloc`]), a simulated 16-GiB GPU with a
@@ -37,8 +49,8 @@
 //! the execution simulator ([`sim`]), a PJRT runtime that executes
 //! AOT-lowered JAX/Pallas artifacts ([`runtime`]), and the
 //! training/serving coordinator ([`coordinator`]) whose serving path is
-//! sharded across N workers — one runtime + one hot replay plan per
-//! shard ([`coordinator::serve`]).
+//! sharded across N workers — one runtime + one bucket-routed plan
+//! registry per shard ([`coordinator::serve`]).
 //!
 //! ## Quickstart
 //!

@@ -6,7 +6,8 @@
 //! pgmo trace --model alexnet --phase inference --batch 1 --out t.json
 //! pgmo solve --trace t.json [--exact] [--policy largest-size]
 //! pgmo train [--steps 200] [--batch 32] [--artifacts artifacts/]
-//! pgmo serve [--requests 256] [--artifacts artifacts/]
+//! pgmo serve [--requests 256] [--shards 2] [--buckets 1,4,8,16,32]
+//!            [--plan-budget 64MiB] [--artifacts artifacts/]
 //! ```
 
 use anyhow::{Context, Result};
@@ -335,7 +336,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("pgmo serve", "serve batched inference via PJRT")
         .opt_default("requests", "256", "number of synthetic requests")
         .opt_default("producers", "4", "load-generator threads")
-        .opt_default("shards", "2", "executor shards (each owns a runtime + replay plan)")
+        .opt_default("shards", "2", "executor shards (each owns a runtime + plan registry)")
+        .opt_default("max-batch", "32", "largest compiled batch dimension")
+        .opt_default("buckets", "1,4,8,16,32", "batch-bucket ladder for the plan registry")
+        .opt_default(
+            "plan-budget",
+            "unlimited",
+            "staging arena byte budget per shard registry (e.g. 64MiB); LRU-evicts beyond it",
+        )
         .opt_default("artifacts", "artifacts", "artifact directory");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.help_text());
@@ -346,8 +354,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let n_requests: usize = a.get_or("requests", 256usize)?;
     let producers: usize = a.get_or("producers", 4usize)?;
 
+    let plan_budget_bytes = match a.require("plan-budget")? {
+        "unlimited" | "none" => u64::MAX,
+        raw => pgmo::util::humansize::parse_bytes(raw).with_context(|| {
+            format!("--plan-budget: cannot parse {raw:?} (want e.g. 64MiB or 'unlimited')")
+        })?,
+    };
     let cfg = ServeConfig {
         shards: a.get_or("shards", 2usize)?,
+        max_batch: a.get_or("max-batch", 32usize)?,
+        bucket_ladder: a.get_csv::<usize>("buckets")?,
+        plan_budget_bytes,
         ..ServeConfig::default()
     };
     let mut server = InferenceServer::new(&dir, 11, cfg)?;

@@ -22,9 +22,17 @@
 //! `ReplayEngine<HostBackend>` respectively — their semantics are
 //! identical by construction, which `tests/properties.rs` asserts over
 //! random traces.
+//!
+//! One engine covers one computation shape; [`registry`] scales the
+//! mechanism to a *family* of shapes: [`PlanRegistry`] owns many plans
+//! keyed by [`PlanKey`] `{ model, phase, batch_bucket }`, quantizes batch
+//! sizes onto a bucket ladder, builds plans lazily on first use, and
+//! LRU-evicts under a total-arena-bytes budget.
 
 pub mod backend;
 pub mod engine;
+pub mod registry;
 
 pub use backend::{DeviceBackend, HostBackend, MemoryBackend};
 pub use engine::{Placement, ReplayEngine};
+pub use registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};

@@ -1,0 +1,395 @@
+//! The multi-plan registry: many replay plans, one per computation shape.
+//!
+//! A single [`ReplayEngine`](super::ReplayEngine) assumes one fixed
+//! computation shape — the paper profiles *a* hot iteration and replays
+//! *it*. Real serving traffic is a family of shapes: request batches of
+//! size 1 and 32 issue different staging patterns, and padding everything
+//! to the largest shape wastes memory and compute linearly in the padding.
+//! The registry generalizes the mechanism to that family:
+//!
+//! * plans are keyed by [`PlanKey`] `{ model, phase, batch_bucket }`;
+//! * batch sizes are quantized onto a configurable **bucket ladder**
+//!   (e.g. 1/4/8/16/32): [`bucket_for`](PlanRegistry::bucket_for) routes a
+//!   batch to the *smallest covering bucket*, falling back to the largest
+//!   bucket when the batch is oversized;
+//! * plans are created **lazily** on first lookup
+//!   ([`get_or_insert_with`](PlanRegistry::get_or_insert_with)) — the
+//!   bucket's first iteration profiles, every later one replays in O(1);
+//! * residency is bounded by a **total-arena-bytes budget**:
+//!   [`evict_over_budget`](PlanRegistry::evict_over_budget) drops the
+//!   least recently used plans until the resident footprint fits, never
+//!   touching the most recently used plan;
+//! * per-plan hit counts and aggregate hit/miss/evict counters
+//!   ([`RegistryStats`]) quantify how well the ladder matches traffic.
+//!
+//! The registry is generic over any [`PlanFootprint`] value, so it can own
+//! bare `ReplayEngine`s as well as adapters like
+//! [`StagingPlanner`](crate::coordinator::staging::StagingPlanner) (see
+//! [`StagingRegistry`](crate::coordinator::staging::StagingRegistry), the
+//! serving integration). Eviction returns the evicted plans to the caller,
+//! which decides how backend resources are released — host plans free on
+//! drop; a device plan's arena segment must be returned to its
+//! [`SimDevice`](crate::device::SimDevice) by the owner.
+
+use super::backend::MemoryBackend;
+use super::engine::ReplayEngine;
+use std::collections::HashMap;
+
+/// Identity of one plan: which model, which phase (training / serving /
+/// staging label), and which batch bucket its shape was profiled at.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlanKey {
+    pub model: String,
+    pub phase: String,
+    pub batch_bucket: u32,
+}
+
+impl PlanKey {
+    pub fn new(model: &str, phase: &str, batch_bucket: u32) -> PlanKey {
+        PlanKey {
+            model: model.to_string(),
+            phase: phase.to_string(),
+            batch_bucket,
+        }
+    }
+}
+
+impl std::fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}/b{}", self.model, self.phase, self.batch_bucket)
+    }
+}
+
+/// Bytes a resident plan pins (arena + any cached escape memory) — what
+/// the registry's byte budget meters.
+pub trait PlanFootprint {
+    fn plan_bytes(&self) -> u64;
+}
+
+impl<M: MemoryBackend> PlanFootprint for ReplayEngine<M> {
+    fn plan_bytes(&self) -> u64 {
+        self.backend().held_bytes()
+    }
+}
+
+/// The default bucket ladder: powers of two every serving deployment
+/// wants covered, capped at the paper's evaluation batch size.
+pub const DEFAULT_LADDER: [u32; 5] = [1, 4, 8, 16, 32];
+
+/// Registry knobs: the bucket ladder and the resident-bytes budget.
+#[derive(Debug, Clone)]
+pub struct RegistryConfig {
+    buckets: Vec<u32>,
+    budget_bytes: u64,
+}
+
+impl RegistryConfig {
+    /// Normalize a ladder: zero buckets dropped, sorted, deduplicated.
+    /// Panics when no positive bucket remains — a registry with no
+    /// buckets cannot route anything.
+    pub fn new(buckets: &[u32]) -> RegistryConfig {
+        let mut b: Vec<u32> = buckets.iter().copied().filter(|&x| x > 0).collect();
+        b.sort_unstable();
+        b.dedup();
+        assert!(!b.is_empty(), "bucket ladder must contain a positive bucket");
+        RegistryConfig {
+            buckets: b,
+            budget_bytes: u64::MAX,
+        }
+    }
+
+    /// Cap total resident plan bytes; least recently used plans are
+    /// evicted beyond it (`u64::MAX` = unlimited).
+    pub fn with_budget(mut self, bytes: u64) -> RegistryConfig {
+        self.budget_bytes = bytes;
+        self
+    }
+
+    pub fn buckets(&self) -> &[u32] {
+        &self.buckets
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// The serve routing rule: smallest bucket covering `batch`; the
+    /// largest bucket when `batch` is oversized (the caller pads — or
+    /// splits — against it).
+    pub fn bucket_for(&self, batch: u32) -> u32 {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .unwrap_or_else(|| *self.buckets.last().expect("non-empty ladder"))
+    }
+}
+
+impl Default for RegistryConfig {
+    fn default() -> RegistryConfig {
+        RegistryConfig::new(&DEFAULT_LADDER)
+    }
+}
+
+/// Aggregate registry counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Lookups that found a resident plan.
+    pub hits: u64,
+    /// Lookups that had to build the plan (first use, or use after
+    /// eviction).
+    pub misses: u64,
+    /// Plans dropped by budget enforcement.
+    pub evictions: u64,
+}
+
+impl RegistryStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served by a resident plan; 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups() as f64
+    }
+
+    /// Fold another registry's counters in (cross-shard aggregation).
+    pub fn absorb(&mut self, other: &RegistryStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+    }
+}
+
+#[derive(Debug)]
+struct Slot<P> {
+    plan: P,
+    /// Logical LRU clock value of the last lookup.
+    last_used: u64,
+    hits: u64,
+}
+
+/// The registry proper: an LRU-metered map from [`PlanKey`] to plan.
+#[derive(Debug)]
+pub struct PlanRegistry<P> {
+    cfg: RegistryConfig,
+    slots: HashMap<PlanKey, Slot<P>>,
+    clock: u64,
+    stats: RegistryStats,
+}
+
+impl<P: PlanFootprint> PlanRegistry<P> {
+    pub fn new(cfg: RegistryConfig) -> PlanRegistry<P> {
+        PlanRegistry {
+            cfg,
+            slots: HashMap::new(),
+            clock: 0,
+            stats: RegistryStats::default(),
+        }
+    }
+
+    /// The normalized bucket ladder, ascending.
+    pub fn ladder(&self) -> &[u32] {
+        self.cfg.buckets()
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.cfg.budget_bytes()
+    }
+
+    /// The serve routing rule (see [`RegistryConfig::bucket_for`]).
+    pub fn bucket_for(&self, batch: u32) -> u32 {
+        self.cfg.bucket_for(batch)
+    }
+
+    /// Look up the plan for `key`, building it with `make` on a miss —
+    /// lazy per-bucket construction: a fresh plan profiles its first
+    /// iteration and replays from the second.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: &PlanKey,
+        make: impl FnOnce(&PlanKey) -> P,
+    ) -> &mut P {
+        self.clock += 1;
+        let clock = self.clock;
+        if self.slots.contains_key(key) {
+            self.stats.hits += 1;
+            let slot = self.slots.get_mut(key).expect("checked resident");
+            slot.last_used = clock;
+            slot.hits += 1;
+            &mut slot.plan
+        } else {
+            self.stats.misses += 1;
+            let plan = make(key);
+            &mut self
+                .slots
+                .entry(key.clone())
+                .or_insert(Slot {
+                    plan,
+                    last_used: clock,
+                    hits: 0,
+                })
+                .plan
+        }
+    }
+
+    /// The resident plan for `key`, without touching LRU state or stats.
+    pub fn peek(&self, key: &PlanKey) -> Option<&P> {
+        self.slots.get(key).map(|s| &s.plan)
+    }
+
+    /// Total bytes pinned across resident plans.
+    pub fn held_bytes(&self) -> u64 {
+        self.slots.values().map(|s| s.plan.plan_bytes()).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        self.stats
+    }
+
+    /// Per-plan replay-lookup hit counts, sorted by key (diagnostics).
+    pub fn per_plan_hits(&self) -> Vec<(PlanKey, u64)> {
+        let mut v: Vec<(PlanKey, u64)> = self
+            .slots
+            .iter()
+            .map(|(k, s)| (k.clone(), s.hits))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Enforce the byte budget: evict least-recently-used plans until the
+    /// resident footprint fits. The most recently used plan is never
+    /// evicted (a budget smaller than the active plan must not kill the
+    /// plan currently serving). Evicted plans are returned so the caller
+    /// can release backend resources that do not free on drop.
+    pub fn evict_over_budget(&mut self) -> Vec<(PlanKey, P)> {
+        let mut evicted = Vec::new();
+        while self.slots.len() > 1 && self.held_bytes() > self.cfg.budget_bytes() {
+            let victim = self
+                .slots
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty");
+            let slot = self.slots.remove(&victim).expect("victim resident");
+            self.stats.evictions += 1;
+            evicted.push((victim, slot.plan));
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::backend::HostBackend;
+
+    struct Toy(u64);
+
+    impl PlanFootprint for Toy {
+        fn plan_bytes(&self) -> u64 {
+            self.0
+        }
+    }
+
+    fn key(b: u32) -> PlanKey {
+        PlanKey::new("m", "serve", b)
+    }
+
+    #[test]
+    fn ladder_is_normalized_and_routes_smallest_covering() {
+        let r: PlanRegistry<Toy> = PlanRegistry::new(RegistryConfig::new(&[32, 8, 8, 0, 1]));
+        assert_eq!(r.ladder(), &[1, 8, 32][..]);
+        assert_eq!(r.bucket_for(0), 1);
+        assert_eq!(r.bucket_for(1), 1);
+        assert_eq!(r.bucket_for(2), 8);
+        assert_eq!(r.bucket_for(8), 8);
+        assert_eq!(r.bucket_for(9), 32);
+        assert_eq!(r.bucket_for(64), 32, "oversized falls back to the largest bucket");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive bucket")]
+    fn empty_ladder_is_rejected() {
+        let _ = RegistryConfig::new(&[0, 0]);
+    }
+
+    #[test]
+    fn lookup_counts_misses_then_hits() {
+        let mut r = PlanRegistry::new(RegistryConfig::default());
+        for _ in 0..3 {
+            r.get_or_insert_with(&key(4), |_| Toy(10));
+        }
+        r.get_or_insert_with(&key(8), |_| Toy(10));
+        let st = r.stats();
+        assert_eq!((st.misses, st.hits, st.evictions), (2, 2, 0));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.held_bytes(), 20);
+        assert_eq!(r.per_plan_hits(), vec![(key(4), 2), (key(8), 0)]);
+    }
+
+    #[test]
+    fn lru_eviction_spares_the_most_recent_plan() {
+        let mut r = PlanRegistry::new(RegistryConfig::new(&[1, 2, 4]).with_budget(25));
+        r.get_or_insert_with(&key(1), |_| Toy(10));
+        r.get_or_insert_with(&key(2), |_| Toy(10));
+        r.get_or_insert_with(&key(1), |_| unreachable!("resident: must be a hit"));
+        r.get_or_insert_with(&key(4), |_| Toy(10));
+        // 30 bytes > 25: bucket 2 is the least recently used.
+        let evicted = r.evict_over_budget();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].0, key(2));
+        assert_eq!(r.stats().evictions, 1);
+        assert!(r.peek(&key(1)).is_some() && r.peek(&key(4)).is_some());
+        assert!(r.evict_over_budget().is_empty(), "within budget now");
+    }
+
+    #[test]
+    fn over_budget_single_plan_is_never_evicted() {
+        let mut r = PlanRegistry::new(RegistryConfig::new(&[1]).with_budget(1));
+        r.get_or_insert_with(&key(1), |_| Toy(1000));
+        assert!(r.evict_over_budget().is_empty(), "the sole plan must survive");
+        assert_eq!(r.stats().evictions, 0);
+    }
+
+    #[test]
+    fn unlimited_budget_never_evicts() {
+        let mut r = PlanRegistry::new(RegistryConfig::new(&[1, 2]));
+        r.get_or_insert_with(&key(1), |_| Toy(u64::MAX / 4));
+        r.get_or_insert_with(&key(2), |_| Toy(u64::MAX / 4));
+        assert!(r.evict_over_budget().is_empty());
+    }
+
+    #[test]
+    fn registry_manages_replay_engines() {
+        let mut r = PlanRegistry::new(RegistryConfig::new(&[1, 4]));
+        for _ in 0..2 {
+            for b in [1u32, 4] {
+                let k = PlanKey::new("m", "t", b);
+                let e = r.get_or_insert_with(&k, |k| {
+                    ReplayEngine::new(HostBackend::new(), &k.model, &k.phase, k.batch_bucket)
+                });
+                e.begin_iteration();
+                let p = e.alloc(&mut (), 1024 * b as u64).unwrap();
+                e.free(&mut (), p.addr, 1024 * b as u64);
+                e.end_iteration(&mut ()).unwrap();
+            }
+        }
+        assert!(r.held_bytes() >= 1024 + 4096, "both arenas resident");
+        assert_eq!(r.stats().hits, 2);
+        assert_eq!(r.stats().misses, 2);
+    }
+}

@@ -205,6 +205,31 @@ impl Args {
         Ok(self.get_parsed(name)?.unwrap_or(fallback))
     }
 
+    /// Parse a comma-separated option value into a typed list (e.g.
+    /// `--buckets 1,4,8,16,32`). A missing option yields an empty list;
+    /// empty items between commas are skipped.
+    pub fn get_csv<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let Some(raw) = self.get(name) else {
+            return Ok(Vec::new());
+        };
+        let mut out = Vec::new();
+        for part in raw.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            out.push(p.parse::<T>().map_err(|e| CliError::BadValue {
+                key: name.to_string(),
+                value: raw.to_string(),
+                why: e.to_string(),
+            })?);
+        }
+        Ok(out)
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -256,6 +281,22 @@ mod tests {
         let a = cmd().parse(&argv(&["--batch", "abc"])).unwrap();
         assert!(matches!(
             a.get_parsed::<u32>("batch"),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn csv_lists() {
+        let c = Command::new("t", "t").opt("buckets", "ladder");
+        let a = c.parse(&argv(&["--buckets", "1, 4,8,,16"])).unwrap();
+        assert_eq!(a.get_csv::<u32>("buckets").unwrap(), vec![1, 4, 8, 16]);
+        assert!(matches!(
+            a.get_csv::<u32>("missing"),
+            Ok(v) if v.is_empty()
+        ));
+        let bad = c.parse(&argv(&["--buckets", "1,x"])).unwrap();
+        assert!(matches!(
+            bad.get_csv::<u32>("buckets"),
             Err(CliError::BadValue { .. })
         ));
     }

@@ -5,6 +5,7 @@
 use pgmo::coordinator::serve::{InferenceServer, Request, ServeConfig};
 use pgmo::coordinator::{TrainConfig, TrainingCoordinator};
 use std::path::PathBuf;
+use std::time::Duration;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -119,6 +120,108 @@ fn serving_answers_every_request_with_correct_shape() {
     }
     let s = server.staging_stats();
     assert!(s.fast_path > 0, "serving staging must replay");
+}
+
+/// Satellite acceptance: a mixed 1..=max_batch request stream must route
+/// through the per-bucket plan registry — smallest covering bucket, no
+/// padding waste beyond bucket size, and a warm registry (hit rate > 0).
+#[test]
+fn serving_mixed_batches_route_through_bucketed_plans() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Which buckets actually have a compiled predict artifact?
+    let compiled: Vec<u32> = {
+        let mut rt = pgmo::runtime::Runtime::cpu().unwrap();
+        rt.load_artifacts(&dir).unwrap();
+        rt.names()
+            .iter()
+            .filter_map(|n| n.strip_prefix("predict_b").and_then(|b| b.parse().ok()))
+            .collect()
+    };
+    let cfg = ServeConfig {
+        shards: 1, // deterministic routing: every batch hits one registry
+        batch_window: Duration::from_millis(25),
+        ..ServeConfig::default()
+    };
+    let available: Vec<u32> = cfg
+        .ladder()
+        .into_iter()
+        .filter(|b| compiled.contains(b))
+        .collect();
+    let mut server = InferenceServer::new(&dir, 5, cfg).unwrap();
+    let dim = server.input_dim();
+
+    let (tx, rx) = std::sync::mpsc::channel::<Request>();
+    let driver = std::thread::spawn(move || {
+        // Mixed burst sizes covering every default bucket, repeated so
+        // each bucket is revisited (first batch profiles, later ones
+        // replay). Each burst is closed-loop: all replies are awaited
+        // before the next burst, so bursts form separate batches.
+        let pattern = [1usize, 3, 7, 13, 32, 2, 8, 16, 1, 5, 27, 4];
+        let mut total = 0u64;
+        for _round in 0..3 {
+            for &burst in &pattern {
+                let mut replies = Vec::with_capacity(burst);
+                for j in 0..burst {
+                    let (rtx, rrx) = std::sync::mpsc::channel();
+                    tx.send(Request {
+                        x: vec![j as f32 / 32.0; dim],
+                        created: std::time::Instant::now(),
+                        reply: rtx,
+                    })
+                    .unwrap();
+                    replies.push(rrx);
+                }
+                for r in replies {
+                    let resp = r.recv().expect("every request answered");
+                    assert_eq!(resp.logits.len(), 10);
+                    assert!(resp.logits.iter().all(|v| v.is_finite()));
+                }
+                total += burst as u64;
+            }
+        }
+        total
+    });
+    let metrics = server.run(rx).unwrap();
+    let total = driver.join().unwrap();
+    assert_eq!(metrics.requests, total);
+
+    let shard = &metrics.shards[0];
+    let used: Vec<_> = shard.buckets.iter().filter(|b| b.batches > 0).collect();
+    assert!(
+        used.len() >= available.len().min(3),
+        "mixed stream must spread over ≥ 3 bucket plans: used {:?} of available {available:?}",
+        used.iter().map(|b| b.bucket).collect::<Vec<_>>()
+    );
+    for b in &used {
+        // Smallest-covering routing: a batch in bucket B carries more
+        // requests than the next smaller bucket holds...
+        let prev = available
+            .iter()
+            .copied()
+            .filter(|&x| x < b.bucket)
+            .max()
+            .unwrap_or(0) as u64;
+        assert!(
+            b.requests > b.batches * prev,
+            "bucket {}: {} reqs in {} batches would fit bucket {prev}",
+            b.bucket,
+            b.requests,
+            b.batches
+        );
+        // ...and padding waste stays below the bucket size per batch.
+        assert!(
+            b.padded_slots < b.batches * b.bucket as u64,
+            "bucket {}: padded {} slots over {} batches",
+            b.bucket,
+            b.padded_slots,
+            b.batches
+        );
+    }
+    // Registry hit rate > 0 after warmup: every bucket is revisited.
+    assert!(shard.plans.hits > 0, "registry never warmed: {:?}", shard.plans);
+    assert!(metrics.plan_stats().hit_rate() > 0.0);
+    // Replay engaged on revisited buckets.
+    assert!(shard.staging.fast_path > 0, "bucket plans must replay");
 }
 
 #[test]

@@ -5,9 +5,12 @@ use pgmo::alloc::profile_guided::ProfileGuidedAllocator;
 use pgmo::alloc::{AllocStats, DeviceAllocator};
 use pgmo::device::SimDevice;
 use pgmo::dsa::problem::DsaInstance;
+use pgmo::dsa::skyline::Skyline;
 use pgmo::dsa::{bestfit, exact, firstfit};
 use pgmo::plan::{DeviceBackend, HostBackend, MemoryBackend, ReplayEngine};
 use pgmo::testkit::{self, gen};
+use pgmo::util::rng::Pcg32;
+use std::path::PathBuf;
 use std::time::Duration;
 
 /// Random DSA instances as (size, alloc, len) triples.
@@ -26,13 +29,23 @@ fn to_instance(triples: &[(u64, u64, u64)]) -> DsaInstance {
     DsaInstance::from_triples(triples)
 }
 
-#[test]
-fn prop_bestfit_packing_is_always_sound() {
-    testkit::check("bestfit sound", 200, instance_gen(80), |t| {
+fn check_bestfit_sound(cases: usize) {
+    testkit::check("bestfit sound", cases, instance_gen(80), |t| {
         let inst = to_instance(t);
         let sol = bestfit::solve(&inst);
         sol.validate(&inst).is_ok()
     });
+}
+
+#[test]
+fn prop_bestfit_packing_is_always_sound() {
+    check_bestfit_sound(200);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases, run by the nightly `cargo test -- --ignored` job"]
+fn prop_bestfit_packing_is_always_sound_heavy() {
+    check_bestfit_sound(2000);
 }
 
 #[test]
@@ -61,6 +74,152 @@ fn prop_exact_never_worse_than_heuristic() {
         let ex = exact::solve(&inst, Duration::from_secs(5));
         ex.assignment.validate(&inst).is_ok() && ex.assignment.peak <= heur.peak
     });
+}
+
+// ----- differential solver testing ------------------------------------------
+
+/// Raw `(size, (start, len))` pairs, deliberately *not* pre-mapped into
+/// triples: `Gen::map` discards shrink candidates, so keeping the raw
+/// shape lets testkit shrink-minimize a counterexample both by removing
+/// blocks and by shrinking each block's size/start/length toward the
+/// boundary case.
+fn raw_tiny_gen(max_n: usize) -> gen::Gen<Vec<(u64, (u64, u64))>> {
+    gen::vec(
+        gen::pair(
+            gen::u64_in(1..=512),
+            gen::pair(gen::u64_in(0..=24), gen::u64_in(1..=10)),
+        ),
+        1..=max_n,
+    )
+}
+
+fn tiny_instance(raw: &[(u64, (u64, u64))]) -> DsaInstance {
+    DsaInstance::from_triples(
+        &raw.iter()
+            .map(|&(w, (a, l))| (w, a, a + l))
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Differential property over the two solvers: on instances small enough
+/// for `exact::solve`, the heuristic can never *beat* a certified optimum
+/// (`bestfit.peak ≥ exact.peak`), both packings must validate, and the
+/// optimum must respect the liveness lower bound. A violation in any
+/// direction pins a soundness bug in one of the solvers; testkit reports
+/// the shrunk-minimal counterexample with its reproduction seed.
+fn check_bestfit_vs_exact(cases: usize) {
+    testkit::check("bestfit ≥ exact (differential)", cases, raw_tiny_gen(8), |raw| {
+        let inst = tiny_instance(raw);
+        let heur = bestfit::solve(&inst);
+        let ex = exact::solve(&inst, Duration::from_secs(5));
+        heur.validate(&inst).is_ok()
+            && ex.assignment.validate(&inst).is_ok()
+            && heur.peak >= ex.assignment.peak
+            && ex.assignment.peak >= inst.lower_bound()
+    });
+}
+
+#[test]
+fn prop_bestfit_vs_exact_differential() {
+    check_bestfit_vs_exact(40);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases, run by the nightly `cargo test -- --ignored` job"]
+fn prop_bestfit_vs_exact_differential_heavy() {
+    check_bestfit_vs_exact(400);
+}
+
+// ----- skyline fuzzing with a committed regression corpus -------------------
+
+fn skyline_corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/corpus/skyline")
+}
+
+/// One deterministic fuzz episode: a random sequence of `place`/`lift`
+/// operations respecting the documented call contract (placements are
+/// lifetime-contained in their segment; lifts target the lowest-leftmost
+/// line of a multi-segment skyline, mirroring the best-fit solver), with
+/// [`Skyline::check_invariants`] verified after every mutation.
+fn skyline_episode(seed: u64, ops: usize) -> Result<(), String> {
+    let mut rng = Pcg32::seeded(seed);
+    let horizon = rng.range(2, 96);
+    let mut sky = Skyline::new(horizon);
+    for step in 0..ops {
+        if sky.len() > 1 && rng.bool(0.35) {
+            sky.lift(sky.lowest_leftmost());
+        } else {
+            let idx = rng.range_usize(0, sky.len() - 1);
+            let seg = sky.seg(idx);
+            let alloc_at = rng.range(seg.t0, seg.t1 - 1);
+            let free_at = rng.range(alloc_at + 1, seg.t1);
+            let off = sky.place(idx, alloc_at, free_at, rng.range(1, 2048));
+            if off != seg.height {
+                return Err(format!(
+                    "seed {seed} step {step}: placed at offset {off}, segment height {}",
+                    seg.height
+                ));
+            }
+        }
+        if let Err(e) = sky.check_invariants() {
+            return Err(format!("seed {seed} step {step}: {e}"));
+        }
+    }
+    Ok(())
+}
+
+/// Replays the committed regression corpus first, then runs fresh random
+/// episodes; a failing fresh seed is persisted into the corpus directory
+/// so it replays first on every future run (commit the file to pin it).
+fn run_skyline_fuzz(episodes: u64, ops: usize) {
+    let dir = skyline_corpus_dir();
+    let mut corpus: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("skyline corpus dir {dir:?} missing: {e}"))
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "seed"))
+        .collect();
+    corpus.sort();
+    assert!(
+        !corpus.is_empty(),
+        "committed skyline corpus must hold at least one seed"
+    );
+    for path in &corpus {
+        let raw = std::fs::read_to_string(path).expect("read corpus seed");
+        let seed: u64 = raw
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("corpus file {path:?} must hold one decimal seed"));
+        if let Err(e) = skyline_episode(seed, ops) {
+            panic!("skyline corpus regression {path:?}: {e}");
+        }
+    }
+
+    let base: u64 = std::env::var("PGMO_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x51c9_11fe_5eed_0001);
+    for i in 0..episodes {
+        let seed = base.wrapping_add(i);
+        if let Err(e) = skyline_episode(seed, ops) {
+            let path = dir.join(format!("fail-{seed:016x}.seed"));
+            let _ = std::fs::write(&path, format!("{seed}\n"));
+            panic!(
+                "skyline fuzz failed: {e}\nseed persisted to {path:?} — \
+                 commit it so the regression replays first"
+            );
+        }
+    }
+}
+
+#[test]
+fn skyline_fuzz_place_lift_invariants() {
+    run_skyline_fuzz(64, 120);
+}
+
+#[test]
+#[ignore = "heavy: 10× episodes, run by the nightly `cargo test -- --ignored` job"]
+fn skyline_fuzz_place_lift_invariants_heavy() {
+    run_skyline_fuzz(640, 120);
 }
 
 #[test]
@@ -99,13 +258,12 @@ fn prop_replay_addresses_stable_for_hot_patterns() {
 /// Live planned blocks never overlap, for any interleaving of allocs and
 /// frees (not just well-nested ones) and any per-iteration size jitter
 /// *below* the profiled sizes.
-#[test]
-fn prop_no_live_overlap_under_replay() {
+fn check_no_live_overlap(cases: usize) {
     let pattern = gen::vec(
         gen::pair(gen::u64_in(64..=4096), gen::bool_with(0.5)),
         2..=24,
     );
-    testkit::check("no live overlap", 100, pattern, |ops| {
+    testkit::check("no live overlap", cases, pattern, |ops| {
         let mut dev = SimDevice::new(1 << 30);
         let mut a = ProfileGuidedAllocator::new("prop", "t", 1);
         for iter in 0..3u32 {
@@ -137,6 +295,17 @@ fn prop_no_live_overlap_under_replay() {
         }
         true
     });
+}
+
+#[test]
+fn prop_no_live_overlap_under_replay() {
+    check_no_live_overlap(100);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases, run by the nightly `cargo test -- --ignored` job"]
+fn prop_no_live_overlap_under_replay_heavy() {
+    check_no_live_overlap(1000);
 }
 
 /// What one engine iteration looks like from the outside: which requests
