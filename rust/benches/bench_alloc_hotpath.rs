@@ -3,8 +3,8 @@
 //! replay path (opt), the pool (orig), and network-wise allocation, on
 //! AlexNet-training-shaped request streams.
 //!
-//! Perf target (DESIGN.md §6): replay ≤ ~20 ns/request and ≥10× faster
-//! than the pool search.
+//! Perf target (ROADMAP.md `## Perf targets`): replay ≤ ~20 ns/request
+//! and ≥10× faster than the pool search.
 //!
 //! Run: `cargo bench --bench bench_alloc_hotpath`
 

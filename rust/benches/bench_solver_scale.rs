@@ -1,0 +1,78 @@
+//! Bench: DSA solver scalability — the indexed best-fit hot path
+//! (`IndexedSkyline` + `CandidateIndex`) against the quadratic reference
+//! solver, on DNN-trace-shaped instances of 1k / 10k / 100k blocks.
+//!
+//! Since plans build lazily on the serving path, every `PlanRegistry`
+//! miss runs a full solve inside the request loop — solve latency *is*
+//! serving latency, which is why the indexed path exists.
+//!
+//! Perf targets (ROADMAP.md `## Perf targets`): indexed ≥10× faster than
+//! the reference at 10k blocks, near-linear growth 10k→100k (the
+//! reference grows quadratically and is skipped at 100k — it would take
+//! minutes, not milliseconds).
+//!
+//! Run: `cargo bench --bench bench_solver_scale`
+
+use pgmo::dsa::{bestfit, Assignment, DsaInstance};
+use pgmo::testkit::gen::large_dsa_triples;
+use std::time::Instant;
+
+/// Best-of-`reps` wall milliseconds for one solve.
+fn best_ms(reps: usize, mut f: impl FnMut() -> Assignment) -> (Assignment, f64) {
+    let mut best = f64::INFINITY;
+    let mut sol = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let s = f();
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+        sol = Some(s);
+    }
+    (sol.expect("reps > 0"), best)
+}
+
+fn main() {
+    println!(
+        "{:<10} {:>12} {:>14} {:>16} {:>9}",
+        "blocks", "peak MiB", "indexed ms", "reference ms", "speedup"
+    );
+    let mut indexed_ms_at = Vec::new();
+    for &n in &[1_000usize, 10_000, 100_000] {
+        let inst = DsaInstance::from_triples(&large_dsa_triples(n, 0xd5a_5ca1e));
+        let reps = if n <= 10_000 { 3 } else { 1 };
+        let (sol, t_indexed) = best_ms(reps, || bestfit::solve(&inst));
+        sol.validate(&inst).expect("indexed packing sound");
+        indexed_ms_at.push((n, t_indexed));
+        let peak_mib = sol.peak as f64 / (1 << 20) as f64;
+
+        if n <= 10_000 {
+            // The reference is quadratic; past 10k it stops being a
+            // comparison and starts being a coffee break.
+            let (ref_sol, t_reference) = best_ms(reps, || bestfit::solve_reference(&inst));
+            assert_eq!(sol, ref_sol, "indexed must be byte-identical to reference");
+            println!(
+                "{:<10} {:>12.1} {:>14.2} {:>16.2} {:>8.1}×",
+                n,
+                peak_mib,
+                t_indexed,
+                t_reference,
+                t_reference / t_indexed
+            );
+        } else {
+            println!(
+                "{:<10} {:>12.1} {:>14.2} {:>16} {:>9}",
+                n, peak_mib, t_indexed, "(skipped)", "-"
+            );
+        }
+    }
+
+    // Scaling shape: 10× the blocks should cost ~10× the time, not ~100×.
+    if let [.., (n_small, t_small), (n_large, t_large)] = indexed_ms_at[..] {
+        println!(
+            "indexed scaling {}k→{}k blocks: {:.1}× time for {}× blocks",
+            n_small / 1_000,
+            n_large / 1_000,
+            t_large / t_small,
+            n_large / n_small
+        );
+    }
+}

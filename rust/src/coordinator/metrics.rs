@@ -154,6 +154,13 @@ impl ServeMetrics {
                 s.staging.reopts,
                 s.arena_bytes,
             ));
+            if s.plans.builds > 0 {
+                out.push_str(&format!(
+                    ", plan-build max {:.1} µs / mean {:.1} µs",
+                    s.plans.build_ns_max as f64 / 1e3,
+                    s.plans.mean_build_ns() as f64 / 1e3,
+                ));
+            }
         }
         for b in self.bucket_rollup() {
             out.push_str(&format!(
@@ -176,6 +183,16 @@ impl ServeMetrics {
                 plans.misses,
                 plans.hit_rate() * 100.0,
                 plans.evictions,
+            ));
+        }
+        if plans.builds > 0 {
+            // The solver speedup end-to-end: how long registry misses
+            // (and reoptimizations) stalled the serving path on a solve.
+            out.push_str(&format!(
+                "\n  plan-build latency: {} solves, max {:.1} µs, mean {:.1} µs",
+                plans.builds,
+                plans.build_ns_max as f64 / 1e3,
+                plans.mean_build_ns() as f64 / 1e3,
             ));
         }
         out
@@ -274,7 +291,10 @@ mod tests {
             plans: RegistryStats {
                 hits: 2,
                 misses: 2,
-                evictions: 0,
+                builds: 2,
+                build_ns_total: 9_000,
+                build_ns_max: 6_000,
+                ..RegistryStats::default()
             },
             ..Default::default()
         });
@@ -285,6 +305,9 @@ mod tests {
                 hits: 3,
                 misses: 1,
                 evictions: 1,
+                builds: 1,
+                build_ns_total: 2_000,
+                build_ns_max: 2_000,
             },
             ..Default::default()
         });
@@ -296,8 +319,16 @@ mod tests {
         assert_eq!(m.padded_slots(), 1 + 2 + 2);
         let plans = m.plan_stats();
         assert_eq!((plans.hits, plans.misses, plans.evictions), (5, 3, 1));
+        // Plan-build latency aggregates across shards: max of maxes, mean
+        // over all recorded builds.
+        assert_eq!(plans.builds, 3);
+        assert_eq!(plans.build_ns_max, 6_000);
+        assert_eq!(plans.mean_build_ns(), (9_000 + 2_000) / 3);
         let report = m.report();
         assert!(report.contains("bucket b=4"), "{report}");
         assert!(report.contains("evictions"), "{report}");
+        assert!(report.contains("plan-build latency: 3 solves"), "{report}");
+        assert!(report.contains("max 6.0 µs"), "{report}");
+        assert!(report.contains("plan-build max"), "per-shard line: {report}");
     }
 }

@@ -399,6 +399,7 @@ impl<'a> ShardWorker<'a> {
         // (its first iteration profiles), a hit replays the hot plan.
         let planner = self.staging.planner(bucket);
         let before = planner.stats();
+        let solves_before = planner.solves();
         planner.begin_iteration();
 
         // Stage the bucket-padded input batch (constant shape per bucket
@@ -442,6 +443,14 @@ impl<'a> ShardWorker<'a> {
         planner.end_iteration();
         let delta = planner.stats().since(&before);
         let arena_bytes = planner.arena_bytes();
+        // A solve this batch means a plan was built on the serving path —
+        // a registry miss profiling its first iteration, or a deviation
+        // reoptimizing. Surface its latency through the registry stats.
+        let built = planner.solves() > solves_before;
+        let build_ns = planner.last_solve_ns();
+        if built {
+            self.staging.record_build_ns(build_ns);
+        }
 
         // Budget enforcement may drop cold bucket plans; their counters
         // already live in `per_bucket` — only the residency reporting of

@@ -79,6 +79,16 @@ impl StagingPlanner {
         self.engine.solve_ns()
     }
 
+    /// Latency of the most recent plan build (one DSA solve).
+    pub fn last_solve_ns(&self) -> u64 {
+        self.engine.last_solve_ns()
+    }
+
+    /// How many plans this planner has solved (build + reopts).
+    pub fn solves(&self) -> u64 {
+        self.engine.solves()
+    }
+
     pub fn interrupt(&mut self) {
         self.engine.interrupt();
     }
@@ -232,6 +242,12 @@ impl StagingRegistry {
 
     pub fn stats(&self) -> RegistryStats {
         self.registry.stats()
+    }
+
+    /// Record one bucket plan build's solve latency (see
+    /// [`PlanRegistry::record_build_ns`]).
+    pub fn record_build_ns(&mut self, ns: u64) {
+        self.registry.record_build_ns(ns);
     }
 
     /// Total bytes held across resident bucket plans (arenas + any live

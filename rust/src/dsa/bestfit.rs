@@ -7,10 +7,25 @@
 //!    one with the longest lifetime at that offset;
 //! 3. if no block fits, *lift* the line into its lowest adjacent line.
 //!
-//! Worst-case complexity is quadratic in the number of blocks, matching
-//! the paper; the candidate scan is pruned with an `alloc_at`-sorted
-//! index so typical traces (mostly-short lifetimes) run far faster.
+//! [`solve`]/[`solve_with`] run the indexed hot path: an
+//! [`IndexedSkyline`] makes step 1 an O(log S) ordered-set minimum and
+//! the splits/merges of steps 2–3 O(log S) amortized, while a
+//! [`CandidateIndex`] keeps the per-window unplaced blocks ordered by the
+//! policy key so step 2 is one set lookup instead of a rescan of every
+//! block in the window. Plans that build lazily on the serving path (a
+//! `PlanRegistry` miss solves inside the request loop) ride this path.
+//!
+//! [`solve_reference`]/[`solve_reference_with`] keep the original
+//! quadratic formulation — an O(S) segment scan per step over the `Vec`
+//! skyline, and a candidate loop that rescans already-placed blocks in
+//! its alloc-tick window. The two are semantically identical by
+//! construction (same chosen line, same chosen block, same offsets, byte
+//! for byte); `rust/tests/properties.rs` pins the equivalence across all
+//! policies, and `benches/bench_solver_scale.rs` pins the speedup
+//! (targets in ROADMAP.md `## Perf targets`).
 
+use super::candidates::CandidateIndex;
+use super::indexed::{Changes, IndexedSkyline};
 use super::policies::Policy;
 use super::problem::DsaInstance;
 use super::skyline::Skyline;
@@ -21,8 +36,57 @@ pub fn solve(inst: &DsaInstance) -> Assignment {
     solve_with(inst, Policy::default())
 }
 
-/// Solve with an explicit block-choice policy (ablations).
+/// Solve with an explicit block-choice policy (ablations), on the
+/// indexed hot path.
 pub fn solve_with(inst: &DsaInstance, policy: Policy) -> Assignment {
+    if inst.is_empty() {
+        return Assignment {
+            offsets: Vec::new(),
+            peak: 0,
+        };
+    }
+
+    let n = inst.len();
+    let mut offsets = vec![0u64; n];
+    let mut remaining = n;
+    let mut sky = IndexedSkyline::new(inst.horizon());
+    let mut cands = CandidateIndex::new(inst, policy);
+    let mut changes = Changes::default();
+
+    while remaining > 0 {
+        let slot = sky.lowest_leftmost();
+        let seg = sky.seg(slot);
+        // The window's candidate set mirrors the segment exactly, so the
+        // policy winner is one ordered-set lookup.
+        match cands.best(seg.t0) {
+            Some(bid) => {
+                let b = inst.blocks[bid];
+                cands.place(bid);
+                offsets[bid] = sky.place(slot, b.alloc_at, b.free_at, b.size, &mut changes);
+                remaining -= 1;
+            }
+            // No unplaced block fits the line: lift it (§3.2). A
+            // single-segment skyline always has candidates — every
+            // lifetime is contained in the full horizon — so lift never
+            // sees one.
+            None => sky.lift(slot, &mut changes),
+        }
+        cands.apply(&changes);
+    }
+
+    debug_assert!(sky.check_invariants().is_ok());
+    Assignment::from_offsets(inst, offsets)
+}
+
+/// Reference solver: the paper's default policy on the original
+/// quadratic formulation. Kept verbatim for differential testing of the
+/// indexed path and as the readable spec of §3.2.
+pub fn solve_reference(inst: &DsaInstance) -> Assignment {
+    solve_reference_with(inst, Policy::default())
+}
+
+/// Reference solver with an explicit block-choice policy.
+pub fn solve_reference_with(inst: &DsaInstance, policy: Policy) -> Assignment {
     if inst.is_empty() {
         return Assignment {
             offsets: Vec::new(),
@@ -95,6 +159,7 @@ mod tests {
     fn empty_instance() {
         let sol = solve(&DsaInstance::new(vec![]));
         assert_eq!(sol.peak, 0);
+        assert_eq!(solve_reference(&DsaInstance::new(vec![])).peak, 0);
     }
 
     #[test]
@@ -154,6 +219,7 @@ mod tests {
         let inst = DsaInstance::from_triples(&[(4, 0, 9), (2, 2, 12), (1, 0, 12)]);
         let sol = solve(&inst);
         sol.validate(&inst).unwrap();
+        assert_eq!(sol, solve_reference(&inst));
     }
 
     #[test]
@@ -173,6 +239,32 @@ mod tests {
                 .unwrap_or_else(|e| panic!("policy {}: {e}", choice.name()));
             assert!(sol.peak >= lb);
             assert!(sol.peak <= inst.total_size());
+        }
+    }
+
+    #[test]
+    fn indexed_matches_reference_on_random_instances() {
+        let mut rng = Pcg32::seeded(0xbe5f);
+        for case in 0..30 {
+            let n = rng.range_usize(1, 90);
+            let triples: Vec<(u64, u64, u64)> = (0..n)
+                .map(|_| {
+                    let a = rng.range(0, 250);
+                    (rng.range(1, 4096), a, a + rng.range(1, 60))
+                })
+                .collect();
+            let inst = DsaInstance::from_triples(&triples);
+            for choice in BlockChoice::ALL {
+                let policy = Policy { block_choice: choice };
+                let indexed = solve_with(&inst, policy);
+                let reference = solve_reference_with(&inst, policy);
+                assert_eq!(
+                    indexed,
+                    reference,
+                    "case {case}: policy {} diverged",
+                    choice.name()
+                );
+            }
         }
     }
 

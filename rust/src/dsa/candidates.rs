@@ -1,0 +1,278 @@
+//! Candidate index for the best-fit solver: per-window unplaced-block
+//! sets ordered by the active [`Policy`] key.
+//!
+//! The reference solver rescans every block whose `alloc_at` falls in the
+//! chosen line's window on *every* step — already-placed blocks included
+//! — which is where its quadratic constant lives. This index maintains
+//! the exact candidate sets instead:
+//!
+//! * time is partitioned into **windows**, one per skyline segment,
+//!   mirrored from the [`IndexedSkyline`](super::indexed::IndexedSkyline)
+//!   via its [`Changes`] log;
+//! * an unplaced block whose lifetime is contained in a window is
+//!   **active** there (windows partition time, so the window is unique),
+//!   stored in that window's `BTreeSet` ordered by
+//!   [`BlockChoice::order_key`](super::policies::BlockChoice::order_key)
+//!   — the set maximum *is* the block the paper's rule places next;
+//! * an unplaced block whose lifetime crosses a window boundary fits no
+//!   single offset line and is **parked** on one crossed boundary; when a
+//!   merge makes that boundary vanish the block either activates in the
+//!   merged window or re-parks on one of the merged window's edges (both
+//!   still current boundaries strictly inside its lifetime).
+//!
+//! Each solve step therefore touches only live candidates: `best` is one
+//! ordered-set lookup, `place` one removal, and a split/merge
+//! redistributes exactly the affected window's blocks.
+//!
+//! [`Changes`]: super::indexed::Changes
+
+use super::indexed::{ChangeEvent, Changes, Span};
+use super::policies::Policy;
+use super::problem::DsaInstance;
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, HashMap};
+
+/// Total preference order under the active policy; the maximal key is
+/// the block `BlockChoice::prefer` would choose, and the trailing id
+/// makes every key unique.
+type CandKey = (u64, u64, Reverse<usize>);
+
+/// Where one unplaced block currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Loc {
+    /// Candidate of the window starting at this tick.
+    Active(u64),
+    /// Lifetime crosses the boundary at this tick.
+    Parked(u64),
+    Placed,
+}
+
+/// The candidate index. Built once per solve (the policy fixes the key
+/// order) and kept in lockstep with the skyline's window partition.
+#[derive(Debug)]
+pub struct CandidateIndex {
+    /// Per-block policy key (index = block id).
+    keys: Vec<CandKey>,
+    /// Per-block lifetime `(alloc_at, free_at)`.
+    lifetimes: Vec<(u64, u64)>,
+    /// Window start tick → policy-ordered active candidates.
+    active: HashMap<u64, BTreeSet<CandKey>>,
+    /// Boundary tick → blocks parked on it.
+    parked: HashMap<u64, Vec<usize>>,
+    loc: Vec<Loc>,
+}
+
+impl CandidateIndex {
+    /// Index every block of `inst` as active in the full-horizon window
+    /// `[0, horizon)` — the fresh skyline's single segment.
+    pub fn new(inst: &DsaInstance, policy: Policy) -> CandidateIndex {
+        let keys: Vec<CandKey> = inst
+            .blocks
+            .iter()
+            .map(|b| policy.block_choice.order_key(b))
+            .collect();
+        let lifetimes = inst.blocks.iter().map(|b| (b.alloc_at, b.free_at)).collect();
+        let mut active = HashMap::new();
+        if !keys.is_empty() {
+            active.insert(0, keys.iter().copied().collect::<BTreeSet<CandKey>>());
+        }
+        CandidateIndex {
+            loc: vec![Loc::Active(0); keys.len()],
+            keys,
+            lifetimes,
+            active,
+            parked: HashMap::new(),
+        }
+    }
+
+    /// The preferred unplaced block of the window starting at
+    /// `window_t0`, if any fits it. O(log n).
+    pub fn best(&self, window_t0: u64) -> Option<usize> {
+        self.active
+            .get(&window_t0)
+            .and_then(|set| set.iter().next_back())
+            .map(|key| key.2 .0)
+    }
+
+    /// Mark block `id` placed, removing it from its active window. Must
+    /// only be called with ids returned by [`best`](Self::best).
+    pub fn place(&mut self, id: usize) {
+        match self.loc[id] {
+            Loc::Active(t0) => {
+                let set = self.active.get_mut(&t0).expect("active window exists");
+                let removed = set.remove(&self.keys[id]);
+                debug_assert!(removed, "active block missing from its window set");
+                if set.is_empty() {
+                    self.active.remove(&t0);
+                }
+            }
+            other => panic!("place of non-active block {id}: {other:?}"),
+        }
+        self.loc[id] = Loc::Placed;
+    }
+
+    /// Mirror one `place`/`lift` call's structural skyline changes.
+    pub fn apply(&mut self, changes: &Changes) {
+        for e in &changes.events {
+            match *e {
+                ChangeEvent::Split {
+                    parent,
+                    children,
+                    n,
+                } => self.on_split(parent, &children[..n]),
+                ChangeEvent::Merge { left, right } => self.on_merge(left, right),
+            }
+        }
+    }
+
+    /// A window split: redistribute its candidates over the children;
+    /// blocks crossing a fresh internal boundary park there.
+    fn on_split(&mut self, parent: Span, children: &[Span]) {
+        let Some(set) = self.active.remove(&parent.t0) else {
+            return;
+        };
+        for key in set {
+            let id = key.2 .0;
+            let (a, f) = self.lifetimes[id];
+            match children.iter().find(|c| c.contains(a, f)) {
+                Some(c) => {
+                    self.active.entry(c.t0).or_default().insert(key);
+                    self.loc[id] = Loc::Active(c.t0);
+                }
+                None => {
+                    let bnd = children[..children.len() - 1]
+                        .iter()
+                        .map(|c| c.t1)
+                        .find(|&b| a < b && b < f)
+                        .expect("uncontained block must cross an internal boundary");
+                    self.parked.entry(bnd).or_default().push(id);
+                    self.loc[id] = Loc::Parked(bnd);
+                }
+            }
+        }
+    }
+
+    /// A boundary vanished: union the two windows' candidates and revive
+    /// (or re-park) the blocks parked on it.
+    fn on_merge(&mut self, left: Span, right: Span) {
+        let boundary = left.t1;
+        debug_assert_eq!(right.t0, boundary, "merge of non-adjacent windows");
+        let (lo, hi) = (left.t0, right.t1);
+        if let Some(right_set) = self.active.remove(&right.t0) {
+            let merged = self.active.entry(lo).or_default();
+            for key in right_set {
+                self.loc[key.2 .0] = Loc::Active(lo);
+                merged.insert(key);
+            }
+        }
+        if let Some(ids) = self.parked.remove(&boundary) {
+            for id in ids {
+                let (a, f) = self.lifetimes[id];
+                if lo <= a && f <= hi {
+                    self.active.entry(lo).or_default().insert(self.keys[id]);
+                    self.loc[id] = Loc::Active(lo);
+                } else {
+                    // Still uncontained: the lifetime pokes past an edge
+                    // of the merged window, and that edge is a current
+                    // boundary strictly inside the lifetime.
+                    let bnd = if a < lo { lo } else { hi };
+                    debug_assert!(a < bnd && bnd < f, "re-park boundary outside lifetime");
+                    self.parked.entry(bnd).or_default().push(id);
+                    self.loc[id] = Loc::Parked(bnd);
+                }
+            }
+        }
+    }
+
+    /// Number of unplaced blocks still indexed (active + parked).
+    pub fn remaining(&self) -> usize {
+        self.loc.iter().filter(|l| !matches!(l, Loc::Placed)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsa::indexed::IndexedSkyline;
+    use crate::dsa::policies::BlockChoice;
+
+    fn index_for(triples: &[(u64, u64, u64)]) -> (DsaInstance, CandidateIndex) {
+        let inst = DsaInstance::from_triples(triples);
+        let idx = CandidateIndex::new(&inst, Policy::default());
+        (inst, idx)
+    }
+
+    #[test]
+    fn initial_best_is_policy_winner() {
+        // Longest lifetime wins: block 1 lives [0,10).
+        let (_, idx) = index_for(&[(5, 2, 4), (5, 0, 10), (9, 3, 5)]);
+        assert_eq!(idx.best(0), Some(1));
+        assert_eq!(idx.remaining(), 3);
+    }
+
+    #[test]
+    fn place_removes_and_reveals_next() {
+        let (_, mut idx) = index_for(&[(5, 2, 4), (5, 0, 10)]);
+        idx.place(1);
+        assert_eq!(idx.best(0), Some(0));
+        idx.place(0);
+        assert_eq!(idx.best(0), None);
+        assert_eq!(idx.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-active")]
+    fn double_place_panics() {
+        let (_, mut idx) = index_for(&[(5, 0, 4)]);
+        idx.place(0);
+        idx.place(0);
+    }
+
+    #[test]
+    fn split_redistributes_and_parks() {
+        // Window [0,12) splits at [4,8): block 0 fits left, block 1 fits
+        // right, block 2 fits the raised middle, block 3 spans a boundary.
+        let (_, mut idx) = index_for(&[(1, 0, 4), (1, 8, 12), (1, 5, 7), (1, 2, 6)]);
+        let mut sky = IndexedSkyline::new(12);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 4, 8, 10, &mut ch);
+        idx.apply(&ch);
+        assert_eq!(idx.best(0), Some(0));
+        assert_eq!(idx.best(8), Some(1));
+        assert_eq!(idx.best(4), Some(2), "raised window hosts contained blocks");
+        assert_eq!(idx.remaining(), 4, "parked block 3 still indexed");
+    }
+
+    #[test]
+    fn merge_revives_parked_blocks() {
+        let (_, mut idx) = index_for(&[(1, 2, 6)]);
+        let mut sky = IndexedSkyline::new(12);
+        let mut ch = Changes::default();
+        // Split at [4,8): block [2,6) crosses boundary 4 → parked.
+        sky.place(sky.lowest_leftmost(), 4, 8, 10, &mut ch);
+        idx.apply(&ch);
+        assert_eq!(idx.best(0), None);
+        // Lift [0,4) to height 10: merges with the raised segment, the
+        // boundary at 4 vanishes, and [0,8) contains [2,6) again.
+        let low = sky.slot_at(0).unwrap();
+        sky.lift(low, &mut ch);
+        idx.apply(&ch);
+        assert_eq!(idx.best(0), Some(0));
+        assert_eq!(sky.segments().len(), 2);
+    }
+
+    #[test]
+    fn policy_order_controls_best() {
+        let triples = [(100, 0, 2), (1, 0, 9)];
+        let inst = DsaInstance::from_triples(&triples);
+        let longest = CandidateIndex::new(&inst, Policy::default());
+        assert_eq!(longest.best(0), Some(1));
+        let largest = CandidateIndex::new(
+            &inst,
+            Policy {
+                block_choice: BlockChoice::LargestSize,
+            },
+        );
+        assert_eq!(largest.best(0), Some(0));
+    }
+}

@@ -1,0 +1,573 @@
+//! Indexed *offset line* structure — the O(log S) skyline behind the
+//! fast best-fit solver.
+//!
+//! [`Skyline`](super::skyline::Skyline) keeps its segments in a `Vec`, so
+//! every `lowest_leftmost` is an O(S) scan and every `place`/`lift` pays
+//! an O(S) `splice`/`remove` shift. That is fine offline, but since plans
+//! build lazily on the serving path (a `PlanRegistry` miss solves inside
+//! the request loop), solve latency is now serving latency.
+//! [`IndexedSkyline`] stores the same segment list in a slab-backed
+//! doubly-linked list — splits and merges relink neighbours instead of
+//! shifting elements — and maintains a `BTreeSet<(height, t0, slot)>`
+//! min-index whose first entry *is* the lowest-leftmost line:
+//!
+//! * `lowest_leftmost` — O(log S) (ordered-set minimum);
+//! * `place` — O(log S) amortized: ≤2 node insertions, ≤2 merges, ≤5
+//!   index updates;
+//! * `lift` — O(log S) amortized: one key update, ≤2 merges.
+//!
+//! Semantics are bit-for-bit those of the reference `Skyline` (§3.2):
+//! identical segment lists, identical chosen lines, identical offsets.
+//! `rust/tests/properties.rs` drives both in lockstep over the committed
+//! fuzz corpus to pin that equivalence.
+//!
+//! Structural changes (segment splits and merges) are reported through a
+//! [`Changes`] log so the solver's
+//! [`CandidateIndex`](super::candidates::CandidateIndex) can mirror the
+//! window partition without rescanning anything.
+
+use super::skyline::Seg;
+use std::collections::BTreeSet;
+
+/// Stable handle to one segment in the slab (reused after frees).
+pub type Slot = usize;
+
+/// A time span `[t0, t1)` — a segment's extent without its height.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub t0: u64,
+    pub t1: u64,
+}
+
+impl Span {
+    /// Is lifetime `[alloc_at, free_at)` contained in this span?
+    pub fn contains(&self, alloc_at: u64, free_at: u64) -> bool {
+        self.t0 <= alloc_at && free_at <= self.t1
+    }
+}
+
+/// One structural change to the skyline's window partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChangeEvent {
+    /// A placement split `parent` into `children[..n]` (in time order).
+    Split {
+        parent: Span,
+        children: [Span; 3],
+        n: usize,
+    },
+    /// Equal-height neighbours merged; the boundary `left.t1 == right.t0`
+    /// vanished and the union span survives.
+    Merge { left: Span, right: Span },
+}
+
+/// Reusable structural-change log: cleared at the start of every
+/// `place`/`lift`, holding that one call's events in order afterwards.
+#[derive(Debug, Default)]
+pub struct Changes {
+    pub events: Vec<ChangeEvent>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    seg: Seg,
+    prev: Option<Slot>,
+    next: Option<Slot>,
+}
+
+/// The indexed skyline: a slab-backed doubly-linked segment list plus an
+/// ordered `(height, t0, slot)` min-index.
+#[derive(Debug, Clone)]
+pub struct IndexedSkyline {
+    nodes: Vec<Node>,
+    /// Free slab slots, reused by later splits.
+    free: Vec<Slot>,
+    head: Slot,
+    len: usize,
+    /// Every live segment under its `(height, t0, slot)` key: the set
+    /// minimum is the lowest (leftmost on ties) offset line of §3.2.
+    index: BTreeSet<(u64, u64, Slot)>,
+}
+
+impl IndexedSkyline {
+    /// Fresh skyline at height 0 over `[0, horizon)`.
+    pub fn new(horizon: u64) -> IndexedSkyline {
+        assert!(horizon > 0, "empty horizon");
+        let seg = Seg {
+            t0: 0,
+            t1: horizon,
+            height: 0,
+        };
+        IndexedSkyline {
+            nodes: vec![Node {
+                seg,
+                prev: None,
+                next: None,
+            }],
+            free: Vec::new(),
+            head: 0,
+            len: 1,
+            index: BTreeSet::from([(0, 0, 0)]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0 // never true: the skyline always covers the horizon
+    }
+
+    pub fn seg(&self, slot: Slot) -> Seg {
+        self.nodes[slot].seg
+    }
+
+    /// Slot of the lowest offset line; leftmost wins ties (§3.2).
+    /// O(log S): the min-index orders by `(height, t0)`.
+    pub fn lowest_leftmost(&self) -> Slot {
+        self.index.iter().next().expect("skyline never empty").2
+    }
+
+    /// Highest offset line — after all placements this equals the packing
+    /// peak.
+    pub fn max_height(&self) -> u64 {
+        self.index.iter().next_back().expect("skyline never empty").0
+    }
+
+    /// The segment list in time order (tests and diagnostics; O(S)).
+    pub fn segments(&self) -> Vec<Seg> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut cur = Some(self.head);
+        while let Some(s) = cur {
+            out.push(self.nodes[s].seg);
+            cur = self.nodes[s].next;
+        }
+        out
+    }
+
+    /// Slot of the segment starting at `t0`, if any (test driver; O(S)).
+    pub fn slot_at(&self, t0: u64) -> Option<Slot> {
+        let mut cur = Some(self.head);
+        while let Some(s) = cur {
+            if self.nodes[s].seg.t0 == t0 {
+                return Some(s);
+            }
+            cur = self.nodes[s].next;
+        }
+        None
+    }
+
+    fn alloc_node(&mut self, seg: Seg, prev: Option<Slot>, next: Option<Slot>) -> Slot {
+        let node = Node { seg, prev, next };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.nodes[s] = node;
+                s
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.index.insert((seg.height, seg.t0, slot));
+        self.len += 1;
+        slot
+    }
+
+    /// Drop `slot` from the index and slab. Links must already be rewired
+    /// by the caller.
+    fn free_node(&mut self, slot: Slot) {
+        let seg = self.nodes[slot].seg;
+        let removed = self.index.remove(&(seg.height, seg.t0, slot));
+        debug_assert!(removed, "freed slot was not indexed");
+        self.free.push(slot);
+        self.len -= 1;
+    }
+
+    /// Rewrite a node's segment, keeping its index key in sync.
+    fn set_seg(&mut self, slot: Slot, seg: Seg) {
+        let old = self.nodes[slot].seg;
+        if (old.height, old.t0) != (seg.height, seg.t0) {
+            let removed = self.index.remove(&(old.height, old.t0, slot));
+            debug_assert!(removed, "rewritten slot was not indexed");
+            self.index.insert((seg.height, seg.t0, slot));
+        }
+        self.nodes[slot].seg = seg;
+    }
+
+    /// Place a block with lifetime `[alloc_at, free_at)` and size `size`
+    /// on segment `slot`; returns the assigned offset (the segment
+    /// height). The lifetime must be contained in the segment span.
+    /// `changes` is cleared and receives this call's split/merge events.
+    pub fn place(
+        &mut self,
+        slot: Slot,
+        alloc_at: u64,
+        free_at: u64,
+        size: u64,
+        changes: &mut Changes,
+    ) -> u64 {
+        changes.events.clear();
+        let seg = self.nodes[slot].seg;
+        assert!(
+            seg.contains(alloc_at, free_at),
+            "block [{alloc_at},{free_at}) not contained in segment [{},{})",
+            seg.t0,
+            seg.t1
+        );
+        assert!(size > 0);
+        let offset = seg.height;
+
+        let mut children = [Span { t0: 0, t1: 0 }; 3];
+        let mut n = 0;
+        if alloc_at > seg.t0 {
+            children[n] = Span {
+                t0: seg.t0,
+                t1: alloc_at,
+            };
+            n += 1;
+        }
+        children[n] = Span {
+            t0: alloc_at,
+            t1: free_at,
+        };
+        n += 1;
+        if free_at < seg.t1 {
+            children[n] = Span {
+                t0: free_at,
+                t1: seg.t1,
+            };
+            n += 1;
+        }
+        if n > 1 {
+            changes.events.push(ChangeEvent::Split {
+                parent: Span {
+                    t0: seg.t0,
+                    t1: seg.t1,
+                },
+                children,
+                n,
+            });
+        }
+
+        // `slot` becomes the raised segment; fresh nodes carry the
+        // surviving low spans on either side — no element shifting.
+        if alloc_at > seg.t0 {
+            let prev = self.nodes[slot].prev;
+            let left = self.alloc_node(
+                Seg {
+                    t0: seg.t0,
+                    t1: alloc_at,
+                    height: seg.height,
+                },
+                prev,
+                Some(slot),
+            );
+            match prev {
+                Some(p) => self.nodes[p].next = Some(left),
+                None => self.head = left,
+            }
+            self.nodes[slot].prev = Some(left);
+        }
+        if free_at < seg.t1 {
+            let next = self.nodes[slot].next;
+            let right = self.alloc_node(
+                Seg {
+                    t0: free_at,
+                    t1: seg.t1,
+                    height: seg.height,
+                },
+                Some(slot),
+                next,
+            );
+            if let Some(nx) = next {
+                self.nodes[nx].prev = Some(right);
+            }
+            self.nodes[slot].next = Some(right);
+        }
+        self.set_seg(
+            slot,
+            Seg {
+                t0: alloc_at,
+                t1: free_at,
+                height: seg.height + size,
+            },
+        );
+
+        // Equal-height neighbours are only possible against the raised
+        // segment itself: the split's low children keep the parent
+        // height, which differed from the old neighbours' by invariant.
+        let survivor = self.merge_if_equal_left(slot, changes);
+        self.merge_if_equal_right(survivor, changes);
+        offset
+    }
+
+    /// Lift the offset line `slot` into its lowest adjacent neighbour
+    /// (both, when they tie) — the §3.2 move used when no unplaced block
+    /// fits the chosen line. Panics on a single-segment skyline (the
+    /// caller's search must have found a block in that case). `changes`
+    /// is cleared and receives this call's merge events.
+    pub fn lift(&mut self, slot: Slot, changes: &mut Changes) {
+        changes.events.clear();
+        let (prev, next) = (self.nodes[slot].prev, self.nodes[slot].next);
+        let left = prev.map(|p| self.nodes[p].seg.height);
+        let right = next.map(|n| self.nodes[n].seg.height);
+        let target = match (left, right) {
+            (Some(l), Some(r)) => l.min(r),
+            (Some(l), None) => l,
+            (None, Some(r)) => r,
+            (None, None) => panic!("lift on a single-segment skyline"),
+        };
+        let mut seg = self.nodes[slot].seg;
+        debug_assert!(target > seg.height, "lift must raise");
+        seg.height = target;
+        self.set_seg(slot, seg);
+        let survivor = self.merge_if_equal_left(slot, changes);
+        self.merge_if_equal_right(survivor, changes);
+    }
+
+    /// Merge `slot` into its prev when heights tie; returns the survivor.
+    fn merge_if_equal_left(&mut self, slot: Slot, changes: &mut Changes) -> Slot {
+        match self.nodes[slot].prev {
+            Some(prev) if self.nodes[prev].seg.height == self.nodes[slot].seg.height => {
+                self.merge_pair(prev, slot, changes);
+                prev
+            }
+            _ => slot,
+        }
+    }
+
+    fn merge_if_equal_right(&mut self, slot: Slot, changes: &mut Changes) {
+        if let Some(next) = self.nodes[slot].next {
+            if self.nodes[next].seg.height == self.nodes[slot].seg.height {
+                self.merge_pair(slot, next, changes);
+            }
+        }
+    }
+
+    /// Merge adjacent equal-height `left` and `right`; `left` survives
+    /// with the union span. O(log S): `t1` is not part of the index key,
+    /// so only `right`'s entry is touched.
+    fn merge_pair(&mut self, left: Slot, right: Slot, changes: &mut Changes) {
+        let (l, r) = (self.nodes[left].seg, self.nodes[right].seg);
+        debug_assert_eq!(l.t1, r.t0, "merge of non-adjacent segments");
+        debug_assert_eq!(l.height, r.height, "merge of unequal heights");
+        changes.events.push(ChangeEvent::Merge {
+            left: Span { t0: l.t0, t1: l.t1 },
+            right: Span { t0: r.t0, t1: r.t1 },
+        });
+        let after = self.nodes[right].next;
+        self.free_node(right);
+        self.nodes[left].next = after;
+        if let Some(a) = after {
+            self.nodes[a].prev = Some(left);
+        }
+        self.nodes[left].seg.t1 = r.t1;
+    }
+
+    /// Check structural invariants (tests and debug assertions):
+    /// contiguous cover, positive spans, height-distinct neighbours,
+    /// coherent links, and an index entry per live segment.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.len == 0 {
+            return Err("empty skyline".into());
+        }
+        if self.index.len() != self.len {
+            return Err(format!(
+                "index holds {} entries for {} segments",
+                self.index.len(),
+                self.len
+            ));
+        }
+        let mut count = 0;
+        let mut prev: Option<Slot> = None;
+        let mut cur = Some(self.head);
+        while let Some(s) = cur {
+            let node = &self.nodes[s];
+            if node.prev != prev {
+                return Err(format!("bad prev link at slot {s}"));
+            }
+            if node.seg.t1 <= node.seg.t0 {
+                return Err(format!("segment at slot {s} has empty span"));
+            }
+            if let Some(p) = prev {
+                let ps = self.nodes[p].seg;
+                if ps.t1 != node.seg.t0 {
+                    return Err(format!("gap before slot {s}"));
+                }
+                if ps.height == node.seg.height {
+                    return Err(format!("equal heights at slots {p} and {s}"));
+                }
+            }
+            if !self.index.contains(&(node.seg.height, node.seg.t0, s)) {
+                return Err(format!("slot {s} missing from the height index"));
+            }
+            count += 1;
+            if count > self.len {
+                return Err("cycle in segment list".into());
+            }
+            prev = cur;
+            cur = node.next;
+        }
+        if count != self.len {
+            return Err(format!("list holds {count} segments, len says {}", self.len));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(t0: u64, t1: u64, height: u64) -> Seg {
+        Seg { t0, t1, height }
+    }
+
+    #[test]
+    fn place_splits_and_returns_offset() {
+        let mut sky = IndexedSkyline::new(10);
+        let mut ch = Changes::default();
+        let off = sky.place(sky.lowest_leftmost(), 2, 6, 5, &mut ch);
+        assert_eq!(off, 0);
+        assert_eq!(
+            sky.segments(),
+            vec![seg(0, 2, 0), seg(2, 6, 5), seg(6, 10, 0)]
+        );
+        sky.check_invariants().unwrap();
+        // One split into three children, no merges.
+        assert_eq!(ch.events.len(), 1);
+        match ch.events[0] {
+            ChangeEvent::Split { parent, children, n } => {
+                assert_eq!(parent, Span { t0: 0, t1: 10 });
+                assert_eq!(n, 3);
+                assert_eq!(children[0], Span { t0: 0, t1: 2 });
+                assert_eq!(children[1], Span { t0: 2, t1: 6 });
+                assert_eq!(children[2], Span { t0: 6, t1: 10 });
+            }
+            _ => panic!("expected a split"),
+        }
+    }
+
+    #[test]
+    fn place_full_span_no_split_no_events() {
+        let mut sky = IndexedSkyline::new(10);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 0, 10, 3, &mut ch);
+        assert_eq!(sky.len(), 1);
+        assert_eq!(sky.max_height(), 3);
+        assert!(ch.events.is_empty(), "pure raise has no structural change");
+    }
+
+    #[test]
+    fn equal_height_neighbours_merge_after_place() {
+        let mut sky = IndexedSkyline::new(10);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 0, 5, 4, &mut ch); // [0,5)@4 [5,10)@0
+        let low = sky.lowest_leftmost();
+        assert_eq!(sky.seg(low).t0, 5);
+        sky.place(low, 5, 10, 4, &mut ch); // both now height 4 → one segment
+        assert_eq!(sky.segments(), vec![seg(0, 10, 4)]);
+        sky.check_invariants().unwrap();
+        // The raise emitted no split (full sub-span) but one merge.
+        assert_eq!(
+            ch.events,
+            vec![ChangeEvent::Merge {
+                left: Span { t0: 0, t1: 5 },
+                right: Span { t0: 5, t1: 10 },
+            }]
+        );
+    }
+
+    #[test]
+    fn lowest_leftmost_prefers_left_on_ties() {
+        let mut sky = IndexedSkyline::new(12);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 4, 8, 2, &mut ch); // [0,4)@0 [4,8)@2 [8,12)@0
+        assert_eq!(sky.seg(sky.lowest_leftmost()).t0, 0);
+    }
+
+    #[test]
+    fn lift_merges_into_lowest_neighbour() {
+        let mut sky = IndexedSkyline::new(12);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 0, 4, 7, &mut ch); // [0,4)@7 [4,12)@0
+        let low = sky.lowest_leftmost();
+        sky.place(low, 8, 12, 3, &mut ch); // [0,4)@7 [4,8)@0 [8,12)@3
+        let low = sky.lowest_leftmost();
+        assert_eq!(sky.seg(low).height, 0);
+        sky.lift(low, &mut ch); // raises [4,8) to min(7,3)=3, merges right
+        sky.check_invariants().unwrap();
+        assert_eq!(sky.segments(), vec![seg(0, 4, 7), seg(4, 12, 3)]);
+        assert_eq!(
+            ch.events,
+            vec![ChangeEvent::Merge {
+                left: Span { t0: 4, t1: 8 },
+                right: Span { t0: 8, t1: 12 },
+            }]
+        );
+    }
+
+    #[test]
+    fn lift_merges_both_when_neighbours_tie() {
+        let mut sky = IndexedSkyline::new(12);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 0, 4, 5, &mut ch);
+        sky.place(sky.lowest_leftmost(), 8, 12, 5, &mut ch);
+        // [0,4)@5 [4,8)@0 [8,12)@5
+        sky.lift(sky.lowest_leftmost(), &mut ch);
+        assert_eq!(sky.segments(), vec![seg(0, 12, 5)]);
+        assert_eq!(ch.events.len(), 2, "left merge then right merge");
+    }
+
+    #[test]
+    #[should_panic(expected = "not contained")]
+    fn place_outside_span_panics() {
+        let mut sky = IndexedSkyline::new(10);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 0, 5, 1, &mut ch); // [0,5)@1 [5,10)@0
+        let low = sky.lowest_leftmost();
+        sky.place(low, 4, 6, 1, &mut ch); // spans into raised segment
+    }
+
+    #[test]
+    fn stacking_on_raised_segment() {
+        let mut sky = IndexedSkyline::new(8);
+        let mut ch = Changes::default();
+        sky.place(sky.lowest_leftmost(), 0, 8, 4, &mut ch);
+        let top = sky.slot_at(0).unwrap();
+        let off = sky.place(top, 2, 6, 3, &mut ch);
+        assert_eq!(off, 4);
+        assert_eq!(sky.max_height(), 7);
+        sky.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn slots_are_reused_after_merges() {
+        let mut sky = IndexedSkyline::new(100);
+        let mut ch = Changes::default();
+        // Repeated split-then-merge churn must not grow the slab without
+        // bound: place a block in the middle, lift the cheap left valley
+        // back up until the skyline flattens, repeat.
+        for round in 0..20u64 {
+            let h = round + 1;
+            let low = sky.lowest_leftmost();
+            let s = sky.seg(low);
+            let mid0 = (s.t0 + s.t1) / 2;
+            if mid0 + 1 < s.t1 {
+                sky.place(low, mid0, mid0 + 1, h, &mut ch);
+            } else {
+                sky.place(low, s.t0, s.t1, h, &mut ch);
+            }
+            while sky.len() > 1 {
+                sky.lift(sky.lowest_leftmost(), &mut ch);
+            }
+            sky.check_invariants().unwrap();
+        }
+        assert!(
+            sky.nodes.len() <= 4,
+            "slab grew to {} nodes despite free-list reuse",
+            sky.nodes.len()
+        );
+    }
+}

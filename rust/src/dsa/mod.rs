@@ -10,8 +10,16 @@
 //!
 //! * [`problem`] — instance model, colliding pairs, lower bounds;
 //! * [`solution`] — offset assignments and the overlap validator;
-//! * [`skyline`] — the *offset line* structure of §3.2;
-//! * [`bestfit`] — the paper's best-fit heuristic (after Burke et al. 2004);
+//! * [`skyline`] — the reference *offset line* structure of §3.2;
+//! * [`indexed`] — the same structure over a slab-backed linked list with
+//!   an ordered height index: O(log S) `lowest_leftmost`/`place`/`lift`;
+//! * [`candidates`] — per-window unplaced-block sets ordered by the
+//!   active policy key, so each solve step touches only live candidates;
+//! * [`bestfit`] — the paper's best-fit heuristic (after Burke et al.
+//!   2004): [`bestfit::solve`] runs on the indexed structures (fast
+//!   enough for lazy plan builds on the serving path),
+//!   [`bestfit::solve_reference`] keeps the original quadratic form for
+//!   differential testing;
 //! * [`policies`] — ablatable block-/offset-choice policies;
 //! * [`firstfit`] — address-ordered first-fit baseline (what an idealized
 //!   online allocator achieves);
@@ -19,14 +27,16 @@
 //! * [`mip`] — LP-format emitter of the paper's §3.1 MIP formulation.
 
 pub mod bestfit;
+pub mod candidates;
 pub mod exact;
 pub mod firstfit;
+pub mod indexed;
 pub mod mip;
 pub mod policies;
 pub mod problem;
 pub mod skyline;
 pub mod solution;
 
-pub use bestfit::solve as solve_bestfit;
+pub use bestfit::{solve as solve_bestfit, solve_reference};
 pub use problem::{Block, DsaInstance};
 pub use solution::{Assignment, Violation};

@@ -41,11 +41,17 @@ impl BlockChoice {
 
     /// Strict "is `a` preferred over `b`" under this policy.
     pub fn prefer(self, a: &Block, b: &Block) -> bool {
-        let key_a = self.key(a);
-        let key_b = self.key(b);
-        // Lexicographic: primary policy key, then size, then lower id for
-        // full determinism across runs.
-        (key_a, a.size, std::cmp::Reverse(a.id)) > (key_b, b.size, std::cmp::Reverse(b.id))
+        self.order_key(a) > self.order_key(b)
+    }
+
+    /// Total ordering key: `prefer(a, b)` ⇔ `order_key(a) > order_key(b)`.
+    /// Lexicographic — primary policy key, then size, then lower id — so
+    /// distinct blocks always compare unequal (full determinism). The
+    /// indexed solver's candidate sets
+    /// ([`CandidateIndex`](super::candidates::CandidateIndex)) are
+    /// ordered by this key so the preferred block is the set maximum.
+    pub fn order_key(self, b: &Block) -> (u64, u64, std::cmp::Reverse<usize>) {
+        (self.key(b), b.size, std::cmp::Reverse(b.id))
     }
 
     fn key(self, b: &Block) -> u64 {

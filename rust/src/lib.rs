@@ -15,6 +15,17 @@
 //! 3. **replays** the computed offsets in O(1) per request for all
 //!    subsequent iterations ([`plan::ReplayEngine`]).
 //!
+//! The heuristic's hot path is indexed for the serving tier, where plans
+//! build lazily and solve latency is request latency: an
+//! [`dsa::indexed::IndexedSkyline`] (slab-backed segment list + ordered
+//! height index, O(log S) `lowest_leftmost`/`place`/`lift`) and a
+//! [`dsa::candidates::CandidateIndex`] (per-window unplaced-block sets
+//! ordered by the policy key) replace the reference solver's linear
+//! scans while preserving §3.2 semantics bit for bit —
+//! [`dsa::bestfit::solve_reference`] keeps the quadratic original for
+//! differential testing, and `benches/bench_solver_scale.rs` pins the
+//! speedup against ROADMAP.md's `## Perf targets`.
+//!
 //! The profile→solve→replay lifecycle is implemented **once**, in the
 //! backend-agnostic [`plan`] layer: `ReplayEngine<M: MemoryBackend>` owns
 //! profiling, the solved event skeleton and address table, the in-sync
@@ -35,7 +46,9 @@
 //! sizes onto a configurable bucket ladder (smallest covering bucket;
 //! largest bucket for oversized batches), builds plans lazily on first
 //! use, LRU-evicts under a total-arena-bytes budget, and reports
-//! hit/miss/evict counters. The serving path instantiates it as
+//! hit/miss/evict counters plus per-registry plan-build latency
+//! (builds, max/mean solve nanoseconds — the serve report prints
+//! them). The serving path instantiates it as
 //! [`coordinator::staging::StagingRegistry`] — one bucketed plan
 //! registry per shard, so small request batches stop paying
 //! `max_batch` padding.

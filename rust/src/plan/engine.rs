@@ -127,6 +127,8 @@ pub struct ReplayEngine<M: MemoryBackend> {
     interrupt_depth: u32,
     stats: AllocStats,
     solve_ns: u64,
+    last_solve_ns: u64,
+    solves: u64,
     /// Labels forwarded to traces/diagnostics.
     model: String,
     phase: String,
@@ -148,6 +150,8 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             interrupt_depth: 0,
             stats: AllocStats::default(),
             solve_ns: 0,
+            last_solve_ns: 0,
+            solves: 0,
             model: model.to_string(),
             phase: phase.to_string(),
             batch,
@@ -199,6 +203,17 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.solve_ns
     }
 
+    /// Wall-clock nanoseconds of the most recent DSA solve — the latency
+    /// of one plan build (the registry surfaces this per miss).
+    pub fn last_solve_ns(&self) -> u64 {
+        self.last_solve_ns
+    }
+
+    /// How many plans were solved (initial build + reoptimizations).
+    pub fn solves(&self) -> u64 {
+        self.solves
+    }
+
     // ----- plan construction ------------------------------------------------
 
     fn fresh_profiler(&self) -> MemoryProfiler {
@@ -238,7 +253,9 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         let inst = trace.to_dsa_instance();
         let t0 = Instant::now();
         let sol = bestfit::solve(&inst);
-        self.solve_ns += t0.elapsed().as_nanos() as u64;
+        self.last_solve_ns = t0.elapsed().as_nanos() as u64;
+        self.solve_ns += self.last_solve_ns;
+        self.solves += 1;
         debug_assert!(sol.validate(&inst).is_ok());
 
         let base = self.backend.reserve_arena(ctx, &inst, &sol)?;
@@ -565,6 +582,29 @@ mod tests {
         assert_eq!(e.planned_peak(), Some(3000));
         assert_eq!(e.stats().fast_path, 6);
         assert_eq!(e.stats().reopts, 0);
+    }
+
+    #[test]
+    fn solve_counters_track_builds() {
+        let mut e = host_engine();
+        e.begin_iteration();
+        let p = ok(e.alloc(&mut (), 1000));
+        e.free(&mut (), p.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        assert_eq!(e.solves(), 1, "profiling iteration builds the plan");
+        assert!(e.solve_ns() >= e.last_solve_ns());
+        // A hot iteration solves nothing.
+        e.begin_iteration();
+        let p = ok(e.alloc(&mut (), 1000));
+        e.free(&mut (), p.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        assert_eq!(e.solves(), 1);
+        // A deviation re-solves.
+        e.begin_iteration();
+        let p = ok(e.alloc(&mut (), 9000));
+        e.free(&mut (), p.addr, 9000);
+        ok(e.end_iteration(&mut ()));
+        assert_eq!(e.solves(), 2);
     }
 
     #[test]

@@ -141,6 +141,13 @@ pub struct RegistryStats {
     pub misses: u64,
     /// Plans dropped by budget enforcement.
     pub evictions: u64,
+    /// Plan builds (DSA solves) recorded against this registry — initial
+    /// builds after a miss plus reoptimizations of resident plans.
+    pub builds: u64,
+    /// Total wall nanoseconds across recorded plan builds.
+    pub build_ns_total: u64,
+    /// Slowest single recorded plan build, in wall nanoseconds.
+    pub build_ns_max: u64,
 }
 
 impl RegistryStats {
@@ -156,11 +163,29 @@ impl RegistryStats {
         self.hits as f64 / self.lookups() as f64
     }
 
+    /// Record one plan build (a DSA solve) of `ns` wall nanoseconds.
+    pub fn record_build(&mut self, ns: u64) {
+        self.builds += 1;
+        self.build_ns_total += ns;
+        self.build_ns_max = self.build_ns_max.max(ns);
+    }
+
+    /// Mean nanoseconds per recorded plan build; 0 before any build.
+    pub fn mean_build_ns(&self) -> u64 {
+        if self.builds == 0 {
+            return 0;
+        }
+        self.build_ns_total / self.builds
+    }
+
     /// Fold another registry's counters in (cross-shard aggregation).
     pub fn absorb(&mut self, other: &RegistryStats) {
         self.hits += other.hits;
         self.misses += other.misses;
         self.evictions += other.evictions;
+        self.builds += other.builds;
+        self.build_ns_total += other.build_ns_total;
+        self.build_ns_max = self.build_ns_max.max(other.build_ns_max);
     }
 }
 
@@ -258,6 +283,15 @@ impl<P: PlanFootprint> PlanRegistry<P> {
         self.stats
     }
 
+    /// Record one plan build's solve latency against this registry's
+    /// counters. The registry cannot observe the solve itself — a plan
+    /// built on a miss solves lazily inside its own first iteration, and
+    /// a resident plan may re-solve on reoptimization — so the owner
+    /// reports build latencies as they happen.
+    pub fn record_build_ns(&mut self, ns: u64) {
+        self.stats.record_build(ns);
+    }
+
     /// Per-plan replay-lookup hit counts, sorted by key (diagnostics).
     pub fn per_plan_hits(&self) -> Vec<(PlanKey, u64)> {
         let mut v: Vec<(PlanKey, u64)> = self
@@ -339,6 +373,30 @@ mod tests {
         assert_eq!(r.len(), 2);
         assert_eq!(r.held_bytes(), 20);
         assert_eq!(r.per_plan_hits(), vec![(key(4), 2), (key(8), 0)]);
+    }
+
+    #[test]
+    fn build_latency_is_recorded_and_absorbed() {
+        let mut r: PlanRegistry<Toy> = PlanRegistry::new(RegistryConfig::default());
+        r.get_or_insert_with(&key(4), |_| Toy(10));
+        r.record_build_ns(3_000);
+        r.record_build_ns(1_000);
+        let st = r.stats();
+        assert_eq!(st.builds, 2);
+        assert_eq!(st.build_ns_max, 3_000);
+        assert_eq!(st.mean_build_ns(), 2_000);
+        let mut total = RegistryStats::default();
+        assert_eq!(total.mean_build_ns(), 0, "no builds yet");
+        total.absorb(&st);
+        total.absorb(&RegistryStats {
+            builds: 2,
+            build_ns_total: 8_000,
+            build_ns_max: 7_000,
+            ..RegistryStats::default()
+        });
+        assert_eq!(total.builds, 4);
+        assert_eq!(total.build_ns_max, 7_000);
+        assert_eq!(total.mean_build_ns(), 3_000);
     }
 
     #[test]

@@ -146,6 +146,32 @@ pub fn pair<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen
     )
 }
 
+/// Deterministic DNN-trace-shaped DSA instance triples `(size, alloc_at,
+/// free_at)` for scale tests and benches (`bench_solver_scale`, the heavy
+/// solver-equivalence property): overwhelmingly short-lived blocks
+/// (activations, freed within a few ticks) plus a 2% tail of long-lived
+/// ones (workspaces), sizes from 256 B to 4 MiB, over a horizon
+/// proportional to `n` — the lifetime mix of the paper's profiled
+/// propagations, and the regime where the indexed solver's candidate
+/// redistribution stays near-linear. Not a [`Gen`]: shrinking a
+/// 100k-block instance is pointless, reproducibility via the explicit
+/// seed is what scale runs need.
+pub fn large_dsa_triples(n: usize, seed: u64) -> Vec<(u64, u64, u64)> {
+    let mut rng = Pcg32::seeded(seed);
+    let horizon = (n as u64 * 2).max(64);
+    (0..n)
+        .map(|_| {
+            let alloc_at = rng.below(horizon);
+            let len = if rng.bool(0.98) {
+                rng.range(1, 24) // short-lived activation
+            } else {
+                rng.range(horizon / 32 + 1, horizon / 16 + 2) // long-lived block
+            };
+            (rng.range(256, 4 << 20), alloc_at, alloc_at + len)
+        })
+        .collect()
+}
+
 /// Pick uniformly from a fixed set of values; shrinks toward earlier entries.
 pub fn one_of<T: Clone + PartialEq + 'static>(choices: Vec<T>) -> Gen<T> {
     assert!(!choices.is_empty());
@@ -192,6 +218,19 @@ mod tests {
         assert!((2..=6).contains(&v.len()));
         for s in g.shrinks(&v) {
             assert!(s.len() <= v.len());
+        }
+    }
+
+    #[test]
+    fn large_triples_are_valid_and_deterministic() {
+        let a = large_dsa_triples(500, 7);
+        let b = large_dsa_triples(500, 7);
+        assert_eq!(a, b, "same seed, same instance");
+        assert_ne!(a, large_dsa_triples(500, 8));
+        assert_eq!(a.len(), 500);
+        for &(size, alloc_at, free_at) in &a {
+            assert!(size > 0);
+            assert!(free_at > alloc_at);
         }
     }
 

@@ -181,7 +181,7 @@ fn serving_mixed_batches_route_through_bucketed_plans() {
         }
         total
     });
-    let metrics = server.run(rx).unwrap();
+    let mut metrics = server.run(rx).unwrap();
     let total = driver.join().unwrap();
     assert_eq!(metrics.requests, total);
 
@@ -222,6 +222,15 @@ fn serving_mixed_batches_route_through_bucketed_plans() {
     assert!(metrics.plan_stats().hit_rate() > 0.0);
     // Replay engaged on revisited buckets.
     assert!(shard.staging.fast_path > 0, "bucket plans must replay");
+    // Every used bucket built its plan lazily on the serving path, and
+    // the report surfaces the build latency (max/mean solve_ns).
+    assert!(
+        shard.plans.builds >= used.len() as u64,
+        "each bucket plan solves at least once: {:?}",
+        shard.plans
+    );
+    let report = metrics.report();
+    assert!(report.contains("plan-build latency"), "{report}");
 }
 
 #[test]

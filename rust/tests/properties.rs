@@ -4,6 +4,8 @@
 use pgmo::alloc::profile_guided::ProfileGuidedAllocator;
 use pgmo::alloc::{AllocStats, DeviceAllocator};
 use pgmo::device::SimDevice;
+use pgmo::dsa::indexed::{Changes, IndexedSkyline};
+use pgmo::dsa::policies::{BlockChoice, Policy};
 use pgmo::dsa::problem::DsaInstance;
 use pgmo::dsa::skyline::Skyline;
 use pgmo::dsa::{bestfit, exact, firstfit};
@@ -139,30 +141,66 @@ fn skyline_corpus_dir() -> PathBuf {
 /// One deterministic fuzz episode: a random sequence of `place`/`lift`
 /// operations respecting the documented call contract (placements are
 /// lifetime-contained in their segment; lifts target the lowest-leftmost
-/// line of a multi-segment skyline, mirroring the best-fit solver), with
-/// [`Skyline::check_invariants`] verified after every mutation.
+/// line of a multi-segment skyline, mirroring the best-fit solver).
+/// The reference [`Skyline`] and the [`IndexedSkyline`] are driven in
+/// lockstep: after every mutation both must uphold their invariants,
+/// agree on the full segment list, and have agreed on the chosen line
+/// and returned offset — the bit-for-bit §3.2 equivalence the indexed
+/// solver rests on.
 fn skyline_episode(seed: u64, ops: usize) -> Result<(), String> {
     let mut rng = Pcg32::seeded(seed);
     let horizon = rng.range(2, 96);
     let mut sky = Skyline::new(horizon);
+    let mut indexed = IndexedSkyline::new(horizon);
+    let mut changes = Changes::default();
     for step in 0..ops {
         if sky.len() > 1 && rng.bool(0.35) {
-            sky.lift(sky.lowest_leftmost());
+            let idx = sky.lowest_leftmost();
+            let slot = indexed.lowest_leftmost();
+            if indexed.seg(slot) != sky.seg(idx) {
+                return Err(format!(
+                    "seed {seed} step {step}: chosen lines differ — reference {:?}, indexed {:?}",
+                    sky.seg(idx),
+                    indexed.seg(slot)
+                ));
+            }
+            sky.lift(idx);
+            indexed.lift(slot, &mut changes);
         } else {
             let idx = rng.range_usize(0, sky.len() - 1);
             let seg = sky.seg(idx);
             let alloc_at = rng.range(seg.t0, seg.t1 - 1);
             let free_at = rng.range(alloc_at + 1, seg.t1);
-            let off = sky.place(idx, alloc_at, free_at, rng.range(1, 2048));
+            let size = rng.range(1, 2048);
+            let slot = indexed
+                .slot_at(seg.t0)
+                .ok_or_else(|| format!("seed {seed} step {step}: no indexed segment at {}", seg.t0))?;
+            let off = sky.place(idx, alloc_at, free_at, size);
+            let indexed_off = indexed.place(slot, alloc_at, free_at, size, &mut changes);
             if off != seg.height {
                 return Err(format!(
                     "seed {seed} step {step}: placed at offset {off}, segment height {}",
                     seg.height
                 ));
             }
+            if indexed_off != off {
+                return Err(format!(
+                    "seed {seed} step {step}: indexed offset {indexed_off} != reference {off}"
+                ));
+            }
         }
         if let Err(e) = sky.check_invariants() {
-            return Err(format!("seed {seed} step {step}: {e}"));
+            return Err(format!("seed {seed} step {step}: reference: {e}"));
+        }
+        if let Err(e) = indexed.check_invariants() {
+            return Err(format!("seed {seed} step {step}: indexed: {e}"));
+        }
+        if indexed.segments() != sky.segments() {
+            return Err(format!(
+                "seed {seed} step {step}: segment lists diverge — reference {:?}, indexed {:?}",
+                sky.segments(),
+                indexed.segments()
+            ));
         }
     }
     Ok(())
@@ -228,6 +266,51 @@ fn prop_solver_is_deterministic() {
         let inst = to_instance(t);
         bestfit::solve(&inst) == bestfit::solve(&inst)
     });
+}
+
+// ----- indexed solver ≡ reference solver ------------------------------------
+
+/// The indexed hot path must produce *byte-identical* `Assignment`s
+/// (offsets and peak) to the reference quadratic solver, under every
+/// block-choice policy — determinism and §3.2 semantics preserved.
+fn check_indexed_solver_matches_reference(cases: usize) {
+    testkit::check("indexed ≡ reference", cases, instance_gen(80), |t| {
+        let inst = to_instance(t);
+        BlockChoice::ALL.iter().all(|&choice| {
+            let policy = Policy {
+                block_choice: choice,
+            };
+            bestfit::solve_with(&inst, policy) == bestfit::solve_reference_with(&inst, policy)
+        })
+    });
+}
+
+#[test]
+fn prop_indexed_solver_matches_reference() {
+    check_indexed_solver_matches_reference(150);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases plus a large instance, run by the nightly `cargo test -- --ignored` job"]
+fn prop_indexed_solver_matches_reference_heavy() {
+    check_indexed_solver_matches_reference(1500);
+    // One deep instance well past the property generator's size range:
+    // a DNN-shaped 4k-block trace, still small enough for the quadratic
+    // reference to finish quickly.
+    let inst = DsaInstance::from_triples(&gen::large_dsa_triples(4_000, 0x5ca1e));
+    for choice in BlockChoice::ALL {
+        let policy = Policy {
+            block_choice: choice,
+        };
+        let indexed = bestfit::solve_with(&inst, policy);
+        indexed.validate(&inst).expect("indexed packing sound");
+        assert_eq!(
+            indexed,
+            bestfit::solve_reference_with(&inst, policy),
+            "policy {} diverged at 4k blocks",
+            choice.name()
+        );
+    }
 }
 
 /// Replay returns identical addresses across iterations for any hot
