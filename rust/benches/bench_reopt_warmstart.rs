@@ -1,0 +1,139 @@
+//! Bench: §4.3 reoptimization latency — warm-start incremental re-solve
+//! (`bestfit::resolve`) against a cold re-solve of the merged trace, on
+//! a 10k-block DNN-shaped instance under three deviation streams:
+//!
+//! * **ratchet 0.1%** — every round grows ~10 blocks, the realistic
+//!   §4.3 reopt (one deviating iteration ratchets the handful of
+//!   requests that overran their profiled sizes);
+//! * **ratchet 1%** — a diffuse growth wave; the disturbance closure
+//!   often swallows enough of the instance that `resolve` bails out to
+//!   a fresh solve (the fallbacks column shows how often);
+//! * **mixed-deviation** — ratchets plus occasional lifetime shifts and
+//!   appended blocks (the messier §4.3 traffic).
+//!
+//! Each round chains: the warm assignment becomes the next round's
+//! previous plan, exactly as `ReplayEngine::end_iteration` chains reopts.
+//!
+//! Perf target (ROADMAP.md `## Incremental re-solve`): warm-start reopt
+//! ≥5× faster than the cold solve on ratchet-only deltas (the 0.1%
+//! stream) at 10k blocks.
+//!
+//! Run: `cargo bench --bench bench_reopt_warmstart`
+
+use pgmo::dsa::bestfit::{self, TraceDelta};
+use pgmo::dsa::DsaInstance;
+use pgmo::testkit::gen::{large_dsa_triples, ratchet_triples};
+use pgmo::util::rng::Pcg32;
+use std::time::Instant;
+
+const N: usize = 10_000;
+const ROUNDS: usize = 20;
+
+/// Ratchets plus occasional lifetime shifts and appended blocks.
+fn mixed(rng: &mut Pcg32, triples: &[(u64, u64, u64)]) -> Vec<(u64, u64, u64)> {
+    let horizon = triples.iter().map(|t| t.2).max().unwrap_or(64);
+    let mut out = ratchet_triples(rng, triples, 0.01);
+    for t in out.iter_mut() {
+        if rng.bool(0.002) {
+            let a = rng.below(horizon);
+            *t = (t.0, a, a + rng.range(1, 24));
+        }
+    }
+    if rng.bool(0.5) {
+        for _ in 0..rng.range_usize(1, 10) {
+            let a = rng.below(horizon);
+            out.push((rng.range(256, 4 << 20), a, a + rng.range(1, 24)));
+        }
+    }
+    out
+}
+
+struct StreamResult {
+    warm_us: f64,
+    cold_us: f64,
+    warm_rounds: u64,
+    fallbacks: u64,
+    mean_disturbed: f64,
+    warm_peak: u64,
+    cold_peak: u64,
+}
+
+fn run_stream(ratchet_frac: Option<f64>, seed: u64) -> StreamResult {
+    let mut rng = Pcg32::seeded(seed);
+    let mut triples = large_dsa_triples(N, 0xd5a_77a7);
+    let mut inst = DsaInstance::from_triples(&triples);
+    let mut prev = bestfit::solve(&inst);
+    let (mut warm_ns, mut cold_ns) = (0u128, 0u128);
+    let (mut warm_rounds, mut fallbacks, mut disturbed) = (0u64, 0u64, 0u64);
+    let (mut warm_peak, mut cold_peak) = (0u64, 0u64);
+    for _ in 0..ROUNDS {
+        let mutated = match ratchet_frac {
+            Some(frac) => ratchet_triples(&mut rng, &triples, frac),
+            None => mixed(&mut rng, &triples),
+        };
+        let new_inst = DsaInstance::from_triples(&mutated);
+        let delta = TraceDelta::diff(&inst, &new_inst);
+
+        let t0 = Instant::now();
+        let r = bestfit::resolve(&inst, &prev, &new_inst, &delta);
+        warm_ns += t0.elapsed().as_nanos();
+        let t0 = Instant::now();
+        let cold = bestfit::solve(&new_inst);
+        cold_ns += t0.elapsed().as_nanos();
+
+        r.assignment.validate(&new_inst).expect("warm packing sound");
+        if r.warm {
+            warm_rounds += 1;
+        } else {
+            fallbacks += 1;
+        }
+        disturbed += r.disturbed as u64;
+        warm_peak = r.assignment.peak;
+        cold_peak = cold.peak;
+
+        // Chain like the engine: the warm plan is the next previous plan.
+        triples = mutated;
+        inst = new_inst;
+        prev = r.assignment;
+    }
+    StreamResult {
+        warm_us: warm_ns as f64 / ROUNDS as f64 / 1e3,
+        cold_us: cold_ns as f64 / ROUNDS as f64 / 1e3,
+        warm_rounds,
+        fallbacks,
+        mean_disturbed: disturbed as f64 / ROUNDS as f64,
+        warm_peak,
+        cold_peak,
+    }
+}
+
+fn main() {
+    println!(
+        "{:<16} {:>12} {:>12} {:>9} {:>12} {:>12} {:>14}",
+        "stream", "warm µs", "cold µs", "speedup", "warm/fallbk", "disturbed", "peak warm/cold"
+    );
+    let streams: [(&str, Option<f64>); 3] = [
+        ("ratchet-0.1%", Some(0.001)),
+        ("ratchet-1%", Some(0.01)),
+        ("mixed-deviation", None),
+    ];
+    for (name, ratchet_frac) in streams {
+        let r = run_stream(ratchet_frac, 0x5eed_0001);
+        println!(
+            "{:<16} {:>12.1} {:>12.1} {:>8.1}× {:>9}/{:<2} {:>12.1} {:>9.3}",
+            name,
+            r.warm_us,
+            r.cold_us,
+            r.cold_us / r.warm_us,
+            r.warm_rounds,
+            r.fallbacks,
+            r.mean_disturbed,
+            r.warm_peak as f64 / r.cold_peak as f64,
+        );
+    }
+    println!(
+        "target: ratchet-0.1% warm-start ≥5× faster than cold at {}k blocks \
+         (ROADMAP.md `## Incremental re-solve`)",
+        N / 1000
+    );
+}

@@ -41,8 +41,20 @@ pub struct AllocStats {
     pub device_mallocs: u64,
     /// Times the allocator dumped its cached memory (pool free-all).
     pub free_alls: u64,
-    /// Reoptimization events (replay engine only).
+    /// Reoptimization events (replay engine only); always equals
+    /// `reopt_warm + reopt_cold`.
     pub reopts: u64,
+    /// Ratchet-only reoptimizations served by the warm-start incremental
+    /// re-solve (`bestfit::resolve` kept the undisturbed placements).
+    pub reopt_warm: u64,
+    /// Reoptimizations that paid a full solve: structural deviations,
+    /// plus warm-start attempts that fell back past the quality gate.
+    pub reopt_cold: u64,
+    /// Planned slots rejected by the arena-interval soundness check (a
+    /// live planned block already covered the slot); each one is served
+    /// dynamically instead — never a correctness event, but nonzero
+    /// values mean replay positions stopped corresponding.
+    pub slot_collisions: u64,
     /// Requests served dynamically by the replay engine's escape route
     /// (profiling iteration, interrupted regions, deviations).
     pub escape_allocs: u64,
@@ -67,6 +79,9 @@ impl AllocStats {
         self.device_mallocs += other.device_mallocs;
         self.free_alls += other.free_alls;
         self.reopts += other.reopts;
+        self.reopt_warm += other.reopt_warm;
+        self.reopt_cold += other.reopt_cold;
+        self.slot_collisions += other.slot_collisions;
         self.escape_allocs += other.escape_allocs;
     }
 
@@ -81,6 +96,9 @@ impl AllocStats {
             device_mallocs: self.device_mallocs.saturating_sub(earlier.device_mallocs),
             free_alls: self.free_alls.saturating_sub(earlier.free_alls),
             reopts: self.reopts.saturating_sub(earlier.reopts),
+            reopt_warm: self.reopt_warm.saturating_sub(earlier.reopt_warm),
+            reopt_cold: self.reopt_cold.saturating_sub(earlier.reopt_cold),
+            slot_collisions: self.slot_collisions.saturating_sub(earlier.slot_collisions),
             escape_allocs: self.escape_allocs.saturating_sub(earlier.escape_allocs),
         }
     }

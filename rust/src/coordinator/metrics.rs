@@ -144,7 +144,7 @@ impl ServeMetrics {
         for s in &self.shards {
             out.push_str(&format!(
                 "\n  shard {}: {} reqs in {} batches, replay {:.1}% \
-                 ({} hits / {} escapes), {} reopts, arena {} B",
+                 ({} hits / {} escapes), {} reopts ({} warm / {} cold), arena {} B",
                 s.shard,
                 s.requests,
                 s.batches,
@@ -152,6 +152,8 @@ impl ServeMetrics {
                 s.staging.fast_path,
                 s.staging.escape_allocs,
                 s.staging.reopts,
+                s.staging.reopt_warm,
+                s.staging.reopt_cold,
                 s.arena_bytes,
             ));
             if s.plans.builds > 0 {
@@ -187,12 +189,24 @@ impl ServeMetrics {
         }
         if plans.builds > 0 {
             // The solver speedup end-to-end: how long registry misses
-            // (and reoptimizations) stalled the serving path on a solve.
+            // (and cold reoptimizations) stalled the serving path on a
+            // solve.
             out.push_str(&format!(
                 "\n  plan-build latency: {} solves, max {:.1} µs, mean {:.1} µs",
                 plans.builds,
                 plans.build_ns_max as f64 / 1e3,
                 plans.mean_build_ns() as f64 / 1e3,
+            ));
+        }
+        if plans.reopts() > 0 {
+            // Warm-start effectiveness: how many reopts kept their
+            // placements, and what the incremental re-solve cost.
+            out.push_str(&format!(
+                "\n  reopt: {} warm / {} cold; warm-resolve max {:.1} µs, mean {:.1} µs",
+                plans.reopts_warm,
+                plans.reopts_cold,
+                plans.resolve_ns_max as f64 / 1e3,
+                plans.mean_resolve_ns() as f64 / 1e3,
             ));
         }
         out
@@ -308,6 +322,11 @@ mod tests {
                 builds: 1,
                 build_ns_total: 2_000,
                 build_ns_max: 2_000,
+                reopts_warm: 2,
+                reopts_cold: 1,
+                resolves: 2,
+                resolve_ns_total: 5_000,
+                resolve_ns_max: 4_000,
             },
             ..Default::default()
         });
@@ -324,11 +343,45 @@ mod tests {
         assert_eq!(plans.builds, 3);
         assert_eq!(plans.build_ns_max, 6_000);
         assert_eq!(plans.mean_build_ns(), (9_000 + 2_000) / 3);
+        // Reopt rollup: warm/cold counts and warm-resolve latency.
+        assert_eq!((plans.reopts_warm, plans.reopts_cold), (2, 1));
+        assert_eq!(plans.reopts(), 3);
+        assert_eq!(plans.resolve_ns_max, 4_000);
+        assert_eq!(plans.mean_resolve_ns(), 2_500);
         let report = m.report();
         assert!(report.contains("bucket b=4"), "{report}");
         assert!(report.contains("evictions"), "{report}");
         assert!(report.contains("plan-build latency: 3 solves"), "{report}");
         assert!(report.contains("max 6.0 µs"), "{report}");
         assert!(report.contains("plan-build max"), "per-shard line: {report}");
+        assert!(report.contains("reopt: 2 warm / 1 cold"), "{report}");
+        assert!(report.contains("warm-resolve max 4.0 µs"), "{report}");
+    }
+
+    #[test]
+    fn shard_line_splits_reopt_counters() {
+        let mut m = ServeMetrics {
+            requests: 8,
+            batches: 2,
+            wall: Duration::from_secs(1),
+            shards: vec![ShardMetrics {
+                shard: 0,
+                requests: 8,
+                batches: 2,
+                staging: AllocStats {
+                    n_allocs: 8,
+                    fast_path: 6,
+                    escape_allocs: 2,
+                    reopts: 3,
+                    reopt_warm: 2,
+                    reopt_cold: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let report = m.report();
+        assert!(report.contains("3 reopts (2 warm / 1 cold)"), "{report}");
     }
 }

@@ -400,6 +400,7 @@ impl<'a> ShardWorker<'a> {
         let planner = self.staging.planner(bucket);
         let before = planner.stats();
         let solves_before = planner.solves();
+        let resolves_before = planner.resolves();
         planner.begin_iteration();
 
         // Stage the bucket-padded input batch (constant shape per bucket
@@ -444,12 +445,22 @@ impl<'a> ShardWorker<'a> {
         let delta = planner.stats().since(&before);
         let arena_bytes = planner.arena_bytes();
         // A solve this batch means a plan was built on the serving path —
-        // a registry miss profiling its first iteration, or a deviation
-        // reoptimizing. Surface its latency through the registry stats.
+        // a registry miss profiling its first iteration, or a structural
+        // deviation reoptimizing cold. A resolve means a ratchet
+        // deviation went through the warm-start path. Surface both
+        // latencies through the registry stats.
         let built = planner.solves() > solves_before;
         let build_ns = planner.last_solve_ns();
+        let resolved = planner.resolves() > resolves_before;
+        let resolve_ns = planner.last_resolve_ns();
         if built {
             self.staging.record_build_ns(build_ns);
+        }
+        if resolved {
+            self.staging
+                .record_resolve_ns(delta.reopt_warm > 0, resolve_ns);
+        } else if delta.reopt_cold > 0 {
+            self.staging.record_cold_reopt();
         }
 
         // Budget enforcement may drop cold bucket plans; their counters

@@ -84,9 +84,21 @@ impl StagingPlanner {
         self.engine.last_solve_ns()
     }
 
-    /// How many plans this planner has solved (build + reopts).
+    /// How many plans this planner has solved from scratch via the cold
+    /// path (initial build + structural reopts; warm-start fallbacks
+    /// count under [`resolves`](Self::resolves) instead).
     pub fn solves(&self) -> u64 {
         self.engine.solves()
+    }
+
+    /// How many reoptimizations went through the warm-start path.
+    pub fn resolves(&self) -> u64 {
+        self.engine.resolves()
+    }
+
+    /// Latency of the most recent warm-start re-solve.
+    pub fn last_resolve_ns(&self) -> u64 {
+        self.engine.last_resolve_ns()
     }
 
     pub fn interrupt(&mut self) {
@@ -248,6 +260,18 @@ impl StagingRegistry {
     /// [`PlanRegistry::record_build_ns`]).
     pub fn record_build_ns(&mut self, ns: u64) {
         self.registry.record_build_ns(ns);
+    }
+
+    /// Record one bucket plan warm-start re-solve (see
+    /// [`PlanRegistry::record_resolve_ns`]).
+    pub fn record_resolve_ns(&mut self, warm: bool, ns: u64) {
+        self.registry.record_resolve_ns(warm, ns);
+    }
+
+    /// Record one structural (cold) bucket plan reoptimization (see
+    /// [`PlanRegistry::record_cold_reopt`]).
+    pub fn record_cold_reopt(&mut self) {
+        self.registry.record_cold_reopt();
     }
 
     /// Total bytes held across resident bucket plans (arenas + any live

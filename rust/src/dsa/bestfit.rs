@@ -23,13 +23,23 @@
 //! for byte); `rust/tests/properties.rs` pins the equivalence across all
 //! policies, and `benches/bench_solver_scale.rs` pins the speedup
 //! (targets in ROADMAP.md `## Perf targets`).
+//!
+//! [`resolve`]/[`resolve_with`] warm-start the solver for §4.3
+//! reoptimization: given the previous instance, its assignment, and a
+//! [`TraceDelta`], they keep every placement the delta does not disturb,
+//! seed the skyline from the kept placements' envelope, and re-run the
+//! best-fit loop over the disturbed blocks only.
+//! [`resolve_reference_with`] is the quadratic spec of the same
+//! operation, driven in lockstep by the reopt differential suite
+//! (ROADMAP.md `## Incremental re-solve`).
 
 use super::candidates::CandidateIndex;
 use super::indexed::{Changes, IndexedSkyline};
 use super::policies::Policy;
 use super::problem::DsaInstance;
-use super::skyline::Skyline;
+use super::skyline::{Seg, Skyline};
 use super::solution::Assignment;
+use std::collections::BTreeMap;
 
 /// Solve with the paper's default policy (longest lifetime).
 pub fn solve(inst: &DsaInstance) -> Assignment {
@@ -147,6 +157,556 @@ pub fn solve_reference_with(inst: &DsaInstance, policy: Policy) -> Assignment {
 
     debug_assert!(sky.check_invariants().is_ok());
     Assignment::from_offsets(inst, offsets)
+}
+
+// ----- §4.3 warm-start incremental re-solve ----------------------------------
+
+/// Envelope height marking time regions no disturbed block can occupy.
+/// Far above any real packing height (peaks are bounded by the total
+/// block size), so such a segment is never the chosen line while real
+/// candidates remain, and a lift into one only retires a window that
+/// could host nothing anyway.
+const DEAD_ZONE: u64 = u64::MAX >> 2;
+
+/// How one block of a re-profiled instance relates to the previously
+/// solved instance (ids are positional — the profiler's λ).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockDelta {
+    /// Same size and lifetime as previous block `prev`.
+    Unchanged { prev: usize },
+    /// Same lifetime as previous block `prev`, different size (the §4.3
+    /// size ratchet).
+    Resized { prev: usize },
+    /// Lifetime changed (a shifted propagation step).
+    Moved { prev: usize },
+    /// No previous counterpart.
+    Added,
+}
+
+/// The delta between a previously solved instance and a re-profiled one
+/// — what [`resolve`] re-solves instead of the whole trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceDelta {
+    /// Per new-instance block (index = new id).
+    pub blocks: Vec<BlockDelta>,
+    /// Previous ids with no surviving counterpart.
+    pub removed: Vec<usize>,
+}
+
+impl TraceDelta {
+    /// Positional diff (replay identifies blocks by position, §4.2):
+    /// shared positions compare lifetime then size, surplus new positions
+    /// are additions, surplus previous positions removals.
+    pub fn diff(prev: &DsaInstance, new: &DsaInstance) -> TraceDelta {
+        let shared = prev.len().min(new.len());
+        let mut blocks = Vec::with_capacity(new.len());
+        for i in 0..shared {
+            let (p, n) = (&prev.blocks[i], &new.blocks[i]);
+            blocks.push(if (p.alloc_at, p.free_at) != (n.alloc_at, n.free_at) {
+                BlockDelta::Moved { prev: i }
+            } else if p.size != n.size {
+                BlockDelta::Resized { prev: i }
+            } else {
+                BlockDelta::Unchanged { prev: i }
+            });
+        }
+        blocks.extend((shared..new.len()).map(|_| BlockDelta::Added));
+        TraceDelta {
+            blocks,
+            removed: (shared..prev.len()).collect(),
+        }
+    }
+
+    /// Number of blocks the delta touches (changed + added + removed).
+    pub fn changed(&self) -> usize {
+        self.removed.len()
+            + self
+                .blocks
+                .iter()
+                .filter(|d| !matches!(d, BlockDelta::Unchanged { .. }))
+                .count()
+    }
+
+    /// A pure size ratchet: the event skeleton is unchanged and sizes
+    /// only grew — the §4.3 reopt that leaves almost every placement
+    /// valid, and the case the engine warm-starts.
+    pub fn is_ratchet_only(&self, prev: &DsaInstance, new: &DsaInstance) -> bool {
+        self.removed.is_empty()
+            && self.blocks.iter().enumerate().all(|(id, d)| match *d {
+                BlockDelta::Unchanged { .. } => true,
+                BlockDelta::Resized { prev: p } => new.blocks[id].size >= prev.blocks[p].size,
+                BlockDelta::Moved { .. } | BlockDelta::Added => false,
+            })
+    }
+}
+
+/// Result of a warm-start [`resolve`]: the assignment plus how it was
+/// produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Resolution {
+    pub assignment: Assignment,
+    /// Placements re-solved: the delta's blocks plus the transitive
+    /// closure of placements stacked above them. Equals the instance
+    /// size after a fallback.
+    pub disturbed: usize,
+    /// False when the incremental path paid a full solve (the warm
+    /// packing regressed past the quality gate).
+    pub warm: bool,
+}
+
+/// The keep/disturb split of a warm re-solve: kept offsets (and their
+/// placements' `(alloc_at, free_at, top)` rectangles), plus the new ids
+/// to re-place.
+struct WarmSplit {
+    offsets: Vec<u64>,
+    disturbed: Vec<usize>,
+    kept: Vec<(u64, u64, u64)>,
+}
+
+/// Lifetime-overlap adjacency of the previous instance (which pairs may
+/// ever touch in address space), in CSR form — two flat arrays, no
+/// per-node allocations, so building it stays a small fraction of a
+/// full solve even at 100k blocks.
+struct Adjacency {
+    start: Vec<usize>,
+    flat: Vec<usize>,
+}
+
+impl Adjacency {
+    fn neighbours(&self, i: usize) -> &[usize] {
+        &self.flat[self.start[i]..self.start[i + 1]]
+    }
+}
+
+fn overlap_adjacency(prev_inst: &DsaInstance) -> Adjacency {
+    let n = prev_inst.len();
+    let pairs = prev_inst.colliding_pairs();
+    let mut start = vec![0usize; n + 1];
+    for &(i, j) in &pairs {
+        start[i + 1] += 1;
+        start[j + 1] += 1;
+    }
+    for k in 0..n {
+        start[k + 1] += start[k];
+    }
+    let mut cursor = start.clone();
+    let mut flat = vec![0usize; pairs.len() * 2];
+    for &(i, j) in &pairs {
+        flat[cursor[i]] = j;
+        cursor[i] += 1;
+        flat[cursor[j]] = i;
+        cursor[j] += 1;
+    }
+    Adjacency { start, flat }
+}
+
+/// Disturb every previous placement stacked (directly or transitively)
+/// above a delta-touched one, so the re-solve can compact the freed or
+/// grown region instead of piling new placements on top of stale ones.
+fn close_upward(
+    prev_inst: &DsaInstance,
+    prev: &Assignment,
+    adj: &Adjacency,
+    disturbed: &mut [bool],
+) {
+    let mut queue: Vec<usize> = (0..prev_inst.len()).filter(|&i| disturbed[i]).collect();
+    while let Some(i) = queue.pop() {
+        let top = prev.offsets[i] + prev_inst.blocks[i].size;
+        for &j in adj.neighbours(i) {
+            if !disturbed[j] && prev.offsets[j] >= top {
+                disturbed[j] = true;
+                queue.push(j);
+            }
+        }
+    }
+}
+
+/// The seeded skyline of a warm re-solve: inside the union of disturbed
+/// lifetimes, the upper envelope of kept placements (their tops); outside
+/// it, the [`DEAD_ZONE`] line, so the solver neither walks nor wastes
+/// space on regions where nothing can be placed.
+fn kept_envelope(
+    new_inst: &DsaInstance,
+    kept: &[(u64, u64, u64)], // (alloc_at, free_at, top) of kept placements
+    disturbed: &[usize],
+) -> Vec<Seg> {
+    let horizon = new_inst.horizon().max(1);
+    // Merge disturbed lifetimes into disjoint domain intervals.
+    let mut domain: Vec<(u64, u64)> = disturbed
+        .iter()
+        .map(|&id| (new_inst.blocks[id].alloc_at, new_inst.blocks[id].free_at))
+        .collect();
+    domain.sort_unstable();
+    let mut merged: Vec<(u64, u64)> = Vec::with_capacity(domain.len());
+    for (a, f) in domain {
+        if let Some(last) = merged.last_mut() {
+            if a <= last.1 {
+                last.1 = last.1.max(f);
+                continue;
+            }
+        }
+        merged.push((a, f));
+    }
+
+    // Height-change events of kept placements intersecting the domain
+    // (+top at alloc, −top at free; frees sort first at equal ticks since
+    // half-open lifetimes do not collide).
+    let mut events: Vec<(u64, bool, u64)> = Vec::new();
+    for &(a, f, top) in kept {
+        let i = merged.partition_point(|&(_, e)| e <= a);
+        if merged.get(i).is_some_and(|&(s, _)| s < f) {
+            events.push((a, true, top));
+            events.push((f, false, top));
+        }
+    }
+    events.sort_unstable();
+
+    // Sweep a multiset of live kept tops across every interesting tick,
+    // overriding regions outside the domain with the dead-zone height and
+    // merging equal-height neighbours.
+    let mut ticks: Vec<u64> = events.iter().map(|&(t, _, _)| t).collect();
+    for &(s, e) in &merged {
+        ticks.push(s);
+        ticks.push(e);
+    }
+    ticks.push(0);
+    ticks.push(horizon);
+    ticks.sort_unstable();
+    ticks.dedup();
+
+    let mut live: BTreeMap<u64, u32> = BTreeMap::new();
+    let mut segs: Vec<Seg> = Vec::new();
+    let (mut ev, mut dom) = (0usize, 0usize);
+    for w in ticks.windows(2) {
+        let (t0, t1) = (w[0], w[1]);
+        while ev < events.len() && events[ev].0 <= t0 {
+            let (_, is_alloc, top) = events[ev];
+            if is_alloc {
+                *live.entry(top).or_insert(0) += 1;
+            } else {
+                match live.get_mut(&top) {
+                    Some(c) if *c > 1 => *c -= 1,
+                    _ => {
+                        live.remove(&top);
+                    }
+                }
+            }
+            ev += 1;
+        }
+        while dom < merged.len() && merged[dom].1 <= t0 {
+            dom += 1;
+        }
+        let inside = merged.get(dom).is_some_and(|&(s, _)| s <= t0);
+        let height = if inside {
+            live.keys().next_back().copied().unwrap_or(0)
+        } else {
+            DEAD_ZONE
+        };
+        if let Some(last) = segs.last_mut() {
+            if last.height == height {
+                last.t1 = t1;
+                continue;
+            }
+        }
+        segs.push(Seg { t0, t1, height });
+    }
+    segs
+}
+
+/// Split the new instance into kept placements (offsets reused from the
+/// previous assignment) and disturbed blocks. A resized block whose
+/// growth fits the slack above its old placement — no time-overlapping
+/// neighbour starts inside the grown band — is an *in-place ratchet*: it
+/// keeps its offset (at the new size) and disturbs nothing, which is the
+/// §4.3 common case. Shrinks always fit in place.
+fn warm_split(
+    prev_inst: &DsaInstance,
+    prev: &Assignment,
+    new_inst: &DsaInstance,
+    delta: &TraceDelta,
+) -> WarmSplit {
+    let n_prev = prev_inst.len();
+    let adj = overlap_adjacency(prev_inst);
+    let mut disturbed_prev = vec![false; n_prev];
+    // prev id → the new id carrying it (usize::MAX = removed).
+    let mut carrier = vec![usize::MAX; n_prev];
+    let mut disturbed: Vec<usize> = Vec::new();
+    for (id, d) in delta.blocks.iter().enumerate() {
+        match *d {
+            BlockDelta::Unchanged { prev: p } => carrier[p] = id,
+            BlockDelta::Resized { prev: p } => {
+                carrier[p] = id;
+                let old_top = prev.offsets[p] + prev_inst.blocks[p].size;
+                let new_top = prev.offsets[p] + new_inst.blocks[id].size;
+                // The grown band [old_top, new_top) collides iff some
+                // time-overlapping neighbour starts inside it (the old
+                // layout already keeps everything else disjoint).
+                let collides = new_top > old_top
+                    && adj
+                        .neighbours(p)
+                        .iter()
+                        .any(|&j| (old_top..new_top).contains(&prev.offsets[j]));
+                if collides {
+                    disturbed_prev[p] = true;
+                }
+            }
+            BlockDelta::Moved { prev: p } => {
+                carrier[p] = id;
+                disturbed_prev[p] = true;
+            }
+            BlockDelta::Added => disturbed.push(id),
+        }
+    }
+    for &r in &delta.removed {
+        disturbed_prev[r] = true;
+    }
+    close_upward(prev_inst, prev, &adj, &mut disturbed_prev);
+
+    let mut offsets = vec![0u64; new_inst.len()];
+    let mut kept: Vec<(u64, u64, u64)> = Vec::new();
+    for (p, &id) in carrier.iter().enumerate() {
+        if id == usize::MAX {
+            continue; // removed
+        }
+        if disturbed_prev[p] {
+            disturbed.push(id);
+        } else {
+            // Kept (possibly grown in place): the envelope rectangle uses
+            // the new size at the old offset.
+            let b = &new_inst.blocks[id];
+            offsets[id] = prev.offsets[p];
+            kept.push((b.alloc_at, b.free_at, prev.offsets[p] + b.size));
+        }
+    }
+    disturbed.sort_unstable();
+    WarmSplit {
+        offsets,
+        disturbed,
+        kept,
+    }
+}
+
+/// The indexed best-fit loop over the disturbed blocks, seeded from the
+/// envelope (the hot warm-start path).
+fn warm_place_indexed(
+    new_inst: &DsaInstance,
+    policy: Policy,
+    offsets: &mut [u64],
+    disturbed: &[usize],
+    envelope: &[Seg],
+) {
+    let mut sky = IndexedSkyline::from_segments(envelope);
+    let mut cands = CandidateIndex::with_blocks(new_inst, policy, disturbed, envelope);
+    let mut remaining = disturbed.len();
+    let mut changes = Changes::default();
+    while remaining > 0 {
+        let slot = sky.lowest_leftmost();
+        let seg = sky.seg(slot);
+        match cands.best(seg.t0) {
+            Some(bid) => {
+                let b = new_inst.blocks[bid];
+                cands.place(bid);
+                offsets[bid] = sky.place(slot, b.alloc_at, b.free_at, b.size, &mut changes);
+                remaining -= 1;
+            }
+            // Nothing fits the chosen line; a single-segment skyline
+            // always has candidates (every lifetime is contained in it).
+            None => sky.lift(slot, &mut changes),
+        }
+        cands.apply(&changes);
+    }
+    debug_assert!(sky.check_invariants().is_ok());
+}
+
+/// The quadratic spec of the warm placement loop: reference `Vec` skyline
+/// plus a linear rescan of the disturbed blocks per step.
+fn warm_place_reference(
+    new_inst: &DsaInstance,
+    policy: Policy,
+    offsets: &mut [u64],
+    disturbed: &[usize],
+    envelope: &[Seg],
+) {
+    let mut sky = Skyline::from_segments(envelope.to_vec());
+    let mut unplaced = disturbed.to_vec();
+    while !unplaced.is_empty() {
+        let idx = sky.lowest_leftmost();
+        let seg = sky.seg(idx);
+        let mut best: Option<usize> = None;
+        for &bid in &unplaced {
+            let b = &new_inst.blocks[bid];
+            if !seg.contains(b.alloc_at, b.free_at) {
+                continue;
+            }
+            match best {
+                None => best = Some(bid),
+                Some(cur) => {
+                    if policy.block_choice.prefer(b, &new_inst.blocks[cur]) {
+                        best = Some(bid);
+                    }
+                }
+            }
+        }
+        match best {
+            Some(bid) => {
+                let b = new_inst.blocks[bid];
+                offsets[bid] = sky.place(idx, b.alloc_at, b.free_at, b.size);
+                unplaced.retain(|&x| x != bid);
+            }
+            None => sky.lift(idx),
+        }
+    }
+    debug_assert!(sky.check_invariants().is_ok());
+}
+
+/// Warm-start §4.3 re-solve with the paper's default policy (see
+/// [`resolve_with`]).
+pub fn resolve(
+    prev_inst: &DsaInstance,
+    prev: &Assignment,
+    new_inst: &DsaInstance,
+    delta: &TraceDelta,
+) -> Resolution {
+    resolve_with(prev_inst, prev, new_inst, delta, Policy::default())
+}
+
+/// Warm-start incremental re-solve (§4.3 reoptimization). Size growth
+/// that fits the slack above a block's old placement is absorbed *in
+/// place* (offset reused, nothing re-solved — the common ratchet).
+/// Colliding growth, lifetime shifts, additions, and removals disturb
+/// their blocks plus the transitive closure of placements stacked above
+/// them; every other placement keeps its offset, the kept placements'
+/// envelope seeds the indexed skyline, and the best-fit loop re-runs
+/// over the disturbed blocks only. Two fallbacks pay a full solve
+/// instead (`warm: false`): a disturbance closure swallowing more than
+/// half the instance, and — on ratchet-only deltas — a quality gate
+/// that re-solves when the warm packing outgrows both the previous
+/// arena and the new liveness bound, keeping the tighter packing. The
+/// resulting guarantee: on ratchet-only deltas the returned peak never
+/// exceeds `max(prev.peak, cold peak)` — a ratchet reopt never *grows*
+/// the arena past a cold solve (the heuristic is not size-monotone, so
+/// a packing already inside the held arena may sit marginally above a
+/// fresh solve; that costs no memory).
+pub fn resolve_with(
+    prev_inst: &DsaInstance,
+    prev: &Assignment,
+    new_inst: &DsaInstance,
+    delta: &TraceDelta,
+    policy: Policy,
+) -> Resolution {
+    resolve_impl(prev_inst, prev, new_inst, delta, policy, false)
+}
+
+/// Reference warm-start re-solve: identical keep/disturb/envelope logic,
+/// but the placement loop runs on the reference `Vec` skyline with a
+/// linear candidate rescan. [`resolve_with`] must match it byte for byte;
+/// the reopt differential suite (`rust/tests/properties.rs`) pins the
+/// equivalence.
+pub fn resolve_reference_with(
+    prev_inst: &DsaInstance,
+    prev: &Assignment,
+    new_inst: &DsaInstance,
+    delta: &TraceDelta,
+    policy: Policy,
+) -> Resolution {
+    resolve_impl(prev_inst, prev, new_inst, delta, policy, true)
+}
+
+fn resolve_impl(
+    prev_inst: &DsaInstance,
+    prev: &Assignment,
+    new_inst: &DsaInstance,
+    delta: &TraceDelta,
+    policy: Policy,
+    reference: bool,
+) -> Resolution {
+    assert_eq!(
+        prev.offsets.len(),
+        prev_inst.len(),
+        "assignment does not cover the previous instance"
+    );
+    assert_eq!(
+        delta.blocks.len(),
+        new_inst.len(),
+        "delta does not cover the new instance"
+    );
+    if new_inst.is_empty() {
+        return Resolution {
+            assignment: Assignment {
+                offsets: Vec::new(),
+                peak: 0,
+            },
+            disturbed: 0,
+            warm: true,
+        };
+    }
+    let mut split = warm_split(prev_inst, prev, new_inst, delta);
+    let disturbed = split.disturbed.len();
+    // Hopeless warm-start: once the disturbance closure swallows most of
+    // the instance, the incremental path cannot beat a fresh solve — go
+    // straight to it instead of paying warm + gate + cold.
+    if disturbed * 2 > new_inst.len() {
+        let cold = if reference {
+            solve_reference_with(new_inst, policy)
+        } else {
+            solve_with(new_inst, policy)
+        };
+        return Resolution {
+            assignment: cold,
+            disturbed: new_inst.len(),
+            warm: false,
+        };
+    }
+    if disturbed > 0 {
+        let envelope = kept_envelope(new_inst, &split.kept, &split.disturbed);
+        if reference {
+            warm_place_reference(
+                new_inst,
+                policy,
+                &mut split.offsets,
+                &split.disturbed,
+                &envelope,
+            );
+        } else {
+            warm_place_indexed(
+                new_inst,
+                policy,
+                &mut split.offsets,
+                &split.disturbed,
+                &envelope,
+            );
+        }
+    }
+    let assignment = Assignment::from_offsets(new_inst, split.offsets);
+    debug_assert!(assignment.validate(new_inst).is_ok());
+
+    if delta.is_ratchet_only(prev_inst, new_inst) {
+        let bound = prev.peak.max(new_inst.lower_bound());
+        if assignment.peak > bound {
+            // Quality gate: warm regressed — pay one full solve, keep
+            // whichever packing is tighter.
+            let cold = if reference {
+                solve_reference_with(new_inst, policy)
+            } else {
+                solve_with(new_inst, policy)
+            };
+            let best = if cold.peak < assignment.peak {
+                cold
+            } else {
+                assignment
+            };
+            return Resolution {
+                assignment: best,
+                disturbed: new_inst.len(),
+                warm: false,
+            };
+        }
+    }
+    Resolution {
+        assignment,
+        disturbed,
+        warm: true,
+    }
 }
 
 #[cfg(test)]
@@ -280,5 +840,195 @@ mod tests {
         let a = solve(&inst);
         let b = solve(&inst);
         assert_eq!(a, b);
+    }
+
+    // ----- warm-start resolve ------------------------------------------------
+
+    #[test]
+    fn delta_diff_classifies_positionally() {
+        let prev = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (5, 5, 7)]);
+        let new = DsaInstance::from_triples(&[(10, 0, 4), (32, 2, 6), (5, 5, 8), (9, 1, 3)]);
+        let d = TraceDelta::diff(&prev, &new);
+        assert_eq!(
+            d.blocks,
+            vec![
+                BlockDelta::Unchanged { prev: 0 },
+                BlockDelta::Resized { prev: 1 },
+                BlockDelta::Moved { prev: 2 },
+                BlockDelta::Added,
+            ]
+        );
+        assert!(d.removed.is_empty());
+        assert_eq!(d.changed(), 3);
+        assert!(!d.is_ratchet_only(&prev, &new));
+
+        let shorter = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6)]);
+        let d = TraceDelta::diff(&prev, &shorter);
+        assert_eq!(d.removed, vec![2]);
+        assert!(!d.is_ratchet_only(&prev, &shorter));
+
+        let ratchet = DsaInstance::from_triples(&[(10, 0, 4), (28, 2, 6), (5, 5, 7)]);
+        let d = TraceDelta::diff(&prev, &ratchet);
+        assert!(d.is_ratchet_only(&prev, &ratchet));
+        assert_eq!(d.changed(), 1);
+
+        let shrink = DsaInstance::from_triples(&[(10, 0, 4), (2, 2, 6), (5, 5, 7)]);
+        let d = TraceDelta::diff(&prev, &shrink);
+        assert!(!d.is_ratchet_only(&prev, &shrink), "shrinks are not ratchets");
+    }
+
+    #[test]
+    fn resolve_grows_in_place_when_slack_allows() {
+        // Block 2 shares no lifetime with anything: its growth fits the
+        // open slack above it, so the ratchet is in-place — nothing is
+        // re-solved at all.
+        let prev_inst = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (5, 10, 14)]);
+        let prev = solve(&prev_inst);
+        let new_inst = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (40, 10, 14)]);
+        let delta = TraceDelta::diff(&prev_inst, &new_inst);
+        let r = resolve(&prev_inst, &prev, &new_inst, &delta);
+        r.assignment.validate(&new_inst).unwrap();
+        assert!(r.warm);
+        assert_eq!(r.disturbed, 0, "slack growth disturbs nothing");
+        assert_eq!(r.assignment.offsets, prev.offsets, "every offset reused");
+        assert_eq!(r.assignment.peak, 40, "the arena just grows");
+    }
+
+    #[test]
+    fn resolve_re_places_colliding_growth_only() {
+        // Previous layout: block 1 at the floor, block 0 stacked above it
+        // (they overlap in [2,4)); blocks 2 and 3 live alone at later
+        // times. Growing block 1 into block 0's offset re-places exactly
+        // that stack; blocks 2 and 3 never move.
+        let prev_inst =
+            DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (5, 10, 14), (7, 20, 24)]);
+        let prev = solve(&prev_inst);
+        assert_eq!(prev.offsets, vec![20, 0, 0, 0]);
+        let new_inst =
+            DsaInstance::from_triples(&[(10, 0, 4), (25, 2, 6), (5, 10, 14), (7, 20, 24)]);
+        let delta = TraceDelta::diff(&prev_inst, &new_inst);
+        let r = resolve(&prev_inst, &prev, &new_inst, &delta);
+        r.assignment.validate(&new_inst).unwrap();
+        assert!(r.warm);
+        assert_eq!(r.disturbed, 2, "the grown block and its stack re-place");
+        assert_eq!(r.assignment.offsets[2], prev.offsets[2]);
+        assert_eq!(
+            r.assignment.offsets[3], prev.offsets[3],
+            "time-disjoint placements are untouched"
+        );
+        assert_eq!(r.assignment.peak, 35, "liveness-tight after the re-pack");
+    }
+
+    #[test]
+    fn resolve_recompacts_the_disturbed_stack() {
+        // Three stacked blocks; growing the bottom one disturbs the whole
+        // stack (transitive upward closure). With everything disturbed the
+        // hopeless-warm bailout pays one fresh solve outright — and the
+        // result is still liveness-tight rather than stacked on stale
+        // placements.
+        let prev_inst = DsaInstance::from_triples(&[(10, 0, 8), (5, 1, 7), (2, 2, 6)]);
+        let prev = solve(&prev_inst);
+        let new_inst = DsaInstance::from_triples(&[(16, 0, 8), (5, 1, 7), (2, 2, 6)]);
+        let delta = TraceDelta::diff(&prev_inst, &new_inst);
+        let r = resolve(&prev_inst, &prev, &new_inst, &delta);
+        r.assignment.validate(&new_inst).unwrap();
+        assert_eq!(r.disturbed, 3, "the stack above the grown block re-solves");
+        assert_eq!(r.assignment.peak, 23, "liveness-tight after recompaction");
+        assert!(!r.warm, "a fully-disturbed instance skips the warm path");
+    }
+
+    #[test]
+    fn resolve_reclaims_removed_space() {
+        let prev_inst = DsaInstance::from_triples(&[(10, 0, 8), (5, 1, 7), (2, 2, 6)]);
+        let prev = solve(&prev_inst);
+        // The bottom block vanishes (shorter propagation): new 0 ← prev 1
+        // and new 1 ← prev 2 survive unchanged, but the upward closure of
+        // the removed floor block re-places them, compacting the stack.
+        let new_inst = DsaInstance::from_triples(&[(5, 1, 7), (2, 2, 6)]);
+        let delta = TraceDelta {
+            blocks: vec![
+                BlockDelta::Unchanged { prev: 1 },
+                BlockDelta::Unchanged { prev: 2 },
+            ],
+            removed: vec![0],
+        };
+        let r = resolve(&prev_inst, &prev, &new_inst, &delta);
+        r.assignment.validate(&new_inst).unwrap();
+        assert_eq!(r.disturbed, 2, "removal disturbs the stack above it");
+        assert_eq!(r.assignment.peak, 7, "freed floor space is reused");
+    }
+
+    #[test]
+    fn resolve_empty_new_instance() {
+        let prev_inst = DsaInstance::from_triples(&[(10, 0, 4)]);
+        let prev = solve(&prev_inst);
+        let new_inst = DsaInstance::new(vec![]);
+        let delta = TraceDelta::diff(&prev_inst, &new_inst);
+        let r = resolve(&prev_inst, &prev, &new_inst, &delta);
+        assert_eq!(r.assignment.peak, 0);
+        assert_eq!(r.disturbed, 0);
+    }
+
+    #[test]
+    fn resolve_from_empty_previous_places_everything() {
+        let prev_inst = DsaInstance::new(vec![]);
+        let prev = solve(&prev_inst);
+        let new_inst = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6)]);
+        let delta = TraceDelta::diff(&prev_inst, &new_inst);
+        let r = resolve(&prev_inst, &prev, &new_inst, &delta);
+        r.assignment.validate(&new_inst).unwrap();
+        assert_eq!(r.disturbed, 2);
+    }
+
+    #[test]
+    fn resolve_matches_reference_on_random_deltas() {
+        let mut rng = Pcg32::seeded(0x4e50);
+        for case in 0..40 {
+            let n = rng.range_usize(1, 50);
+            let triples: Vec<(u64, u64, u64)> = (0..n)
+                .map(|_| {
+                    let a = rng.range(0, 120);
+                    (rng.range(1, 2048), a, a + rng.range(1, 40))
+                })
+                .collect();
+            let prev_inst = DsaInstance::from_triples(&triples);
+            // Random delta: ratchet some, shift some, append/drop a tail.
+            let mut mutated = triples.clone();
+            for t in mutated.iter_mut() {
+                if rng.bool(0.25) {
+                    t.0 += rng.range(1, 2048);
+                }
+                if rng.bool(0.1) {
+                    let a = rng.range(0, 120);
+                    t.1 = a;
+                    t.2 = a + rng.range(1, 40);
+                }
+            }
+            if rng.bool(0.3) {
+                for _ in 0..rng.range_usize(1, 5) {
+                    let a = rng.range(0, 120);
+                    mutated.push((rng.range(1, 2048), a, a + rng.range(1, 40)));
+                }
+            } else if rng.bool(0.3) && mutated.len() > 1 {
+                mutated.truncate(mutated.len() - rng.range_usize(1, mutated.len() - 1));
+            }
+            let new_inst = DsaInstance::from_triples(&mutated);
+            let delta = TraceDelta::diff(&prev_inst, &new_inst);
+            for choice in BlockChoice::ALL {
+                let policy = Policy { block_choice: choice };
+                let prev = solve_with(&prev_inst, policy);
+                let warm = resolve_with(&prev_inst, &prev, &new_inst, &delta, policy);
+                warm.assignment
+                    .validate(&new_inst)
+                    .unwrap_or_else(|e| panic!("case {case} policy {}: {e}", choice.name()));
+                let reference =
+                    resolve_reference_with(&prev_inst, &prev, &new_inst, &delta, policy);
+                assert_eq!(
+                    warm, reference,
+                    "case {case}: policy {} diverged from the reference warm path",
+                    choice.name()
+                );
+            }
+        }
     }
 }

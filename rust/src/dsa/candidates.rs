@@ -29,6 +29,7 @@
 use super::indexed::{ChangeEvent, Changes, Span};
 use super::policies::Policy;
 use super::problem::DsaInstance;
+use super::skyline::Seg;
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, HashMap};
 
@@ -83,6 +84,51 @@ impl CandidateIndex {
             active,
             parked: HashMap::new(),
         }
+    }
+
+    /// Index only the listed blocks, distributed over a seeded window
+    /// partition (the warm-start re-solve's kept-placement envelope
+    /// instead of a fresh single-segment skyline). `windows` must be the
+    /// seeded skyline's segments in time order; every listed block's
+    /// lifetime must lie inside the covered span. Unlisted blocks are
+    /// treated as already placed.
+    pub fn with_blocks(
+        inst: &DsaInstance,
+        policy: Policy,
+        ids: &[usize],
+        windows: &[Seg],
+    ) -> CandidateIndex {
+        let keys: Vec<CandKey> = inst
+            .blocks
+            .iter()
+            .map(|b| policy.block_choice.order_key(b))
+            .collect();
+        let lifetimes: Vec<(u64, u64)> =
+            inst.blocks.iter().map(|b| (b.alloc_at, b.free_at)).collect();
+        let mut idx = CandidateIndex {
+            loc: vec![Loc::Placed; keys.len()],
+            keys,
+            lifetimes,
+            active: HashMap::new(),
+            parked: HashMap::new(),
+        };
+        for &id in ids {
+            let (a, f) = idx.lifetimes[id];
+            // The window holding the alloc tick; windows partition time.
+            let w = windows.partition_point(|s| s.t1 <= a);
+            let win = &windows[w];
+            debug_assert!(win.t0 <= a && a < win.t1, "alloc tick outside windows");
+            if f <= win.t1 {
+                idx.active.entry(win.t0).or_default().insert(idx.keys[id]);
+                idx.loc[id] = Loc::Active(win.t0);
+            } else {
+                // Crosses the window's right edge: that edge is a current
+                // boundary strictly inside the lifetime.
+                idx.parked.entry(win.t1).or_default().push(id);
+                idx.loc[id] = Loc::Parked(win.t1);
+            }
+        }
+        idx
     }
 
     /// The preferred unplaced block of the window starting at
@@ -259,6 +305,35 @@ mod tests {
         idx.apply(&ch);
         assert_eq!(idx.best(0), Some(0));
         assert_eq!(sky.segments().len(), 2);
+    }
+
+    #[test]
+    fn with_blocks_seeds_windows_and_parks_crossers() {
+        // Windows [0,4) [4,8) [8,12): block 0 fits the first, block 1 the
+        // last, block 2 crosses the boundary at 8, block 3 is unlisted.
+        let inst =
+            DsaInstance::from_triples(&[(1, 0, 4), (1, 8, 12), (1, 5, 10), (1, 0, 2)]);
+        let windows = [
+            Seg { t0: 0, t1: 4, height: 2 },
+            Seg { t0: 4, t1: 8, height: 0 },
+            Seg { t0: 8, t1: 12, height: 5 },
+        ];
+        let mut idx =
+            CandidateIndex::with_blocks(&inst, Policy::default(), &[0, 1, 2], &windows);
+        assert_eq!(idx.remaining(), 3, "unlisted block 3 is not indexed");
+        assert_eq!(idx.best(0), Some(0));
+        assert_eq!(idx.best(8), Some(1));
+        assert_eq!(idx.best(4), None, "crosser is parked, not active");
+        // Lift until the boundary at 8 vanishes: the crosser revives.
+        let mut sky = IndexedSkyline::from_segments(&windows);
+        let mut ch = Changes::default();
+        sky.lift(sky.lowest_leftmost(), &mut ch); // [4,8)@0 → 2, merges left
+        idx.apply(&ch);
+        assert_eq!(idx.best(0), Some(0), "crosser still parked after left merge");
+        sky.lift(sky.lowest_leftmost(), &mut ch); // [0,8)@2 → 5, merges right
+        idx.apply(&ch);
+        assert_eq!(sky.segments().len(), 1);
+        assert_eq!(idx.best(0), Some(2), "revived crosser wins on lifetime");
     }
 
     #[test]

@@ -110,6 +110,46 @@ impl IndexedSkyline {
         }
     }
 
+    /// Seed an indexed skyline from an explicit segment list — the
+    /// warm-start re-solve (`bestfit::resolve`) starts from the envelope
+    /// of kept placements instead of a flat line. The list must satisfy
+    /// the structural invariants: contiguous cover starting at 0,
+    /// positive spans, height-distinct neighbours.
+    pub fn from_segments(segs: &[Seg]) -> IndexedSkyline {
+        assert!(!segs.is_empty(), "empty skyline");
+        let mut nodes = Vec::with_capacity(segs.len());
+        let mut index = BTreeSet::new();
+        let mut t = 0;
+        for (i, &seg) in segs.iter().enumerate() {
+            assert!(
+                seg.t0 == t && seg.t1 > seg.t0,
+                "segment {i} breaks the contiguous cover"
+            );
+            if i > 0 {
+                assert_ne!(
+                    segs[i - 1].height,
+                    seg.height,
+                    "equal heights at segments {} and {i}",
+                    i - 1
+                );
+            }
+            t = seg.t1;
+            nodes.push(Node {
+                seg,
+                prev: i.checked_sub(1),
+                next: if i + 1 < segs.len() { Some(i + 1) } else { None },
+            });
+            index.insert((seg.height, seg.t0, i));
+        }
+        IndexedSkyline {
+            nodes,
+            free: Vec::new(),
+            head: 0,
+            len: segs.len(),
+            index,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -540,6 +580,27 @@ mod tests {
         assert_eq!(off, 4);
         assert_eq!(sky.max_height(), 7);
         sky.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn from_segments_matches_reference_behaviour() {
+        let segs = vec![seg(0, 4, 7), seg(4, 9, 0), seg(9, 12, 3)];
+        let mut indexed = IndexedSkyline::from_segments(&segs);
+        indexed.check_invariants().unwrap();
+        assert_eq!(indexed.segments(), segs);
+        let mut ch = Changes::default();
+        let low = indexed.lowest_leftmost();
+        assert_eq!(indexed.seg(low).t0, 4);
+        let off = indexed.place(low, 4, 9, 3, &mut ch);
+        assert_eq!(off, 0, "seeded height is the placement offset");
+        assert_eq!(indexed.segments(), vec![seg(0, 4, 7), seg(4, 12, 3)]);
+        indexed.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous cover")]
+    fn from_segments_rejects_gaps() {
+        let _ = IndexedSkyline::from_segments(&[seg(0, 4, 7), seg(5, 9, 0)]);
     }
 
     #[test]

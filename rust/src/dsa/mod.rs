@@ -19,7 +19,10 @@
 //!   2004): [`bestfit::solve`] runs on the indexed structures (fast
 //!   enough for lazy plan builds on the serving path),
 //!   [`bestfit::solve_reference`] keeps the original quadratic form for
-//!   differential testing;
+//!   differential testing, and [`bestfit::resolve`] warm-starts a §4.3
+//!   re-solve from the previous assignment plus a
+//!   [`bestfit::TraceDelta`], re-placing only the disturbed blocks
+//!   (ROADMAP.md `## Incremental re-solve`);
 //! * [`policies`] — ablatable block-/offset-choice policies;
 //! * [`firstfit`] — address-ordered first-fit baseline (what an idealized
 //!   online allocator achieves);
@@ -37,6 +40,6 @@ pub mod problem;
 pub mod skyline;
 pub mod solution;
 
-pub use bestfit::{solve as solve_bestfit, solve_reference};
+pub use bestfit::{resolve, solve as solve_bestfit, solve_reference, Resolution, TraceDelta};
 pub use problem::{Block, DsaInstance};
 pub use solution::{Assignment, Violation};

@@ -50,6 +50,32 @@ impl Skyline {
         }
     }
 
+    /// Seed a skyline from an explicit segment list — the warm-start
+    /// re-solve (`bestfit::resolve`) starts from the envelope of kept
+    /// placements instead of a flat line. The list must satisfy the
+    /// structural invariants: contiguous cover starting at 0, positive
+    /// spans, height-distinct neighbours.
+    pub fn from_segments(segs: Vec<Seg>) -> Skyline {
+        assert!(!segs.is_empty(), "empty skyline");
+        let mut t = 0;
+        for (i, s) in segs.iter().enumerate() {
+            assert!(
+                s.t0 == t && s.t1 > s.t0,
+                "segment {i} breaks the contiguous cover"
+            );
+            if i > 0 {
+                assert_ne!(
+                    segs[i - 1].height,
+                    s.height,
+                    "equal heights at segments {} and {i}",
+                    i - 1
+                );
+            }
+            t = s.t1;
+        }
+        Skyline { segs }
+    }
+
     pub fn len(&self) -> usize {
         self.segs.len()
     }
@@ -270,6 +296,43 @@ mod tests {
         sky.lift(sky.lowest_leftmost());
         assert_eq!(sky.len(), 1);
         assert_eq!(sky.seg(0).height, 5);
+    }
+
+    #[test]
+    fn from_segments_seeds_and_operates() {
+        let mut sky = Skyline::from_segments(vec![
+            Seg { t0: 0, t1: 4, height: 7 },
+            Seg { t0: 4, t1: 9, height: 0 },
+            Seg { t0: 9, t1: 12, height: 3 },
+        ]);
+        sky.check_invariants().unwrap();
+        let idx = sky.lowest_leftmost();
+        assert_eq!(sky.seg(idx).t0, 4);
+        let off = sky.place(idx, 4, 9, 3);
+        assert_eq!(off, 0, "seeded height is the placement offset");
+        // [4,9) raised to 3 merges with [9,12)@3.
+        assert_eq!(
+            sky.segments(),
+            &[Seg { t0: 0, t1: 4, height: 7 }, Seg { t0: 4, t1: 12, height: 3 }]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous cover")]
+    fn from_segments_rejects_gaps() {
+        let _ = Skyline::from_segments(vec![
+            Seg { t0: 0, t1: 4, height: 7 },
+            Seg { t0: 5, t1: 9, height: 0 },
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal heights")]
+    fn from_segments_rejects_equal_neighbours() {
+        let _ = Skyline::from_segments(vec![
+            Seg { t0: 0, t1: 4, height: 7 },
+            Seg { t0: 4, t1: 9, height: 7 },
+        ]);
     }
 
     #[test]

@@ -26,6 +26,16 @@
 //! differential testing, and `benches/bench_solver_scale.rs` pins the
 //! speedup against ROADMAP.md's `## Perf targets`.
 //!
+//! Reoptimization (§4.3) is *incremental*: [`dsa::bestfit::resolve`]
+//! warm-starts the solver from the previous assignment plus a
+//! [`dsa::bestfit::TraceDelta`], keeping every placement the delta does
+//! not disturb and re-placing only the disturbed blocks on the kept
+//! placements' envelope. Pure size ratchets reuse offsets and only grow
+//! the arena; structural deviations fall back to a full solve
+//! (`reopt_warm`/`reopt_cold` count the split, and
+//! `benches/bench_reopt_warmstart.rs` pins the latency win — see
+//! ROADMAP.md `## Incremental re-solve`).
+//!
 //! The profile→solve→replay lifecycle is implemented **once**, in the
 //! backend-agnostic [`plan`] layer: `ReplayEngine<M: MemoryBackend>` owns
 //! profiling, the solved event skeleton and address table, the in-sync

@@ -14,8 +14,10 @@
 //! * **Reoptimization (§4.3)**: an oversized request or more requests
 //!   than profiled routes to the escape route for the rest of the
 //!   iteration; `end_iteration` re-solves against the positional maximum
-//!   of observed sizes (pure growth) or against the observed trace alone
-//!   (structural change).
+//!   of observed sizes (pure growth — *warm-started* via
+//!   [`bestfit::resolve`] from the surviving placements, counted in
+//!   `reopt_warm`) or against the observed trace alone (structural
+//!   change — a cold solve, counted in `reopt_cold`).
 //! * **interrupt/resume (§4.3)**: requests inside an interrupted region
 //!   bypass both λ and the plan, living on the escape route.
 //!
@@ -29,7 +31,9 @@
 
 use super::backend::MemoryBackend;
 use crate::alloc::AllocStats;
-use crate::dsa::bestfit;
+use crate::dsa::bestfit::{self, TraceDelta};
+use crate::dsa::problem::DsaInstance;
+use crate::dsa::solution::Assignment;
 use crate::profiler::{BlockHandle, MemoryProfiler};
 use crate::trace::{Trace, TraceEvent};
 use std::collections::{BTreeMap, HashMap};
@@ -129,6 +133,9 @@ pub struct ReplayEngine<M: MemoryBackend> {
     solve_ns: u64,
     last_solve_ns: u64,
     solves: u64,
+    resolve_ns: u64,
+    last_resolve_ns: u64,
+    resolves: u64,
     /// Labels forwarded to traces/diagnostics.
     model: String,
     phase: String,
@@ -152,6 +159,9 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             solve_ns: 0,
             last_solve_ns: 0,
             solves: 0,
+            resolve_ns: 0,
+            last_resolve_ns: 0,
+            resolves: 0,
             model: model.to_string(),
             phase: phase.to_string(),
             batch,
@@ -209,9 +219,30 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.last_solve_ns
     }
 
-    /// How many plans were solved (initial build + reoptimizations).
+    /// How many plans were solved from scratch via the cold path (the
+    /// initial build plus structural reoptimizations). A warm-start
+    /// attempt that falls back internally is *not* counted here — its
+    /// full-solve cost is part of [`last_resolve_ns`](Self::last_resolve_ns).
     pub fn solves(&self) -> u64 {
         self.solves
+    }
+
+    /// Wall-clock nanoseconds spent in warm-start incremental re-solves.
+    pub fn resolve_ns(&self) -> u64 {
+        self.resolve_ns
+    }
+
+    /// Wall-clock nanoseconds of the most recent warm-start re-solve —
+    /// the latency of one ratchet reoptimization (the registry surfaces
+    /// this per reopt).
+    pub fn last_resolve_ns(&self) -> u64 {
+        self.last_resolve_ns
+    }
+
+    /// How many reoptimizations went through the warm-start path
+    /// (successful or not; `stats().reopt_warm` counts only successes).
+    pub fn resolves(&self) -> u64 {
+        self.resolves
     }
 
     // ----- plan construction ------------------------------------------------
@@ -247,18 +278,17 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         merged
     }
 
-    /// Solve (or re-solve) the plan from `trace`; the backend reserves the
-    /// arena. Returns Err when the arena cannot be reserved.
-    fn solve_plan(&mut self, ctx: &mut M::Ctx, trace: Trace) -> Result<(), M::Error> {
-        let inst = trace.to_dsa_instance();
-        let t0 = Instant::now();
-        let sol = bestfit::solve(&inst);
-        self.last_solve_ns = t0.elapsed().as_nanos() as u64;
-        self.solve_ns += self.last_solve_ns;
-        self.solves += 1;
-        debug_assert!(sol.validate(&inst).is_ok());
-
-        let base = self.backend.reserve_arena(ctx, &inst, &sol)?;
+    /// Install a solved assignment as the active plan; the backend
+    /// reserves the arena. Returns Err when the arena cannot be reserved.
+    fn install_plan(
+        &mut self,
+        ctx: &mut M::Ctx,
+        trace: Trace,
+        inst: &DsaInstance,
+        sol: Assignment,
+    ) -> Result<(), M::Error> {
+        debug_assert!(sol.validate(inst).is_ok());
+        let base = self.backend.reserve_arena(ctx, inst, &sol)?;
         let sizes: Vec<u64> = inst.blocks.iter().map(|b| b.size).collect();
         let events: Vec<PlanEvent> = trace
             .events
@@ -279,6 +309,54 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             addrs,
         });
         Ok(())
+    }
+
+    /// Solve the plan from `trace` from scratch (cold).
+    fn solve_plan(&mut self, ctx: &mut M::Ctx, trace: Trace) -> Result<(), M::Error> {
+        let inst = trace.to_dsa_instance();
+        let t0 = Instant::now();
+        let sol = bestfit::solve(&inst);
+        self.last_solve_ns = t0.elapsed().as_nanos() as u64;
+        self.solve_ns += self.last_solve_ns;
+        self.solves += 1;
+        self.install_plan(ctx, trace, &inst, sol)
+    }
+
+    /// Reoptimize after a pure size ratchet: warm-start the solver from
+    /// the current plan's assignment, re-placing only the blocks the
+    /// ratchet disturbed (§4.3, ROADMAP `## Incremental re-solve`). Falls
+    /// back to a full solve — inside `bestfit::resolve` — when the delta
+    /// is not actually ratchet-only or the warm packing regresses past
+    /// the quality gate; `reopt_warm`/`reopt_cold` record which way each
+    /// reopt went.
+    fn resolve_plan(&mut self, ctx: &mut M::Ctx, merged: Trace) -> Result<(), M::Error> {
+        let plan = self.plan.as_ref().expect("resolve_plan without plan");
+        let prev_inst = plan.trace.to_dsa_instance();
+        let prev = Assignment {
+            offsets: plan.offsets.clone(),
+            peak: plan.peak,
+        };
+        let new_inst = merged.to_dsa_instance();
+        let delta = TraceDelta::diff(&prev_inst, &new_inst);
+        if !delta.is_ratchet_only(&prev_inst, &new_inst) {
+            // Structural after all (defensive; the caller routes
+            // structural deviations to `solve_plan` directly).
+            self.stats.reopt_cold += 1;
+            return self.solve_plan(ctx, merged);
+        }
+        let t0 = Instant::now();
+        let r = bestfit::resolve(&prev_inst, &prev, &new_inst, &delta);
+        self.last_resolve_ns = t0.elapsed().as_nanos() as u64;
+        self.resolve_ns += self.last_resolve_ns;
+        self.resolves += 1;
+        if r.warm {
+            self.stats.reopt_warm += 1;
+        } else {
+            // The gate paid a full solve inside `resolve`; its cost is
+            // part of `last_resolve_ns`.
+            self.stats.reopt_cold += 1;
+        }
+        self.install_plan(ctx, merged, &new_inst, r.assignment)
     }
 
     /// Leave the in-sync fast path: reconstruct the profiler, live map,
@@ -411,6 +489,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
                 });
             }
             // Non-hot structure detected: fall through to dynamic serve.
+            self.stats.slot_collisions += 1;
             self.structure_changed = true;
         } else if pos >= plan.sizes.len() {
             self.structure_changed = true;
@@ -506,16 +585,18 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         } else if self.deviated && self.structure_changed {
             // Structural change: positions no longer correspond, so the
             // new plan is built from "the new observed parameters" (§4.3)
-            // alone.
+            // alone — a cold solve by necessity.
             self.stats.reopts += 1;
+            self.stats.reopt_cold += 1;
             self.solve_plan(ctx, observed)
         } else if self.deviated {
             // Pure size growth: ratchet the per-position maxima so
             // reoptimization becomes rarer as training proceeds (§5.3:
-            // "the recomputation becomes less frequent").
+            // "the recomputation becomes less frequent"), and warm-start
+            // the re-solve from the surviving placements.
             self.stats.reopts += 1;
             let merged = Self::merge(&self.plan.as_ref().expect("deviated").trace, &observed);
-            self.solve_plan(ctx, merged)
+            self.resolve_plan(ctx, merged)
         } else {
             Ok(())
         };
@@ -599,12 +680,93 @@ mod tests {
         e.free(&mut (), p.addr, 1000);
         ok(e.end_iteration(&mut ()));
         assert_eq!(e.solves(), 1);
-        // A deviation re-solves.
+        assert_eq!(e.resolves(), 0);
+        // A size ratchet re-solves through the warm-start path.
         e.begin_iteration();
         let p = ok(e.alloc(&mut (), 9000));
         e.free(&mut (), p.addr, 9000);
         ok(e.end_iteration(&mut ()));
-        assert_eq!(e.solves(), 2);
+        assert_eq!(e.solves(), 1, "ratchet reopt is warm, not a fresh solve");
+        assert_eq!(e.resolves(), 1);
+        assert!(e.resolve_ns() >= e.last_resolve_ns());
+    }
+
+    #[test]
+    fn ratchet_reopt_counts_warm_and_keeps_totals() {
+        let mut e = host_engine();
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        let b = ok(e.alloc(&mut (), 400));
+        e.free(&mut (), b.addr, 400);
+        e.free(&mut (), a.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        // Grow one block: a pure ratchet → warm reopt.
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        let b = ok(e.alloc(&mut (), 800));
+        assert!(!b.is_replayed(), "oversize takes the escape route");
+        e.free(&mut (), b.addr, 800);
+        e.free(&mut (), a.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        let s = e.stats();
+        assert_eq!((s.reopts, s.reopt_warm, s.reopt_cold), (1, 1, 0));
+        assert_eq!(e.planned_peak(), Some(1800), "ratcheted sizes stack");
+        // The next iteration replays the grown plan with no further reopt.
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        let b = ok(e.alloc(&mut (), 800));
+        assert!(a.is_replayed() && b.is_replayed());
+        e.free(&mut (), b.addr, 800);
+        e.free(&mut (), a.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        assert_eq!(e.stats().reopts, 1);
+    }
+
+    #[test]
+    fn structural_reopt_counts_cold() {
+        let mut e = host_engine();
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        e.free(&mut (), a.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        // More requests than planned: a structural deviation → cold.
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        let b = ok(e.alloc(&mut (), 500));
+        e.free(&mut (), b.addr, 500);
+        e.free(&mut (), a.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        let s = e.stats();
+        assert_eq!((s.reopts, s.reopt_warm, s.reopt_cold), (1, 0, 1));
+        assert_eq!(s.reopts, s.reopt_warm + s.reopt_cold, "split is exhaustive");
+        assert_eq!(e.solves(), 2, "structural reopt pays a fresh solve");
+        assert_eq!(e.resolves(), 0);
+    }
+
+    #[test]
+    fn slot_collision_counts_soundness_rejection() {
+        let mut e = host_engine();
+        // Profile: two serial blocks share one slot.
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        e.free(&mut (), a.addr, 1000);
+        let b = ok(e.alloc(&mut (), 1000));
+        e.free(&mut (), b.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        assert_eq!(e.stats().slot_collisions, 0);
+        // Replay with both simultaneously live: the second request's
+        // planned slot is occupied — the soundness check must reject it
+        // and count the rejection.
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        let b = ok(e.alloc(&mut (), 1000));
+        assert!(!b.is_replayed());
+        e.free(&mut (), a.addr, 1000);
+        e.free(&mut (), b.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        let s = e.stats();
+        assert_eq!(s.slot_collisions, 1);
+        assert_eq!((s.reopt_warm, s.reopt_cold), (0, 1), "collision reopts cold");
     }
 
     #[test]

@@ -142,12 +142,25 @@ pub struct RegistryStats {
     /// Plans dropped by budget enforcement.
     pub evictions: u64,
     /// Plan builds (DSA solves) recorded against this registry — initial
-    /// builds after a miss plus reoptimizations of resident plans.
+    /// builds after a miss plus cold reoptimizations of resident plans.
     pub builds: u64,
     /// Total wall nanoseconds across recorded plan builds.
     pub build_ns_total: u64,
     /// Slowest single recorded plan build, in wall nanoseconds.
     pub build_ns_max: u64,
+    /// Ratchet reoptimizations of resident plans served by the
+    /// warm-start incremental re-solve.
+    pub reopts_warm: u64,
+    /// Reoptimizations that paid a full solve (structural deviations and
+    /// warm-start quality-gate fallbacks).
+    pub reopts_cold: u64,
+    /// Warm-start re-solves recorded (successful or fallen back); the
+    /// denominator of [`mean_resolve_ns`](Self::mean_resolve_ns).
+    pub resolves: u64,
+    /// Total wall nanoseconds across recorded warm-start re-solves.
+    pub resolve_ns_total: u64,
+    /// Slowest single recorded warm-start re-solve, in wall nanoseconds.
+    pub resolve_ns_max: u64,
 }
 
 impl RegistryStats {
@@ -178,6 +191,38 @@ impl RegistryStats {
         self.build_ns_total / self.builds
     }
 
+    /// Record one warm-start re-solve of `ns` wall nanoseconds. `warm`
+    /// false = the resolve fell back to a full solve (counted cold).
+    pub fn record_resolve(&mut self, warm: bool, ns: u64) {
+        if warm {
+            self.reopts_warm += 1;
+        } else {
+            self.reopts_cold += 1;
+        }
+        self.resolves += 1;
+        self.resolve_ns_total += ns;
+        self.resolve_ns_max = self.resolve_ns_max.max(ns);
+    }
+
+    /// Record one cold reoptimization that never entered the warm path
+    /// (a structural deviation; its solve latency is a recorded *build*).
+    pub fn record_cold_reopt(&mut self) {
+        self.reopts_cold += 1;
+    }
+
+    /// Reoptimizations recorded against resident plans (warm + cold).
+    pub fn reopts(&self) -> u64 {
+        self.reopts_warm + self.reopts_cold
+    }
+
+    /// Mean nanoseconds per recorded warm-start re-solve; 0 before any.
+    pub fn mean_resolve_ns(&self) -> u64 {
+        if self.resolves == 0 {
+            return 0;
+        }
+        self.resolve_ns_total / self.resolves
+    }
+
     /// Fold another registry's counters in (cross-shard aggregation).
     pub fn absorb(&mut self, other: &RegistryStats) {
         self.hits += other.hits;
@@ -186,6 +231,11 @@ impl RegistryStats {
         self.builds += other.builds;
         self.build_ns_total += other.build_ns_total;
         self.build_ns_max = self.build_ns_max.max(other.build_ns_max);
+        self.reopts_warm += other.reopts_warm;
+        self.reopts_cold += other.reopts_cold;
+        self.resolves += other.resolves;
+        self.resolve_ns_total += other.resolve_ns_total;
+        self.resolve_ns_max = self.resolve_ns_max.max(other.resolve_ns_max);
     }
 }
 
@@ -290,6 +340,19 @@ impl<P: PlanFootprint> PlanRegistry<P> {
     /// reports build latencies as they happen.
     pub fn record_build_ns(&mut self, ns: u64) {
         self.stats.record_build(ns);
+    }
+
+    /// Record one warm-start re-solve of a resident plan (see
+    /// [`RegistryStats::record_resolve`]).
+    pub fn record_resolve_ns(&mut self, warm: bool, ns: u64) {
+        self.stats.record_resolve(warm, ns);
+    }
+
+    /// Record one structural (cold) reoptimization of a resident plan;
+    /// its solve latency arrives separately via
+    /// [`record_build_ns`](Self::record_build_ns).
+    pub fn record_cold_reopt(&mut self) {
+        self.stats.record_cold_reopt();
     }
 
     /// Per-plan replay-lookup hit counts, sorted by key (diagnostics).
@@ -397,6 +460,33 @@ mod tests {
         assert_eq!(total.builds, 4);
         assert_eq!(total.build_ns_max, 7_000);
         assert_eq!(total.mean_build_ns(), 3_000);
+    }
+
+    #[test]
+    fn resolve_latency_is_recorded_and_absorbed() {
+        let mut r: PlanRegistry<Toy> = PlanRegistry::new(RegistryConfig::default());
+        r.record_resolve_ns(true, 4_000);
+        r.record_resolve_ns(true, 2_000);
+        r.record_resolve_ns(false, 10_000);
+        r.record_cold_reopt();
+        let st = r.stats();
+        assert_eq!((st.reopts_warm, st.reopts_cold), (2, 2));
+        assert_eq!(st.reopts(), 4);
+        assert_eq!(st.resolve_ns_max, 10_000);
+        assert_eq!(st.mean_resolve_ns(), 16_000 / 3);
+        let mut total = RegistryStats::default();
+        assert_eq!(total.mean_resolve_ns(), 0, "no resolves yet");
+        total.absorb(&st);
+        total.absorb(&RegistryStats {
+            reopts_warm: 1,
+            resolves: 1,
+            resolve_ns_total: 1_000,
+            resolve_ns_max: 1_000,
+            ..RegistryStats::default()
+        });
+        assert_eq!((total.reopts_warm, total.reopts_cold), (3, 2));
+        assert_eq!(total.resolves, 4);
+        assert_eq!(total.resolve_ns_max, 10_000);
     }
 
     #[test]

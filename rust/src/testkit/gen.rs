@@ -172,6 +172,27 @@ pub fn large_dsa_triples(n: usize, seed: u64) -> Vec<(u64, u64, u64)> {
         .collect()
 }
 
+/// Grow ~`frac` of the triples' sizes in place (a §4.3 ratchet-only
+/// delta): each selected block gains up to its own size again, lifetimes
+/// untouched. Shared by `bench_reopt_warmstart` and the warm-start
+/// property suite so both exercise the same deviation distribution.
+pub fn ratchet_triples(
+    rng: &mut Pcg32,
+    triples: &[(u64, u64, u64)],
+    frac: f64,
+) -> Vec<(u64, u64, u64)> {
+    triples
+        .iter()
+        .map(|&(w, a, f)| {
+            if rng.bool(frac) {
+                (w + rng.range(1, w.max(2)), a, f)
+            } else {
+                (w, a, f)
+            }
+        })
+        .collect()
+}
+
 /// Pick uniformly from a fixed set of values; shrinks toward earlier entries.
 pub fn one_of<T: Clone + PartialEq + 'static>(choices: Vec<T>) -> Gen<T> {
     assert!(!choices.is_empty());
@@ -232,6 +253,21 @@ mod tests {
             assert!(size > 0);
             assert!(free_at > alloc_at);
         }
+    }
+
+    #[test]
+    fn ratchet_triples_only_grows_sizes() {
+        let mut rng = Pcg32::seeded(9);
+        let base = large_dsa_triples(200, 3);
+        let grown = ratchet_triples(&mut rng, &base, 0.5);
+        assert_eq!(grown.len(), base.len());
+        let mut changed = 0;
+        for (g, b) in grown.iter().zip(base.iter()) {
+            assert_eq!((g.1, g.2), (b.1, b.2), "lifetimes untouched");
+            assert!(g.0 >= b.0, "sizes only grow");
+            changed += usize::from(g.0 > b.0);
+        }
+        assert!(changed > 0, "a 50% ratchet must touch something");
     }
 
     #[test]
