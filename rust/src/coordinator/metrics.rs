@@ -198,6 +198,30 @@ impl ServeMetrics {
                 plans.mean_build_ns() as f64 / 1e3,
             ));
         }
+        if plans.seeded_builds > 0 {
+            // Cross-bucket plan transfer: how many bucket misses skipped
+            // the profile+solve entirely by scaling a donor plan, and
+            // what the transfer cost instead. `builds` counts every cold
+            // solve the serving path paid (initial builds + structural
+            // re-solves), the population the transfer competes with.
+            out.push_str(&format!(
+                "\n  seeded/cold build: {} seeded (max {:.1} µs, mean {:.1} µs) / {} cold solves",
+                plans.seeded_builds,
+                plans.seed_ns_max as f64 / 1e3,
+                plans.mean_seed_ns() as f64 / 1e3,
+                plans.builds,
+            ));
+        }
+        if plans.repacks > 0 {
+            // Drift control: background re-packs swapped into resident
+            // plans (solve time spent off the serving path).
+            out.push_str(&format!(
+                "\n  repacks: {} background re-packs, solve max {:.1} µs, mean {:.1} µs",
+                plans.repacks,
+                plans.repack_ns_max as f64 / 1e3,
+                plans.mean_repack_ns() as f64 / 1e3,
+            ));
+        }
         if plans.reopts() > 0 {
             // Warm-start effectiveness: how many reopts kept their
             // placements, and what the incremental re-solve cost.
@@ -327,6 +351,12 @@ mod tests {
                 resolves: 2,
                 resolve_ns_total: 5_000,
                 resolve_ns_max: 4_000,
+                seeded_builds: 1,
+                seed_ns_total: 1_500,
+                seed_ns_max: 1_500,
+                repacks: 1,
+                repack_ns_total: 8_000,
+                repack_ns_max: 8_000,
             },
             ..Default::default()
         });
@@ -348,6 +378,10 @@ mod tests {
         assert_eq!(plans.reopts(), 3);
         assert_eq!(plans.resolve_ns_max, 4_000);
         assert_eq!(plans.mean_resolve_ns(), 2_500);
+        // Seeded-build and re-pack rollups aggregate the same way.
+        assert_eq!(plans.seeded_builds, 1);
+        assert_eq!(plans.seed_ns_max, 1_500);
+        assert_eq!((plans.repacks, plans.repack_ns_max), (1, 8_000));
         let report = m.report();
         assert!(report.contains("bucket b=4"), "{report}");
         assert!(report.contains("evictions"), "{report}");
@@ -356,6 +390,14 @@ mod tests {
         assert!(report.contains("plan-build max"), "per-shard line: {report}");
         assert!(report.contains("reopt: 2 warm / 1 cold"), "{report}");
         assert!(report.contains("warm-resolve max 4.0 µs"), "{report}");
+        assert!(
+            report.contains("seeded/cold build: 1 seeded (max 1.5 µs, mean 1.5 µs) / 3 cold solves"),
+            "{report}"
+        );
+        assert!(
+            report.contains("repacks: 1 background re-packs, solve max 8.0 µs"),
+            "{report}"
+        );
     }
 
     #[test]

@@ -66,6 +66,13 @@ pub struct ServeConfig {
     /// Total host staging arena budget per shard registry; least recently
     /// used bucket plans are evicted beyond it. `u64::MAX` = unlimited.
     pub plan_budget_bytes: u64,
+    /// After this many consecutive warm reoptimizations of a bucket
+    /// plan, a shard-local background thread re-solves the live trace
+    /// from scratch and the result swaps in at the next iteration
+    /// boundary when tighter than the incumbent — warm-start drift is
+    /// bounded to one interval, with the solve itself off the serving
+    /// path (0 = never re-pack).
+    pub repack_interval: u64,
 }
 
 impl Default for ServeConfig {
@@ -79,6 +86,7 @@ impl Default for ServeConfig {
                 .map(|&b| b as usize)
                 .collect(),
             plan_budget_bytes: u64::MAX,
+            repack_interval: 16,
         }
     }
 }
@@ -305,7 +313,9 @@ impl<'a> ShardWorker<'a> {
             "shard {shard}: no compiled predict_b{{B}} artifact matches bucket ladder {:?}",
             cfg.ladder()
         );
-        let registry_cfg = RegistryConfig::new(&buckets).with_budget(cfg.plan_budget_bytes);
+        let registry_cfg = RegistryConfig::new(&buckets)
+            .with_budget(cfg.plan_budget_bytes)
+            .with_repack_interval(cfg.repack_interval);
         let entry_names = buckets
             .iter()
             .map(|&b| (b, format!("predict_b{b}")))
@@ -396,11 +406,14 @@ impl<'a> ShardWorker<'a> {
             .expect("routing only targets executable buckets");
 
         // One registry lookup per batch: a miss creates the bucket's plan
-        // (its first iteration profiles), a hit replays the hot plan.
+        // (seeded from a smaller resident bucket when possible — the new
+        // bucket replays immediately — profiling otherwise), a hit
+        // replays the hot plan.
         let planner = self.staging.planner(bucket);
         let before = planner.stats();
         let solves_before = planner.solves();
         let resolves_before = planner.resolves();
+        let repacks_before = planner.repacks();
         planner.begin_iteration();
 
         // Stage the bucket-padded input batch (constant shape per bucket
@@ -453,6 +466,8 @@ impl<'a> ShardWorker<'a> {
         let build_ns = planner.last_solve_ns();
         let resolved = planner.resolves() > resolves_before;
         let resolve_ns = planner.last_resolve_ns();
+        let repacked = planner.repacks() > repacks_before;
+        let repack_ns = planner.last_repack_ns();
         if built {
             self.staging.record_build_ns(build_ns);
         }
@@ -461,6 +476,11 @@ impl<'a> ShardWorker<'a> {
                 .record_resolve_ns(delta.reopt_warm > 0, resolve_ns);
         } else if delta.reopt_cold > 0 {
             self.staging.record_cold_reopt();
+        }
+        if repacked {
+            // The solve ran on the background thread; only the swap
+            // happened inside this batch's iteration boundary.
+            self.staging.record_repack(repack_ns);
         }
 
         // Budget enforcement may drop cold bucket plans; their counters

@@ -15,8 +15,12 @@
 
 use crate::alloc::arena::align_up;
 use crate::alloc::AllocStats;
+use crate::dsa::bestfit;
+use crate::dsa::solution::Assignment;
 use crate::plan::registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
 use crate::plan::{HostBackend, MemoryBackend, ReplayEngine};
+use crate::trace::TraceEvent;
+use std::time::Instant;
 
 /// A staged host buffer handle.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -61,6 +65,61 @@ impl StagingPlanner {
         StagingPlanner {
             engine: ReplayEngine::new(HostBackend::new(), model, phase, 0),
         }
+    }
+
+    /// Build a planner whose plan is *seeded* from a donor bucket's
+    /// solved plan, scaled along the batch dimension by `num/den`
+    /// (target bucket / donor bucket): the event skeleton is reused,
+    /// alloc sizes are ceiling-scaled (re-aligned so replayed offsets
+    /// stay aligned), the offsets transfer through
+    /// [`bestfit::seed_scaled`], and the engine adopts the result — it
+    /// replays from its very first iteration instead of paying a
+    /// profile + cold solve on the serving path. Returns `None` when the
+    /// donor has not solved a plan yet.
+    pub fn seeded(
+        model: &str,
+        phase: &str,
+        donor: &StagingPlanner,
+        num: u32,
+        den: u32,
+    ) -> Option<StagingPlanner> {
+        assert!(den > 0 && num >= den, "seeding only scales a plan up");
+        let donor_trace = donor.engine.plan_trace()?;
+        let donor_sol = Assignment {
+            offsets: donor.engine.planned_offsets()?.to_vec(),
+            peak: donor.engine.planned_peak()?,
+        };
+        let mut trace = donor_trace.clone();
+        trace.model = model.to_string();
+        trace.phase = phase.to_string();
+        trace.batch = num;
+        for e in &mut trace.events {
+            if let TraceEvent::Alloc { size, .. } = e {
+                *size = align_up((*size * num as u64 + den as u64 - 1) / den as u64);
+            }
+        }
+        let donor_inst = donor_trace.to_dsa_instance();
+        let new_inst = trace.to_dsa_instance();
+        let seeded = bestfit::seed_scaled(&donor_inst, &donor_sol, &new_inst);
+        let mut planner = StagingPlanner::new(model, phase);
+        ok(planner.engine.adopt_plan(&mut (), trace, &new_inst, seeded.assignment));
+        Some(planner)
+    }
+
+    /// Background-re-pack the plan after this many consecutive warm
+    /// reopts (0 = never); see `ReplayEngine::set_repack_interval`.
+    pub fn set_repack_interval(&mut self, every: u64) {
+        self.engine.set_repack_interval(every);
+    }
+
+    /// Background cold re-packs swapped into this planner's plan.
+    pub fn repacks(&self) -> u64 {
+        self.engine.repacks()
+    }
+
+    /// Wall nanoseconds of the most recent background re-pack solve.
+    pub fn last_repack_ns(&self) -> u64 {
+        self.engine.last_repack_ns()
     }
 
     pub fn is_replaying(&self) -> bool {
@@ -199,9 +258,13 @@ impl PlanFootprint for StagingPlanner {
 /// bucket — the serving integration of
 /// [`PlanRegistry`](crate::plan::PlanRegistry).
 ///
-/// [`planner`](StagingRegistry::planner) is one registry lookup: a miss
-/// creates the bucket's planner (whose first iteration profiles, per the
-/// engine's normal lifecycle), a hit returns the resident hot plan.
+/// [`planner`](StagingRegistry::planner) is one registry lookup: a hit
+/// returns the resident hot plan; a miss creates the bucket's planner —
+/// *seeded* from the largest resident smaller bucket of the same family
+/// when one exists ([`StagingPlanner::seeded`]; the new bucket replays
+/// from its first iteration, counted in `RegistryStats::seeded_builds`),
+/// profiling from scratch otherwise. Created planners inherit the
+/// configured re-pack interval.
 /// [`enforce_budget`](StagingRegistry::enforce_budget) LRU-evicts bucket
 /// plans once the total resident arena bytes exceed the configured
 /// budget; dropping a `StagingPlanner` frees its host arena and heap
@@ -210,6 +273,7 @@ impl PlanFootprint for StagingPlanner {
 pub struct StagingRegistry {
     model: String,
     phase: String,
+    repack_interval: u64,
     registry: PlanRegistry<StagingPlanner>,
 }
 
@@ -218,6 +282,7 @@ impl StagingRegistry {
         StagingRegistry {
             model: model.to_string(),
             phase: phase.to_string(),
+            repack_interval: cfg.repack_interval(),
             registry: PlanRegistry::new(cfg),
         }
     }
@@ -234,11 +299,40 @@ impl StagingRegistry {
     }
 
     /// The bucket's planner, created lazily on first use. Counts one
-    /// registry hit or miss.
+    /// registry hit or miss. On a miss, the planner is seeded from the
+    /// largest resident smaller bucket when possible (the seeded-build
+    /// wall time is recorded against this registry's stats); otherwise
+    /// it profiles from scratch on its first iteration.
     pub fn planner(&mut self, bucket: u32) -> &mut StagingPlanner {
         let key = PlanKey::new(&self.model, &self.phase, bucket);
-        self.registry.get_or_insert_with(&key, |k| {
-            StagingPlanner::new(&k.model, &format!("{}-b{}", k.phase, k.batch_bucket))
+        let mut seed: Option<StagingPlanner> = None;
+        if self.registry.peek(&key).is_none() {
+            let built = match self.registry.seed_donor(&key) {
+                Some((donor_key, donor)) => {
+                    let t0 = Instant::now();
+                    StagingPlanner::seeded(
+                        &key.model,
+                        &format!("{}-b{}", key.phase, key.batch_bucket),
+                        donor,
+                        bucket,
+                        donor_key.batch_bucket,
+                    )
+                    .map(|planner| (planner, t0.elapsed().as_nanos() as u64))
+                }
+                None => None,
+            };
+            if let Some((planner, ns)) = built {
+                self.registry.record_seeded_build(ns);
+                seed = Some(planner);
+            }
+        }
+        let repack_interval = self.repack_interval;
+        self.registry.get_or_insert_with(&key, move |k| {
+            let mut planner = seed.unwrap_or_else(|| {
+                StagingPlanner::new(&k.model, &format!("{}-b{}", k.phase, k.batch_bucket))
+            });
+            planner.set_repack_interval(repack_interval);
+            planner
         })
     }
 
@@ -272,6 +366,12 @@ impl StagingRegistry {
     /// [`PlanRegistry::record_cold_reopt`]).
     pub fn record_cold_reopt(&mut self) {
         self.registry.record_cold_reopt();
+    }
+
+    /// Record one background re-pack of a bucket plan (see
+    /// [`PlanRegistry::record_repack`]).
+    pub fn record_repack(&mut self, ns: u64) {
+        self.registry.record_repack(ns);
     }
 
     /// Total bytes held across resident bucket plans (arenas + any live
@@ -448,6 +548,83 @@ mod tests {
         // Buckets keep distinct arenas sized to their own shape.
         assert_eq!(r.planner(1).arena_bytes(), 256);
         assert_eq!(r.planner(8).arena_bytes(), 2048);
+    }
+
+    #[test]
+    fn registry_seeds_new_buckets_from_smaller_residents() {
+        let mut r = StagingRegistry::new("m", "serve", RegistryConfig::new(&[4, 8, 16]));
+        // Bucket 4 profiles and goes hot; sizes proportional to the
+        // bucket, as batch staging is.
+        one_registry_iteration(&mut r, 4, 4 * 1024);
+        assert!(one_registry_iteration(&mut r, 4, 4 * 1024));
+        assert_eq!(r.stats().seeded_builds, 0, "no donor for the first bucket");
+
+        // Bucket 8's first build is seeded from bucket 4: it replays
+        // *immediately* — no profiling iteration on the serving path.
+        assert!(r.planner(8).is_replaying(), "seeded plan skips profiling");
+        assert!(
+            one_registry_iteration(&mut r, 8, 8 * 1024),
+            "first bucket-8 iteration replays off the scaled plan"
+        );
+        assert_eq!(r.stats().seeded_builds, 1);
+        assert_eq!(r.planner(8).solves(), 0, "no cold solve was paid");
+        assert_eq!(r.planner(8).arena_bytes(), 8 * 1024, "arena scaled 2×");
+
+        // Bucket 16 seeds from the *largest* smaller resident (8).
+        assert!(one_registry_iteration(&mut r, 16, 16 * 1024));
+        assert_eq!(r.stats().seeded_builds, 2);
+        assert_eq!(r.planner(16).arena_bytes(), 16 * 1024);
+        // Seeding never disturbed soundness.
+        for b in [4u32, 8, 16] {
+            assert_eq!(r.planner(b).stats().slot_collisions, 0);
+        }
+    }
+
+    #[test]
+    fn seeded_planner_falls_back_to_cold_on_structural_traffic() {
+        let mut r = StagingRegistry::new("m", "serve", RegistryConfig::new(&[4, 8]));
+        one_registry_iteration(&mut r, 4, 4 * 1024);
+        // Bucket 8 is seeded with bucket 4's one-buffer skeleton, but its
+        // real traffic stages *two* buffers: a structural deviation — the
+        // engine re-solves cold from the observed trace (the preserved
+        // fallback rule).
+        let p = r.planner(8);
+        p.begin_iteration();
+        let a = p.alloc(8 * 1024);
+        let b = p.alloc(512);
+        p.free(b);
+        p.free(a);
+        p.end_iteration();
+        assert_eq!(r.stats().seeded_builds, 1);
+        let p = r.planner(8);
+        assert_eq!(p.stats().reopt_cold, 1, "structural traffic re-solves cold");
+        assert_eq!(p.solves(), 1);
+        // From then on the rebuilt plan replays the real pattern.
+        let p = r.planner(8);
+        p.begin_iteration();
+        let a = p.alloc(8 * 1024);
+        let b = p.alloc(512);
+        assert!(a.is_replayed() && b.is_replayed());
+        p.free(b);
+        p.free(a);
+        p.end_iteration();
+    }
+
+    #[test]
+    fn registry_applies_repack_interval_to_new_planners() {
+        let cfg = RegistryConfig::new(&[1]).with_repack_interval(2);
+        let mut r = StagingRegistry::new("m", "serve", cfg);
+        one_registry_iteration(&mut r, 1, 1024); // profile
+        // Two in-place ratchets (the lone buffer grows) → a background
+        // re-pack spawns; the next boundary swaps it in.
+        one_registry_iteration(&mut r, 1, 2048);
+        one_registry_iteration(&mut r, 1, 4096);
+        assert_eq!(r.planner(1).repacks(), 0, "swap waits for the boundary");
+        one_registry_iteration(&mut r, 1, 4096); // hot boundary
+        let p = r.planner(1);
+        assert_eq!(p.repacks(), 1);
+        assert_eq!(p.stats().reopt_warm, 2);
+        assert_eq!(p.arena_bytes(), 4096, "re-pack equals the cold packing");
     }
 
     #[test]

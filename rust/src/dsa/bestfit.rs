@@ -32,6 +32,19 @@
 //! [`resolve_reference_with`] is the quadratic spec of the same
 //! operation, driven in lockstep by the reopt differential suite
 //! (ROADMAP.md `## Incremental re-solve`).
+//!
+//! [`seed_scaled`]/[`seed_scaled_with`] transfer a solved plan *across
+//! batch buckets* (ROADMAP.md `## Plan transfer & re-pack`): a registry
+//! miss for bucket `2B` scales bucket `B`'s solved instance along the
+//! batch dimension and solves the scaled instance warm instead of
+//! profiling from nothing. A uniform integer size ratio takes an exact
+//! O(n) offset transfer — the heuristic is scale-equivariant, so
+//! multiplying every size and offset by the ratio reproduces what a cold
+//! solve of the scaled instance would pack — while fractional ratios run
+//! the [`resolve`] warm path over the positional delta, and a skeleton
+//! mismatch falls back to a cold solve (the registry's structural
+//! fallback rule). [`seed_scaled_reference_with`] is the quadratic spec,
+//! driven in lockstep by the seeded-build differential suite.
 
 use super::candidates::CandidateIndex;
 use super::indexed::{Changes, IndexedSkyline};
@@ -709,6 +722,144 @@ fn resolve_impl(
     }
 }
 
+// ----- cross-bucket plan seeding ---------------------------------------------
+
+/// The uniform integer size ratio `r` with `new.size == donor.size * r`
+/// for every block, if one exists. Lifetimes are assumed positionally
+/// equal (the caller checked the skeleton).
+fn uniform_ratio(donor_inst: &DsaInstance, new_inst: &DsaInstance) -> Option<u64> {
+    let first = donor_inst.blocks.first()?;
+    if new_inst.blocks[0].size % first.size != 0 {
+        return None;
+    }
+    let r = new_inst.blocks[0].size / first.size;
+    if r == 0 {
+        return None;
+    }
+    donor_inst
+        .blocks
+        .iter()
+        .zip(&new_inst.blocks)
+        .all(|(d, n)| d.size.checked_mul(r) == Some(n.size))
+        .then_some(r)
+}
+
+/// Seed a solve of `new_inst` from a donor bucket's plan with the
+/// paper's default policy (see [`seed_scaled_with`]).
+pub fn seed_scaled(
+    donor_inst: &DsaInstance,
+    donor: &Assignment,
+    new_inst: &DsaInstance,
+) -> Resolution {
+    seed_scaled_with(donor_inst, donor, new_inst, Policy::default())
+}
+
+/// Cross-bucket plan seeding: solve `new_inst` — the donor instance
+/// scaled along the batch dimension — warm from the donor bucket's
+/// assignment instead of from nothing.
+///
+/// Three regimes, in order:
+///
+/// 1. **Skeleton mismatch** (different block count or any positional
+///    lifetime change): the structural fallback rule — a cold solve,
+///    `warm: false`. Seeding never guesses across structures.
+/// 2. **Uniform integer ratio** (`new.size == donor.size * r` for every
+///    block): the exact O(n) transfer — every offset is multiplied by
+///    `r`. Linear scaling preserves disjointness, so the packing is
+///    valid by construction with peak exactly `donor.peak * r`, and the
+///    best-fit heuristic is scale-equivariant, so this is the packing a
+///    cold solve of the scaled instance would produce anyway (when the
+///    donor came from the same heuristic) at none of the cost.
+/// 3. **Fractional ratio** (ceiling-scaled sizes): the positional delta
+///    is a pure size ratchet, so the [`resolve_with`] warm path applies
+///    — in-place growth where slack allows, disturbance closure
+///    otherwise, with the usual `> n/2` bail-out and ratchet quality
+///    gate.
+///
+/// Guarantee (growth-only scaling, `num ≥ den`): the returned peak never
+/// exceeds `max(ceil(donor.peak · num/den), cold peak)` —
+/// `prop_seeded_build_sound` pins this for all four block-choice
+/// policies.
+pub fn seed_scaled_with(
+    donor_inst: &DsaInstance,
+    donor: &Assignment,
+    new_inst: &DsaInstance,
+    policy: Policy,
+) -> Resolution {
+    seed_scaled_impl(donor_inst, donor, new_inst, policy, false)
+}
+
+/// Reference cross-bucket seeding: identical regime selection, but the
+/// cold and warm paths run on the quadratic reference formulation.
+/// [`seed_scaled_with`] must match it byte for byte; the seeded-build
+/// differential suite (`rust/tests/properties.rs`) pins the equivalence.
+pub fn seed_scaled_reference_with(
+    donor_inst: &DsaInstance,
+    donor: &Assignment,
+    new_inst: &DsaInstance,
+    policy: Policy,
+) -> Resolution {
+    seed_scaled_impl(donor_inst, donor, new_inst, policy, true)
+}
+
+fn seed_scaled_impl(
+    donor_inst: &DsaInstance,
+    donor: &Assignment,
+    new_inst: &DsaInstance,
+    policy: Policy,
+    reference: bool,
+) -> Resolution {
+    assert_eq!(
+        donor.offsets.len(),
+        donor_inst.len(),
+        "assignment does not cover the donor instance"
+    );
+    if new_inst.is_empty() {
+        return Resolution {
+            assignment: Assignment {
+                offsets: Vec::new(),
+                peak: 0,
+            },
+            disturbed: 0,
+            warm: true,
+        };
+    }
+    let structural = donor_inst.len() != new_inst.len()
+        || donor_inst
+            .blocks
+            .iter()
+            .zip(&new_inst.blocks)
+            .any(|(d, n)| (d.alloc_at, d.free_at) != (n.alloc_at, n.free_at));
+    if structural {
+        let cold = if reference {
+            solve_reference_with(new_inst, policy)
+        } else {
+            solve_with(new_inst, policy)
+        };
+        return Resolution {
+            assignment: cold,
+            disturbed: new_inst.len(),
+            warm: false,
+        };
+    }
+    if let Some(r) = uniform_ratio(donor_inst, new_inst) {
+        let offsets = donor.offsets.iter().map(|&o| o * r).collect();
+        let assignment = Assignment::from_offsets(new_inst, offsets);
+        debug_assert!(assignment.validate(new_inst).is_ok());
+        return Resolution {
+            assignment,
+            disturbed: 0,
+            warm: true,
+        };
+    }
+    let delta = TraceDelta::diff(donor_inst, new_inst);
+    if reference {
+        resolve_reference_with(donor_inst, donor, new_inst, &delta, policy)
+    } else {
+        resolve_with(donor_inst, donor, new_inst, &delta, policy)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -978,6 +1129,78 @@ mod tests {
         let r = resolve(&prev_inst, &prev, &new_inst, &delta);
         r.assignment.validate(&new_inst).unwrap();
         assert_eq!(r.disturbed, 2);
+    }
+
+    // ----- cross-bucket plan seeding -----------------------------------------
+
+    #[test]
+    fn seed_scaled_uniform_ratio_transfers_offsets_exactly() {
+        let donor_inst =
+            DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (5, 5, 7), (7, 10, 12)]);
+        let donor = solve(&donor_inst);
+        let scaled =
+            DsaInstance::from_triples(&[(40, 0, 4), (80, 2, 6), (20, 5, 7), (28, 10, 12)]);
+        let r = seed_scaled(&donor_inst, &donor, &scaled);
+        r.assignment.validate(&scaled).unwrap();
+        assert!(r.warm);
+        assert_eq!(r.disturbed, 0, "the exact transfer re-places nothing");
+        let expected: Vec<u64> = donor.offsets.iter().map(|&o| o * 4).collect();
+        assert_eq!(r.assignment.offsets, expected);
+        assert_eq!(r.assignment.peak, donor.peak * 4);
+        // Scale-equivariance: the transfer equals the cold solve.
+        assert_eq!(r.assignment, solve(&scaled));
+    }
+
+    #[test]
+    fn seed_scaled_identity_ratio_reuses_the_plan() {
+        let donor_inst = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6)]);
+        let donor = solve(&donor_inst);
+        let r = seed_scaled(&donor_inst, &donor, &donor_inst.clone());
+        assert!(r.warm);
+        assert_eq!(r.assignment, donor);
+    }
+
+    #[test]
+    fn seed_scaled_fractional_ratio_rides_the_warm_path() {
+        // Sizes ceil-scaled by 3/2: no uniform integer ratio, but the
+        // delta is a pure ratchet, so the warm resolve applies — and the
+        // ratchet gate bounds the peak by max(donor peak, cold peak).
+        let donor_inst = DsaInstance::from_triples(&[(10, 0, 4), (21, 2, 6), (5, 10, 14)]);
+        let donor = solve(&donor_inst);
+        let scaled = DsaInstance::from_triples(&[(15, 0, 4), (32, 2, 6), (8, 10, 14)]);
+        let r = seed_scaled(&donor_inst, &donor, &scaled);
+        r.assignment.validate(&scaled).unwrap();
+        let cold = solve(&scaled);
+        let scaled_donor_peak = (donor.peak * 3 + 1) / 2;
+        assert!(r.assignment.peak <= cold.peak.max(scaled_donor_peak));
+        assert_eq!(
+            r,
+            seed_scaled_reference_with(&donor_inst, &donor, &scaled, Policy::default())
+        );
+    }
+
+    #[test]
+    fn seed_scaled_structural_mismatch_solves_cold() {
+        let donor_inst = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6)]);
+        let donor = solve(&donor_inst);
+        // A shifted lifetime: positions no longer correspond.
+        let other = DsaInstance::from_triples(&[(10, 0, 4), (20, 3, 6)]);
+        let r = seed_scaled(&donor_inst, &donor, &other);
+        assert!(!r.warm, "skeleton mismatch must fall back to cold");
+        assert_eq!(r.disturbed, other.len());
+        assert_eq!(r.assignment, solve(&other));
+        // A different block count likewise.
+        let longer = DsaInstance::from_triples(&[(10, 0, 4), (20, 2, 6), (1, 0, 1)]);
+        assert!(!seed_scaled(&donor_inst, &donor, &longer).warm);
+    }
+
+    #[test]
+    fn seed_scaled_empty_target() {
+        let donor_inst = DsaInstance::from_triples(&[(10, 0, 4)]);
+        let donor = solve(&donor_inst);
+        let r = seed_scaled(&donor_inst, &donor, &DsaInstance::new(vec![]));
+        assert_eq!(r.assignment.peak, 0);
+        assert!(r.warm);
     }
 
     #[test]

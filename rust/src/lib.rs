@@ -63,6 +63,21 @@
 //! registry per shard, so small request batches stop paying
 //! `max_batch` padding.
 //!
+//! Registry plans are *transferable and self-healing* (ROADMAP.md
+//! `## Plan transfer & re-pack`). A bucket miss seeds its plan from the
+//! largest resident smaller bucket: [`dsa::bestfit::seed_scaled`]
+//! scales the donor's solved instance along the batch dimension (exact
+//! O(n) offset transfer on uniform integer ratios — the heuristic is
+//! scale-equivariant — and the `resolve` warm path on fractional ones),
+//! and [`plan::ReplayEngine::adopt_plan`] installs the result so the
+//! new bucket replays from its very first iteration instead of paying a
+//! profile + cold solve on the serving path. Against warm-start drift,
+//! a configurable re-pack interval (`ServeConfig::repack_interval`,
+//! `--repack-every`) re-solves the live trace on a background thread
+//! after every `K`th consecutive warm reopt and swaps the fresh packing
+//! in at the next iteration boundary when it is tighter than the
+//! incumbent, bounding drift to one interval without growing the arena.
+//!
 //! Around that core the crate ships the complete substrate the paper's
 //! evaluation needs: Chainer/CuPy-style pool and network-wise baseline
 //! allocators ([`alloc`]), a simulated 16-GiB GPU with a

@@ -344,6 +344,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "unlimited",
             "staging arena byte budget per shard registry (e.g. 64MiB); LRU-evicts beyond it",
         )
+        .opt_default(
+            "repack-every",
+            "16",
+            "background re-pack a bucket plan after this many warm reopts ('off' = never)",
+        )
         .opt_default("artifacts", "artifacts", "artifact directory");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.help_text());
@@ -365,6 +370,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_batch: a.get_or("max-batch", 32usize)?,
         bucket_ladder: a.get_csv::<usize>("buckets")?,
         plan_budget_bytes,
+        repack_interval: a.get_interval_or("repack-every", 16)?,
         ..ServeConfig::default()
     };
     let mut server = InferenceServer::new(&dir, 11, cfg)?;

@@ -20,6 +20,23 @@
 //!   change — a cold solve, counted in `reopt_cold`).
 //! * **interrupt/resume (§4.3)**: requests inside an interrupted region
 //!   bypass both λ and the plan, living on the escape route.
+//! * **Plan adoption**: [`adopt_plan`](ReplayEngine::adopt_plan) installs
+//!   an externally built plan — e.g. one seeded from another bucket's
+//!   plan scaled along the batch dimension (`bestfit::seed_scaled`) —
+//!   so the engine replays from its very first iteration; every
+//!   deviation rule above applies unchanged from then on.
+//! * **Periodic cold re-pack**: chained warm reoptimizations can drift
+//!   above what a fresh solve would achieve. With a nonzero
+//!   [`set_repack_interval`](ReplayEngine::set_repack_interval), every
+//!   `K`th consecutive warm reopt spawns a *background* re-solve of the
+//!   live trace; the result swaps in atomically at the next iteration
+//!   boundary (no block is live there) when it is tighter than the
+//!   incumbent plan, bounding drift to one interval — post-repack peak
+//!   is exactly `min(incumbent peak, cold peak)`, so a re-pack never
+//!   grows the arena. The solve overlaps serving; the boundary join is
+//!   a no-op once the worker finished, and at worst waits out one
+//!   solve's remainder per `K` reopts. A cold solve of any kind resets
+//!   the interval — it is already a fresh packing.
 //!
 //! Soundness: replay identifies blocks positionally, which is only sound
 //! for hot propagation. Before handing out a planned slot off the fast
@@ -69,6 +86,23 @@ struct Plan {
 impl Plan {
     fn arena_range(&self) -> (u64, u64) {
         (self.base, self.base + self.peak)
+    }
+}
+
+/// An in-flight background re-pack: a worker thread cold-solving the
+/// live trace. `generation` names the plan install the trace was cloned
+/// from; if the plan changed underneath (a reopt landed first), the
+/// result is stale and dropped unjoined.
+struct RepackJob {
+    generation: u64,
+    handle: std::thread::JoinHandle<(Trace, DsaInstance, Assignment, u64)>,
+}
+
+impl std::fmt::Debug for RepackJob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RepackJob")
+            .field("generation", &self.generation)
+            .finish_non_exhaustive()
     }
 }
 
@@ -136,6 +170,18 @@ pub struct ReplayEngine<M: MemoryBackend> {
     resolve_ns: u64,
     last_resolve_ns: u64,
     resolves: u64,
+    /// Background re-pack cadence: after this many consecutive warm
+    /// reopts, re-solve the live trace off the serving path (0 = never).
+    repack_interval: u64,
+    /// Warm reopts since the last fresh packing (cold solve or re-pack).
+    warm_since_repack: u64,
+    /// Bumped on every plan install; pending re-packs of older
+    /// generations are stale.
+    plan_generation: u64,
+    repack: Option<RepackJob>,
+    repacks: u64,
+    repack_ns: u64,
+    last_repack_ns: u64,
     /// Labels forwarded to traces/diagnostics.
     model: String,
     phase: String,
@@ -162,6 +208,13 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             resolve_ns: 0,
             last_resolve_ns: 0,
             resolves: 0,
+            repack_interval: 0,
+            warm_since_repack: 0,
+            plan_generation: 0,
+            repack: None,
+            repacks: 0,
+            repack_ns: 0,
+            last_repack_ns: 0,
             model: model.to_string(),
             phase: phase.to_string(),
             batch,
@@ -245,6 +298,32 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.resolves
     }
 
+    /// Re-pack every `every` consecutive warm reopts (0 = never). The
+    /// re-solve runs on a background thread and its result swaps in at
+    /// the next iteration boundary, so chained warm-start drift is
+    /// bounded to one interval without stalling the serving path.
+    pub fn set_repack_interval(&mut self, every: u64) {
+        self.repack_interval = every;
+    }
+
+    /// Background cold re-packs completed: swapped into this engine's
+    /// plan when tighter than the incumbent, or discarded after
+    /// confirming the incumbent already matched a fresh packing.
+    pub fn repacks(&self) -> u64 {
+        self.repacks
+    }
+
+    /// Total wall nanoseconds spent in background re-pack solves (as
+    /// measured inside the worker thread — off the serving path).
+    pub fn repack_ns(&self) -> u64 {
+        self.repack_ns
+    }
+
+    /// Wall nanoseconds of the most recent background re-pack solve.
+    pub fn last_repack_ns(&self) -> u64 {
+        self.last_repack_ns
+    }
+
     // ----- plan construction ------------------------------------------------
 
     fn fresh_profiler(&self) -> MemoryProfiler {
@@ -308,10 +387,42 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             events,
             addrs,
         });
+        self.plan_generation += 1;
         Ok(())
     }
 
-    /// Solve the plan from `trace` from scratch (cold).
+    /// Adopt an externally built plan — e.g. one seeded from another
+    /// bucket's plan scaled along the batch dimension
+    /// (`bestfit::seed_scaled`) — skipping the profiling iteration: the
+    /// engine replays from its first iteration. Only a fresh engine may
+    /// adopt; from then on every normal deviation rule applies (sizes
+    /// above the adopted plan ratchet through the warm re-solve, a
+    /// structural mismatch re-solves cold from the observed trace).
+    /// `inst` must be the trace's own instance (callers already hold it
+    /// from solving `sol`, so the engine does not re-derive it).
+    pub fn adopt_plan(
+        &mut self,
+        ctx: &mut M::Ctx,
+        trace: Trace,
+        inst: &DsaInstance,
+        sol: Assignment,
+    ) -> Result<(), M::Error> {
+        assert!(self.plan.is_none(), "adopt_plan on an engine with a plan");
+        assert_eq!(
+            inst.len(),
+            trace.n_blocks(),
+            "adopted instance does not match the trace"
+        );
+        assert_eq!(
+            sol.offsets.len(),
+            inst.len(),
+            "assignment does not cover the adopted trace"
+        );
+        self.install_plan(ctx, trace, inst, sol)
+    }
+
+    /// Solve the plan from `trace` from scratch (cold). A fresh packing
+    /// has zero warm-start drift, so the re-pack interval restarts.
     fn solve_plan(&mut self, ctx: &mut M::Ctx, trace: Trace) -> Result<(), M::Error> {
         let inst = trace.to_dsa_instance();
         let t0 = Instant::now();
@@ -319,6 +430,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.last_solve_ns = t0.elapsed().as_nanos() as u64;
         self.solve_ns += self.last_solve_ns;
         self.solves += 1;
+        self.warm_since_repack = 0;
         self.install_plan(ctx, trace, &inst, sol)
     }
 
@@ -351,12 +463,74 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.resolves += 1;
         if r.warm {
             self.stats.reopt_warm += 1;
+            self.warm_since_repack += 1;
         } else {
             // The gate paid a full solve inside `resolve`; its cost is
-            // part of `last_resolve_ns`.
+            // part of `last_resolve_ns`. The kept packing is no looser
+            // than that fresh solve, so drift restarts here too.
             self.stats.reopt_cold += 1;
+            self.warm_since_repack = 0;
         }
         self.install_plan(ctx, merged, &new_inst, r.assignment)
+    }
+
+    /// Spawn the background re-pack once `repack_interval` consecutive
+    /// warm reopts have accumulated and no re-pack is already in flight.
+    fn maybe_spawn_repack(&mut self) {
+        if self.repack_interval == 0
+            || self.warm_since_repack < self.repack_interval
+            || self.repack.is_some()
+        {
+            return;
+        }
+        self.warm_since_repack = 0;
+        let plan = self.plan.as_ref().expect("repack without plan");
+        let trace = plan.trace.clone();
+        self.repack = Some(RepackJob {
+            generation: self.plan_generation,
+            handle: std::thread::spawn(move || {
+                let inst = trace.to_dsa_instance();
+                let t0 = Instant::now();
+                let sol = bestfit::solve(&inst);
+                let ns = t0.elapsed().as_nanos() as u64;
+                (trace, inst, sol, ns)
+            }),
+        });
+    }
+
+    /// The iteration-boundary half of the re-pack: join the background
+    /// re-solve and swap it in while no block is live. The solve
+    /// overlapped at least one full iteration, so in the steady state
+    /// the join is a no-op; in the worst case the boundary waits out
+    /// the solve's remainder — a deterministic, once-per-`K`-reopts
+    /// cost, never the full solve on the serving path. A stale job (the
+    /// plan was re-solved underneath it) is dropped unjoined, and a
+    /// fresh packing that is *not* tighter than the incumbent is
+    /// discarded after counting — the heuristic is not size-monotone,
+    /// so the drifted warm plan can already sit at or below a cold
+    /// solve, and a re-pack must never grow the arena.
+    fn try_swap_repack(&mut self, ctx: &mut M::Ctx) -> Result<(), M::Error> {
+        let generation = self.plan_generation;
+        let stale = self.repack.as_ref().is_some_and(|j| j.generation != generation);
+        if stale {
+            self.repack = None;
+            return Ok(());
+        }
+        let Some(job) = self.repack.take() else {
+            return Ok(());
+        };
+        let (trace, inst, sol, ns) = job.handle.join().expect("repack thread panicked");
+        self.repacks += 1;
+        self.last_repack_ns = ns;
+        self.repack_ns += ns;
+        self.warm_since_repack = 0;
+        let current_peak = self.plan.as_ref().expect("repack without plan").peak;
+        if sol.peak >= current_peak {
+            // The incumbent is already at least as tight: the re-pack
+            // just verified there is no drift to reclaim.
+            return Ok(());
+        }
+        self.install_plan(ctx, trace, &inst, sol)
     }
 
     /// Leave the in-sync fast path: reconstruct the profiler, live map,
@@ -555,10 +729,12 @@ impl<M: MemoryBackend> ReplayEngine<M> {
                 self.event_idx == self.plan.as_ref().expect("in_sync without plan").events.len();
             if complete {
                 // A perfect hot iteration: nothing to recompute. Drop any
-                // interrupted-region escape cache and return — this is
-                // the steady state for the paper's CNNs.
+                // interrupted-region escape cache, let a finished
+                // background re-pack swap in (the iteration boundary: no
+                // block is live), and return — this is the steady state
+                // for the paper's CNNs.
                 self.backend.escape_trim(ctx);
-                return Ok(());
+                return self.try_swap_repack(ctx);
             }
             // Ended early: fewer profiled events than planned — a
             // structural deviation (shorter propagation).
@@ -578,6 +754,11 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         // (re)reserving the arena, so the plan has room: the paper's
         // allocator holds only the arena between iterations.
         self.backend.escape_trim(ctx);
+
+        // The iteration boundary: a finished background re-pack swaps in
+        // *before* any reoptimization, so the reopt below warm-starts
+        // from the freshly packed plan instead of the drifted one.
+        self.try_swap_repack(ctx)?;
 
         let result = if self.plan.is_none() {
             // First solve from the sample run.
@@ -602,7 +783,9 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         };
         self.deviated = false;
         self.structure_changed = false;
-        result
+        result?;
+        self.maybe_spawn_repack();
+        Ok(())
     }
 
     /// Enter a non-hot region (§4.3). Nests.
@@ -785,6 +968,113 @@ mod tests {
         ok(e.end_iteration(&mut ()));
         assert_eq!(e.stats().reopts, 1);
         assert_eq!(e.planned_peak(), Some(5000), "plan grew to observed max");
+    }
+
+    /// Drive one iteration of `sizes` (alloc all, free in reverse);
+    /// returns whether every request replayed.
+    fn drive(e: &mut ReplayEngine<HostBackend>, sizes: &[u64]) -> bool {
+        e.begin_iteration();
+        let placements: Vec<(u64, u64)> = sizes
+            .iter()
+            .map(|&s| (ok(e.alloc(&mut (), s)).addr, s))
+            .collect();
+        let replayed = placements.iter().all(|&(addr, _)| addr < HOST_ESCAPE_BASE);
+        for (addr, s) in placements.into_iter().rev() {
+            e.free(&mut (), addr, s);
+        }
+        ok(e.end_iteration(&mut ()));
+        replayed
+    }
+
+    #[test]
+    fn adopted_plan_replays_from_the_first_iteration() {
+        // Profile a donor engine, adopt its (scaled) plan into a fresh
+        // engine: no profiling iteration, first iteration replays.
+        let mut donor = host_engine();
+        drive(&mut donor, &[1000, 2000]);
+        let trace = donor.plan_trace().unwrap().clone();
+        let inst = trace.to_dsa_instance();
+        let sol = crate::dsa::solution::Assignment {
+            offsets: donor.planned_offsets().unwrap().to_vec(),
+            peak: donor.planned_peak().unwrap(),
+        };
+        let mut e = host_engine();
+        assert!(e.is_profiling());
+        ok(e.adopt_plan(&mut (), trace, &inst, sol));
+        assert!(!e.is_profiling(), "adoption skips profiling");
+        assert_eq!(e.solves(), 0, "no DSA solve was paid here");
+        assert!(drive(&mut e, &[1000, 2000]), "first iteration replays");
+        assert_eq!(e.stats().fast_path, 2);
+        // Deviation rules are unchanged: a ratchet warm-starts…
+        drive(&mut e, &[1000, 5000]);
+        assert_eq!((e.stats().reopt_warm, e.stats().reopt_cold), (1, 0));
+        // …and a structural change re-solves cold from the observed trace.
+        drive(&mut e, &[1000, 5000, 64]);
+        assert_eq!(e.stats().reopt_cold, 1);
+        assert_eq!(e.plan_trace().unwrap().n_blocks(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "adopt_plan on an engine with a plan")]
+    fn adopt_rejects_engines_with_a_plan() {
+        let mut e = host_engine();
+        drive(&mut e, &[100]);
+        let trace = e.plan_trace().unwrap().clone();
+        let inst = trace.to_dsa_instance();
+        let sol = crate::dsa::solution::Assignment {
+            offsets: e.planned_offsets().unwrap().to_vec(),
+            peak: e.planned_peak().unwrap(),
+        };
+        let _ = e.adopt_plan(&mut (), trace, &inst, sol);
+    }
+
+    #[test]
+    fn repack_fires_after_k_warm_reopts_and_swaps_at_the_boundary() {
+        let mut e = host_engine();
+        e.set_repack_interval(2);
+        drive(&mut e, &[1000]); // profile
+        drive(&mut e, &[2000]); // warm reopt 1 (in-place ratchet)
+        assert_eq!(e.repacks(), 0);
+        drive(&mut e, &[3000]); // warm reopt 2 → background re-pack spawns
+        assert_eq!(e.repacks(), 0, "the swap waits for the next boundary");
+        assert!(drive(&mut e, &[3000]), "hot iteration replays");
+        assert_eq!(e.repacks(), 1, "re-pack swapped in at the boundary");
+        assert!(e.last_repack_ns() > 0 && e.repack_ns() >= e.last_repack_ns());
+        // The re-pack equals the cold solve of the live trace.
+        let cold = bestfit::solve(&e.plan_trace().unwrap().to_dsa_instance());
+        assert_eq!(e.planned_peak(), Some(cold.peak));
+        assert_eq!((e.stats().reopt_warm, e.stats().reopt_cold), (2, 0));
+        // The swapped plan replays like any other.
+        assert!(drive(&mut e, &[3000]));
+        assert_eq!(e.repacks(), 1, "no further re-pack without new reopts");
+    }
+
+    #[test]
+    fn cold_reopt_resets_the_repack_interval() {
+        let mut e = host_engine();
+        e.set_repack_interval(2);
+        drive(&mut e, &[1000]); // profile
+        drive(&mut e, &[2000]); // warm reopt 1
+        drive(&mut e, &[2000, 500]); // structural → cold: drift is zero again
+        // Grow the top of the stack: an in-place ratchet, always warm.
+        drive(&mut e, &[2000, 900]); // warm reopt 1 (restarted interval)
+        drive(&mut e, &[2000, 900]); // hot boundary — nothing pending
+        assert_eq!(e.repacks(), 0, "cold solve restarted the interval");
+        drive(&mut e, &[2000, 1500]); // warm reopt 2 → spawn
+        drive(&mut e, &[2000, 1500]); // hot boundary → swap
+        assert_eq!(e.repacks(), 1);
+        assert_eq!((e.stats().reopt_warm, e.stats().reopt_cold), (3, 1));
+    }
+
+    #[test]
+    fn zero_interval_never_repacks() {
+        let mut e = host_engine();
+        drive(&mut e, &[1000]);
+        for grow in [2000u64, 3000, 4000, 5000] {
+            drive(&mut e, &[grow]);
+        }
+        assert_eq!(e.stats().reopt_warm, 4);
+        assert_eq!(e.repacks(), 0);
     }
 
     #[test]

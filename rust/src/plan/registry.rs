@@ -76,11 +76,13 @@ impl<M: MemoryBackend> PlanFootprint for ReplayEngine<M> {
 /// wants covered, capped at the paper's evaluation batch size.
 pub const DEFAULT_LADDER: [u32; 5] = [1, 4, 8, 16, 32];
 
-/// Registry knobs: the bucket ladder and the resident-bytes budget.
+/// Registry knobs: the bucket ladder, the resident-bytes budget, and the
+/// re-pack cadence applied to managed plans.
 #[derive(Debug, Clone)]
 pub struct RegistryConfig {
     buckets: Vec<u32>,
     budget_bytes: u64,
+    repack_interval: u64,
 }
 
 impl RegistryConfig {
@@ -95,6 +97,7 @@ impl RegistryConfig {
         RegistryConfig {
             buckets: b,
             budget_bytes: u64::MAX,
+            repack_interval: 0,
         }
     }
 
@@ -105,12 +108,23 @@ impl RegistryConfig {
         self
     }
 
+    /// Background-re-pack managed plans after this many consecutive warm
+    /// reopts (0 = never); see `ReplayEngine::set_repack_interval`.
+    pub fn with_repack_interval(mut self, every: u64) -> RegistryConfig {
+        self.repack_interval = every;
+        self
+    }
+
     pub fn buckets(&self) -> &[u32] {
         &self.buckets
     }
 
     pub fn budget_bytes(&self) -> u64 {
         self.budget_bytes
+    }
+
+    pub fn repack_interval(&self) -> u64 {
+        self.repack_interval
     }
 
     /// The serve routing rule: smallest bucket covering `batch`; the
@@ -161,6 +175,20 @@ pub struct RegistryStats {
     pub resolve_ns_total: u64,
     /// Slowest single recorded warm-start re-solve, in wall nanoseconds.
     pub resolve_ns_max: u64,
+    /// Plans built by scaling a donor bucket's plan (cross-bucket
+    /// seeding) instead of profiling + solving from nothing.
+    pub seeded_builds: u64,
+    /// Total wall nanoseconds across recorded seeded builds.
+    pub seed_ns_total: u64,
+    /// Slowest single recorded seeded build, in wall nanoseconds.
+    pub seed_ns_max: u64,
+    /// Background cold re-packs swapped into resident plans.
+    pub repacks: u64,
+    /// Total wall nanoseconds across recorded re-pack solves (spent on
+    /// the background thread, off the serving path).
+    pub repack_ns_total: u64,
+    /// Slowest single recorded re-pack solve, in wall nanoseconds.
+    pub repack_ns_max: u64,
 }
 
 impl RegistryStats {
@@ -223,6 +251,39 @@ impl RegistryStats {
         self.resolve_ns_total / self.resolves
     }
 
+    /// Record one cross-bucket seeded plan build of `ns` wall
+    /// nanoseconds (scale + warm transfer + adoption — no profiling
+    /// iteration, no cold solve).
+    pub fn record_seeded_build(&mut self, ns: u64) {
+        self.seeded_builds += 1;
+        self.seed_ns_total += ns;
+        self.seed_ns_max = self.seed_ns_max.max(ns);
+    }
+
+    /// Mean nanoseconds per recorded seeded build; 0 before any.
+    pub fn mean_seed_ns(&self) -> u64 {
+        if self.seeded_builds == 0 {
+            return 0;
+        }
+        self.seed_ns_total / self.seeded_builds
+    }
+
+    /// Record one background re-pack whose solve took `ns` wall
+    /// nanoseconds (on the background thread, off the serving path).
+    pub fn record_repack(&mut self, ns: u64) {
+        self.repacks += 1;
+        self.repack_ns_total += ns;
+        self.repack_ns_max = self.repack_ns_max.max(ns);
+    }
+
+    /// Mean nanoseconds per recorded re-pack solve; 0 before any.
+    pub fn mean_repack_ns(&self) -> u64 {
+        if self.repacks == 0 {
+            return 0;
+        }
+        self.repack_ns_total / self.repacks
+    }
+
     /// Fold another registry's counters in (cross-shard aggregation).
     pub fn absorb(&mut self, other: &RegistryStats) {
         self.hits += other.hits;
@@ -236,6 +297,12 @@ impl RegistryStats {
         self.resolves += other.resolves;
         self.resolve_ns_total += other.resolve_ns_total;
         self.resolve_ns_max = self.resolve_ns_max.max(other.resolve_ns_max);
+        self.seeded_builds += other.seeded_builds;
+        self.seed_ns_total += other.seed_ns_total;
+        self.seed_ns_max = self.seed_ns_max.max(other.seed_ns_max);
+        self.repacks += other.repacks;
+        self.repack_ns_total += other.repack_ns_total;
+        self.repack_ns_max = self.repack_ns_max.max(other.repack_ns_max);
     }
 }
 
@@ -316,6 +383,25 @@ impl<P: PlanFootprint> PlanRegistry<P> {
         self.slots.get(key).map(|s| &s.plan)
     }
 
+    /// The best seed donor for a missing `key`: the resident plan with
+    /// the same model and phase and the *largest batch bucket below* the
+    /// missing one. Scaling a plan up along the batch dimension keeps
+    /// the positional delta a pure size ratchet (the warm-transfer
+    /// guarantee, `bestfit::seed_scaled`); scaling down does not, so
+    /// larger buckets never donate. Does not touch LRU state or stats.
+    pub fn seed_donor(&self, key: &PlanKey) -> Option<(PlanKey, &P)> {
+        let donor = self
+            .slots
+            .keys()
+            .filter(|k| {
+                k.model == key.model && k.phase == key.phase && k.batch_bucket < key.batch_bucket
+            })
+            .max_by_key(|k| k.batch_bucket)?
+            .clone();
+        let plan = &self.slots.get(&donor).expect("donor resident").plan;
+        Some((donor, plan))
+    }
+
     /// Total bytes pinned across resident plans.
     pub fn held_bytes(&self) -> u64 {
         self.slots.values().map(|s| s.plan.plan_bytes()).sum()
@@ -353,6 +439,18 @@ impl<P: PlanFootprint> PlanRegistry<P> {
     /// [`record_build_ns`](Self::record_build_ns).
     pub fn record_cold_reopt(&mut self) {
         self.stats.record_cold_reopt();
+    }
+
+    /// Record one cross-bucket seeded plan build (see
+    /// [`RegistryStats::record_seeded_build`]).
+    pub fn record_seeded_build(&mut self, ns: u64) {
+        self.stats.record_seeded_build(ns);
+    }
+
+    /// Record one background re-pack of a resident plan (see
+    /// [`RegistryStats::record_repack`]).
+    pub fn record_repack(&mut self, ns: u64) {
+        self.stats.record_repack(ns);
     }
 
     /// Per-plan replay-lookup hit counts, sorted by key (diagnostics).
@@ -487,6 +585,64 @@ mod tests {
         assert_eq!((total.reopts_warm, total.reopts_cold), (3, 2));
         assert_eq!(total.resolves, 4);
         assert_eq!(total.resolve_ns_max, 10_000);
+    }
+
+    #[test]
+    fn seed_donor_picks_largest_smaller_bucket_same_family() {
+        let mut r: PlanRegistry<Toy> = PlanRegistry::new(RegistryConfig::new(&[1, 4, 8, 16, 32]));
+        r.get_or_insert_with(&key(4), |_| Toy(4));
+        r.get_or_insert_with(&key(16), |_| Toy(16));
+        r.get_or_insert_with(&PlanKey::new("other", "serve", 8), |_| Toy(8));
+        let (donor, plan) = r.seed_donor(&key(32)).expect("donor below 32");
+        assert_eq!(donor, key(16), "largest resident bucket below wins");
+        assert_eq!(plan.0, 16);
+        assert_eq!(r.seed_donor(&key(8)).unwrap().0, key(4));
+        assert!(r.seed_donor(&key(4)).is_none(), "no smaller bucket resident");
+        assert!(
+            r.seed_donor(&PlanKey::new("m", "train", 32)).is_none(),
+            "donors never cross model/phase families"
+        );
+        let st = r.stats();
+        assert_eq!((st.hits, st.misses), (0, 3), "donor lookup is stats-free");
+    }
+
+    #[test]
+    fn seeded_and_repack_counters_record_and_absorb() {
+        let mut r: PlanRegistry<Toy> = PlanRegistry::new(RegistryConfig::default());
+        r.record_seeded_build(5_000);
+        r.record_seeded_build(1_000);
+        r.record_repack(20_000);
+        let st = r.stats();
+        assert_eq!(st.seeded_builds, 2);
+        assert_eq!(st.seed_ns_max, 5_000);
+        assert_eq!(st.mean_seed_ns(), 3_000);
+        assert_eq!((st.repacks, st.repack_ns_max), (1, 20_000));
+        assert_eq!(st.mean_repack_ns(), 20_000);
+        let mut total = RegistryStats::default();
+        assert_eq!(total.mean_seed_ns(), 0);
+        assert_eq!(total.mean_repack_ns(), 0);
+        total.absorb(&st);
+        total.absorb(&RegistryStats {
+            seeded_builds: 1,
+            seed_ns_total: 9_000,
+            seed_ns_max: 9_000,
+            repacks: 2,
+            repack_ns_total: 6_000,
+            repack_ns_max: 4_000,
+            ..RegistryStats::default()
+        });
+        assert_eq!(total.seeded_builds, 3);
+        assert_eq!(total.seed_ns_max, 9_000);
+        assert_eq!(total.mean_seed_ns(), 5_000);
+        assert_eq!(total.repacks, 3);
+        assert_eq!(total.repack_ns_max, 20_000);
+    }
+
+    #[test]
+    fn config_carries_repack_interval() {
+        let cfg = RegistryConfig::new(&[1, 2]).with_repack_interval(7);
+        assert_eq!(cfg.repack_interval(), 7);
+        assert_eq!(RegistryConfig::default().repack_interval(), 0);
     }
 
     #[test]

@@ -193,6 +193,19 @@ pub fn ratchet_triples(
         .collect()
 }
 
+/// Scale the triples' sizes by `num/den` (ceiling division), lifetimes
+/// untouched — a donor bucket's instance stretched along the batch
+/// dimension, the shape cross-bucket plan seeding transfers
+/// (`bestfit::seed_scaled`). Shared by the seeded-build property suite
+/// and `bench_plan_seeding` so both exercise the same scaling.
+pub fn scale_triples(triples: &[(u64, u64, u64)], num: u64, den: u64) -> Vec<(u64, u64, u64)> {
+    assert!(num > 0 && den > 0, "scale ratio must be positive");
+    triples
+        .iter()
+        .map(|&(w, a, f)| ((w * num + den - 1) / den, a, f))
+        .collect()
+}
+
 /// Pick uniformly from a fixed set of values; shrinks toward earlier entries.
 pub fn one_of<T: Clone + PartialEq + 'static>(choices: Vec<T>) -> Gen<T> {
     assert!(!choices.is_empty());
@@ -268,6 +281,18 @@ mod tests {
             changed += usize::from(g.0 > b.0);
         }
         assert!(changed > 0, "a 50% ratchet must touch something");
+    }
+
+    #[test]
+    fn scale_triples_ceil_scales_sizes_only() {
+        let base = vec![(10u64, 0u64, 4u64), (3, 2, 6)];
+        assert_eq!(scale_triples(&base, 2, 1), vec![(20, 0, 4), (6, 2, 6)]);
+        assert_eq!(scale_triples(&base, 3, 2), vec![(15, 0, 4), (5, 2, 6)]);
+        assert_eq!(scale_triples(&base, 1, 1), base, "identity ratio");
+        // Growth-only whenever num ≥ den (ceiling never rounds below).
+        for (s, b) in scale_triples(&base, 7, 5).iter().zip(&base) {
+            assert!(s.0 >= b.0);
+        }
     }
 
     #[test]

@@ -205,6 +205,22 @@ impl Args {
         Ok(self.get_parsed(name)?.unwrap_or(fallback))
     }
 
+    /// Parse an interval-style option that can be switched off: a
+    /// nonnegative count, or one of `off`/`never`/`none`/`disabled`
+    /// (all → 0, the conventional "feature disabled" value, e.g.
+    /// `--repack-every off`). A missing option yields `fallback`.
+    pub fn get_interval_or(&self, name: &str, fallback: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(fallback),
+            Some("off" | "never" | "none" | "disabled") => Ok(0),
+            Some(raw) => raw.parse::<u64>().map_err(|e| CliError::BadValue {
+                key: name.to_string(),
+                value: raw.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
     /// Parse a comma-separated option value into a typed list (e.g.
     /// `--buckets 1,4,8,16,32`). A missing option yields an empty list;
     /// empty items between commas are skipped.
@@ -297,6 +313,24 @@ mod tests {
         let bad = c.parse(&argv(&["--buckets", "1,x"])).unwrap();
         assert!(matches!(
             bad.get_csv::<u32>("buckets"),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn interval_options_accept_off_words() {
+        let c = Command::new("t", "t").opt("repack-every", "cadence");
+        for word in ["off", "never", "none", "disabled"] {
+            let a = c.parse(&argv(&["--repack-every", word])).unwrap();
+            assert_eq!(a.get_interval_or("repack-every", 16).unwrap(), 0, "{word}");
+        }
+        let a = c.parse(&argv(&["--repack-every", "8"])).unwrap();
+        assert_eq!(a.get_interval_or("repack-every", 16).unwrap(), 8);
+        let missing = c.parse(&argv(&[])).unwrap();
+        assert_eq!(missing.get_interval_or("repack-every", 16).unwrap(), 16);
+        let bad = c.parse(&argv(&["--repack-every", "x"])).unwrap();
+        assert!(matches!(
+            bad.get_interval_or("repack-every", 16),
             Err(CliError::BadValue { .. })
         ));
     }

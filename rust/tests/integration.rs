@@ -205,6 +205,138 @@ fn staging_serve_session_warm_reoptimizes_per_bucket() {
     assert!(rs.resolves >= rs.reopts_warm);
 }
 
+/// Cross-bucket plan seeding + periodic re-pack end to end on the
+/// serving substrate (runs without PJRT artifacts). A mixed-batch
+/// stream first warms bucket 16, then touches bucket 32: the registry
+/// must build bucket 32's first plan by *seeding* from bucket 16
+/// (scaled 2× along the batch dimension) — no profiling iteration, the
+/// very first bucket-32 batch replays, and the seeded build is cheaper
+/// than every cold plan build the registry recorded. A ratchet phase
+/// then grows one staged buffer K times; after the Kth warm reopt the
+/// shard-local background re-pack must swap in at the next iteration
+/// boundary with zero slot collisions. Registry accounting mirrors
+/// `coordinator::serve`'s per-batch recording, so the seeded/cold-build
+/// and repacks report lines are exercised end to end.
+#[test]
+fn staging_serve_session_seeds_buckets_and_repacks() {
+    use pgmo::coordinator::staging::{HostBuf, StagingRegistry};
+    use pgmo::plan::registry::RegistryConfig;
+
+    const K: u64 = 4;
+    let cfg = RegistryConfig::new(&[16, 32]).with_repack_interval(K);
+    let mut reg = StagingRegistry::new("mlp", "serve", cfg);
+
+    // Staging shapes proportional to the bucket: a rolling window of
+    // buffers (depth 8 — bounded stacking) plus one lone tail buffer
+    // staged after the window drains (time-disjoint from everything, so
+    // growing it is always an in-place warm ratchet). 2000 buffers make
+    // the cold build's solve an order of magnitude dearer than the O(n)
+    // seeded transfer, so the latency comparison below has real margin.
+    let unit_sizes: Vec<usize> = (0..2000).map(|i| 16 + 8 * (i % 24)).collect();
+    const TAIL_UNIT: usize = 64;
+
+    // One serving batch: drive the bucket's planner through an
+    // iteration and mirror the serve path's registry accounting.
+    // Returns whether every staged buffer replayed.
+    fn drive(
+        reg: &mut StagingRegistry,
+        bucket: u32,
+        unit_sizes: &[usize],
+        tail_scale: usize,
+    ) -> bool {
+        let p = reg.planner(bucket);
+        let before = p.stats();
+        let solves_before = p.solves();
+        let resolves_before = p.resolves();
+        let repacks_before = p.repacks();
+        p.begin_iteration();
+        let mut window: Vec<HostBuf> = Vec::new();
+        let mut all_replayed = true;
+        for &unit in unit_sizes {
+            let buf = p.alloc(unit * bucket as usize);
+            all_replayed &= buf.is_replayed();
+            window.push(buf);
+            if window.len() > 8 {
+                let victim = window.remove(0);
+                p.free(victim);
+            }
+        }
+        for buf in window.drain(..) {
+            p.free(buf);
+        }
+        let tail = p.alloc(TAIL_UNIT * bucket as usize * tail_scale);
+        all_replayed &= tail.is_replayed();
+        p.free(tail);
+        p.end_iteration();
+        let delta = p.stats().since(&before);
+        let built = p.solves() > solves_before;
+        let build_ns = p.last_solve_ns();
+        let resolved = p.resolves() > resolves_before;
+        let resolve_ns = p.last_resolve_ns();
+        let repacked = p.repacks() > repacks_before;
+        let repack_ns = p.last_repack_ns();
+        if built {
+            reg.record_build_ns(build_ns);
+        }
+        if resolved {
+            reg.record_resolve_ns(delta.reopt_warm > 0, resolve_ns);
+        } else if delta.reopt_cold > 0 {
+            reg.record_cold_reopt();
+        }
+        if repacked {
+            reg.record_repack(repack_ns);
+        }
+        all_replayed
+    }
+
+    // Bucket 16 profiles its first batch cold, then goes hot.
+    assert!(!drive(&mut reg, 16, &unit_sizes, 1), "first batch profiles");
+    assert!(drive(&mut reg, 16, &unit_sizes, 1), "second batch replays");
+    assert_eq!(reg.stats().seeded_builds, 0, "no donor existed for bucket 16");
+    assert_eq!(reg.stats().builds, 1, "bucket 16 paid the one cold build");
+
+    // Bucket 32's first build is seeded from bucket 16: it replays from
+    // its very first batch — no profile, no solve on the serving path.
+    assert!(reg.planner(32).is_replaying(), "seeded plan skips profiling");
+    assert!(
+        drive(&mut reg, 32, &unit_sizes, 1),
+        "bucket 32's first batch replays off the scaled plan"
+    );
+    let rs = reg.stats();
+    assert!(rs.seeded_builds >= 1, "bucket 32 must be seeded: {rs:?}");
+    assert_eq!(reg.planner(32).solves(), 0, "no cold solve for bucket 32");
+    assert!(
+        rs.seed_ns_max < rs.build_ns_max,
+        "seeded build ({} ns) must beat the slowest cold build ({} ns)",
+        rs.seed_ns_max,
+        rs.build_ns_max
+    );
+
+    // Mixed stream: bucket 16 keeps replaying between bucket-32 batches.
+    assert!(drive(&mut reg, 16, &unit_sizes, 1));
+
+    // Ratchet phase: grow the tail buffer K times (each growth deviates
+    // once, warm-starts, and is followed by a hot boundary batch). The
+    // Kth warm reopt spawns the background re-pack; the boundary after
+    // it swaps the re-pack in.
+    for step in 0..K as usize {
+        assert!(
+            !drive(&mut reg, 32, &unit_sizes, 2 + step),
+            "growth batch must deviate"
+        );
+        drive(&mut reg, 32, &unit_sizes, 2 + step); // hot boundary
+    }
+    let p = reg.planner(32);
+    let s = p.stats();
+    assert_eq!(s.reopt_warm, K, "every tail growth warm-starts: {s:?}");
+    assert_eq!(s.reopt_cold, 0, "no structural deviations in this stream");
+    assert_eq!(s.slot_collisions, 0, "zero soundness-check failures");
+    assert!(p.repacks() >= 1, "a re-pack must fire after K warm reopts");
+    let rs = reg.stats();
+    assert!(rs.repacks >= 1, "the registry must record the re-pack: {rs:?}");
+    assert_eq!(rs.reopts_warm, K);
+}
+
 /// seq2seq end-to-end: reoptimization keeps memory bounded while the pool
 /// ratchets (Fig 2c's phenomenon), and replay still dominates.
 #[test]

@@ -206,17 +206,45 @@ fn skyline_episode(seed: u64, ops: usize) -> Result<(), String> {
     Ok(())
 }
 
-/// Read the committed corpus seeds of one episode kind: files named
-/// `reopt-*.seed` hold reopt episodes, every other `*.seed` a place/lift
-/// episode (both kinds share the directory).
-fn corpus_seeds(dir: &std::path::Path, reopt: bool) -> Vec<(PathBuf, u64)> {
+/// The episode kinds sharing the corpus directory, distinguished by
+/// filename prefix. Place/lift skyline episodes own every `*.seed` with
+/// no known prefix (including the historical `seed-*.seed` entries and
+/// unprefixed `fail-*` persistence).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum EpisodeKind {
+    Skyline,
+    Reopt,
+    Seeded,
+}
+
+impl EpisodeKind {
+    const PREFIXED: [&'static str; 2] = ["reopt-", "seeded-"];
+
+    fn prefix(self) -> Option<&'static str> {
+        match self {
+            EpisodeKind::Skyline => None,
+            EpisodeKind::Reopt => Some("reopt-"),
+            EpisodeKind::Seeded => Some("seeded-"),
+        }
+    }
+
+    fn matches(self, name: &str) -> bool {
+        match self.prefix() {
+            Some(prefix) => name.starts_with(prefix),
+            None => !Self::PREFIXED.iter().any(|p| name.starts_with(p)),
+        }
+    }
+}
+
+/// Read the committed corpus seeds of one episode kind.
+fn corpus_seeds(dir: &std::path::Path, kind: EpisodeKind) -> Vec<(PathBuf, u64)> {
     let mut out: Vec<(PathBuf, u64)> = std::fs::read_dir(dir)
         .unwrap_or_else(|e| panic!("skyline corpus dir {dir:?} missing: {e}"))
         .filter_map(|e| e.ok().map(|e| e.path()))
         .filter(|p| p.extension().is_some_and(|x| x == "seed"))
         .filter(|p| {
             let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
-            name.starts_with("reopt-") == reopt
+            kind.matches(name)
         })
         .map(|p| {
             let raw = std::fs::read_to_string(&p).expect("read corpus seed");
@@ -236,7 +264,7 @@ fn corpus_seeds(dir: &std::path::Path, reopt: bool) -> Vec<(PathBuf, u64)> {
 /// so it replays first on every future run (commit the file to pin it).
 fn run_skyline_fuzz(episodes: u64, ops: usize) {
     let dir = skyline_corpus_dir();
-    let corpus = corpus_seeds(&dir, false);
+    let corpus = corpus_seeds(&dir, EpisodeKind::Skyline);
     assert!(
         !corpus.is_empty(),
         "committed skyline corpus must hold at least one seed"
@@ -363,7 +391,7 @@ fn reopt_episode(seed: u64, rounds: usize) -> Result<(), String> {
 /// file to pin it).
 fn run_reopt_fuzz(episodes: u64, rounds: usize) {
     let dir = skyline_corpus_dir();
-    let corpus = corpus_seeds(&dir, true);
+    let corpus = corpus_seeds(&dir, EpisodeKind::Reopt);
     assert!(
         !corpus.is_empty(),
         "committed reopt corpus must hold at least one seed"
@@ -400,6 +428,111 @@ fn warmstart_reopt_fuzz_lockstep() {
 #[ignore = "heavy: 10× episodes, run by the nightly `cargo test -- --ignored` job"]
 fn warmstart_reopt_fuzz_lockstep_heavy() {
     run_reopt_fuzz(480, 8);
+}
+
+// ----- seeded-build fuzzing: cross-bucket transfer in lockstep ---------------
+
+/// One deterministic seeded-build fuzz episode: a random donor instance
+/// is solved cold, then a chain of random covering-bucket ratios scales
+/// it along the batch dimension (the registry's 4 → 8 → 16 → 32
+/// ladder walk). Every scaled target is built by cross-bucket seeding
+/// (`bestfit::seed_scaled_with`) and driven in lockstep against the
+/// quadratic reference seeding path and a cold reference solve: both
+/// seeded paths must agree byte for byte, the packing must be sound,
+/// and its peak must stay within max(scaled donor peak, cold peak). The
+/// seeded target becomes the next round's donor, exactly as a seeded
+/// bucket later donates to bigger buckets.
+fn seeded_episode(seed: u64, rounds: usize) -> Result<(), String> {
+    let mut rng = Pcg32::seeded(seed);
+    let policy = Policy {
+        block_choice: *rng.choose(&BlockChoice::ALL),
+    };
+    let n = rng.range_usize(1, 40);
+    let mut triples: Vec<(u64, u64, u64)> = (0..n)
+        .map(|_| {
+            let a = rng.range(0, 150);
+            (rng.range(1, 2048), a, a + rng.range(1, 40))
+        })
+        .collect();
+    let mut inst = to_instance(&triples);
+    let mut donor = bestfit::solve_with(&inst, policy);
+    for round in 0..rounds {
+        let den = rng.range(1, 4);
+        let num = den + rng.range(0, 2 * den); // covering ratio in [1, 3)
+        let scaled = gen::scale_triples(&triples, num, den);
+        let new_inst = to_instance(&scaled);
+        let seeded = bestfit::seed_scaled_with(&inst, &donor, &new_inst, policy);
+        if let Err(e) = seeded.assignment.validate(&new_inst) {
+            return Err(format!(
+                "seed {seed} round {round}: unsound seeded packing: {e}"
+            ));
+        }
+        let reference = bestfit::seed_scaled_reference_with(&inst, &donor, &new_inst, policy);
+        if seeded != reference {
+            return Err(format!(
+                "seed {seed} round {round}: seeded paths diverge — \
+                 indexed {seeded:?} vs reference {reference:?}"
+            ));
+        }
+        let cold = bestfit::solve_reference_with(&new_inst, policy);
+        let scaled_donor_peak = (donor.peak * num + den - 1) / den;
+        if seeded.assignment.peak > cold.peak.max(scaled_donor_peak) {
+            return Err(format!(
+                "seed {seed} round {round}: seeded peak {} exceeds \
+                 max(scaled donor {scaled_donor_peak}, cold {})",
+                seeded.assignment.peak, cold.peak
+            ));
+        }
+        triples = scaled;
+        inst = new_inst;
+        donor = seeded.assignment;
+    }
+    Ok(())
+}
+
+/// Replays the committed seeded-build corpus (`seeded-*.seed`) first,
+/// then runs fresh random episodes; a failing fresh seed is persisted
+/// with the `seeded-` prefix so it replays first on every future run
+/// (commit the file to pin it).
+fn run_seeded_fuzz(episodes: u64, rounds: usize) {
+    let dir = skyline_corpus_dir();
+    let corpus = corpus_seeds(&dir, EpisodeKind::Seeded);
+    assert!(
+        !corpus.is_empty(),
+        "committed seeded-build corpus must hold at least one seed"
+    );
+    for (path, seed) in &corpus {
+        if let Err(e) = seeded_episode(*seed, rounds) {
+            panic!("seeded corpus regression {path:?}: {e}");
+        }
+    }
+
+    let base: u64 = std::env::var("PGMO_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_b00d_0000_0001);
+    for i in 0..episodes {
+        let seed = base.wrapping_add(i);
+        if let Err(e) = seeded_episode(seed, rounds) {
+            let path = dir.join(format!("seeded-fail-{seed:016x}.seed"));
+            let _ = std::fs::write(&path, format!("{seed}\n"));
+            panic!(
+                "seeded-build fuzz failed: {e}\nseed persisted to {path:?} — \
+                 commit it so the regression replays first"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_build_fuzz_lockstep() {
+    run_seeded_fuzz(48, 3);
+}
+
+#[test]
+#[ignore = "heavy: 10× episodes, run by the nightly `cargo test -- --ignored` job"]
+fn seeded_build_fuzz_lockstep_heavy() {
+    run_seeded_fuzz(480, 3);
 }
 
 // ----- §4.3 warm-start resolve ≡ reference, bounded by cold ------------------
@@ -496,6 +629,218 @@ fn prop_warmstart_matches_cold_heavy() {
             prev.peak
         );
     }
+}
+
+// ----- cross-bucket seeded builds ≡ reference, bounded by cold ---------------
+
+/// The seeded-build differential property (cross-bucket plan seeding,
+/// ROADMAP `## Plan transfer & re-pack`). For a random donor instance
+/// and a random covering ratio `num/den ≥ 1`, under every block-choice
+/// policy:
+///
+/// 1. the seeded packing of the ceiling-scaled instance is sound (no
+///    overlap among colliding pairs, peak consistent);
+/// 2. it is byte-identical to the quadratic reference seeding path;
+/// 3. its peak stays within `max(ceil-scaled donor peak, cold peak)` —
+///    seeding never grows the arena past both the donor's scaled
+///    footprint and a from-scratch solve of the scaled instance.
+fn check_seeded_build_sound(cases: usize) {
+    let spec = gen::pair(
+        instance_gen(60),
+        gen::pair(gen::u64_in(1..=4), gen::u64_in(0..=8)),
+    );
+    testkit::check("seeded build sound", cases, spec, |(base, (den, extra))| {
+        let (den, num) = (*den, *den + *extra);
+        let donor_inst = to_instance(base);
+        let scaled = gen::scale_triples(base, num, den);
+        let new_inst = to_instance(&scaled);
+        BlockChoice::ALL.iter().all(|&choice| {
+            let policy = Policy {
+                block_choice: choice,
+            };
+            let donor = bestfit::solve_with(&donor_inst, policy);
+            let seeded = bestfit::seed_scaled_with(&donor_inst, &donor, &new_inst, policy);
+            if seeded.assignment.validate(&new_inst).is_err() {
+                return false;
+            }
+            let reference =
+                bestfit::seed_scaled_reference_with(&donor_inst, &donor, &new_inst, policy);
+            if seeded != reference {
+                return false;
+            }
+            let cold = bestfit::solve_with(&new_inst, policy);
+            let scaled_donor_peak = (donor.peak * num + den - 1) / den;
+            seeded.assignment.peak <= cold.peak.max(scaled_donor_peak)
+        })
+    });
+}
+
+#[test]
+fn prop_seeded_build_sound() {
+    check_seeded_build_sound(120);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases plus a 4k-block instance, run by the nightly `cargo test -- --ignored` job"]
+fn prop_seeded_build_sound_heavy() {
+    check_seeded_build_sound(1200);
+    // One deep transfer well past the property generator's size range: a
+    // DNN-shaped 4k-block donor scaled 2× along the batch dimension —
+    // the registry's bucket-B → bucket-2B case. The uniform integer
+    // ratio must take the exact O(n) path: nothing re-places, and the
+    // peak is exactly the scaled donor peak.
+    let base = gen::large_dsa_triples(4_000, 0x5eed);
+    let donor_inst = DsaInstance::from_triples(&base);
+    let scaled = gen::scale_triples(&base, 2, 1);
+    let new_inst = DsaInstance::from_triples(&scaled);
+    for choice in BlockChoice::ALL {
+        let policy = Policy {
+            block_choice: choice,
+        };
+        let donor = bestfit::solve_with(&donor_inst, policy);
+        let seeded = bestfit::seed_scaled_with(&donor_inst, &donor, &new_inst, policy);
+        seeded
+            .assignment
+            .validate(&new_inst)
+            .unwrap_or_else(|e| panic!("policy {} unsound at 4k blocks: {e}", choice.name()));
+        assert!(
+            seeded.warm && seeded.disturbed == 0,
+            "policy {}: a uniform ratio must take the exact transfer path",
+            choice.name()
+        );
+        assert_eq!(
+            seeded.assignment.peak,
+            donor.peak * 2,
+            "policy {}: exact transfer peak is the scaled donor peak",
+            choice.name()
+        );
+    }
+}
+
+// ----- periodic re-pack bounds warm-start drift ------------------------------
+
+/// Drive one engine iteration of `sizes`: alloc all, free in reverse —
+/// a nested stack, the worst case for warm-start drift accretion.
+fn drive_engine(e: &mut ReplayEngine<HostBackend>, sizes: &[u64]) {
+    e.begin_iteration();
+    let live: Vec<(u64, u64)> = sizes
+        .iter()
+        .map(|&s| (e.alloc(&mut (), s).expect("host alloc").addr, s))
+        .collect();
+    for (addr, s) in live.into_iter().rev() {
+        e.free(&mut (), addr, s);
+    }
+    e.end_iteration(&mut ()).expect("host end_iteration");
+}
+
+/// The drift property (ROADMAP `## Plan transfer & re-pack`): chain
+/// ≥3·K mixed deltas — size ratchets with occasional structural
+/// deviations, closed by a pure-ratchet tail — through a `ReplayEngine`
+/// with `repack_interval = K` and assert:
+///
+/// 1. wherever a background re-pack completes, the post-repack peak
+///    *equals* `min(pre-repack peak, cold solve of the live trace)` —
+///    drift is fully reclaimed, and a re-pack never grows the arena
+///    (the heuristic is not size-monotone, so the drifted warm plan
+///    can already sit below a fresh solve; the tightness gate keeps
+///    it);
+/// 2. inter-repack drift never exceeds the pre-repack warm peak (no
+///    planned peak inside the interval sat above the peak the re-pack
+///    checked);
+/// 3. every warm reopt obeys the chained resolve guarantee
+///    `peak ≤ max(previous peak, cold peak)`, and every cold reopt
+///    lands at or below the cold solve of the live trace.
+///
+/// The tail grows the top of the nested stack — always an in-place warm
+/// ratchet — so every case fires at least one re-pack.
+fn check_repack_bounds_drift(cases: usize) {
+    const K: u64 = 3;
+    let spec = gen::pair(
+        gen::vec(gen::u64_in(64..=4096), 2..=10),
+        gen::u64_in(0..=1 << 48),
+    );
+    testkit::check("repack bounds drift", cases, spec, |(base, seed)| {
+        let mut rng = Pcg32::seeded(*seed);
+        let mut engine = ReplayEngine::new(HostBackend::new(), "prop", "repack", 1);
+        engine.set_repack_interval(K);
+        let mut sizes = base.clone();
+        drive_engine(&mut engine, &sizes); // profiling iteration
+        let mut prev_peak = engine.planned_peak().expect("plan solved");
+        let mut interval_max = prev_peak;
+        let rounds = 3 * K as usize; // 2·K mixed rounds + K-round ratchet tail
+        for round in 0..rounds {
+            let tail = round >= 2 * K as usize;
+            if tail {
+                *sizes.last_mut().expect("non-empty") += rng.range(64, 512);
+            } else if rng.bool(0.2) {
+                sizes.push(rng.range(64, 4096)); // structural: one extra request
+            } else {
+                let mut grew = false;
+                for s in sizes.iter_mut() {
+                    if rng.bool(0.4) {
+                        *s += rng.range(1, 2048);
+                        grew = true;
+                    }
+                }
+                if !grew {
+                    *sizes.last_mut().expect("non-empty") += 64;
+                }
+            }
+            let before = engine.stats();
+            drive_engine(&mut engine, &sizes); // the deviating iteration
+            let after = engine.stats();
+            if after.reopts != before.reopts + 1 {
+                return false; // every round must deviate exactly once
+            }
+            let cold = bestfit::solve(&engine.plan_trace().expect("plan").to_dsa_instance());
+            let pre_swap = engine.planned_peak().expect("plan");
+            if after.reopt_warm > before.reopt_warm {
+                // 3a. the chained warm-resolve guarantee.
+                if pre_swap > prev_peak.max(cold.peak) {
+                    return false;
+                }
+            } else {
+                // 3b. a cold reopt is itself a fresh packing (the gate
+                // keeps the tighter of warm and cold) — drift restarts.
+                if pre_swap > cold.peak {
+                    return false;
+                }
+                interval_max = pre_swap;
+            }
+            let repacks_before = engine.repacks();
+            drive_engine(&mut engine, &sizes); // hot iteration: the boundary
+            let peak = engine.planned_peak().expect("plan");
+            if engine.repacks() > repacks_before {
+                // 1. post-repack peak == min(pre-repack, cold solve).
+                if peak != pre_swap.min(cold.peak) {
+                    return false;
+                }
+                // 2. inter-repack drift ≤ the pre-repack warm peak.
+                if interval_max > pre_swap {
+                    return false;
+                }
+                interval_max = peak;
+            } else {
+                if peak != pre_swap {
+                    return false; // a hot iteration must not move the plan
+                }
+                interval_max = interval_max.max(peak);
+            }
+            prev_peak = peak;
+        }
+        engine.repacks() >= 1
+    });
+}
+
+#[test]
+fn prop_repack_bounds_drift() {
+    check_repack_bounds_drift(60);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases, run by the nightly `cargo test -- --ignored` job"]
+fn prop_repack_bounds_drift_heavy() {
+    check_repack_bounds_drift(600);
 }
 
 #[test]
