@@ -1,18 +1,32 @@
 //! Bench: serve throughput vs shard count — pins the scaling win of the
-//! sharded serving path (one runtime + one hot replay plan per worker).
+//! sharded serving path (one runtime per worker, one shared plan
+//! registry above them).
 //!
-//! Needs the AOT artifacts (`make artifacts`) and real PJRT bindings;
-//! prints a skip message and exits cleanly when they are absent so the
-//! bench target always builds and runs.
+//! Two sections:
+//!
+//! 1. A **synthetic** section that always runs (no PJRT needed): four
+//!    worker threads over the real `StealQueue` + `SharedStagingRegistry`
+//!    serving a skewed key stream. It prints shared vs per-shard
+//!    registry tiers (duplicate plan builds, resident bytes) and the
+//!    straggler experiment (worker 0 sleeps every batch; stealing vs
+//!    pinned lanes — wall and p99).
+//! 2. The **PJRT** section: end-to-end serve throughput vs shard count.
+//!    Needs the AOT artifacts (`make artifacts`) and real PJRT bindings;
+//!    prints a skip message and exits cleanly when they are absent so
+//!    the bench target always builds and runs.
 //!
 //! Run: `cargo bench --bench bench_serve_shards`
 
-use pgmo::coordinator::queue::ThreadPool;
+use pgmo::coordinator::queue::{StealQueue, ThreadPool};
 use pgmo::coordinator::serve::{InferenceServer, Request, ServeConfig};
+use pgmo::coordinator::staging::SharedStagingRegistry;
+use pgmo::plan::registry::RegistryConfig;
 use pgmo::util::rng::Pcg32;
+use pgmo::util::stats::Summary;
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -23,17 +37,188 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+/// One pre-formed logical batch flowing through the steal queue.
+struct SynthBatch {
+    size: u32,
+    created: Instant,
+}
+
+struct SynthOutcome {
+    wall: Duration,
+    p99_ms: f64,
+    builds: u64,
+    dedup_saved: u64,
+    resident_bytes: u64,
+    resident_plans: usize,
+    steals: u64,
+}
+
+/// Drive `n_batches` skewed (or uniform) batches through four worker
+/// threads on the real queue + registry types, without PJRT: each batch
+/// checks out its bucket's plan and runs one staging iteration.
+fn run_synth(shared: bool, stealing: bool, straggle: bool, skewed: bool) -> SynthOutcome {
+    const WORKERS: usize = 4;
+    const BATCHES: usize = 2_000;
+    const LADDER: [u32; 5] = [1, 4, 8, 16, 32];
+
+    let cfg = RegistryConfig::new(&LADDER);
+    let registries: Vec<Arc<SharedStagingRegistry>> = if shared {
+        let r = Arc::new(SharedStagingRegistry::new("mlp", "serving", cfg.clone()));
+        (0..WORKERS).map(|_| Arc::clone(&r)).collect()
+    } else {
+        (0..WORKERS)
+            .map(|_| Arc::new(SharedStagingRegistry::new("mlp", "serving", cfg.clone())))
+            .collect()
+    };
+    let queue: StealQueue<SynthBatch> = if stealing {
+        StealQueue::new(WORKERS)
+    } else {
+        StealQueue::pinned(WORKERS)
+    };
+
+    let start = Instant::now();
+    let mut lat = thread::scope(|scope| {
+        let queue = &queue;
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|w| {
+                let registry = Arc::clone(&registries[w]);
+                scope.spawn(move || {
+                    let route = RegistryConfig::new(&LADDER);
+                    let mut lat = Summary::new();
+                    loop {
+                        let batch = queue.next_batch(w, 1, Duration::from_micros(200));
+                        let Some(item) = batch.into_iter().next() else {
+                            break; // closed and drained
+                        };
+                        if straggle && w == 0 {
+                            thread::sleep(Duration::from_micros(300));
+                        }
+                        let bucket = route.bucket_for(item.size);
+                        let slot = registry.checkout(bucket);
+                        {
+                            let mut p = slot.plan();
+                            p.begin_iteration();
+                            let a = p.alloc(bucket as usize * 1024);
+                            let b = p.alloc(bucket as usize * 512);
+                            p.free(b);
+                            p.free(a);
+                            p.end_iteration();
+                        }
+                        slot.sync_bytes();
+                        lat.add((Instant::now() - item.created).as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+
+        // Open-loop round-robin dispatch of a skewed batch-size stream:
+        // most batches land in the small buckets, so every worker keeps
+        // hammering the same few plan keys.
+        let mut rng = Pcg32::seeded(42);
+        for i in 0..BATCHES {
+            let size = if skewed {
+                match rng.below(100) {
+                    0..=64 => 1 + rng.below(4) as u32,
+                    65..=89 => 5 + rng.below(4) as u32,
+                    _ => 17 + rng.below(16) as u32,
+                }
+            } else {
+                1 + rng.below(32) as u32
+            };
+            let mut item = SynthBatch {
+                size,
+                created: Instant::now(),
+            };
+            let mut lane = i % WORKERS;
+            while let Err(back) = queue.push(lane, item) {
+                item = back;
+                lane = (lane + 1) % WORKERS;
+            }
+        }
+        queue.close();
+
+        let mut merged = Summary::new();
+        for h in handles {
+            merged.merge(&h.join().expect("synth worker"));
+        }
+        merged
+    });
+    let wall = start.elapsed();
+
+    let distinct = if shared { 1 } else { WORKERS };
+    let mut builds = 0u64;
+    let mut dedup_saved = 0u64;
+    let mut resident_bytes = 0u64;
+    let mut resident_plans = 0usize;
+    for r in registries.iter().take(distinct) {
+        let st = r.stats();
+        builds += st.misses;
+        dedup_saved += st.dedup_builds;
+        resident_bytes += r.held_bytes();
+        resident_plans += r.resident_plans();
+    }
+    SynthOutcome {
+        wall,
+        p99_ms: lat.percentile(99.0),
+        builds,
+        dedup_saved,
+        resident_bytes,
+        resident_plans,
+        steals: (0..WORKERS).map(|w| queue.stolen_items(w)).sum(),
+    }
+}
+
+fn synthetic_section() {
+    println!("synthetic: 2000 skewed batches, 4 workers (no PJRT needed)");
+    println!(
+        "{:<22} {:>8} {:>8} {:>10} {:>7} {:>9} {:>9}",
+        "registry tier", "builds", "dedup", "resident B", "plans", "p99 ms", "wall ms"
+    );
+    for shared in [true, false] {
+        let o = run_synth(shared, true, false, true);
+        println!(
+            "{:<22} {:>8} {:>8} {:>10} {:>7} {:>9.2} {:>9.1}",
+            if shared { "shared" } else { "per-shard" },
+            o.builds,
+            o.dedup_saved,
+            o.resident_bytes,
+            o.resident_plans,
+            o.p99_ms,
+            o.wall.as_secs_f64() * 1e3,
+        );
+    }
+
+    println!("\nstraggler: worker 0 sleeps 300µs per batch (shared registry)");
+    println!(
+        "{:<22} {:>8} {:>9} {:>9}",
+        "queue", "stolen", "p99 ms", "wall ms"
+    );
+    for stealing in [true, false] {
+        let o = run_synth(true, stealing, true, false);
+        println!(
+            "{:<22} {:>8} {:>9.2} {:>9.1}",
+            if stealing { "work-stealing" } else { "pinned lanes" },
+            o.steals,
+            o.p99_ms,
+            o.wall.as_secs_f64() * 1e3,
+        );
+    }
+}
+
 fn main() {
+    synthetic_section();
+
     let Some(dir) = artifacts_dir() else {
-        eprintln!("bench_serve_shards: skipped — artifacts/ missing (run `make artifacts`)");
+        eprintln!("bench_serve_shards: PJRT section skipped — artifacts/ missing (run `make artifacts`)");
         return;
     };
     let n_requests = 2048usize;
     let producers = 8usize;
-    println!("serve scaling: {n_requests} requests, {producers} closed-loop producers");
+    println!("\nserve scaling: {n_requests} requests, {producers} closed-loop producers");
     println!(
-        "{:<8} {:>12} {:>10} {:>10} {:>10}",
-        "shards", "req/s", "p50 ms", "p99 ms", "replay%"
+        "{:<8} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "shards", "req/s", "p50 ms", "p99 ms", "replay%", "builds"
     );
 
     for shards in [1usize, 2, 4] {
@@ -85,12 +270,13 @@ fn main() {
         drop(pool);
         let staging = server.staging_stats();
         println!(
-            "{:<8} {:>12.1} {:>10.2} {:>10.2} {:>10.1}",
+            "{:<8} {:>12.1} {:>10.2} {:>10.2} {:>10.1} {:>10}",
             shards,
             metrics.throughput_rps(),
             metrics.latency_ms.percentile(50.0),
             metrics.latency_ms.percentile(99.0),
             100.0 * staging.replay_fraction(),
+            metrics.plan_stats().misses,
         );
     }
 }

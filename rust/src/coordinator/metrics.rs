@@ -20,9 +20,6 @@ pub struct BucketMetrics {
     /// Staging counters attributed to this bucket's plan (survives
     /// registry eviction of the plan itself).
     pub staging: AllocStats,
-    /// Arena bytes of this bucket's resident plan (0 while the plan is
-    /// evicted).
-    pub arena_bytes: usize,
 }
 
 impl BucketMetrics {
@@ -48,27 +45,29 @@ impl BucketMetrics {
         self.requests += other.requests;
         self.padded_slots += other.padded_slots;
         self.staging.absorb(&other.staging);
-        self.arena_bytes += other.arena_bytes;
     }
 }
 
-/// Per-shard serving counters: one executor loop = one PJRT runtime = one
-/// plan registry, so replay effectiveness is a per-shard property.
+/// Per-shard serving counters: one executor loop = one PJRT runtime.
+/// Plan/registry state lives in [`ServeMetrics::registries`] — with the
+/// shared registry a plan has no owning shard, so shard metrics carry
+/// only what is genuinely shard-local: request/batch throughput, the
+/// replay counters of the plans this shard executed, and work-stealing
+/// activity.
 #[derive(Debug, Clone, Default)]
 pub struct ShardMetrics {
     pub shard: usize,
     pub requests: u64,
     pub batches: u64,
-    /// Counters of this shard's staging replay plans, summed across
-    /// buckets (replay hits, escape allocations, reoptimizations).
+    /// Counters of the staging replay plans this shard executed, summed
+    /// across buckets (replay hits, escape allocations, reoptimizations).
     pub staging: AllocStats,
-    /// Total bytes resident in this shard's plan registry at shutdown
-    /// (sum of per-bucket arenas).
-    pub arena_bytes: usize,
     /// Per-bucket breakdown, ascending by bucket.
     pub buckets: Vec<BucketMetrics>,
-    /// Plan-registry counters (bucket-plan hits/misses/evictions).
-    pub plans: RegistryStats,
+    /// Steal operations this shard's worker performed while idle.
+    pub steals: u64,
+    /// Requests this shard took from other shards' queue lanes.
+    pub stolen_requests: u64,
 }
 
 impl ShardMetrics {
@@ -88,6 +87,15 @@ pub struct ServeMetrics {
     pub wall: Duration,
     /// Per-shard breakdown (empty before the first `run`).
     pub shards: Vec<ShardMetrics>,
+    /// Registry counters: one entry for the process-wide shared registry,
+    /// or one per shard with `--shared-registry off`.
+    pub registries: Vec<RegistryStats>,
+    /// Whether the shards shared one process-wide plan registry.
+    pub shared_registry: bool,
+    /// Plan-arena bytes resident across all registries at shutdown.
+    pub resident_bytes: u64,
+    /// Plans resident across all registries at shutdown.
+    pub resident_plans: usize,
 }
 
 impl ServeMetrics {
@@ -111,11 +119,12 @@ impl ServeMetrics {
         map.into_values().collect()
     }
 
-    /// Registry counters summed across shards.
+    /// Registry counters summed across registries (exactly one when the
+    /// shards share the process-wide registry).
     pub fn plan_stats(&self) -> RegistryStats {
         let mut total = RegistryStats::default();
-        for s in &self.shards {
-            total.absorb(&s.plans);
+        for r in &self.registries {
+            total.absorb(r);
         }
         total
     }
@@ -144,7 +153,7 @@ impl ServeMetrics {
         for s in &self.shards {
             out.push_str(&format!(
                 "\n  shard {}: {} reqs in {} batches, replay {:.1}% \
-                 ({} hits / {} escapes), {} reopts ({} warm / {} cold), arena {} B",
+                 ({} hits / {} escapes), {} reopts ({} warm / {} cold)",
                 s.shard,
                 s.requests,
                 s.batches,
@@ -154,30 +163,46 @@ impl ServeMetrics {
                 s.staging.reopts,
                 s.staging.reopt_warm,
                 s.staging.reopt_cold,
-                s.arena_bytes,
             ));
-            if s.plans.builds > 0 {
+            if s.steals > 0 {
                 out.push_str(&format!(
-                    ", plan-build max {:.1} µs / mean {:.1} µs",
-                    s.plans.build_ns_max as f64 / 1e3,
-                    s.plans.mean_build_ns() as f64 / 1e3,
+                    ", stole {} reqs in {} steals",
+                    s.stolen_requests, s.steals,
                 ));
             }
         }
         for b in self.bucket_rollup() {
             out.push_str(&format!(
                 "\n  bucket b={}: {} reqs in {} batches, {} padded slots \
-                 (fill {:.1}%), replay {:.1}%, arena {} B",
+                 (fill {:.1}%), replay {:.1}%",
                 b.bucket,
                 b.requests,
                 b.batches,
                 b.padded_slots,
                 b.fill_fraction() * 100.0,
                 b.replay_fraction() * 100.0,
-                b.arena_bytes,
             ));
         }
         let plans = self.plan_stats();
+        if !self.registries.is_empty() {
+            // The registry tier: who owns the plans and what they hold.
+            // With the shared registry, `dedup saved K builds` counts
+            // concurrent misses on the same key that waited for the one
+            // in-flight build instead of solving again.
+            if self.shared_registry {
+                out.push_str(&format!(
+                    "\n  registry: 1 shared (dedup saved {} builds), resident {} B in {} plans",
+                    plans.dedup_builds, self.resident_bytes, self.resident_plans,
+                ));
+            } else {
+                out.push_str(&format!(
+                    "\n  registries: {} per-shard, resident {} B in {} plans",
+                    self.registries.len(),
+                    self.resident_bytes,
+                    self.resident_plans,
+                ));
+            }
+        }
         if plans.lookups() > 0 {
             out.push_str(&format!(
                 "\n  plans: {} hits / {} misses ({:.1}% hit rate), {} evictions",
@@ -277,7 +302,6 @@ mod tests {
                         escape_allocs: 2,
                         ..Default::default()
                     },
-                    arena_bytes: 4096,
                     ..Default::default()
                 },
                 ShardMetrics {
@@ -289,7 +313,8 @@ mod tests {
                         fast_path: 4,
                         ..Default::default()
                     },
-                    arena_bytes: 4096,
+                    steals: 2,
+                    stolen_requests: 9,
                     ..Default::default()
                 },
             ],
@@ -300,6 +325,9 @@ mod tests {
         assert!(report.contains("shard 0"), "{report}");
         assert!(report.contains("replay 50.0%"), "{report}");
         assert!(report.contains("replay 100.0%"), "{report}");
+        // Steal activity shows only on shards that stole.
+        assert!(report.contains("stole 9 reqs in 2 steals"), "{report}");
+        assert_eq!(report.matches("stole").count(), 1, "{report}");
     }
 
     fn bucket(bucket: u32, batches: u64, requests: u64) -> BucketMetrics {
@@ -326,39 +354,40 @@ mod tests {
         m.shards.push(ShardMetrics {
             shard: 0,
             buckets: vec![bucket(4, 2, 7), bucket(32, 1, 30)],
-            plans: RegistryStats {
-                hits: 2,
-                misses: 2,
-                builds: 2,
-                build_ns_total: 9_000,
-                build_ns_max: 6_000,
-                ..RegistryStats::default()
-            },
             ..Default::default()
         });
         m.shards.push(ShardMetrics {
             shard: 1,
             buckets: vec![bucket(4, 3, 10)],
-            plans: RegistryStats {
-                hits: 3,
-                misses: 1,
-                evictions: 1,
-                builds: 1,
-                build_ns_total: 2_000,
-                build_ns_max: 2_000,
-                reopts_warm: 2,
-                reopts_cold: 1,
-                resolves: 2,
-                resolve_ns_total: 5_000,
-                resolve_ns_max: 4_000,
-                seeded_builds: 1,
-                seed_ns_total: 1_500,
-                seed_ns_max: 1_500,
-                repacks: 1,
-                repack_ns_total: 8_000,
-                repack_ns_max: 8_000,
-            },
             ..Default::default()
+        });
+        m.registries.push(RegistryStats {
+            hits: 2,
+            misses: 2,
+            builds: 2,
+            build_ns_total: 9_000,
+            build_ns_max: 6_000,
+            ..RegistryStats::default()
+        });
+        m.registries.push(RegistryStats {
+            hits: 3,
+            misses: 1,
+            evictions: 1,
+            builds: 1,
+            build_ns_total: 2_000,
+            build_ns_max: 2_000,
+            reopts_warm: 2,
+            reopts_cold: 1,
+            resolves: 2,
+            resolve_ns_total: 5_000,
+            resolve_ns_max: 4_000,
+            seeded_builds: 1,
+            seed_ns_total: 1_500,
+            seed_ns_max: 1_500,
+            repacks: 1,
+            repack_ns_total: 8_000,
+            repack_ns_max: 8_000,
+            ..RegistryStats::default()
         });
         let rollup = m.bucket_rollup();
         assert_eq!(rollup.len(), 2);
@@ -368,8 +397,8 @@ mod tests {
         assert_eq!(m.padded_slots(), 1 + 2 + 2);
         let plans = m.plan_stats();
         assert_eq!((plans.hits, plans.misses, plans.evictions), (5, 3, 1));
-        // Plan-build latency aggregates across shards: max of maxes, mean
-        // over all recorded builds.
+        // Plan-build latency aggregates across registries: max of maxes,
+        // mean over all recorded builds.
         assert_eq!(plans.builds, 3);
         assert_eq!(plans.build_ns_max, 6_000);
         assert_eq!(plans.mean_build_ns(), (9_000 + 2_000) / 3);
@@ -385,9 +414,9 @@ mod tests {
         let report = m.report();
         assert!(report.contains("bucket b=4"), "{report}");
         assert!(report.contains("evictions"), "{report}");
+        assert!(report.contains("registries: 2 per-shard"), "{report}");
         assert!(report.contains("plan-build latency: 3 solves"), "{report}");
         assert!(report.contains("max 6.0 µs"), "{report}");
-        assert!(report.contains("plan-build max"), "per-shard line: {report}");
         assert!(report.contains("reopt: 2 warm / 1 cold"), "{report}");
         assert!(report.contains("warm-resolve max 4.0 µs"), "{report}");
         assert!(
@@ -398,6 +427,31 @@ mod tests {
             report.contains("repacks: 1 background re-packs, solve max 8.0 µs"),
             "{report}"
         );
+    }
+
+    #[test]
+    fn shared_registry_line_reports_dedup_and_residency() {
+        let mut m = ServeMetrics {
+            requests: 8,
+            batches: 2,
+            wall: Duration::from_secs(1),
+            shared_registry: true,
+            resident_bytes: 12_288,
+            resident_plans: 3,
+            ..Default::default()
+        };
+        m.registries.push(RegistryStats {
+            hits: 9,
+            misses: 3,
+            dedup_builds: 5,
+            ..RegistryStats::default()
+        });
+        let report = m.report();
+        assert!(
+            report.contains("registry: 1 shared (dedup saved 5 builds), resident 12288 B in 3 plans"),
+            "{report}"
+        );
+        assert!(report.contains("9 hits / 3 misses"), "{report}");
     }
 
     #[test]

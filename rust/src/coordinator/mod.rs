@@ -10,9 +10,13 @@
 //! step replays fixed offsets in one [`HostArena`]
 //! (crate::alloc::arena::HostArena) — O(1) per request, zero allocation on
 //! the hot path. The serving path ([`serve`]) shards this across N
-//! workers, each with its own runtime and a registry of per-batch-bucket
-//! replay plans ([`staging::StagingRegistry`]): batches route to the
-//! smallest covering bucket instead of padding to `max_batch`.
+//! workers, each with its own runtime, all replaying plans from one
+//! process-wide registry of per-batch-bucket replay plans
+//! ([`staging::SharedStagingRegistry`]: single-flight builds, pin-aware
+//! LRU under one unified budget): batches route to the smallest covering
+//! bucket instead of padding to `max_batch`, and a work-stealing queue
+//! ([`queue::StealQueue`]) keeps a straggler shard from stranding its
+//! backlog.
 
 pub mod metrics;
 pub mod queue;

@@ -1,9 +1,22 @@
-//! Minimal thread pool + job queue (tokio substitute for the offline
-//! build). Used by the serving example's load generators and by tests.
+//! Minimal thread pool + work-stealing batch queue (tokio substitute
+//! for the offline build).
+//!
+//! [`ThreadPool`] runs fire-and-forget jobs FIFO; the serving example's
+//! load generators and tests use it. [`StealQueue`] is the serving
+//! dispatch fabric: one lane per shard worker, each a `Mutex<VecDeque>`
+//! + `Condvar` pair. Workers drain their own lane first (locality: the
+//! shard that profiled a bucket keeps seeing it), and an idle worker
+//! steals the *older half* of the longest backlog instead of sleeping —
+//! so one straggler shard cannot strand queued requests behind it. Dead
+//! lanes ([`StealQueue::mark_dead`]) reject new pushes, and their
+//! remaining backlog is stolen by the survivors rather than dropped.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -57,6 +70,242 @@ impl Drop for ThreadPool {
     }
 }
 
+/// One shard worker's lane of a [`StealQueue`].
+struct Lane<T> {
+    deque: Mutex<VecDeque<T>>,
+    available: Condvar,
+    alive: AtomicBool,
+    /// Steal operations *this* lane's worker performed (as the thief).
+    steals: AtomicU64,
+    /// Requests this lane's worker took from other lanes.
+    stolen_items: AtomicU64,
+}
+
+/// Per-shard batch queue with work stealing.
+///
+/// The dispatcher [`push`](StealQueue::push)es requests onto a shard's
+/// lane; the shard worker calls [`next_batch`](StealQueue::next_batch)
+/// to block for the next coalesced batch. An idle worker steals the
+/// oldest half of the longest other backlog, so throughput degrades
+/// gracefully when one shard straggles (slow build, slow device) — the
+/// queued work migrates instead of waiting. [`pinned`](StealQueue::pinned)
+/// builds a no-stealing variant so benches can measure exactly what the
+/// migration buys.
+pub struct StealQueue<T> {
+    lanes: Vec<Lane<T>>,
+    closed: AtomicBool,
+    stealing: bool,
+}
+
+impl<T> StealQueue<T> {
+    /// A queue with `lanes` lanes and stealing enabled.
+    pub fn new(lanes: usize) -> StealQueue<T> {
+        StealQueue::build(lanes, true)
+    }
+
+    /// A queue whose workers only ever drain their own lane — the
+    /// round-robin baseline for benchmarking the steal path.
+    pub fn pinned(lanes: usize) -> StealQueue<T> {
+        StealQueue::build(lanes, false)
+    }
+
+    fn build(lanes: usize, stealing: bool) -> StealQueue<T> {
+        assert!(lanes > 0, "a queue needs at least one lane");
+        StealQueue {
+            lanes: (0..lanes)
+                .map(|_| Lane {
+                    deque: Mutex::new(VecDeque::new()),
+                    available: Condvar::new(),
+                    alive: AtomicBool::new(true),
+                    steals: AtomicU64::new(0),
+                    stolen_items: AtomicU64::new(0),
+                })
+                .collect(),
+            closed: AtomicBool::new(false),
+            stealing,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Enqueue onto `lane`. Fails (returning the item, like mpsc's
+    /// `SendError`) if the lane was marked dead or the queue closed, so
+    /// the dispatcher can drop the lane from its rotation and re-route.
+    pub fn push(&self, lane: usize, item: T) -> Result<(), T> {
+        let l = &self.lanes[lane];
+        if self.closed.load(Ordering::Acquire) || !l.alive.load(Ordering::Acquire) {
+            return Err(item);
+        }
+        {
+            let mut q = l.deque.lock().unwrap();
+            // Re-check under the lock: a racing mark_dead must not let a
+            // request slip into a lane nobody will ever drain (survivors
+            // steal dead backlogs, but only ones that existed at death).
+            if self.closed.load(Ordering::Acquire) || !l.alive.load(Ordering::Acquire) {
+                return Err(item);
+            }
+            q.push_back(item);
+        }
+        l.available.notify_one();
+        Ok(())
+    }
+
+    pub fn alive(&self, lane: usize) -> bool {
+        self.lanes[lane].alive.load(Ordering::Acquire)
+    }
+
+    /// Mark a lane dead: future pushes fail, and every other lane is
+    /// woken so the dead lane's remaining backlog gets stolen.
+    pub fn mark_dead(&self, lane: usize) {
+        self.lanes[lane].alive.store(false, Ordering::Release);
+        for l in &self.lanes {
+            l.available.notify_all();
+        }
+    }
+
+    /// Close the queue: pushes fail, and workers return empty batches
+    /// once every lane they can reach is drained.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        for l in &self.lanes {
+            l.available.notify_all();
+        }
+    }
+
+    /// Steal operations `lane`'s worker performed.
+    pub fn steals(&self, lane: usize) -> u64 {
+        self.lanes[lane].steals.load(Ordering::Relaxed)
+    }
+
+    /// Requests `lane`'s worker took from other lanes.
+    pub fn stolen_items(&self, lane: usize) -> u64 {
+        self.lanes[lane].stolen_items.load(Ordering::Relaxed)
+    }
+
+    /// Requests currently queued on `lane`.
+    pub fn backlog(&self, lane: usize) -> usize {
+        self.lanes[lane].deque.lock().unwrap().len()
+    }
+
+    /// Take the oldest half of the longest other backlog. Locks one
+    /// deque at a time (scan, then re-lock the victim), so no two lane
+    /// locks are ever held together — two thieves can race, each just
+    /// halves whatever is left when it gets the lock.
+    fn try_steal(&self, thief: usize) -> Vec<T> {
+        if !self.stealing {
+            return Vec::new();
+        }
+        let mut victim = None;
+        let mut longest = 0usize;
+        for (i, l) in self.lanes.iter().enumerate() {
+            if i == thief {
+                continue;
+            }
+            let len = l.deque.lock().unwrap().len();
+            if len > longest {
+                longest = len;
+                victim = Some(i);
+            }
+        }
+        let Some(v) = victim else {
+            return Vec::new();
+        };
+        let stolen: Vec<T> = {
+            let mut q = self.lanes[v].deque.lock().unwrap();
+            let take = q.len().div_ceil(2); // oldest half, FIFO order
+            q.drain(..take).collect()
+        };
+        if !stolen.is_empty() {
+            let l = &self.lanes[thief];
+            l.steals.fetch_add(1, Ordering::Relaxed);
+            l.stolen_items.fetch_add(stolen.len() as u64, Ordering::Relaxed);
+        }
+        stolen
+    }
+
+    /// Block until at least one request is available, then coalesce up
+    /// to `cap` requests arriving within `window` into one batch.
+    /// Returns an empty batch only when the queue is closed and nothing
+    /// reachable is left — the worker's signal to exit.
+    pub fn next_batch(&self, lane: usize, cap: usize, window: Duration) -> Vec<T> {
+        assert!(cap > 0);
+        // While idle we wake periodically to re-try stealing: a victim's
+        // backlog can grow without anyone notifying *our* condvar.
+        let poll = window.clamp(Duration::from_micros(200), Duration::from_millis(5));
+        let l = &self.lanes[lane];
+        let mut batch = Vec::new();
+
+        // Phase 1: get at least one request — own lane, then steal,
+        // then sleep and re-try.
+        loop {
+            {
+                let mut q = l.deque.lock().unwrap();
+                while batch.len() < cap {
+                    match q.pop_front() {
+                        Some(x) => batch.push(x),
+                        None => break,
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                break;
+            }
+            let stolen = self.try_steal(lane);
+            if !stolen.is_empty() {
+                let mut it = stolen.into_iter();
+                while batch.len() < cap {
+                    match it.next() {
+                        Some(x) => batch.push(x),
+                        None => break,
+                    }
+                }
+                // Anything stolen beyond the batch cap becomes ours to
+                // serve next — never dropped.
+                let rest: Vec<T> = it.collect();
+                if !rest.is_empty() {
+                    let mut q = l.deque.lock().unwrap();
+                    q.extend(rest);
+                }
+                break;
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return batch; // closed + own empty + nothing to steal
+            }
+            let q = l.deque.lock().unwrap();
+            if q.is_empty() && !self.closed.load(Ordering::Acquire) {
+                let _ = l.available.wait_timeout(q, poll).unwrap();
+            }
+        }
+
+        // Phase 2: coalesce stragglers arriving within the window.
+        if batch.len() >= cap {
+            return batch;
+        }
+        let deadline = Instant::now() + window;
+        let mut q = l.deque.lock().unwrap();
+        loop {
+            while batch.len() < cap {
+                match q.pop_front() {
+                    Some(x) => batch.push(x),
+                    None => break,
+                }
+            }
+            if batch.len() >= cap || self.closed.load(Ordering::Acquire) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            q = l.available.wait_timeout(q, deadline - now).unwrap().0;
+        }
+        drop(q);
+        batch
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,7 +329,6 @@ mod tests {
 
     #[test]
     fn jobs_run_concurrently() {
-        use std::time::{Duration, Instant};
         let pool = ThreadPool::new(4);
         let start = Instant::now();
         let (tx, rx) = mpsc::channel();
@@ -95,5 +343,113 @@ mod tests {
             rx.recv().unwrap();
         }
         assert!(start.elapsed() < Duration::from_millis(180), "must overlap");
+    }
+
+    const WIN: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn own_lane_drains_fifo() {
+        let q: StealQueue<u32> = StealQueue::new(2);
+        for i in 0..10 {
+            q.push(0, i).unwrap();
+        }
+        assert_eq!(q.next_batch(0, 4, WIN), vec![0, 1, 2, 3]);
+        assert_eq!(q.next_batch(0, 4, WIN), vec![4, 5, 6, 7]);
+        assert_eq!(q.next_batch(0, 4, WIN), vec![8, 9]);
+        assert_eq!(q.steals(0), 0, "own lane had work — nothing stolen");
+    }
+
+    #[test]
+    fn idle_worker_steals_older_half_of_longest_backlog() {
+        let q: StealQueue<u32> = StealQueue::new(3);
+        for i in 0..8 {
+            q.push(0, i).unwrap();
+        }
+        q.push(1, 100).unwrap();
+        // Lane 2 is empty: it steals from lane 0 (backlog 8 > 1), taking
+        // the *oldest* half so stolen requests keep FIFO order.
+        let batch = q.next_batch(2, 8, WIN);
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!((q.steals(2), q.stolen_items(2)), (1, 4));
+        assert_eq!(q.backlog(0), 4, "victim keeps the newer half");
+        assert_eq!(q.backlog(1), 1, "shorter backlog untouched");
+    }
+
+    #[test]
+    fn stolen_overflow_beyond_cap_is_requeued_not_dropped() {
+        let q: StealQueue<u32> = StealQueue::new(2);
+        for i in 0..10 {
+            q.push(0, i).unwrap();
+        }
+        // Steal takes 5 (half of 10) but the batch cap is 2: the other 3
+        // stolen requests land on the thief's own lane for next time.
+        assert_eq!(q.next_batch(1, 2, WIN), vec![0, 1]);
+        assert_eq!(q.backlog(1), 3);
+        assert_eq!(q.next_batch(1, 8, WIN), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn dead_lane_rejects_pushes_and_survivors_drain_its_backlog() {
+        let q: StealQueue<u32> = StealQueue::new(2);
+        for i in 0..6 {
+            q.push(0, i).unwrap();
+        }
+        q.mark_dead(0);
+        assert!(!q.alive(0));
+        assert_eq!(q.push(0, 99), Err(99), "dead lane rejects, like SendError");
+        let mut rescued = Vec::new();
+        while rescued.len() < 6 {
+            rescued.extend(q.next_batch(1, 8, WIN));
+        }
+        assert_eq!(rescued, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn close_drains_then_returns_empty() {
+        let q: StealQueue<u32> = StealQueue::new(1);
+        for i in 0..3 {
+            q.push(0, i).unwrap();
+        }
+        q.close();
+        assert_eq!(q.push(0, 9), Err(9), "closed queue rejects pushes");
+        assert_eq!(q.next_batch(0, 8, WIN), vec![0, 1, 2]);
+        assert!(q.next_batch(0, 8, WIN).is_empty(), "drained + closed → exit");
+    }
+
+    #[test]
+    fn close_wakes_blocked_worker() {
+        let q: Arc<StealQueue<u32>> = Arc::new(StealQueue::new(1));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.next_batch(0, 8, WIN));
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_empty());
+    }
+
+    #[test]
+    fn window_coalesces_late_arrivals_into_one_batch() {
+        let q: Arc<StealQueue<u32>> = Arc::new(StealQueue::new(1));
+        q.push(0, 1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(10));
+            q2.push(0, 2).unwrap();
+        });
+        // Generous window: the second request must join the first batch.
+        let batch = q.next_batch(0, 2, Duration::from_millis(500));
+        h.join().unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+
+    #[test]
+    fn pinned_queue_never_steals() {
+        let q: StealQueue<u32> = StealQueue::pinned(2);
+        for i in 0..4 {
+            q.push(0, i).unwrap();
+        }
+        q.close();
+        assert!(q.next_batch(1, 8, WIN).is_empty(), "lane 1 stays idle");
+        assert_eq!(q.next_batch(0, 8, WIN), vec![0, 1, 2, 3]);
+        assert_eq!(q.steals(1), 0);
     }
 }

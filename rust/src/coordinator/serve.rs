@@ -3,24 +3,38 @@
 //!
 //! The serving path scales across cores by running N *shard workers*.
 //! Each shard owns its own PJRT runtime (PJRT handles are not `Send`, so
-//! every runtime is created inside its worker thread), a borrowed view of
-//! the model parameters, and — crucially — its own
-//! [`StagingRegistry`](super::staging::StagingRegistry): a registry of
-//! replay plans keyed by *batch bucket*. Requests enter through one mpsc
-//! channel and are fanned out round-robin to the shards; each shard
-//! coalesces its stream into batches and routes every batch to the
-//! **smallest covering bucket** of the configured ladder (falling back to
-//! the largest bucket for oversized batches) instead of padding to
-//! `max_batch`. The matching `predict_b{B}` artifact executes the batch,
-//! and the bucket's own plan stages it — the first batch per bucket
-//! profiles, every later one replays in O(1). Cold bucket plans are
-//! LRU-evicted under [`ServeConfig::plan_budget_bytes`]. The result is
-//! the paper's inference replay speedups (Fig 3b/3d) multiplied across
-//! workers, minus the padding waste the single-plan server paid on every
-//! small batch.
+//! every runtime is created inside its worker thread) and a borrowed
+//! view of the model parameters. The replay plans live **above** the
+//! shards in one process-wide
+//! [`SharedStagingRegistry`](super::staging::SharedStagingRegistry):
+//! plans are `Arc`'d read-mostly values, a hot-bucket lookup is a brief
+//! read-lock plus refcount bump, a cold bucket is built **once**
+//! fleet-wide (concurrent misses on the same key wait for the in-flight
+//! build instead of profiling again — the report's `dedup saved K
+//! builds`), and one unified arena budget LRU-evicts cold plans without
+//! ever touching a plan some shard has checked out. `--shared-registry
+//! off` reverts to one private registry per shard through the same code
+//! path.
+//!
+//! Requests enter through one mpsc channel and are fanned out to a
+//! work-stealing [`StealQueue`](super::queue::StealQueue) — one lane per
+//! shard, round-robin dispatch over the *live* lanes, idle shards steal
+//! the oldest half of the longest backlog so a straggling shard cannot
+//! strand queued requests. Each shard coalesces its lane into batches
+//! and routes every batch to the **smallest covering bucket** of the
+//! configured ladder (falling back to the largest bucket for oversized
+//! batches) instead of padding to `max_batch`. The matching
+//! `predict_b{B}` artifact executes the batch, and the bucket's shared
+//! plan stages it — the first batch per bucket profiles (or seeds off a
+//! smaller resident bucket), every later one replays in O(1), on any
+//! shard. The result is the paper's inference replay speedups (Fig
+//! 3b/3d) multiplied across workers, minus the padding waste the
+//! single-plan server paid on every small batch and minus the duplicate
+//! per-shard profiling the private registries paid on every bucket.
 
 use super::metrics::{BucketMetrics, ServeMetrics, ShardMetrics};
-use super::staging::StagingRegistry;
+use super::queue::StealQueue;
+use super::staging::SharedStagingRegistry;
 use crate::alloc::AllocStats;
 use crate::plan::registry::RegistryConfig;
 use crate::runtime::buffers::{literal_f32, to_f32};
@@ -30,7 +44,7 @@ use crate::util::stats::Summary;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -54,25 +68,32 @@ pub struct ServeConfig {
     /// How long to wait for more requests before dispatching a partial
     /// batch.
     pub batch_window: Duration,
-    /// Number of shard workers. Each shard owns one runtime and one plan
-    /// registry; requests are fanned out round-robin.
+    /// Number of shard workers. Each shard owns one runtime; requests
+    /// are fanned out round-robin with work stealing between lanes.
     pub shards: usize,
-    /// Batch-bucket ladder for the per-shard plan registry: a batch is
-    /// padded to the smallest covering bucket instead of to `max_batch`.
-    /// Entries above `max_batch` are dropped; `max_batch` itself is
-    /// always a bucket. Buckets without a compiled `predict_b{B}`
-    /// artifact are skipped at runtime.
+    /// Batch-bucket ladder for the plan registry: a batch is padded to
+    /// the smallest covering bucket instead of to `max_batch`. Entries
+    /// above `max_batch` are dropped; `max_batch` itself is always a
+    /// bucket. Buckets without a compiled `predict_b{B}` artifact are
+    /// skipped at runtime.
     pub bucket_ladder: Vec<usize>,
-    /// Total host staging arena budget per shard registry; least recently
-    /// used bucket plans are evicted beyond it. `u64::MAX` = unlimited.
+    /// Total host staging arena budget: process-wide with the shared
+    /// registry, per shard registry otherwise. Least recently used
+    /// bucket plans are evicted beyond it (never one checked out by a
+    /// shard). `u64::MAX` = unlimited.
     pub plan_budget_bytes: u64,
     /// After this many consecutive warm reoptimizations of a bucket
-    /// plan, a shard-local background thread re-solves the live trace
-    /// from scratch and the result swaps in at the next iteration
-    /// boundary when tighter than the incumbent — warm-start drift is
-    /// bounded to one interval, with the solve itself off the serving
-    /// path (0 = never re-pack).
+    /// plan, a background thread re-solves the live trace from scratch
+    /// and the result swaps in at the next iteration boundary when
+    /// tighter than the incumbent — warm-start drift is bounded to one
+    /// interval, with the solve itself off the serving path (0 = never
+    /// re-pack).
     pub repack_interval: u64,
+    /// One process-wide plan registry shared by every shard (the
+    /// default): each bucket plan is built once and replayed everywhere,
+    /// under one unified budget. `false` gives every shard a private
+    /// registry — the pre-sharing behavior, kept as an escape hatch.
+    pub shared_registry: bool,
 }
 
 impl Default for ServeConfig {
@@ -87,6 +108,7 @@ impl Default for ServeConfig {
                 .collect(),
             plan_budget_bytes: u64::MAX,
             repack_interval: 16,
+            shared_registry: true,
         }
     }
 }
@@ -181,17 +203,39 @@ impl InferenceServer {
     }
 
     /// Serve until the request channel closes; returns merged metrics
-    /// with per-shard and per-bucket breakdowns.
+    /// with per-shard, per-bucket, and registry breakdowns.
     pub fn run(&mut self, rx: mpsc::Receiver<Request>) -> Result<ServeMetrics> {
         let n = self.cfg.shards.max(1);
         let start = Instant::now();
 
+        // The registry tier is built *before* the workers spawn. Shared
+        // mode hands every shard the same Arc — plan keys from different
+        // shards collide in one map, which is exactly what deduplicates
+        // the builds. The escape hatch hands each shard a private
+        // registry through the identical code path.
+        let registry_cfg = RegistryConfig::new(&self.cfg.ladder())
+            .with_budget(self.cfg.plan_budget_bytes)
+            .with_repack_interval(self.cfg.repack_interval);
+        let registries: Vec<Arc<SharedStagingRegistry>> = if self.cfg.shared_registry {
+            let shared = Arc::new(SharedStagingRegistry::new("mlp", "serving", registry_cfg));
+            (0..n).map(|_| Arc::clone(&shared)).collect()
+        } else {
+            (0..n)
+                .map(|_| {
+                    Arc::new(SharedStagingRegistry::new(
+                        "mlp",
+                        "serving",
+                        registry_cfg.clone(),
+                    ))
+                })
+                .collect()
+        };
+
+        let queue: StealQueue<Request> = StealQueue::new(n);
         let outcomes: Vec<Result<ShardOutcome>> = thread::scope(|scope| {
-            let mut txs = Vec::with_capacity(n);
+            let queue = &queue;
             let mut handles = Vec::with_capacity(n);
-            for shard in 0..n {
-                let (tx, shard_rx) = mpsc::channel::<Request>();
-                txs.push(tx);
+            for (shard, registry) in registries.iter().cloned().enumerate() {
                 let dir = self.dir.as_path();
                 let params = &self.params;
                 let param_dims = &self.param_dims;
@@ -201,23 +245,32 @@ impl InferenceServer {
                     // The PJRT runtime must be created *inside* the worker
                     // thread: PJRT handles are not `Send`. Parameters are
                     // shared read-only — no per-shard copy.
-                    let worker = ShardWorker::new(
-                        shard, dir, params, param_dims, input_dim, classes, cfg,
-                    )?;
-                    worker.run(shard_rx)
+                    let out = ShardWorker::new(
+                        shard, dir, params, param_dims, input_dim, classes, registry, cfg,
+                    )
+                    .and_then(|worker| worker.run(queue));
+                    // Dead on any exit (startup error, serving error, or
+                    // queue close): the dispatcher drops this lane from
+                    // its rotation and survivors steal the backlog.
+                    queue.mark_dead(shard);
+                    out
                 }));
             }
 
-            // Round-robin fan-out on the caller's thread. A dead shard
-            // (worker errored → receiver dropped) hands the request back
-            // through the SendError; try the next shard.
+            // Round-robin fan-out over the *live* lanes on the caller's
+            // thread. A dead shard hands the request back through the
+            // push error; try the next lane.
             let mut next = 0usize;
             for req in rx.iter() {
                 let mut undelivered = Some(req);
                 for attempt in 0..n {
-                    match txs[(next + attempt) % n].send(undelivered.take().expect("requeued")) {
+                    let lane = (next + attempt) % n;
+                    if !queue.alive(lane) {
+                        continue;
+                    }
+                    match queue.push(lane, undelivered.take().expect("requeued")) {
                         Ok(()) => break,
-                        Err(mpsc::SendError(back)) => undelivered = Some(back),
+                        Err(back) => undelivered = Some(back),
                     }
                 }
                 next = (next + 1) % n;
@@ -225,7 +278,7 @@ impl InferenceServer {
                     break; // every shard has exited; surface errors below
                 }
             }
-            drop(txs); // close shard queues so workers drain and exit
+            queue.close(); // drain-and-exit signal for the workers
 
             handles
                 .into_iter()
@@ -245,6 +298,19 @@ impl InferenceServer {
             metrics.shards.push(o.metrics);
         }
         metrics.shards.sort_by_key(|s| s.shard);
+        for s in &mut metrics.shards {
+            s.steals = queue.steals(s.shard);
+            s.stolen_requests = queue.stolen_items(s.shard);
+        }
+        // Registry rollup: one entry shared, N entries per-shard. The
+        // shared Arcs all point at the same registry — count it once.
+        metrics.shared_registry = self.cfg.shared_registry;
+        let distinct = if self.cfg.shared_registry { 1 } else { n };
+        for r in registries.iter().take(distinct) {
+            metrics.registries.push(r.stats());
+            metrics.resident_bytes += r.held_bytes();
+            metrics.resident_plans += r.resident_plans();
+        }
         metrics.wall = start.elapsed();
         Ok(metrics)
     }
@@ -267,9 +333,9 @@ struct ShardOutcome {
     batch_sizes: Summary,
 }
 
-/// One executor loop: owns a runtime and a registry of per-bucket replay
-/// plans for its staging buffers; model parameters are borrowed from the
-/// server (read-only, shared across shards).
+/// One executor loop: owns a runtime and a handle on the (usually
+/// shared) plan registry; model parameters are borrowed from the server
+/// (read-only, shared across shards).
 struct ShardWorker<'a> {
     shard: usize,
     runtime: Runtime,
@@ -277,7 +343,12 @@ struct ShardWorker<'a> {
     param_dims: &'a [Vec<usize>],
     input_dim: usize,
     classes: usize,
-    staging: StagingRegistry,
+    registry: Arc<SharedStagingRegistry>,
+    /// Routing config over the *executable* buckets (those with a
+    /// compiled `predict_b{B}`) — the registry's own config carries the
+    /// full configured ladder for budget purposes, so routing decisions
+    /// stay shard-local and allocation-free.
+    route: RegistryConfig,
     /// Precomputed `predict_b{B}` artifact name per executable bucket —
     /// keeps the per-batch dispatch allocation-free.
     entry_names: BTreeMap<u32, String>,
@@ -293,6 +364,7 @@ impl<'a> ShardWorker<'a> {
         param_dims: &'a [Vec<usize>],
         input_dim: usize,
         classes: usize,
+        registry: Arc<SharedStagingRegistry>,
         cfg: ServeConfig,
     ) -> Result<ShardWorker<'a>> {
         let mut runtime = Runtime::cpu().with_context(|| format!("shard {shard}: PJRT client"))?;
@@ -313,9 +385,6 @@ impl<'a> ShardWorker<'a> {
             "shard {shard}: no compiled predict_b{{B}} artifact matches bucket ladder {:?}",
             cfg.ladder()
         );
-        let registry_cfg = RegistryConfig::new(&buckets)
-            .with_budget(cfg.plan_budget_bytes)
-            .with_repack_interval(cfg.repack_interval);
         let entry_names = buckets
             .iter()
             .map(|&b| (b, format!("predict_b{b}")))
@@ -327,41 +396,27 @@ impl<'a> ShardWorker<'a> {
             param_dims,
             input_dim,
             classes,
-            staging: StagingRegistry::new("mlp", &format!("serving-s{shard}"), registry_cfg),
+            registry,
+            route: RegistryConfig::new(&buckets),
             entry_names,
             cfg,
         })
     }
 
-    fn run(mut self, rx: mpsc::Receiver<Request>) -> Result<ShardOutcome> {
+    fn run(mut self, queue: &StealQueue<Request>) -> Result<ShardOutcome> {
         let mut requests = 0u64;
         let mut batches = 0u64;
         let mut latency_ms = Summary::new();
         let mut batch_sizes = Summary::new();
         let mut per_bucket: BTreeMap<u32, BucketMetrics> = BTreeMap::new();
         // Coalesce up to the largest executable bucket.
-        let cap = *self.staging.ladder().last().expect("non-empty ladder") as usize;
+        let cap = *self.route.buckets().last().expect("non-empty ladder") as usize;
 
         loop {
-            // Block for the first request of the batch.
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break, // dispatcher done
-            };
-            let mut batch = vec![first];
-            let window_end = Instant::now() + self.cfg.batch_window;
-            while batch.len() < cap {
-                let now = Instant::now();
-                if now >= window_end {
-                    break;
-                }
-                match rx.recv_timeout(window_end - now) {
-                    Ok(r) => batch.push(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                }
+            let mut batch = queue.next_batch(self.shard, cap, self.cfg.batch_window);
+            if batch.is_empty() {
+                break; // queue closed and drained
             }
-
             batch_sizes.add(batch.len() as f64);
             requests += batch.len() as u64;
             batches += 1;
@@ -378,13 +433,35 @@ impl<'a> ShardWorker<'a> {
                 requests,
                 batches,
                 staging: staging_total,
-                arena_bytes: self.staging.held_bytes() as usize,
                 buckets: per_bucket.into_values().collect(),
-                plans: self.staging.stats(),
+                // Steal counters live on the queue; `run` fills them in.
+                steals: 0,
+                stolen_requests: 0,
             },
             latency_ms,
             batch_sizes,
         })
+    }
+
+    /// Build the PJRT inputs and execute `entry`. Free function over the
+    /// runtime so [`execute_batch`](Self::execute_batch) can balance the
+    /// plan's iteration on failure before propagating the error.
+    fn forward(
+        runtime: &mut Runtime,
+        entry: &str,
+        params: &[Vec<f32>],
+        param_dims: &[Vec<usize>],
+        x: &[f32],
+        slots: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 1);
+        for (p, dims) in params.iter().zip(param_dims.iter()) {
+            inputs.push(literal_f32(p, dims)?);
+        }
+        inputs.push(literal_f32(x, &[slots, d])?);
+        let outputs = runtime.entry(entry)?.execute(&inputs)?;
+        to_f32(&outputs[0])
     }
 
     fn execute_batch(
@@ -395,30 +472,18 @@ impl<'a> ShardWorker<'a> {
     ) -> Result<()> {
         let n = batch.len();
         let d = self.input_dim;
-        // The routing rule: smallest covering bucket (the registry falls
-        // back to the largest bucket for oversized batches, but `run`
-        // already caps coalescing at the largest bucket).
-        let bucket = self.staging.bucket_for(n as u32);
+        // The routing rule: smallest covering bucket (falling back to
+        // the largest bucket for oversized batches, but `run` already
+        // caps coalescing at the largest bucket).
+        let bucket = self.route.bucket_for(n as u32);
         let slots = bucket as usize;
         let entry_name = self
             .entry_names
             .get(&bucket)
             .expect("routing only targets executable buckets");
 
-        // One registry lookup per batch: a miss creates the bucket's plan
-        // (seeded from a smaller resident bucket when possible — the new
-        // bucket replays immediately — profiling otherwise), a hit
-        // replays the hot plan.
-        let planner = self.staging.planner(bucket);
-        let before = planner.stats();
-        let solves_before = planner.solves();
-        let resolves_before = planner.resolves();
-        let repacks_before = planner.repacks();
-        planner.begin_iteration();
-
-        // Stage the bucket-padded input batch (constant shape per bucket
-        // ⇒ hot ⇒ replayed).
-        let x_buf = planner.alloc(slots * d * 4);
+        // Validate and flatten *before* touching the plan: a malformed
+        // request must not leave a shared plan mid-iteration.
         let mut flat = vec![0f32; slots * d];
         for (i, req) in batch.iter().enumerate() {
             anyhow::ensure!(
@@ -428,16 +493,47 @@ impl<'a> ShardWorker<'a> {
             );
             flat[i * d..(i + 1) * d].copy_from_slice(&req.x);
         }
+
+        // One registry checkout per batch: a brief read-lock + Arc bump
+        // on a hit; a miss builds the bucket's plan exactly once
+        // process-wide (seeded from a smaller resident bucket when
+        // possible — the new bucket replays immediately — profiling
+        // otherwise), with concurrent shards waiting on the in-flight
+        // build instead of profiling their own copy. The checkout pins
+        // the plan against eviction until dropped.
+        let slot = self.registry.checkout(bucket);
+        let mut planner = slot.plan();
+        let before = planner.stats();
+        let solves_before = planner.solves();
+        let resolves_before = planner.resolves();
+        let repacks_before = planner.repacks();
+        planner.begin_iteration();
+
+        // Stage the bucket-padded input batch (constant shape per bucket
+        // ⇒ hot ⇒ replayed).
+        let x_buf = planner.alloc(slots * d * 4);
         planner.write_f32(&x_buf, &flat);
+        let staged = planner.read_f32(&x_buf, slots * d);
 
-        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
-        for (p, dims) in self.params.iter().zip(self.param_dims.iter()) {
-            inputs.push(literal_f32(p, dims)?);
-        }
-        inputs.push(literal_f32(&planner.read_f32(&x_buf, slots * d), &[slots, d])?);
-
-        let outputs = self.runtime.entry(entry_name)?.execute(&inputs)?;
-        let logits = to_f32(&outputs[0])?;
+        // The PJRT section can fail; the plan (shared with every other
+        // shard) must still see a balanced iteration, or its replay
+        // cursor would be poisoned for all of them.
+        let logits = match Self::forward(
+            &mut self.runtime,
+            entry_name,
+            self.params,
+            self.param_dims,
+            &staged,
+            slots,
+            d,
+        ) {
+            Ok(l) => l,
+            Err(e) => {
+                planner.free(x_buf);
+                planner.end_iteration();
+                return Err(e);
+            }
+        };
 
         // Stage the readback, reply per request.
         let out_buf = planner.alloc(slots * self.classes * 4);
@@ -456,41 +552,40 @@ impl<'a> ShardWorker<'a> {
         planner.free(x_buf);
         planner.end_iteration();
         let delta = planner.stats().since(&before);
-        let arena_bytes = planner.arena_bytes();
         // A solve this batch means a plan was built on the serving path —
         // a registry miss profiling its first iteration, or a structural
         // deviation reoptimizing cold. A resolve means a ratchet
         // deviation went through the warm-start path. Surface both
-        // latencies through the registry stats.
+        // latencies through the registry stats while the plan lock is
+        // still held (the counters are plan-local).
         let built = planner.solves() > solves_before;
         let build_ns = planner.last_solve_ns();
         let resolved = planner.resolves() > resolves_before;
         let resolve_ns = planner.last_resolve_ns();
         let repacked = planner.repacks() > repacks_before;
         let repack_ns = planner.last_repack_ns();
+        drop(planner);
         if built {
-            self.staging.record_build_ns(build_ns);
+            self.registry.record_build_ns(build_ns);
         }
         if resolved {
-            self.staging
+            self.registry
                 .record_resolve_ns(delta.reopt_warm > 0, resolve_ns);
         } else if delta.reopt_cold > 0 {
-            self.staging.record_cold_reopt();
+            self.registry.record_cold_reopt();
         }
         if repacked {
             // The solve ran on the background thread; only the swap
             // happened inside this batch's iteration boundary.
-            self.staging.record_repack(repack_ns);
+            self.registry.record_repack(repack_ns);
         }
 
-        // Budget enforcement may drop cold bucket plans; their counters
-        // already live in `per_bucket` — only the residency reporting of
-        // an evicted bucket goes to zero.
-        for evicted in self.staging.enforce_budget() {
-            if let Some(cold) = per_bucket.get_mut(&evicted) {
-                cold.arena_bytes = 0;
-            }
-        }
+        // Publish the plan's arena footprint, release the checkout pin,
+        // then let the unified budget evict cold plans — never this one,
+        // it was most recently used (and until the drop, pinned).
+        slot.sync_bytes();
+        drop(slot);
+        self.registry.enforce_budget();
 
         let m = per_bucket.entry(bucket).or_insert_with(|| BucketMetrics {
             bucket,
@@ -500,7 +595,6 @@ impl<'a> ShardWorker<'a> {
         m.requests += n as u64;
         m.padded_slots += (slots - n) as u64;
         m.staging.absorb(&delta);
-        m.arena_bytes = arena_bytes;
         Ok(())
     }
 }

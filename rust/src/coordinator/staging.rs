@@ -18,8 +18,10 @@ use crate::alloc::AllocStats;
 use crate::dsa::bestfit;
 use crate::dsa::solution::Assignment;
 use crate::plan::registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
+use crate::plan::shared::{SharedPlanRegistry, SharedSlot};
 use crate::plan::{HostBackend, MemoryBackend, ReplayEngine};
 use crate::trace::TraceEvent;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// A staged host buffer handle.
@@ -128,6 +130,17 @@ impl StagingPlanner {
 
     pub fn arena_bytes(&self) -> usize {
         self.engine.backend().arena_bytes()
+    }
+
+    /// The solved plan's per-position offsets (`None` while profiling) —
+    /// lets tests assert byte-identical plans across registry tiers.
+    pub fn planned_offsets(&self) -> Option<&[u64]> {
+        self.engine.planned_offsets()
+    }
+
+    /// The solved plan's peak arena bytes (`None` while profiling).
+    pub fn planned_peak(&self) -> Option<u64> {
+        self.engine.planned_peak()
     }
 
     pub fn stats(&self) -> AllocStats {
@@ -385,6 +398,149 @@ impl StagingRegistry {
     }
 }
 
+/// The concurrent serving tier of [`StagingRegistry`]: one process-wide
+/// family of bucket plans shared by every shard worker, built on
+/// [`SharedPlanRegistry`].
+///
+/// [`checkout`](SharedStagingRegistry::checkout) is the per-batch entry
+/// point: a hit is a brief read lock + `Arc` clone; a miss builds the
+/// bucket's planner under the single-flight guard — *seeded* from the
+/// largest resident smaller bucket when one exists (the donor's plan is
+/// locked only long enough to transfer, exactly the single-owner seeding
+/// rule and phase labeling, so the two tiers produce byte-identical
+/// plans for identical traffic) — while concurrent requesters for the
+/// same bucket wait and share the result. The caller locks the returned
+/// slot's planner for the batch, then [`SharedSlot::sync_bytes`] +
+/// [`enforce_budget`](SharedStagingRegistry::enforce_budget) at checkin:
+/// one unified byte budget across all shards, with checked-out plans
+/// pinned against eviction.
+#[derive(Debug)]
+pub struct SharedStagingRegistry {
+    model: String,
+    phase: String,
+    repack_interval: u64,
+    registry: SharedPlanRegistry<StagingPlanner>,
+}
+
+impl SharedStagingRegistry {
+    pub fn new(model: &str, phase: &str, cfg: RegistryConfig) -> SharedStagingRegistry {
+        SharedStagingRegistry {
+            model: model.to_string(),
+            phase: phase.to_string(),
+            repack_interval: cfg.repack_interval(),
+            registry: SharedPlanRegistry::new(cfg),
+        }
+    }
+
+    /// The normalized bucket ladder, ascending.
+    pub fn ladder(&self) -> &[u32] {
+        self.registry.ladder()
+    }
+
+    /// Smallest bucket covering `batch`; the largest bucket when
+    /// `batch` is oversized.
+    pub fn bucket_for(&self, batch: u32) -> u32 {
+        self.registry.bucket_for(batch)
+    }
+
+    /// Checkout the bucket's plan slot, building it at most once
+    /// fleet-wide. Lock [`SharedSlot::plan`] for the batch, then call
+    /// [`SharedSlot::sync_bytes`] and
+    /// [`enforce_budget`](Self::enforce_budget) after releasing it.
+    pub fn checkout(&self, bucket: u32) -> Arc<SharedSlot<StagingPlanner>> {
+        let key = PlanKey::new(&self.model, &self.phase, bucket);
+        self.registry.get_or_build(&key, || {
+            if let Some((donor_key, donor_slot)) = self.registry.seed_donor_slot(&key) {
+                let t0 = Instant::now();
+                // The donor lock waits out at most one in-flight batch;
+                // the builder holds no registry locks here, so no cycle.
+                let donor = donor_slot.plan();
+                let seeded = StagingPlanner::seeded(
+                    &key.model,
+                    &format!("{}-b{}", key.phase, key.batch_bucket),
+                    &donor,
+                    bucket,
+                    donor_key.batch_bucket,
+                );
+                drop(donor);
+                if let Some(mut planner) = seeded {
+                    self.registry.record_seeded_build(t0.elapsed().as_nanos() as u64);
+                    planner.set_repack_interval(self.repack_interval);
+                    return planner;
+                }
+            }
+            let mut planner = StagingPlanner::new(
+                &key.model,
+                &format!("{}-b{}", key.phase, key.batch_bucket),
+            );
+            planner.set_repack_interval(self.repack_interval);
+            planner
+        })
+    }
+
+    /// Evict LRU *unpinned* bucket plans beyond the unified byte budget;
+    /// returns the evicted buckets.
+    pub fn enforce_budget(&self) -> Vec<u32> {
+        self.registry
+            .evict_over_budget()
+            .into_iter()
+            .map(|k| k.batch_bucket)
+            .collect()
+    }
+
+    /// Drop a bucket's plan unconditionally — the escape hatch for a
+    /// batch that died mid-iteration and left the planner unusable.
+    pub fn evict(&self, bucket: u32) -> bool {
+        self.registry
+            .remove(&PlanKey::new(&self.model, &self.phase, bucket))
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        self.registry.stats()
+    }
+
+    /// Record one bucket plan build's solve latency (see
+    /// [`SharedPlanRegistry::record_build_ns`]).
+    pub fn record_build_ns(&self, ns: u64) {
+        self.registry.record_build_ns(ns);
+    }
+
+    /// Record one bucket plan warm-start re-solve (see
+    /// [`SharedPlanRegistry::record_resolve_ns`]).
+    pub fn record_resolve_ns(&self, warm: bool, ns: u64) {
+        self.registry.record_resolve_ns(warm, ns);
+    }
+
+    /// Record one structural (cold) bucket plan reoptimization.
+    pub fn record_cold_reopt(&self) {
+        self.registry.record_cold_reopt();
+    }
+
+    /// Record one background re-pack of a bucket plan.
+    pub fn record_repack(&self, ns: u64) {
+        self.registry.record_repack(ns);
+    }
+
+    /// Total advertised bytes across resident bucket plans (the unified
+    /// pool the budget meters).
+    pub fn held_bytes(&self) -> u64 {
+        self.registry.held_bytes()
+    }
+
+    pub fn resident_plans(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Resident buckets and their advertised bytes, ascending.
+    pub fn resident(&self) -> Vec<(u32, u64)> {
+        self.registry
+            .resident()
+            .into_iter()
+            .map(|(k, b)| (k.batch_bucket, b))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -538,13 +694,17 @@ mod tests {
         assert_eq!(r.bucket_for(9), 8, "oversized → largest bucket");
         for round in 0..2 {
             for &b in &[1u32, 4, 8] {
+                // Buckets 4 and 8 seed from the largest smaller resident
+                // and replay from their very first iteration; only the
+                // first bucket ever pays a profiling round.
                 let replayed = one_registry_iteration(&mut r, b, b as usize * 256);
-                assert_eq!(replayed, round > 0, "bucket {b} round {round}");
+                assert_eq!(replayed, round > 0 || b > 1, "bucket {b} round {round}");
             }
         }
         assert_eq!(r.resident_plans(), 3);
         let st = r.stats();
         assert_eq!((st.misses, st.hits, st.evictions), (3, 3, 0));
+        assert_eq!(st.seeded_builds, 2, "buckets 4 and 8 seeded");
         // Buckets keep distinct arenas sized to their own shape.
         assert_eq!(r.planner(1).arena_bytes(), 256);
         assert_eq!(r.planner(8).arena_bytes(), 2048);
@@ -642,5 +802,86 @@ mod tests {
         // A re-requested bucket is rebuilt lazily: a miss, profiling again.
         assert!(!r.planner(1).is_replaying());
         assert_eq!(r.stats().misses, 4);
+    }
+
+    // ----- shared (concurrent) staging registry ------------------------------
+
+    fn one_shared_iteration(r: &SharedStagingRegistry, bucket: u32, bytes: usize) -> bool {
+        let slot = r.checkout(bucket);
+        let mut p = slot.plan();
+        p.begin_iteration();
+        let buf = p.alloc(bytes);
+        let replayed = buf.is_replayed();
+        p.free(buf);
+        p.end_iteration();
+        drop(p);
+        slot.sync_bytes();
+        replayed
+    }
+
+    #[test]
+    fn shared_registry_routes_buckets_and_replays_per_bucket() {
+        let r = SharedStagingRegistry::new("m", "serve", RegistryConfig::new(&[1, 4, 8]));
+        assert_eq!(r.bucket_for(3), 4);
+        assert_eq!(r.bucket_for(9), 8, "oversized → largest bucket");
+        for round in 0..2 {
+            for &b in &[1u32, 4, 8] {
+                // Larger buckets seed from smaller residents and replay
+                // from their first iteration; only the first bucket pays
+                // a profiling round.
+                let expect_replay = round > 0 || b > 1;
+                assert_eq!(
+                    one_shared_iteration(&r, b, b as usize * 256),
+                    expect_replay,
+                    "bucket {b} round {round}"
+                );
+            }
+        }
+        assert_eq!(r.resident_plans(), 3);
+        let st = r.stats();
+        assert_eq!((st.misses, st.hits, st.evictions), (3, 3, 0));
+        assert_eq!(st.seeded_builds, 2, "buckets 4 and 8 seeded");
+    }
+
+    #[test]
+    fn shared_registry_enforces_unified_budget() {
+        let r = SharedStagingRegistry::new(
+            "m",
+            "serve",
+            RegistryConfig::new(&[1, 2, 4]).with_budget(1024),
+        );
+        for &b in &[1u32, 2, 4] {
+            one_shared_iteration(&r, b, 1024);
+            r.enforce_budget();
+        }
+        assert_eq!(r.resident_plans(), 1, "only the most recent plan fits");
+        assert_eq!(r.stats().evictions, 2);
+        assert!(r.held_bytes() <= 1024);
+        assert_eq!(r.resident().len(), 1);
+    }
+
+    #[test]
+    fn shared_registry_matches_single_owner_plans() {
+        // Identical traffic through both tiers must produce
+        // byte-identical plans: same seeding rule, same phase labels,
+        // same offsets, same arenas.
+        let cfg = RegistryConfig::new(&[1, 4, 8, 16]);
+        let shared = SharedStagingRegistry::new("mlp", "serving", cfg.clone());
+        let mut solo = StagingRegistry::new("mlp", "serving", cfg);
+        for _round in 0..3 {
+            for &b in &[1u32, 4, 16, 8] {
+                let bytes = b as usize * 1024;
+                one_shared_iteration(&shared, b, bytes);
+                one_registry_iteration(&mut solo, b, bytes);
+            }
+        }
+        for &b in &[1u32, 4, 8, 16] {
+            let slot = shared.checkout(b);
+            let sp = slot.plan();
+            let op = solo.planner(b);
+            assert_eq!(sp.planned_offsets(), op.planned_offsets(), "bucket {b}");
+            assert_eq!(sp.planned_peak(), op.planned_peak(), "bucket {b}");
+            assert_eq!(sp.arena_bytes(), op.arena_bytes(), "bucket {b}");
+        }
     }
 }

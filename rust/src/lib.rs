@@ -58,10 +58,17 @@
 //! use, LRU-evicts under a total-arena-bytes budget, and reports
 //! hit/miss/evict counters plus per-registry plan-build latency
 //! (builds, max/mean solve nanoseconds — the serve report prints
-//! them). The serving path instantiates it as
-//! [`coordinator::staging::StagingRegistry`] — one bucketed plan
-//! registry per shard, so small request batches stop paying
-//! `max_batch` padding.
+//! them). [`plan::SharedPlanRegistry`] lifts that registry to one
+//! process-wide concurrent tier: plans are `Arc`'d read-mostly values
+//! behind sharded `RwLock` maps (a hot lookup is a brief read-lock +
+//! refcount bump), cold builds are *single-flight* (concurrent misses
+//! on one key wait for the in-flight build instead of solving again),
+//! and one unified arena budget LRU-evicts cold plans while checkouts
+//! pin theirs. The serving path instantiates it as
+//! [`coordinator::staging::SharedStagingRegistry`] — every shard
+//! replays the same bucketed plans, so small request batches stop
+//! paying `max_batch` padding and N shards stop paying N profiles per
+//! bucket.
 //!
 //! Registry plans are *transferable and self-healing* (ROADMAP.md
 //! `## Plan transfer & re-pack`). A bucket miss seeds its plan from the
@@ -87,8 +94,9 @@
 //! the execution simulator ([`sim`]), a PJRT runtime that executes
 //! AOT-lowered JAX/Pallas artifacts ([`runtime`]), and the
 //! training/serving coordinator ([`coordinator`]) whose serving path is
-//! sharded across N workers — one runtime + one bucket-routed plan
-//! registry per shard ([`coordinator::serve`]).
+//! sharded across N workers — one runtime per shard, one shared
+//! bucket-routed plan registry above them, and a work-stealing batch
+//! queue between dispatcher and shards ([`coordinator::serve`]).
 //!
 //! ## Quickstart
 //!

@@ -336,18 +336,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("pgmo serve", "serve batched inference via PJRT")
         .opt_default("requests", "256", "number of synthetic requests")
         .opt_default("producers", "4", "load-generator threads")
-        .opt_default("shards", "2", "executor shards (each owns a runtime + plan registry)")
+        .opt_default("shards", "2", "executor shards (each owns a runtime; plans are shared)")
         .opt_default("max-batch", "32", "largest compiled batch dimension")
         .opt_default("buckets", "1,4,8,16,32", "batch-bucket ladder for the plan registry")
         .opt_default(
             "plan-budget",
             "unlimited",
-            "staging arena byte budget per shard registry (e.g. 64MiB); LRU-evicts beyond it",
+            "staging arena byte budget for the plan registry (process-wide when shared, \
+             per shard otherwise; e.g. 64MiB); LRU-evicts beyond it",
         )
         .opt_default(
             "repack-every",
             "16",
             "background re-pack a bucket plan after this many warm reopts ('off' = never)",
+        )
+        .opt_default(
+            "shared-registry",
+            "on",
+            "one process-wide plan registry shared by all shards ('off' = private per-shard registries)",
         )
         .opt_default("artifacts", "artifacts", "artifact directory");
     if argv.iter().any(|a| a == "--help") {
@@ -371,6 +377,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         bucket_ladder: a.get_csv::<usize>("buckets")?,
         plan_budget_bytes,
         repack_interval: a.get_interval_or("repack-every", 16)?,
+        shared_registry: a.get_switch_or("shared-registry", true)?,
         ..ServeConfig::default()
     };
     let mut server = InferenceServer::new(&dir, 11, cfg)?;

@@ -54,6 +54,7 @@ use crate::dsa::solution::Assignment;
 use crate::profiler::{BlockHandle, MemoryProfiler};
 use crate::trace::{Trace, TraceEvent};
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One expected event of a hot iteration, in plan order.
@@ -67,7 +68,10 @@ enum PlanEvent {
 #[derive(Debug)]
 struct Plan {
     /// Tick skeleton + per-position sizes the offsets were solved for.
-    trace: Trace,
+    /// Shared (`Arc`) so handing it to a background re-pack thread is an
+    /// O(1) refcount bump instead of a deep copy of the event stream on
+    /// the serving path.
+    trace: Arc<Trace>,
     /// Cached per-position sizes (index = λ).
     sizes: Vec<u64>,
     offsets: Vec<u64>,
@@ -95,7 +99,7 @@ impl Plan {
 /// result is stale and dropped unjoined.
 struct RepackJob {
     generation: u64,
-    handle: std::thread::JoinHandle<(Trace, DsaInstance, Assignment, u64)>,
+    handle: std::thread::JoinHandle<(Arc<Trace>, DsaInstance, Assignment, u64)>,
 }
 
 impl std::fmt::Debug for RepackJob {
@@ -243,7 +247,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
 
     /// The current plan's trace (for reports / persisting profiles).
     pub fn plan_trace(&self) -> Option<&Trace> {
-        self.plan.as_ref().map(|p| &p.trace)
+        self.plan.as_ref().map(|p| &*p.trace)
     }
 
     /// Solved per-position offsets of the current plan.
@@ -362,7 +366,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     fn install_plan(
         &mut self,
         ctx: &mut M::Ctx,
-        trace: Trace,
+        trace: Arc<Trace>,
         inst: &DsaInstance,
         sol: Assignment,
     ) -> Result<(), M::Error> {
@@ -418,7 +422,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             inst.len(),
             "assignment does not cover the adopted trace"
         );
-        self.install_plan(ctx, trace, inst, sol)
+        self.install_plan(ctx, Arc::new(trace), inst, sol)
     }
 
     /// Solve the plan from `trace` from scratch (cold). A fresh packing
@@ -431,7 +435,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.solve_ns += self.last_solve_ns;
         self.solves += 1;
         self.warm_since_repack = 0;
-        self.install_plan(ctx, trace, &inst, sol)
+        self.install_plan(ctx, Arc::new(trace), &inst, sol)
     }
 
     /// Reoptimize after a pure size ratchet: warm-start the solver from
@@ -471,7 +475,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             self.stats.reopt_cold += 1;
             self.warm_since_repack = 0;
         }
-        self.install_plan(ctx, merged, &new_inst, r.assignment)
+        self.install_plan(ctx, Arc::new(merged), &new_inst, r.assignment)
     }
 
     /// Spawn the background re-pack once `repack_interval` consecutive
@@ -485,7 +489,9 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         }
         self.warm_since_repack = 0;
         let plan = self.plan.as_ref().expect("repack without plan");
-        let trace = plan.trace.clone();
+        // O(1): the trace is shared with the plan, not deep-copied on
+        // the serving path.
+        let trace = Arc::clone(&plan.trace);
         self.repack = Some(RepackJob {
             generation: self.plan_generation,
             handle: std::thread::spawn(move || {

@@ -27,12 +27,17 @@
 //! mechanism to a *family* of shapes: [`PlanRegistry`] owns many plans
 //! keyed by [`PlanKey`] `{ model, phase, batch_bucket }`, quantizes batch
 //! sizes onto a bucket ladder, builds plans lazily on first use, and
-//! LRU-evicts under a total-arena-bytes budget.
+//! LRU-evicts under a total-arena-bytes budget. [`shared`] lifts the
+//! registry to a process-wide concurrent tier: `Arc`'d plans behind
+//! sharded `RwLock` maps, single-flight builds, and pin-aware eviction
+//! under one unified budget ([`SharedPlanRegistry`]).
 
 pub mod backend;
 pub mod engine;
 pub mod registry;
+pub mod shared;
 
 pub use backend::{DeviceBackend, HostBackend, MemoryBackend};
 pub use engine::{Placement, ReplayEngine};
 pub use registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
+pub use shared::{SharedPlanRegistry, SharedSlot};

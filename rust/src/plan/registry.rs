@@ -155,6 +155,11 @@ pub struct RegistryStats {
     pub misses: u64,
     /// Plans dropped by budget enforcement.
     pub evictions: u64,
+    /// Builds *saved* by single-flight coalescing: lookups that found a
+    /// peer already building the same key and blocked on its guard
+    /// instead of building again (shared registry only; always 0 for a
+    /// single-owner registry).
+    pub dedup_builds: u64,
     /// Plan builds (DSA solves) recorded against this registry — initial
     /// builds after a miss plus cold reoptimizations of resident plans.
     pub builds: u64,
@@ -289,6 +294,7 @@ impl RegistryStats {
         self.hits += other.hits;
         self.misses += other.misses;
         self.evictions += other.evictions;
+        self.dedup_builds += other.dedup_builds;
         self.builds += other.builds;
         self.build_ns_total += other.build_ns_total;
         self.build_ns_max = self.build_ns_max.max(other.build_ns_max);

@@ -1,0 +1,569 @@
+//! The process-wide concurrent plan registry: one shared plan store for
+//! every serving shard.
+//!
+//! [`PlanRegistry`](super::PlanRegistry) scales the replay mechanism to a
+//! family of shapes, but it is single-owner: a sharded server that gives
+//! each worker a private registry builds (and LRU-evicts) the same
+//! `{model, phase, bucket}` plans up to N times over while the arena
+//! budget fragments N ways. [`SharedPlanRegistry`] is the concurrent
+//! tier that removes that waste:
+//!
+//! * **Read-mostly lookup** — plans live as `Arc`'d slots behind a small
+//!   fixed set of `RwLock`'d map shards. The replay hot path is a brief
+//!   read lock on one map shard plus an `Arc` clone and two relaxed
+//!   atomic stores (LRU stamp, hit count): no write lock, no copy, no
+//!   global mutex.
+//! * **Single-flight builds** — a per-[`PlanKey`] build guard
+//!   (`Mutex<bool>` + `Condvar` in an inflight table) makes a cold or
+//!   seeded profile+solve run exactly once per key fleet-wide; every
+//!   concurrent requester for the same key blocks on the guard and picks
+//!   up the finished plan (counted in
+//!   [`RegistryStats::dedup_builds`]). The builder holds no map locks
+//!   while building, so other keys stay fully available during a solve.
+//! * **One unified budget with pin-aware eviction** —
+//!   [`evict_over_budget`](SharedPlanRegistry::evict_over_budget) meters
+//!   *total* resident bytes against one budget and extends the
+//!   single-owner registry's "never evict the active plan" rule to
+//!   concurrency: a slot whose `Arc` is checked out anywhere
+//!   (`Arc::strong_count > 1`, re-verified under the map shard's write
+//!   lock) is pinned and skipped, and the globally most recently used
+//!   plan survives even when unpinned.
+//!
+//! Mutating a plan (running a batch through its planner) takes the
+//! slot's own `Mutex` for the batch duration — plans are shared, batch
+//! execution per plan is serialized, different plans proceed in
+//! parallel. Callers re-sync a slot's byte footprint at checkin
+//! ([`SharedSlot::sync_bytes`]) so budget math never locks plans.
+//!
+//! Lock order (deadlock freedom): `inflight → map shard (read)` is the
+//! only nesting; map-lock holders never take the inflight lock, plan
+//! `Mutex`es are only taken with no registry lock held, and a build
+//! runs with no locks at all.
+
+use super::registry::{PlanFootprint, PlanKey, RegistryConfig, RegistryStats};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+/// Number of independent map shards the key space is hashed over. Small
+/// and fixed: contention on a *read* lock is negligible, and eviction
+/// scans every shard anyway.
+const MAP_SHARDS: usize = 8;
+
+/// One resident plan: the planner behind its own mutex plus the lock-free
+/// metadata the registry reads without touching the plan.
+#[derive(Debug)]
+pub struct SharedSlot<P> {
+    key: PlanKey,
+    plan: Mutex<P>,
+    /// Byte footprint as of the last [`sync_bytes`](Self::sync_bytes)
+    /// (or the build); read by budget math without locking the plan.
+    bytes: AtomicU64,
+    /// Logical LRU clock value of the last checkout.
+    last_used: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl<P: PlanFootprint> SharedSlot<P> {
+    pub fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    /// Lock the planner for a batch. Held for the batch duration; take
+    /// it with no registry lock held.
+    pub fn plan(&self) -> std::sync::MutexGuard<'_, P> {
+        self.plan.lock().expect("plan lock poisoned")
+    }
+
+    /// Checkout hits on this plan.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Re-sync the advertised byte footprint from the planner (a brief
+    /// uncontended relock). Call at checkin — after each batch — so
+    /// [`SharedPlanRegistry::held_bytes`] tracks growth and eviction
+    /// meters real residency.
+    pub fn sync_bytes(&self) {
+        let bytes = self.plan().plan_bytes();
+        self.bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// The advertised byte footprint (as of the last sync).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// The single-flight guard one builder publishes for a key while its
+/// build runs; waiters block on the condvar instead of building.
+#[derive(Debug, Default)]
+struct BuildGuard {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl BuildGuard {
+    fn wait(&self) {
+        let mut done = self.done.lock().expect("build guard poisoned");
+        while !*done {
+            done = self.cv.wait(done).expect("build guard poisoned");
+        }
+    }
+
+    fn finish(&self) {
+        *self.done.lock().expect("build guard poisoned") = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Removes the inflight entry and wakes waiters when the builder scope
+/// exits — including by unwind, so a panicking build never strands its
+/// waiters (they retry and one becomes the new builder).
+struct BuildToken<'a, P> {
+    registry: &'a SharedPlanRegistry<P>,
+    key: &'a PlanKey,
+}
+
+impl<P> Drop for BuildToken<'_, P> {
+    fn drop(&mut self) {
+        let guard = self
+            .registry
+            .inflight
+            .lock()
+            .expect("inflight lock poisoned")
+            .remove(self.key);
+        if let Some(guard) = guard {
+            guard.finish();
+        }
+    }
+}
+
+/// The concurrent registry proper. See the module docs for the design;
+/// [`SharedStagingRegistry`](crate::coordinator::staging::SharedStagingRegistry)
+/// is the serving integration.
+#[derive(Debug)]
+pub struct SharedPlanRegistry<P> {
+    cfg: RegistryConfig,
+    map: Vec<RwLock<HashMap<PlanKey, Arc<SharedSlot<P>>>>>,
+    inflight: Mutex<HashMap<PlanKey, Arc<BuildGuard>>>,
+    clock: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    dedup_builds: AtomicU64,
+    evictions: AtomicU64,
+    /// Latency counters (build/resolve/seed/repack records) — rare
+    /// events, so a plain mutex off the lookup path.
+    recorded: Mutex<RegistryStats>,
+}
+
+impl<P: PlanFootprint> SharedPlanRegistry<P> {
+    pub fn new(cfg: RegistryConfig) -> SharedPlanRegistry<P> {
+        SharedPlanRegistry {
+            cfg,
+            map: (0..MAP_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            inflight: Mutex::new(HashMap::new()),
+            clock: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            dedup_builds: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            recorded: Mutex::new(RegistryStats::default()),
+        }
+    }
+
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    /// The normalized bucket ladder, ascending.
+    pub fn ladder(&self) -> &[u32] {
+        self.cfg.buckets()
+    }
+
+    /// The serve routing rule (see [`RegistryConfig::bucket_for`]).
+    pub fn bucket_for(&self, batch: u32) -> u32 {
+        self.cfg.bucket_for(batch)
+    }
+
+    fn shard_of(&self, key: &PlanKey) -> &RwLock<HashMap<PlanKey, Arc<SharedSlot<P>>>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.map[(h.finish() as usize) % self.map.len()]
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// The resident slot for `key` without LRU/stat side effects.
+    pub fn peek(&self, key: &PlanKey) -> Option<Arc<SharedSlot<P>>> {
+        self.shard_of(key)
+            .read()
+            .expect("map shard poisoned")
+            .get(key)
+            .cloned()
+    }
+
+    /// The hot path: read-lock one map shard, bump the LRU stamp and hit
+    /// count (relaxed atomics), clone the `Arc`.
+    fn touch(&self, key: &PlanKey) -> Option<Arc<SharedSlot<P>>> {
+        let shard = self.shard_of(key).read().expect("map shard poisoned");
+        let slot = shard.get(key)?;
+        slot.last_used.store(self.tick(), Ordering::Relaxed);
+        slot.hits.fetch_add(1, Ordering::Relaxed);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::clone(slot))
+    }
+
+    /// Checkout the plan for `key`, building it with `build` on a miss.
+    /// Exactly one concurrent caller per key runs `build` (with no
+    /// registry locks held — it may call
+    /// [`seed_donor_slot`](Self::seed_donor_slot)); the rest block on
+    /// the build guard and share the result, counted in
+    /// [`RegistryStats::dedup_builds`]. `misses` therefore counts plan
+    /// constructions exactly, as in the single-owner registry.
+    pub fn get_or_build(&self, key: &PlanKey, build: impl FnOnce() -> P) -> Arc<SharedSlot<P>> {
+        let mut build = Some(build);
+        loop {
+            if let Some(slot) = self.touch(key) {
+                return slot;
+            }
+            // Miss: join an in-flight build or become the builder.
+            let wait_on = {
+                let mut inflight = self.inflight.lock().expect("inflight lock poisoned");
+                if let Some(guard) = inflight.get(key) {
+                    Some(Arc::clone(guard))
+                } else if self.peek(key).is_some() {
+                    // The previous builder published between our lookup
+                    // and this lock; loop back to the hit path.
+                    continue;
+                } else {
+                    inflight.insert(key.clone(), Arc::new(BuildGuard::default()));
+                    None
+                }
+            };
+            if let Some(guard) = wait_on {
+                guard.wait();
+                self.dedup_builds.fetch_add(1, Ordering::Relaxed);
+                continue; // resident now (or the builder died: retry)
+            }
+            // We are the builder; the token wakes waiters on every exit.
+            let token = BuildToken { registry: self, key };
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            let plan = (build.take().expect("single build per caller"))();
+            let slot = Arc::new(SharedSlot {
+                key: key.clone(),
+                plan: Mutex::new(plan),
+                bytes: AtomicU64::new(0),
+                last_used: AtomicU64::new(self.tick()),
+                hits: AtomicU64::new(0),
+            });
+            slot.sync_bytes();
+            self.shard_of(key)
+                .write()
+                .expect("map shard poisoned")
+                .insert(key.clone(), Arc::clone(&slot));
+            drop(token); // publish, then wake waiters
+            return slot;
+        }
+    }
+
+    /// The best seed donor for a missing `key`: the resident slot with
+    /// the same model and phase and the largest batch bucket below the
+    /// missing one (the single-owner registry's donor rule). Stats-free;
+    /// the caller locks the donor's plan briefly to transfer from it.
+    pub fn seed_donor_slot(&self, key: &PlanKey) -> Option<(PlanKey, Arc<SharedSlot<P>>)> {
+        let mut best: Option<Arc<SharedSlot<P>>> = None;
+        for shard in &self.map {
+            for (k, slot) in shard.read().expect("map shard poisoned").iter() {
+                if k.model == key.model
+                    && k.phase == key.phase
+                    && k.batch_bucket < key.batch_bucket
+                    && best
+                        .as_ref()
+                        .is_none_or(|b| k.batch_bucket > b.key.batch_bucket)
+                {
+                    best = Some(Arc::clone(slot));
+                }
+            }
+        }
+        best.map(|slot| (slot.key.clone(), slot))
+    }
+
+    /// Drop `key`'s slot unconditionally (e.g. a batch died mid-iteration
+    /// and left the planner in an unusable state). Counted as an
+    /// eviction. Checked-out `Arc`s keep the orphaned slot alive but it
+    /// is no longer discoverable.
+    pub fn remove(&self, key: &PlanKey) -> bool {
+        let removed = self
+            .shard_of(key)
+            .write()
+            .expect("map shard poisoned")
+            .remove(key)
+            .is_some();
+        if removed {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        removed
+    }
+
+    /// Total advertised bytes across resident plans (one unified pool).
+    pub fn held_bytes(&self) -> u64 {
+        self.map
+            .iter()
+            .map(|s| {
+                s.read()
+                    .expect("map shard poisoned")
+                    .values()
+                    .map(|slot| slot.bytes())
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map
+            .iter()
+            .map(|s| s.read().expect("map shard poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident plans and their advertised bytes, sorted by key
+    /// (diagnostics / residency reporting).
+    pub fn resident(&self) -> Vec<(PlanKey, u64)> {
+        let mut v: Vec<(PlanKey, u64)> = self
+            .map
+            .iter()
+            .flat_map(|s| {
+                s.read()
+                    .expect("map shard poisoned")
+                    .iter()
+                    .map(|(k, slot)| (k.clone(), slot.bytes()))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Enforce the unified byte budget: evict least-recently-used
+    /// *unpinned* plans until the resident footprint fits. A slot is
+    /// pinned while any checkout `Arc` is outstanding
+    /// (`Arc::strong_count > 1`, re-verified under the owning map
+    /// shard's write lock — checkouts clone under that shard's read
+    /// lock, so the count cannot rise concurrently); the most recently
+    /// used plan is never evicted even when unpinned, and at least one
+    /// plan always survives. Returns the evicted keys.
+    pub fn evict_over_budget(&self) -> Vec<PlanKey> {
+        let mut evicted = Vec::new();
+        while self.len() > 1 && self.held_bytes() > self.cfg.budget_bytes() {
+            // Snapshot the newest stamp (protected) and the stalest
+            // unpinned victim.
+            let mut mru = 0u64;
+            let mut victim: Option<(u64, usize, PlanKey)> = None;
+            for (si, shard) in self.map.iter().enumerate() {
+                for (k, slot) in shard.read().expect("map shard poisoned").iter() {
+                    let stamp = slot.last_used.load(Ordering::Relaxed);
+                    mru = mru.max(stamp);
+                    if Arc::strong_count(slot) == 1
+                        && victim.as_ref().is_none_or(|(s, _, _)| stamp < *s)
+                    {
+                        victim = Some((stamp, si, k.clone()));
+                    }
+                }
+            }
+            let Some((stamp, si, key)) = victim else {
+                break; // everything pinned: the budget waits
+            };
+            if stamp == mru {
+                break; // never evict the most recently used plan
+            }
+            let mut shard = self.map[si].write().expect("map shard poisoned");
+            match shard.get(&key) {
+                Some(slot)
+                    if Arc::strong_count(slot) == 1
+                        && slot.last_used.load(Ordering::Relaxed) == stamp =>
+                {
+                    shard.remove(&key);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    evicted.push(key);
+                }
+                // Raced with a checkout or a newer touch: rescan.
+                _ => continue,
+            }
+        }
+        evicted
+    }
+
+    /// Snapshot of the aggregate counters (lookup atomics overlaid on
+    /// the recorded latency stats).
+    pub fn stats(&self) -> RegistryStats {
+        let mut st = *self.recorded.lock().expect("recorded stats poisoned");
+        st.hits = self.hits.load(Ordering::Relaxed);
+        st.misses = self.misses.load(Ordering::Relaxed);
+        st.dedup_builds = self.dedup_builds.load(Ordering::Relaxed);
+        st.evictions = self.evictions.load(Ordering::Relaxed);
+        st
+    }
+
+    /// Record one plan build's solve latency (see
+    /// [`RegistryStats::record_build`]).
+    pub fn record_build_ns(&self, ns: u64) {
+        self.recorded.lock().expect("recorded stats poisoned").record_build(ns);
+    }
+
+    /// Record one warm-start re-solve (see
+    /// [`RegistryStats::record_resolve`]).
+    pub fn record_resolve_ns(&self, warm: bool, ns: u64) {
+        self.recorded
+            .lock()
+            .expect("recorded stats poisoned")
+            .record_resolve(warm, ns);
+    }
+
+    /// Record one structural (cold) reoptimization of a resident plan.
+    pub fn record_cold_reopt(&self) {
+        self.recorded.lock().expect("recorded stats poisoned").record_cold_reopt();
+    }
+
+    /// Record one cross-bucket seeded plan build (see
+    /// [`RegistryStats::record_seeded_build`]).
+    pub fn record_seeded_build(&self, ns: u64) {
+        self.recorded
+            .lock()
+            .expect("recorded stats poisoned")
+            .record_seeded_build(ns);
+    }
+
+    /// Record one background re-pack of a resident plan (see
+    /// [`RegistryStats::record_repack`]).
+    pub fn record_repack(&self, ns: u64) {
+        self.recorded.lock().expect("recorded stats poisoned").record_repack(ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Barrier;
+    use std::thread;
+
+    struct Toy(u64);
+
+    impl PlanFootprint for Toy {
+        fn plan_bytes(&self) -> u64 {
+            self.0
+        }
+    }
+
+    fn key(b: u32) -> PlanKey {
+        PlanKey::new("m", "serve", b)
+    }
+
+    #[test]
+    fn checkout_counts_misses_then_hits() {
+        let r: SharedPlanRegistry<Toy> = SharedPlanRegistry::new(RegistryConfig::default());
+        for _ in 0..3 {
+            r.get_or_build(&key(4), || Toy(10));
+        }
+        r.get_or_build(&key(8), || Toy(10));
+        let st = r.stats();
+        assert_eq!((st.misses, st.hits, st.evictions), (2, 2, 0));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.held_bytes(), 20);
+        assert_eq!(r.peek(&key(4)).unwrap().hits(), 2);
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_exactly_once() {
+        let r: Arc<SharedPlanRegistry<Toy>> =
+            Arc::new(SharedPlanRegistry::new(RegistryConfig::default()));
+        let threads = 8;
+        let barrier = Arc::new(Barrier::new(threads));
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                let barrier = Arc::clone(&barrier);
+                thread::spawn(move || {
+                    barrier.wait();
+                    let slot = r.get_or_build(&key(8), || {
+                        // A slow build: every peer must coalesce onto it.
+                        thread::sleep(std::time::Duration::from_millis(20));
+                        Toy(64)
+                    });
+                    slot.bytes()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 64);
+        }
+        let st = r.stats();
+        assert_eq!(st.misses, 1, "single-flight: one build fleet-wide");
+        assert!(st.hits + st.misses + st.dedup_builds >= threads as u64);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn eviction_skips_pinned_and_mru_slots() {
+        let r: SharedPlanRegistry<Toy> =
+            SharedPlanRegistry::new(RegistryConfig::new(&[1, 2, 4]).with_budget(10));
+        let pinned = r.get_or_build(&key(1), || Toy(8));
+        r.get_or_build(&key(2), || Toy(8));
+        r.get_or_build(&key(4), || Toy(8));
+        // key(1) is the LRU but pinned (we hold its Arc); key(4) is the
+        // MRU; only key(2) may go.
+        let evicted = r.evict_over_budget();
+        assert_eq!(evicted, vec![key(2)]);
+        assert!(r.peek(&key(1)).is_some(), "pinned plan survives eviction");
+        assert!(r.peek(&key(4)).is_some(), "MRU plan survives eviction");
+        assert_eq!(pinned.bytes(), 8, "checkout stays usable");
+        // Unpin: the stale key(1) may now be evicted to meet the budget.
+        drop(pinned);
+        let evicted = r.evict_over_budget();
+        assert_eq!(evicted, vec![key(1)]);
+        assert!(r.held_bytes() <= 10);
+    }
+
+    #[test]
+    fn sole_plan_survives_any_budget() {
+        let r: SharedPlanRegistry<Toy> =
+            SharedPlanRegistry::new(RegistryConfig::new(&[1]).with_budget(1));
+        r.get_or_build(&key(1), || Toy(1000));
+        assert!(r.evict_over_budget().is_empty());
+        assert_eq!(r.stats().evictions, 0);
+    }
+
+    #[test]
+    fn donor_picks_largest_smaller_bucket_same_family() {
+        let r: SharedPlanRegistry<Toy> =
+            SharedPlanRegistry::new(RegistryConfig::new(&[1, 4, 8, 16, 32]));
+        r.get_or_build(&key(4), || Toy(4));
+        r.get_or_build(&key(16), || Toy(16));
+        r.get_or_build(&PlanKey::new("other", "serve", 8), || Toy(8));
+        let (donor, slot) = r.seed_donor_slot(&key(32)).expect("donor below 32");
+        assert_eq!(donor, key(16));
+        assert_eq!(slot.bytes(), 16);
+        assert_eq!(r.seed_donor_slot(&key(8)).unwrap().0, key(4));
+        assert!(r.seed_donor_slot(&key(4)).is_none());
+        assert!(r.seed_donor_slot(&PlanKey::new("m", "train", 32)).is_none());
+    }
+
+    #[test]
+    fn remove_orphans_the_slot_for_holders() {
+        let r: SharedPlanRegistry<Toy> = SharedPlanRegistry::new(RegistryConfig::default());
+        let slot = r.get_or_build(&key(1), || Toy(5));
+        assert!(r.remove(&key(1)));
+        assert!(!r.remove(&key(1)), "already gone");
+        assert!(r.peek(&key(1)).is_none());
+        assert_eq!(slot.bytes(), 5, "outstanding checkout still usable");
+        assert_eq!(r.stats().evictions, 1);
+    }
+}

@@ -221,6 +221,22 @@ impl Args {
         }
     }
 
+    /// Parse an on/off switch: `on`/`true`/`yes`/`1` and
+    /// `off`/`false`/`no`/`0` (e.g. `--shared-registry off`). A missing
+    /// option yields `fallback`; anything else is a [`CliError::BadValue`].
+    pub fn get_switch_or(&self, name: &str, fallback: bool) -> Result<bool, CliError> {
+        match self.get(name) {
+            None => Ok(fallback),
+            Some("on" | "true" | "yes" | "1") => Ok(true),
+            Some("off" | "false" | "no" | "0") => Ok(false),
+            Some(raw) => Err(CliError::BadValue {
+                key: name.to_string(),
+                value: raw.to_string(),
+                why: "expected on/true/yes/1 or off/false/no/0".to_string(),
+            }),
+        }
+    }
+
     /// Parse a comma-separated option value into a typed list (e.g.
     /// `--buckets 1,4,8,16,32`). A missing option yields an empty list;
     /// empty items between commas are skipped.
@@ -331,6 +347,27 @@ mod tests {
         let bad = c.parse(&argv(&["--repack-every", "x"])).unwrap();
         assert!(matches!(
             bad.get_interval_or("repack-every", 16),
+            Err(CliError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn switch_options_accept_on_off_words() {
+        let c = Command::new("t", "t").opt("shared-registry", "switch");
+        for word in ["on", "true", "yes", "1"] {
+            let a = c.parse(&argv(&["--shared-registry", word])).unwrap();
+            assert!(a.get_switch_or("shared-registry", false).unwrap(), "{word}");
+        }
+        for word in ["off", "false", "no", "0"] {
+            let a = c.parse(&argv(&["--shared-registry", word])).unwrap();
+            assert!(!a.get_switch_or("shared-registry", true).unwrap(), "{word}");
+        }
+        let missing = c.parse(&argv(&[])).unwrap();
+        assert!(missing.get_switch_or("shared-registry", true).unwrap());
+        assert!(!missing.get_switch_or("shared-registry", false).unwrap());
+        let bad = c.parse(&argv(&["--shared-registry", "maybe"])).unwrap();
+        assert!(matches!(
+            bad.get_switch_or("shared-registry", true),
             Err(CliError::BadValue { .. })
         ));
     }
