@@ -1,0 +1,110 @@
+//! Bench: persistent plan store — restart-to-first-replay time
+//! (ROADMAP.md `## Plan registry`, persistent store tier).
+//!
+//! A server restart without the store re-pays the full cold path per
+//! bucket key: replay the propagation through the profiler, then solve
+//! the 10k-block DSA instance on the serving path. With `--plan-store`,
+//! the restarted registry instead reads the key's JSON document, runs
+//! the full validation chain (format version, strict headers,
+//! `Trace::validate`, skeleton-hash recompute, no-overlap check on the
+//! stored offsets), and adopts the snapshot into a replaying planner.
+//! Both paths are timed end to end on the same DNN-shaped instance.
+//!
+//! Perf target (pinned here): warm-from-disk load+validate+adopt ≥5×
+//! faster than the cold profile+solve at 10k blocks.
+//!
+//! Run: `cargo bench --bench bench_plan_store`
+
+use pgmo::coordinator::staging::StagingPlanner;
+use pgmo::dsa::bestfit;
+use pgmo::dsa::policies::Policy;
+use pgmo::plan::registry::PlanKey;
+use pgmo::plan::{PlanSnapshot, PlanStore, StoredPlan};
+use pgmo::profiler::{BlockHandle, MemoryProfiler};
+use pgmo::testkit::gen::large_dsa_triples;
+use pgmo::trace::Trace;
+use std::time::Instant;
+
+const N: usize = 10_000;
+
+/// Replay the propagation through the profiler (alloc/free events in
+/// tick order) — the profiling iteration a cold registry miss pays.
+fn profile(triples: &[(u64, u64, u64)]) -> Trace {
+    // (tick, kind, block): frees sort before allocs at equal ticks,
+    // matching half-open lifetime semantics.
+    let mut events: Vec<(u64, u8, usize)> = Vec::with_capacity(triples.len() * 2);
+    for (i, &(_, alloc_at, free_at)) in triples.iter().enumerate() {
+        events.push((alloc_at, 1, i));
+        events.push((free_at, 0, i));
+    }
+    events.sort_unstable();
+    let mut prof = MemoryProfiler::new("bench", "serving-b32", 32);
+    let mut handles: Vec<Option<BlockHandle>> = vec![None; triples.len()];
+    for (_, kind, i) in events {
+        if kind == 1 {
+            handles[i] = Some(prof.on_alloc(triples[i].0));
+        } else {
+            prof.on_free(handles[i].take().expect("free before alloc"));
+        }
+    }
+    prof.finish()
+}
+
+fn main() {
+    let triples = large_dsa_triples(N, 0x570_4e5);
+
+    // Populate the store once — the write-behind a previous process paid
+    // after its cold build completed.
+    let trace = profile(&triples);
+    let inst = trace.to_dsa_instance();
+    let sol = bestfit::solve(&inst);
+    let root = std::env::temp_dir().join("pgmo_bench_plan_store");
+    let _ = std::fs::remove_dir_all(&root);
+    let store = PlanStore::open(&root).expect("store root");
+    let key = PlanKey::new("bench", "serving", 32);
+    store
+        .save(&StoredPlan {
+            key: key.clone(),
+            policy: Policy::default().block_choice,
+            donor_bucket: None,
+            snapshot: PlanSnapshot {
+                trace: trace.clone(),
+                offsets: sol.offsets.clone(),
+                peak: sol.peak,
+            },
+        })
+        .expect("persist plan");
+
+    // Cold restart: profile + solve from nothing.
+    let t0 = Instant::now();
+    let cold_trace = profile(&triples);
+    let cold = bestfit::solve(&cold_trace.to_dsa_instance());
+    let cold_us = t0.elapsed().as_nanos() as f64 / 1e3;
+
+    // Warm restart: read + full validation chain + adopt into a planner
+    // that replays its very first iteration.
+    let t0 = Instant::now();
+    let sp = store
+        .load(&key)
+        .expect("valid document")
+        .expect("document present");
+    let planner = StagingPlanner::from_snapshot("bench", "serving-b32", sp.snapshot);
+    let warm_us = t0.elapsed().as_nanos() as f64 / 1e3;
+
+    assert_eq!(cold.peak, sol.peak, "cold solve is deterministic");
+    assert_eq!(
+        planner.planned_peak(),
+        Some(sol.peak),
+        "warm-loaded plan carries the persisted packing"
+    );
+    println!(
+        "warm from disk  {warm_us:>12.1} µs   cold profile+solve {cold_us:>12.1} µs   \
+         speedup {:>6.1}×   blocks {N}",
+        cold_us / warm_us,
+    );
+    println!(
+        "target: warm-from-disk load+validate+adopt ≥5× faster than cold \
+         profile+solve at {}k blocks",
+        N / 1000
+    );
+}

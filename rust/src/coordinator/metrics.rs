@@ -258,6 +258,18 @@ impl ServeMetrics {
                 plans.mean_resolve_ns() as f64 / 1e3,
             ));
         }
+        let store_activity =
+            plans.store_hits + plans.store_misses + plans.store_invalidated + plans.store_writes;
+        if store_activity > 0 {
+            // The disk tier: plans installed straight from the store
+            // (each one a cold profile+solve the restart skipped),
+            // builds the store had nothing for, documents discarded by
+            // validation, and write-behinds keeping the store current.
+            out.push_str(&format!(
+                "\n  store: {} warm loads / {} misses / {} invalidated, {} write-behinds",
+                plans.store_hits, plans.store_misses, plans.store_invalidated, plans.store_writes,
+            ));
+        }
         out
     }
 }
@@ -452,6 +464,30 @@ mod tests {
             "{report}"
         );
         assert!(report.contains("9 hits / 3 misses"), "{report}");
+    }
+
+    #[test]
+    fn store_line_reports_persistence_counters() {
+        let mut m = ServeMetrics {
+            requests: 4,
+            batches: 1,
+            wall: Duration::from_secs(1),
+            ..Default::default()
+        };
+        // No store activity: the line stays out of the report.
+        assert!(!m.report().contains("store:"), "{}", m.report());
+        m.registries.push(RegistryStats {
+            store_hits: 3,
+            store_misses: 1,
+            store_invalidated: 2,
+            store_writes: 4,
+            ..RegistryStats::default()
+        });
+        let report = m.report();
+        assert!(
+            report.contains("store: 3 warm loads / 1 misses / 2 invalidated, 4 write-behinds"),
+            "{report}"
+        );
     }
 
     #[test]

@@ -94,6 +94,15 @@ pub struct ServeConfig {
     /// under one unified budget. `false` gives every shard a private
     /// registry — the pre-sharing behavior, kept as an escape hatch.
     pub shared_registry: bool,
+    /// Persistent plan store root (`--plan-store <dir>`). When set, the
+    /// registry warms its ladder from the stored plan documents before
+    /// the shards take traffic — restart-to-first-replay becomes a file
+    /// read + validate instead of a profile+solve — and every completed
+    /// cold/seeded build is written back behind the serving path.
+    /// Entries failing validation (version skew, skeleton-hash mismatch,
+    /// malformed trace, colliding offsets) are discarded and rebuilt
+    /// cold. `None` = no persistence.
+    pub plan_store: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -109,6 +118,7 @@ impl Default for ServeConfig {
             plan_budget_bytes: u64::MAX,
             repack_interval: 16,
             shared_registry: true,
+            plan_store: None,
         }
     }
 }
@@ -216,19 +226,30 @@ impl InferenceServer {
         let registry_cfg = RegistryConfig::new(&self.cfg.ladder())
             .with_budget(self.cfg.plan_budget_bytes)
             .with_repack_interval(self.cfg.repack_interval);
+        // The persistent tier attaches (and warms the ladder) before any
+        // worker spawns: every plan the store holds for a ladder key is
+        // validated and installed up front, so the first batch per
+        // persisted key replays instead of profiling. With per-shard
+        // private registries each one warms from the same root — the
+        // store is multi-reader-safe, and write-behind is an atomic
+        // rename, so the shards cannot corrupt each other.
+        let store = match &self.cfg.plan_store {
+            Some(root) => Some(crate::plan::store::PlanStore::open(root)?),
+            None => None,
+        };
+        let make_registry = || {
+            let mut r = SharedStagingRegistry::new("mlp", "serving", registry_cfg.clone());
+            if let Some(store) = &store {
+                r.set_store(store.clone());
+                r.warm_from_store();
+            }
+            Arc::new(r)
+        };
         let registries: Vec<Arc<SharedStagingRegistry>> = if self.cfg.shared_registry {
-            let shared = Arc::new(SharedStagingRegistry::new("mlp", "serving", registry_cfg));
+            let shared = make_registry();
             (0..n).map(|_| Arc::clone(&shared)).collect()
         } else {
-            (0..n)
-                .map(|_| {
-                    Arc::new(SharedStagingRegistry::new(
-                        "mlp",
-                        "serving",
-                        registry_cfg.clone(),
-                    ))
-                })
-                .collect()
+            (0..n).map(|_| make_registry()).collect()
         };
 
         let queue: StealQueue<Request> = StealQueue::new(n);
@@ -502,6 +523,11 @@ impl<'a> ShardWorker<'a> {
         // build instead of profiling their own copy. The checkout pins
         // the plan against eviction until dropped.
         let slot = self.registry.checkout(bucket);
+        // hits() is still 0 exactly when this checkout just built the
+        // slot (single-flight builder path: cold, seeded, or lazily
+        // store-loaded) — a seeded build solves nothing, so the solve
+        // delta below cannot detect it for write-behind.
+        let fresh_build = slot.hits() == 0;
         let mut planner = slot.plan();
         let before = planner.stats();
         let solves_before = planner.solves();
@@ -578,6 +604,16 @@ impl<'a> ShardWorker<'a> {
             // The solve ran on the background thread; only the swap
             // happened inside this batch's iteration boundary.
             self.registry.record_repack(repack_ns);
+        }
+
+        // Write-behind to the persistent store (no-op when none is
+        // configured): a completed cold or seeded build persists its
+        // plan, and a reopt/re-pack refreshes the document so a restart
+        // adopts the plan as it last served. Replies are already sent
+        // and the plan lock already released — the file write costs this
+        // batch nothing it hasn't delivered.
+        if fresh_build || built || resolved || repacked {
+            self.registry.persist(&slot);
         }
 
         // Publish the plan's arena footprint, release the checkout pin,

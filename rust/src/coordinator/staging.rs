@@ -16,9 +16,12 @@
 use crate::alloc::arena::align_up;
 use crate::alloc::AllocStats;
 use crate::dsa::bestfit;
+use crate::dsa::policies::Policy;
 use crate::dsa::solution::Assignment;
+use crate::plan::engine::PlanSnapshot;
 use crate::plan::registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
 use crate::plan::shared::{SharedPlanRegistry, SharedSlot};
+use crate::plan::store::{PlanStore, StoredPlan};
 use crate::plan::{HostBackend, MemoryBackend, ReplayEngine};
 use crate::trace::TraceEvent;
 use std::sync::Arc;
@@ -60,12 +63,17 @@ fn ok<T>(r: Result<T, std::convert::Infallible>) -> T {
 #[derive(Debug)]
 pub struct StagingPlanner {
     engine: ReplayEngine<HostBackend>,
+    /// Donor lineage: the bucket this planner's plan was seeded from
+    /// (`None` for a profiled or warm-loaded-unseeded plan). Travels
+    /// into persisted store documents.
+    seeded_from: Option<u32>,
 }
 
 impl StagingPlanner {
     pub fn new(model: &str, phase: &str) -> StagingPlanner {
         StagingPlanner {
             engine: ReplayEngine::new(HostBackend::new(), model, phase, 0),
+            seeded_from: None,
         }
     }
 
@@ -105,7 +113,30 @@ impl StagingPlanner {
         let seeded = bestfit::seed_scaled(&donor_inst, &donor_sol, &new_inst);
         let mut planner = StagingPlanner::new(model, phase);
         ok(planner.engine.adopt_plan(&mut (), trace, &new_inst, seeded.assignment));
+        planner.seeded_from = Some(den);
         Some(planner)
+    }
+
+    /// Build a planner around a plan image loaded from the persistent
+    /// store: the engine adopts the snapshot and replays from its very
+    /// first iteration — restart-to-first-replay without a profiling
+    /// round or a cold solve. The caller is responsible for having
+    /// validated the snapshot (the store's load path always does).
+    pub fn from_snapshot(model: &str, phase: &str, snap: PlanSnapshot) -> StagingPlanner {
+        let mut planner = StagingPlanner::new(model, phase);
+        ok(planner.engine.adopt_snapshot(&mut (), snap));
+        planner
+    }
+
+    /// Portable image of the solved plan (`None` while profiling) — what
+    /// the persistent store writes behind the serving path.
+    pub fn snapshot(&self) -> Option<PlanSnapshot> {
+        self.engine.snapshot()
+    }
+
+    /// Donor lineage: the bucket this plan was seeded from, if any.
+    pub fn seeded_from(&self) -> Option<u32> {
+        self.seeded_from
     }
 
     /// Background-re-pack the plan after this many consecutive warm
@@ -288,6 +319,11 @@ pub struct StagingRegistry {
     phase: String,
     repack_interval: u64,
     registry: PlanRegistry<StagingPlanner>,
+    /// Optional persistent tier: warm-loaded at startup
+    /// ([`warm_from_store`](Self::warm_from_store)), consulted on misses
+    /// before paying a seed or a cold profile, written behind completed
+    /// builds ([`persist`](Self::persist)).
+    store: Option<PlanStore>,
 }
 
 impl StagingRegistry {
@@ -297,7 +333,111 @@ impl StagingRegistry {
             phase: phase.to_string(),
             repack_interval: cfg.repack_interval(),
             registry: PlanRegistry::new(cfg),
+            store: None,
         }
+    }
+
+    /// Attach a persistent plan store. Call
+    /// [`warm_from_store`](Self::warm_from_store) afterwards to install
+    /// everything the store already holds for this registry's ladder.
+    pub fn set_store(&mut self, store: PlanStore) {
+        self.store = Some(store);
+    }
+
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.store.as_ref()
+    }
+
+    /// Enumerate the attached store and install every *valid* entry
+    /// whose key matches this registry's model/phase and intersects the
+    /// configured ladder — each counted in `store_hits`. Invalid entries
+    /// (version skew, skeleton-hash mismatch, failed validation) are
+    /// discarded and counted in `store_invalidated`; entries for other
+    /// registries are left untouched. Returns the number installed.
+    pub fn warm_from_store(&mut self) -> usize {
+        let Some(store) = self.store.clone() else {
+            return 0;
+        };
+        let mut installed = 0;
+        for path in store.enumerate() {
+            let sp = match store.load_file(&path) {
+                Ok(sp) => sp,
+                Err(_) => {
+                    self.registry.record_store_invalidated();
+                    store.discard(&path);
+                    continue;
+                }
+            };
+            if sp.key.model != self.model
+                || sp.key.phase != self.phase
+                || !self.registry.ladder().contains(&sp.key.batch_bucket)
+            {
+                continue; // someone else's plan — not ours to judge
+            }
+            let key = sp.key.clone();
+            let planner = self.adopt_stored(sp);
+            if self.registry.install(&key, planner) {
+                self.registry.record_store_hit();
+                installed += 1;
+            }
+        }
+        installed
+    }
+
+    /// Write the bucket's solved plan to the attached store (crash-safe
+    /// temp-then-rename). No-op without a store, a resident plan, or a
+    /// solved plan. Counted in `store_writes`.
+    pub fn persist(&mut self, bucket: u32) -> bool {
+        let Some(store) = self.store.clone() else {
+            return false;
+        };
+        let key = PlanKey::new(&self.model, &self.phase, bucket);
+        let Some(planner) = self.registry.peek(&key) else {
+            return false;
+        };
+        let Some(snapshot) = planner.snapshot() else {
+            return false;
+        };
+        let doc = StoredPlan {
+            key,
+            policy: Policy::default().block_choice,
+            donor_bucket: planner.seeded_from(),
+            snapshot,
+        };
+        if store.save(&doc).is_ok() {
+            self.registry.record_store_write();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Try the store for a missing key: a valid document adopts into a
+    /// replaying planner (`store_hits`); a damaged one is discarded
+    /// (`store_invalidated`); an absent one counts the build the store
+    /// could not save (`store_misses`).
+    fn planner_from_store(&mut self, key: &PlanKey) -> Option<StagingPlanner> {
+        let store = self.store.clone()?;
+        let path = store.file_for(key);
+        if !path.exists() {
+            self.registry.record_store_miss();
+            return None;
+        }
+        match store.load_file(&path) {
+            Ok(sp) if sp.key == *key => {
+                self.registry.record_store_hit();
+                Some(self.adopt_stored(sp))
+            }
+            _ => {
+                self.registry.record_store_invalidated();
+                store.discard(&path);
+                None
+            }
+        }
+    }
+
+    fn adopt_stored(&self, sp: StoredPlan) -> StagingPlanner {
+        adopt_stored(sp, self.repack_interval)
     }
 
     /// The normalized bucket ladder, ascending.
@@ -320,6 +460,11 @@ impl StagingRegistry {
         let key = PlanKey::new(&self.model, &self.phase, bucket);
         let mut seed: Option<StagingPlanner> = None;
         if self.registry.peek(&key).is_none() {
+            // The persistent tier outranks seeding: a stored plan was
+            // solved for this exact key, a seed is a scaled guess.
+            seed = self.planner_from_store(&key);
+        }
+        if seed.is_none() && self.registry.peek(&key).is_none() {
             let built = match self.registry.seed_donor(&key) {
                 Some((donor_key, donor)) => {
                     let t0 = Instant::now();
@@ -398,6 +543,21 @@ impl StagingRegistry {
     }
 }
 
+/// Turn a validated store document into a replaying planner, restoring
+/// lineage and applying the registry's re-pack cadence — the same phase
+/// labeling as a cold build, so a warm-loaded plan is indistinguishable
+/// from the one that was persisted.
+fn adopt_stored(sp: StoredPlan, repack_interval: u64) -> StagingPlanner {
+    let mut planner = StagingPlanner::from_snapshot(
+        &sp.key.model,
+        &format!("{}-b{}", sp.key.phase, sp.key.batch_bucket),
+        sp.snapshot,
+    );
+    planner.seeded_from = sp.donor_bucket;
+    planner.set_repack_interval(repack_interval);
+    planner
+}
+
 /// The concurrent serving tier of [`StagingRegistry`]: one process-wide
 /// family of bucket plans shared by every shard worker, built on
 /// [`SharedPlanRegistry`].
@@ -420,6 +580,10 @@ pub struct SharedStagingRegistry {
     phase: String,
     repack_interval: u64,
     registry: SharedPlanRegistry<StagingPlanner>,
+    /// Optional persistent tier; see [`StagingRegistry`]'s `store`.
+    /// Attached before the registry is shared (`set_store` takes `&mut`),
+    /// so no synchronization is needed around the handle itself.
+    store: Option<PlanStore>,
 }
 
 impl SharedStagingRegistry {
@@ -429,6 +593,109 @@ impl SharedStagingRegistry {
             phase: phase.to_string(),
             repack_interval: cfg.repack_interval(),
             registry: SharedPlanRegistry::new(cfg),
+            store: None,
+        }
+    }
+
+    /// Attach a persistent plan store (before sharing the registry
+    /// across shards). Call [`warm_from_store`](Self::warm_from_store)
+    /// afterwards to install everything it holds for this ladder.
+    pub fn set_store(&mut self, store: PlanStore) {
+        self.store = Some(store);
+    }
+
+    pub fn store(&self) -> Option<&PlanStore> {
+        self.store.as_ref()
+    }
+
+    /// Enumerate the attached store and install every valid entry whose
+    /// key matches this registry's model/phase and intersects the
+    /// configured ladder (`store_hits`); discard invalid entries
+    /// (`store_invalidated`). Run before the shards start taking
+    /// traffic: installs are stats-neutral for hit/miss and skip any key
+    /// already resident or mid-build. Returns the number installed.
+    pub fn warm_from_store(&self) -> usize {
+        let Some(store) = &self.store else {
+            return 0;
+        };
+        let mut installed = 0;
+        for path in store.enumerate() {
+            let sp = match store.load_file(&path) {
+                Ok(sp) => sp,
+                Err(_) => {
+                    self.registry.record_store_invalidated();
+                    store.discard(&path);
+                    continue;
+                }
+            };
+            if sp.key.model != self.model
+                || sp.key.phase != self.phase
+                || !self.registry.ladder().contains(&sp.key.batch_bucket)
+            {
+                continue; // someone else's plan — not ours to judge
+            }
+            let key = sp.key.clone();
+            let planner = adopt_stored(sp, self.repack_interval);
+            if self.registry.install(&key, planner) {
+                self.registry.record_store_hit();
+                installed += 1;
+            }
+        }
+        installed
+    }
+
+    /// Write the slot's solved plan to the attached store. Call at
+    /// checkin, after releasing the plan lock and sending replies — the
+    /// plan is relocked briefly (uncontended) to snapshot, and the file
+    /// write runs with no locks held, behind the serving path. No-op
+    /// without a store or before the plan has solved.
+    pub fn persist(&self, slot: &SharedSlot<StagingPlanner>) -> bool {
+        let Some(store) = &self.store else {
+            return false;
+        };
+        let (snapshot, donor_bucket) = {
+            let planner = slot.plan();
+            (planner.snapshot(), planner.seeded_from())
+        };
+        let Some(snapshot) = snapshot else {
+            return false;
+        };
+        let doc = StoredPlan {
+            key: slot.key().clone(),
+            policy: Policy::default().block_choice,
+            donor_bucket,
+            snapshot,
+        };
+        if store.save(&doc).is_ok() {
+            self.registry.record_store_write();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The lazy store path inside the single-flight builder: a valid
+    /// document for `key` adopts directly (`store_hits`) — e.g. a plan
+    /// persisted earlier, evicted, and re-requested; a damaged one is
+    /// discarded (`store_invalidated`); an absent one counts the build
+    /// the store could not save (`store_misses`).
+    fn builder_from_store(&self, key: &PlanKey) -> Option<StagingPlanner> {
+        let store = self.store.as_ref()?;
+        let path = store.file_for(key);
+        if !path.exists() {
+            self.registry.record_store_miss();
+            return None;
+        }
+        match store.load_file(&path) {
+            Ok(sp) if sp.key == *key => {
+                self.registry.record_store_hit();
+                Some(adopt_stored(sp, self.repack_interval))
+            }
+            _ => {
+                self.registry.record_store_invalidated();
+                store.discard(&path);
+                None
+            }
         }
     }
 
@@ -450,6 +717,11 @@ impl SharedStagingRegistry {
     pub fn checkout(&self, bucket: u32) -> Arc<SharedSlot<StagingPlanner>> {
         let key = PlanKey::new(&self.model, &self.phase, bucket);
         self.registry.get_or_build(&key, || {
+            // The persistent tier outranks seeding: a stored plan was
+            // solved for this exact key, a seed is a scaled guess.
+            if let Some(planner) = self.builder_from_store(&key) {
+                return planner;
+            }
             if let Some((donor_key, donor_slot)) = self.registry.seed_donor_slot(&key) {
                 let t0 = Instant::now();
                 // The donor lock waits out at most one in-flight batch;

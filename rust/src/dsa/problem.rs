@@ -161,24 +161,28 @@ impl DsaInstance {
 
     // ----- JSON (trace files, experiment fixtures) ------------------------
 
-    pub fn to_json(&self) -> Json {
-        let blocks = self
-            .blocks
-            .iter()
-            .map(|b| {
-                Json::from_pairs(vec![
-                    ("size", Json::Int(b.size as i64)),
-                    ("alloc_at", Json::Int(b.alloc_at as i64)),
-                    ("free_at", Json::Int(b.free_at as i64)),
-                ])
-            })
-            .collect();
+    /// Errors if any size/tick exceeds `i64::MAX`: the JSON integer
+    /// domain is i64, and `as i64` would wrap such a value negative.
+    pub fn to_json(&self) -> anyhow::Result<Json> {
+        let int = |field: &str, v: u64| -> anyhow::Result<Json> {
+            let v = i64::try_from(v)
+                .map_err(|_| anyhow::anyhow!("{field} {v} exceeds the JSON integer range"))?;
+            Ok(Json::Int(v))
+        };
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for b in &self.blocks {
+            blocks.push(Json::from_pairs(vec![
+                ("size", int("size", b.size)?),
+                ("alloc_at", int("alloc_at", b.alloc_at)?),
+                ("free_at", int("free_at", b.free_at)?),
+            ]));
+        }
         let mut obj = Json::obj();
         obj.set("blocks", Json::Arr(blocks));
         if let Some(c) = self.capacity {
-            obj.set("capacity", Json::Int(c as i64));
+            obj.set("capacity", int("capacity", c)?);
         }
-        obj
+        Ok(obj)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<DsaInstance> {
@@ -205,7 +209,13 @@ impl DsaInstance {
             blocks.push(Block::new(i, size, alloc_at, free_at));
         }
         let mut inst = DsaInstance::new(blocks);
-        inst.capacity = j.get("capacity").as_u64();
+        inst.capacity = match j.get("capacity") {
+            Json::Null => None,
+            c => Some(
+                c.as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("negative or non-integer capacity"))?,
+            ),
+        };
         Ok(inst)
     }
 }
@@ -281,7 +291,7 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let i = inst3().with_capacity(1 << 30);
-        let j = i.to_json();
+        let j = i.to_json().unwrap();
         let back = DsaInstance::from_json(&j).unwrap();
         assert_eq!(back.blocks, i.blocks);
         assert_eq!(back.capacity, i.capacity);
@@ -293,9 +303,17 @@ mod tests {
             r#"{}"#,
             r#"{"blocks":[{"size":0,"alloc_at":0,"free_at":1}]}"#,
             r#"{"blocks":[{"size":4,"alloc_at":5,"free_at":5}]}"#,
+            r#"{"blocks":[{"size":-4,"alloc_at":0,"free_at":1}]}"#,
+            r#"{"blocks":[],"capacity":-1}"#,
         ] {
             let j = Json::parse(src).unwrap();
             assert!(DsaInstance::from_json(&j).is_err(), "src={src}");
         }
+    }
+
+    #[test]
+    fn to_json_rejects_sizes_beyond_json_int_range() {
+        let i = DsaInstance::new(vec![Block::new(0, u64::MAX, 0, 1)]);
+        assert!(i.to_json().is_err(), "size above i64::MAX must not wrap");
     }
 }

@@ -85,6 +85,19 @@
 //! in at the next iteration boundary when it is tighter than the
 //! incumbent, bounding drift to one interval without growing the arena.
 //!
+//! Solved plans also survive the process: [`plan::PlanStore`] is a disk
+//! tier beneath the registry persisting each plan — profiled trace,
+//! solved offsets, key, policy, donor lineage — as one versioned JSON
+//! document, written crash-safely (temp file + rename) behind the
+//! serving path whenever a build, re-solve, or re-pack completes. With
+//! `pgmo serve --plan-store <dir>`, a restarted registry warms its
+//! bucket ladder from disk and serves the first batch per stored key by
+//! replay instead of re-paying cold profile+solve. Every load
+//! revalidates from first principles — format version, event-skeleton
+//! hash, [`trace::Trace::validate`], and the no-overlap check on the
+//! stored offsets — and any mismatch discards the document and falls
+//! back cold: the disk is never trusted over the invariants.
+//!
 //! Around that core the crate ships the complete substrate the paper's
 //! evaluation needs: Chainer/CuPy-style pool and network-wise baseline
 //! allocators ([`alloc`]), a simulated 16-GiB GPU with a

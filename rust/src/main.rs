@@ -7,7 +7,8 @@
 //! pgmo solve --trace t.json [--exact] [--policy largest-size]
 //! pgmo train [--steps 200] [--batch 32] [--artifacts artifacts/]
 //! pgmo serve [--requests 256] [--shards 2] [--buckets 1,4,8,16,32]
-//!            [--plan-budget 64MiB] [--artifacts artifacts/]
+//!            [--plan-budget 64MiB] [--plan-store plans/]
+//!            [--artifacts artifacts/]
 //! ```
 
 use anyhow::{Context, Result};
@@ -355,6 +356,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "on",
             "one process-wide plan registry shared by all shards ('off' = private per-shard registries)",
         )
+        .opt(
+            "plan-store",
+            "persistent plan store directory: warm the ladder from disk at startup, \
+             write solved plans behind the serving path (invalid entries rebuild cold)",
+        )
         .opt_default("artifacts", "artifacts", "artifact directory");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.help_text());
@@ -378,6 +384,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         plan_budget_bytes,
         repack_interval: a.get_interval_or("repack-every", 16)?,
         shared_registry: a.get_switch_or("shared-registry", true)?,
+        plan_store: a.get_path("plan-store"),
         ..ServeConfig::default()
     };
     let mut server = InferenceServer::new(&dir, 11, cfg)?;

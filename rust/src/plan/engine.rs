@@ -53,6 +53,7 @@ use crate::dsa::problem::DsaInstance;
 use crate::dsa::solution::Assignment;
 use crate::profiler::{BlockHandle, MemoryProfiler};
 use crate::trace::{Trace, TraceEvent};
+use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 use std::time::Instant;
@@ -131,6 +132,86 @@ impl Placement {
     /// Was this request served by O(1) replay from the arena?
     pub fn is_replayed(&self) -> bool {
         self.pos.is_some()
+    }
+}
+
+/// A portable image of a solved plan: the profiled trace plus the
+/// assignment solved for it. This is everything another engine (or a
+/// later process — see [`PlanStore`](crate::plan::store::PlanStore))
+/// needs to replay from its first iteration via
+/// [`ReplayEngine::adopt_snapshot`]; base addresses are deliberately
+/// absent because each adopting backend reserves its own arena.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanSnapshot {
+    pub trace: Trace,
+    /// Solved offset per plan position (index = λ).
+    pub offsets: Vec<u64>,
+    /// Arena size the offsets were packed into.
+    pub peak: u64,
+}
+
+impl PlanSnapshot {
+    /// Full invariant check: the trace is well-formed and the offsets
+    /// are a valid no-overlap packing of its instance at exactly `peak`.
+    /// Anything adopting a snapshot it did not build must run this first
+    /// — never trust a deserialized plan over the invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.trace.validate()?;
+        let inst = self.trace.to_dsa_instance();
+        let sol = Assignment {
+            offsets: self.offsets.clone(),
+            peak: self.peak,
+        };
+        sol.validate(&inst)
+            .map_err(|v| anyhow::anyhow!("assignment does not fit the trace: {v}"))?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> anyhow::Result<Json> {
+        let int = |field: &str, v: u64| -> anyhow::Result<Json> {
+            let v = i64::try_from(v)
+                .map_err(|_| anyhow::anyhow!("{field} {v} exceeds the JSON integer range"))?;
+            Ok(Json::Int(v))
+        };
+        let offsets = self
+            .offsets
+            .iter()
+            .map(|&o| int("offset", o))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Json::from_pairs(vec![
+            ("trace", self.trace.to_json()?),
+            ("offsets", Json::Arr(offsets)),
+            ("peak", int("peak", self.peak)?),
+        ]))
+    }
+
+    /// Parse and validate. Errors on any structural damage: malformed
+    /// trace, missing/negative offsets, or offsets that collide /
+    /// misstate the peak ([`Assignment::validate`]).
+    pub fn from_json(j: &Json) -> anyhow::Result<PlanSnapshot> {
+        let trace = Trace::from_json(j.get("trace"))?;
+        let offsets = j
+            .get("offsets")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing offsets array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, o)| {
+                o.as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("offset {i}: negative or non-integer"))
+            })
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+        let peak = j
+            .get("peak")
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("missing, negative or non-integer peak"))?;
+        let snap = PlanSnapshot {
+            trace,
+            offsets,
+            peak,
+        };
+        snap.validate()?;
+        Ok(snap)
     }
 }
 
@@ -253,6 +334,33 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// Solved per-position offsets of the current plan.
     pub fn planned_offsets(&self) -> Option<&[u64]> {
         self.plan.as_ref().map(|p| p.offsets.as_slice())
+    }
+
+    /// Portable image of the current plan (trace + offsets + peak), or
+    /// `None` while still profiling. This is what the plan store
+    /// persists; the sibling constructor is
+    /// [`adopt_snapshot`](Self::adopt_snapshot).
+    pub fn snapshot(&self) -> Option<PlanSnapshot> {
+        self.plan.as_ref().map(|p| PlanSnapshot {
+            trace: (*p.trace).clone(),
+            offsets: p.offsets.clone(),
+            peak: p.peak,
+        })
+    }
+
+    /// Adopt a [`PlanSnapshot`] — e.g. one loaded from the plan store —
+    /// skipping the profiling iteration entirely. Same contract as
+    /// [`adopt_plan`](Self::adopt_plan): only a fresh engine may adopt.
+    /// Callers must have run [`PlanSnapshot::validate`] on anything that
+    /// crossed a serialization boundary; this method re-derives the
+    /// instance but does not re-check the packing in release builds.
+    pub fn adopt_snapshot(&mut self, ctx: &mut M::Ctx, snap: PlanSnapshot) -> Result<(), M::Error> {
+        let inst = snap.trace.to_dsa_instance();
+        let sol = Assignment {
+            offsets: snap.offsets,
+            peak: snap.peak,
+        };
+        self.adopt_plan(ctx, snap.trace, &inst, sol)
     }
 
     /// Absolute address of plan position `pos` (base + offset). Panics

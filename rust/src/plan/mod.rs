@@ -30,14 +30,19 @@
 //! LRU-evicts under a total-arena-bytes budget. [`shared`] lifts the
 //! registry to a process-wide concurrent tier: `Arc`'d plans behind
 //! sharded `RwLock` maps, single-flight builds, and pin-aware eviction
-//! under one unified budget ([`SharedPlanRegistry`]).
+//! under one unified budget ([`SharedPlanRegistry`]). [`store`] adds the
+//! disk tier beneath both: solved plans persist as validated JSON
+//! documents ([`PlanStore`]) so a restarted registry warms its ladder
+//! from disk instead of re-paying cold profile+solve per key.
 
 pub mod backend;
 pub mod engine;
 pub mod registry;
 pub mod shared;
+pub mod store;
 
 pub use backend::{DeviceBackend, HostBackend, MemoryBackend};
-pub use engine::{Placement, ReplayEngine};
+pub use engine::{Placement, PlanSnapshot, ReplayEngine};
 pub use registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
 pub use shared::{SharedPlanRegistry, SharedSlot};
+pub use store::{PlanStore, StoredPlan, STORE_FORMAT_VERSION};

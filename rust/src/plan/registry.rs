@@ -194,6 +194,17 @@ pub struct RegistryStats {
     pub repack_ns_total: u64,
     /// Slowest single recorded re-pack solve, in wall nanoseconds.
     pub repack_ns_max: u64,
+    /// Plans installed from the persistent store at warm-load: keys the
+    /// restart served by replay instead of a cold profile+solve.
+    pub store_hits: u64,
+    /// Plan builds a configured store could not save (no document for
+    /// the key when its cold or seeded build ran).
+    pub store_misses: u64,
+    /// Store documents discarded on load: version skew, skeleton-hash
+    /// mismatch, failed trace validation, or colliding offsets.
+    pub store_invalidated: u64,
+    /// Completed builds written back to the store (write-behind).
+    pub store_writes: u64,
 }
 
 impl RegistryStats {
@@ -309,6 +320,10 @@ impl RegistryStats {
         self.repacks += other.repacks;
         self.repack_ns_total += other.repack_ns_total;
         self.repack_ns_max = self.repack_ns_max.max(other.repack_ns_max);
+        self.store_hits += other.store_hits;
+        self.store_misses += other.store_misses;
+        self.store_invalidated += other.store_invalidated;
+        self.store_writes += other.store_writes;
     }
 }
 
@@ -384,6 +399,29 @@ impl<P: PlanFootprint> PlanRegistry<P> {
         }
     }
 
+    /// Install an externally built plan — e.g. one warm-loaded from the
+    /// persistent [`PlanStore`](crate::plan::store::PlanStore) — without
+    /// touching the hit/miss counters: a warm install is neither a
+    /// lookup hit nor a lazy-build miss (callers record it via
+    /// [`record_store_hit`](Self::record_store_hit)). Returns `false`
+    /// (and drops `plan`) if the key is already resident: a live plan
+    /// always wins over a disk image.
+    pub fn install(&mut self, key: &PlanKey, plan: P) -> bool {
+        if self.slots.contains_key(key) {
+            return false;
+        }
+        self.clock += 1;
+        self.slots.insert(
+            key.clone(),
+            Slot {
+                plan,
+                last_used: self.clock,
+                hits: 0,
+            },
+        );
+        true
+    }
+
     /// The resident plan for `key`, without touching LRU state or stats.
     pub fn peek(&self, key: &PlanKey) -> Option<&P> {
         self.slots.get(key).map(|s| &s.plan)
@@ -457,6 +495,26 @@ impl<P: PlanFootprint> PlanRegistry<P> {
     /// [`RegistryStats::record_repack`]).
     pub fn record_repack(&mut self, ns: u64) {
         self.stats.record_repack(ns);
+    }
+
+    /// Record one plan installed from the persistent store at warm-load.
+    pub fn record_store_hit(&mut self) {
+        self.stats.store_hits += 1;
+    }
+
+    /// Record one build the configured store had no document for.
+    pub fn record_store_miss(&mut self) {
+        self.stats.store_misses += 1;
+    }
+
+    /// Record one store document discarded as invalid.
+    pub fn record_store_invalidated(&mut self) {
+        self.stats.store_invalidated += 1;
+    }
+
+    /// Record one completed build written back to the store.
+    pub fn record_store_write(&mut self) {
+        self.stats.store_writes += 1;
     }
 
     /// Per-plan replay-lookup hit counts, sorted by key (diagnostics).

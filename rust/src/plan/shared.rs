@@ -271,6 +271,36 @@ impl<P: PlanFootprint> SharedPlanRegistry<P> {
         }
     }
 
+    /// Install an externally built plan — e.g. one warm-loaded from the
+    /// persistent [`PlanStore`](crate::plan::store::PlanStore) before
+    /// the shards start — without touching the hit/miss counters: a warm
+    /// install is neither a lookup hit nor a lazy-build miss (callers
+    /// record it via [`record_store_hit`](Self::record_store_hit)).
+    /// Returns `false` (and drops `plan`) if the key is already resident
+    /// or mid-build: a live plan always wins over a disk image.
+    pub fn install(&self, key: &PlanKey, plan: P) -> bool {
+        {
+            let inflight = self.inflight.lock().expect("inflight lock poisoned");
+            if inflight.contains_key(key) {
+                return false;
+            }
+        }
+        let slot = Arc::new(SharedSlot {
+            key: key.clone(),
+            plan: Mutex::new(plan),
+            bytes: AtomicU64::new(0),
+            last_used: AtomicU64::new(self.tick()),
+            hits: AtomicU64::new(0),
+        });
+        slot.sync_bytes();
+        let mut shard = self.shard_of(key).write().expect("map shard poisoned");
+        if shard.contains_key(key) {
+            return false;
+        }
+        shard.insert(key.clone(), slot);
+        true
+    }
+
     /// The best seed donor for a missing `key`: the resident slot with
     /// the same model and phase and the largest batch bucket below the
     /// missing one (the single-owner registry's donor rule). Stats-free;
@@ -446,6 +476,29 @@ impl<P: PlanFootprint> SharedPlanRegistry<P> {
     /// [`RegistryStats::record_repack`]).
     pub fn record_repack(&self, ns: u64) {
         self.recorded.lock().expect("recorded stats poisoned").record_repack(ns);
+    }
+
+    /// Record one plan installed from the persistent store at warm-load.
+    pub fn record_store_hit(&self) {
+        self.recorded.lock().expect("recorded stats poisoned").store_hits += 1;
+    }
+
+    /// Record one build the configured store had no document for.
+    pub fn record_store_miss(&self) {
+        self.recorded.lock().expect("recorded stats poisoned").store_misses += 1;
+    }
+
+    /// Record one store document discarded as invalid.
+    pub fn record_store_invalidated(&self) {
+        self.recorded
+            .lock()
+            .expect("recorded stats poisoned")
+            .store_invalidated += 1;
+    }
+
+    /// Record one completed build written back to the store.
+    pub fn record_store_write(&self) {
+        self.recorded.lock().expect("recorded stats poisoned").store_writes += 1;
     }
 }
 

@@ -1,0 +1,330 @@
+//! The persistent plan store: a disk tier beneath the plan registries.
+//!
+//! The paper's premise is that a profiled plan is *reusable* — yet
+//! without persistence every server restart throws the whole bucket
+//! ladder away and re-pays a cold profile+solve per [`PlanKey`] on the
+//! serving path. The store closes that gap with the offline-trace →
+//! document → load-at-run workflow:
+//!
+//! * one JSON document per key under a `--plan-store <dir>` root, each
+//!   carrying the *full* plan — the profiled trace, the solved offsets
+//!   and peak ([`PlanSnapshot`]), the key, the block-choice policy it
+//!   was solved under, and donor lineage (which bucket seeded it, if
+//!   any) — plus a store-format version and an event-skeleton hash;
+//! * on startup the registries
+//!   ([`StagingRegistry`](crate::coordinator::staging::StagingRegistry) /
+//!   [`SharedStagingRegistry`](crate::coordinator::staging::SharedStagingRegistry))
+//!   enumerate the store and install every valid entry whose key
+//!   intersects the configured ladder, so restart-to-first-replay is a
+//!   file read + validate instead of a profile+solve;
+//! * when a single-flight cold or seeded build completes, the finished
+//!   plan is written back behind the serving path (after replies are
+//!   out, outside the plan lock), via the same crash-safe
+//!   temp-then-rename writer as [`Trace::save`](crate::trace::Trace::save).
+//!
+//! **Never trust the disk over the invariants.** Loading runs the full
+//! chain — format-version check, strict header parse, `Trace::validate`,
+//! skeleton-hash recompute, and the no-overlap/peak check of
+//! [`Assignment::validate`](crate::dsa::solution::Assignment::validate)
+//! via [`PlanSnapshot::from_json`] — and any mismatch discards the entry
+//! (the registry counts it in `store_invalidated` and falls back to the
+//! existing cold path).
+
+use crate::dsa::policies::BlockChoice;
+use crate::plan::engine::PlanSnapshot;
+use crate::plan::registry::PlanKey;
+use crate::util::fsio::write_atomic;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Bumped whenever the document layout changes incompatibly; entries
+/// from any other version are discarded, never migrated in place.
+pub const STORE_FORMAT_VERSION: i64 = 1;
+
+/// One persisted plan: everything a restarted registry needs to serve
+/// the key's first batch by replay, plus provenance and integrity
+/// fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredPlan {
+    pub key: PlanKey,
+    /// Block-choice policy the offsets were solved under.
+    pub policy: BlockChoice,
+    /// Donor lineage: the bucket this plan was seeded from when it
+    /// entered the registry via cross-bucket seeding; `None` for a
+    /// profiled cold build.
+    pub donor_bucket: Option<u32>,
+    pub snapshot: PlanSnapshot,
+}
+
+impl StoredPlan {
+    pub fn to_json(&self) -> anyhow::Result<Json> {
+        // The skeleton hash is a full u64, which does not fit the JSON
+        // integer domain (i64) — encode as fixed-width hex.
+        let skeleton = format!("{:016x}", self.snapshot.trace.skeleton_hash());
+        Ok(Json::from_pairs(vec![
+            ("version", Json::Int(STORE_FORMAT_VERSION)),
+            ("model", Json::Str(self.key.model.clone())),
+            ("phase", Json::Str(self.key.phase.clone())),
+            ("batch_bucket", Json::Int(self.key.batch_bucket as i64)),
+            ("policy", Json::Str(self.policy.name().to_string())),
+            (
+                "donor_bucket",
+                match self.donor_bucket {
+                    Some(b) => Json::Int(b as i64),
+                    None => Json::Null,
+                },
+            ),
+            ("skeleton", Json::Str(skeleton)),
+            ("plan", self.snapshot.to_json()?),
+        ]))
+    }
+
+    /// Parse with the full validation chain; any damage is an `Err`.
+    pub fn from_json(j: &Json) -> anyhow::Result<StoredPlan> {
+        let version = j
+            .get("version")
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("missing store-format version"))?;
+        anyhow::ensure!(
+            version == STORE_FORMAT_VERSION,
+            "store-format version skew: document v{version}, this build reads v{STORE_FORMAT_VERSION}"
+        );
+        let model = j
+            .get("model")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing or non-string model"))?;
+        let phase = j
+            .get("phase")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing or non-string phase"))?;
+        let bucket = j
+            .get("batch_bucket")
+            .as_u64()
+            .and_then(|b| u32::try_from(b).ok())
+            .ok_or_else(|| anyhow::anyhow!("missing or out-of-range batch_bucket"))?;
+        let policy_name = j
+            .get("policy")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing or non-string policy"))?;
+        let policy = BlockChoice::ALL
+            .into_iter()
+            .find(|c| c.name() == policy_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown block-choice policy {policy_name:?}"))?;
+        let donor_bucket = match j.get("donor_bucket") {
+            Json::Null => None,
+            d => Some(
+                d.as_u64()
+                    .and_then(|b| u32::try_from(b).ok())
+                    .ok_or_else(|| anyhow::anyhow!("out-of-range donor_bucket"))?,
+            ),
+        };
+        // Snapshot parse runs Trace::validate and Assignment::validate
+        // (the no-overlap check) internally.
+        let snapshot = PlanSnapshot::from_json(j.get("plan"))?;
+        let stored = j
+            .get("skeleton")
+            .as_str()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| anyhow::anyhow!("missing or malformed skeleton hash"))?;
+        let actual = snapshot.trace.skeleton_hash();
+        anyhow::ensure!(
+            stored == actual,
+            "skeleton-hash mismatch: document says {stored:016x}, events hash to {actual:016x}"
+        );
+        Ok(StoredPlan {
+            key: PlanKey::new(model, phase, bucket),
+            policy,
+            donor_bucket,
+            snapshot,
+        })
+    }
+}
+
+/// Handle on a store root directory. Cheap to clone; all state is on
+/// disk, so any number of registries (or processes — writes are atomic
+/// renames) may share one root.
+#[derive(Debug, Clone)]
+pub struct PlanStore {
+    root: PathBuf,
+}
+
+impl PlanStore {
+    /// Open (creating if absent) a store rooted at `root`.
+    pub fn open(root: &Path) -> anyhow::Result<PlanStore> {
+        std::fs::create_dir_all(root)
+            .map_err(|e| anyhow::anyhow!("plan store {}: {e}", root.display()))?;
+        Ok(PlanStore {
+            root: root.to_path_buf(),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Document path for `key`. Label parts are sanitized to a portable
+    /// filename alphabet; the document's embedded key stays authoritative
+    /// (enumeration reads every document, it never parses filenames).
+    pub fn file_for(&self, key: &PlanKey) -> PathBuf {
+        let clean = |s: &str| -> String {
+            s.chars()
+                .map(|c| {
+                    if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                        c
+                    } else {
+                        '-'
+                    }
+                })
+                .collect()
+        };
+        self.root.join(format!(
+            "{}__{}__b{}.json",
+            clean(&key.model),
+            clean(&key.phase),
+            key.batch_bucket
+        ))
+    }
+
+    /// Persist one plan, crash-safely (temp-then-rename).
+    pub fn save(&self, plan: &StoredPlan) -> anyhow::Result<()> {
+        write_atomic(&self.file_for(&plan.key), &plan.to_json()?.dump())
+    }
+
+    /// Load and fully validate one document.
+    pub fn load_file(&self, path: &Path) -> anyhow::Result<StoredPlan> {
+        let text = std::fs::read_to_string(path)?;
+        StoredPlan::from_json(&Json::parse(&text)?)
+    }
+
+    /// Load the document for `key`, if present (`Ok(None)` = no file;
+    /// `Err` = a file exists but failed validation).
+    pub fn load(&self, key: &PlanKey) -> anyhow::Result<Option<StoredPlan>> {
+        let path = self.file_for(key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        self.load_file(&path).map(Some)
+    }
+
+    /// All document paths currently in the store, sorted for determinism.
+    /// Validation happens at load time, not here.
+    pub fn enumerate(&self) -> Vec<PathBuf> {
+        let mut out: Vec<PathBuf> = std::fs::read_dir(&self.root)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| p.extension().is_some_and(|x| x == "json"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.sort();
+        out
+    }
+
+    /// Remove an invalid document so it is not re-validated (and
+    /// re-rejected) on every future startup. Best-effort: the entry is
+    /// already being treated as absent.
+    pub fn discard(&self, path: &Path) {
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Trace, TraceEvent};
+
+    fn snapshot() -> PlanSnapshot {
+        let mut trace = Trace::new("toy", "serving-b8", 8);
+        trace.events = vec![
+            TraceEvent::Alloc { id: 0, size: 64, tick: 1 },
+            TraceEvent::Alloc { id: 1, size: 32, tick: 2 },
+            TraceEvent::Free { id: 0, tick: 3 },
+            TraceEvent::Alloc { id: 2, size: 64, tick: 4 },
+            TraceEvent::Free { id: 2, tick: 5 },
+            TraceEvent::Free { id: 1, tick: 6 },
+        ];
+        let inst = trace.to_dsa_instance();
+        let sol = crate::dsa::bestfit::solve(&inst);
+        PlanSnapshot {
+            trace,
+            offsets: sol.offsets,
+            peak: sol.peak,
+        }
+    }
+
+    fn stored() -> StoredPlan {
+        StoredPlan {
+            key: PlanKey::new("toy", "serving", 8),
+            policy: BlockChoice::LongestLifetime,
+            donor_bucket: Some(4),
+            snapshot: snapshot(),
+        }
+    }
+
+    fn test_store(name: &str) -> PlanStore {
+        let root = std::env::temp_dir().join("pgmo_store_unit").join(name);
+        let _ = std::fs::remove_dir_all(&root);
+        PlanStore::open(&root).unwrap()
+    }
+
+    #[test]
+    fn document_roundtrip() {
+        let p = stored();
+        let back = StoredPlan::from_json(&p.to_json().unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn save_load_enumerate_discard() {
+        let store = test_store("basic");
+        let p = stored();
+        store.save(&p).unwrap();
+        assert_eq!(store.load(&p.key).unwrap().unwrap(), p);
+        assert_eq!(store.load(&PlanKey::new("toy", "serving", 16)).unwrap(), None);
+        let files = store.enumerate();
+        assert_eq!(files.len(), 1);
+        assert_eq!(store.load_file(&files[0]).unwrap(), p);
+        store.discard(&files[0]);
+        assert!(store.enumerate().is_empty());
+    }
+
+    #[test]
+    fn version_skew_is_rejected() {
+        let mut j = stored().to_json().unwrap();
+        j.set("version", Json::Int(STORE_FORMAT_VERSION + 1));
+        assert!(StoredPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn stale_skeleton_hash_is_rejected() {
+        let mut j = stored().to_json().unwrap();
+        j.set("skeleton", Json::Str("00000000deadbeef".into()));
+        assert!(StoredPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_policy_is_rejected() {
+        let mut j = stored().to_json().unwrap();
+        j.set("policy", Json::Str("round-robin".into()));
+        assert!(StoredPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn colliding_offsets_are_rejected() {
+        let mut p = stored();
+        for o in &mut p.snapshot.offsets {
+            *o = 0; // everything at offset 0: blocks 0 and 1 overlap in time
+        }
+        let j = p.to_json().unwrap();
+        assert!(StoredPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn filenames_are_sanitized() {
+        let store = test_store("names");
+        let path = store.file_for(&PlanKey::new("a/b c", "serving", 4));
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        assert_eq!(name, "a-b-c__serving__b4.json");
+    }
+}

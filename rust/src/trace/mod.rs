@@ -144,40 +144,93 @@ impl Trace {
         Ok(())
     }
 
+    /// Hash of the event *skeleton*: kinds, ids and ticks in order — the
+    /// structural shape replay identity depends on. FNV-1a over the raw
+    /// words, hand-rolled so the value is stable across toolchains (the
+    /// std hasher makes no such promise). Persisted plan documents store
+    /// this next to the events; a mismatch on reload means the document
+    /// was edited or corrupted after it was hashed.
+    pub fn skeleton_hash(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |word: u64| {
+            for byte in word.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        for e in &self.events {
+            match *e {
+                TraceEvent::Alloc { id, tick, .. } => {
+                    mix(1);
+                    mix(id as u64);
+                    mix(tick);
+                }
+                TraceEvent::Free { id, tick } => {
+                    mix(2);
+                    mix(id as u64);
+                    mix(tick);
+                }
+            }
+        }
+        h
+    }
+
     // ----- JSON persistence ------------------------------------------------
 
-    pub fn to_json(&self) -> Json {
-        let events = self
-            .events
-            .iter()
-            .map(|e| match *e {
+    /// Errors if any id/size/tick exceeds `i64::MAX` — the JSON integer
+    /// domain is i64, and `size as i64` would wrap such a value negative
+    /// (silently corrupting the round-trip instead of failing here).
+    pub fn to_json(&self) -> anyhow::Result<Json> {
+        let int = |field: &str, v: u64| -> anyhow::Result<Json> {
+            let v = i64::try_from(v)
+                .map_err(|_| anyhow::anyhow!("{field} {v} exceeds the JSON integer range"))?;
+            Ok(Json::Int(v))
+        };
+        let mut events = Vec::with_capacity(self.events.len());
+        for e in &self.events {
+            events.push(match *e {
                 TraceEvent::Alloc { id, size, tick } => Json::Arr(vec![
                     Json::Str("a".into()),
-                    Json::Int(id as i64),
-                    Json::Int(size as i64),
-                    Json::Int(tick as i64),
+                    int("id", id as u64)?,
+                    int("size", size)?,
+                    int("tick", tick)?,
                 ]),
                 TraceEvent::Free { id, tick } => Json::Arr(vec![
                     Json::Str("f".into()),
-                    Json::Int(id as i64),
-                    Json::Int(tick as i64),
+                    int("id", id as u64)?,
+                    int("tick", tick)?,
                 ]),
-            })
-            .collect();
-        Json::from_pairs(vec![
+            });
+        }
+        Ok(Json::from_pairs(vec![
             ("model", Json::Str(self.model.clone())),
             ("phase", Json::Str(self.phase.clone())),
             ("batch", Json::Int(self.batch as i64)),
             ("events", Json::Arr(events)),
-        ])
+        ]))
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
-        let mut t = Trace::new(
-            j.get("model").as_str().unwrap_or(""),
-            j.get("phase").as_str().unwrap_or(""),
-            j.get("batch").as_u64().unwrap_or(0) as u32,
-        );
+        // All three header fields are required: a document missing them
+        // is damaged, and defaulting would mis-key the trace (anonymous
+        // model, batch 0) instead of surfacing the damage.
+        let model = j
+            .get("model")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing or non-string model"))?;
+        let phase = j
+            .get("phase")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("missing or non-string phase"))?;
+        let batch = j
+            .get("batch")
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("missing, negative or non-integer batch"))?;
+        let batch =
+            u32::try_from(batch).map_err(|_| anyhow::anyhow!("batch {batch} out of range"))?;
+        let mut t = Trace::new(model, phase, batch);
         let events = j
             .get("events")
             .as_arr()
@@ -211,8 +264,7 @@ impl Trace {
     }
 
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
-        std::fs::write(path, self.to_json().dump())?;
-        Ok(())
+        crate::util::fsio::write_atomic(path, &self.to_json()?.dump())
     }
 
     pub fn load(path: &std::path::Path) -> anyhow::Result<Trace> {
@@ -275,8 +327,57 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let t = simple_trace();
-        let back = Trace::from_json(&t.to_json()).unwrap();
+        let back = Trace::from_json(&t.to_json().unwrap()).unwrap();
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_or_corrupt_header() {
+        // Companion to dsa::problem's from_json_rejects_malformed: a
+        // header-less or type-confused document must error, not load as
+        // an anonymous batch-0 trace.
+        let malformed = [
+            r#"{"phase":"training","batch":32,"events":[]}"#, // no model
+            r#"{"model":"toy","batch":32,"events":[]}"#,      // no phase
+            r#"{"model":"toy","phase":"training","events":[]}"#, // no batch
+            r#"{"model":7,"phase":"training","batch":32,"events":[]}"#, // non-string model
+            r#"{"model":"toy","phase":[],"batch":32,"events":[]}"#, // non-string phase
+            r#"{"model":"toy","phase":"training","batch":"32","events":[]}"#, // non-int batch
+            r#"{"model":"toy","phase":"training","batch":-1,"events":[]}"#, // negative batch
+            r#"{"model":"toy","phase":"training","batch":4294967296,"events":[]}"#, // > u32
+        ];
+        for src in malformed {
+            let j = Json::parse(src).unwrap();
+            assert!(Trace::from_json(&j).is_err(), "accepted: {src}");
+        }
+    }
+
+    #[test]
+    fn to_json_rejects_sizes_beyond_json_int_range() {
+        let mut t = Trace::new("toy", "training", 1);
+        t.events = vec![TraceEvent::Alloc {
+            id: 0,
+            size: u64::MAX,
+            tick: 1,
+        }];
+        assert!(t.to_json().is_err(), "size above i64::MAX must not wrap");
+    }
+
+    #[test]
+    fn skeleton_hash_tracks_structure_not_sizes() {
+        let t = simple_trace();
+        let h = t.skeleton_hash();
+        assert_eq!(h, simple_trace().skeleton_hash(), "deterministic");
+
+        let mut resized = simple_trace();
+        if let TraceEvent::Alloc { size, .. } = &mut resized.events[0] {
+            *size *= 2;
+        }
+        assert_eq!(resized.skeleton_hash(), h, "sizes are not structural");
+
+        let mut reshaped = simple_trace();
+        reshaped.events.pop();
+        assert_ne!(reshaped.skeleton_hash(), h, "event shape is structural");
     }
 
     #[test]

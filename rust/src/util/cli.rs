@@ -262,6 +262,13 @@ impl Args {
         Ok(out)
     }
 
+    /// Read an option as a filesystem path (e.g. `--plan-store
+    /// /var/lib/pgmo/plans`). No validation beyond presence — callers
+    /// decide whether the path must exist or gets created.
+    pub fn get_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).map(std::path::PathBuf::from)
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -370,6 +377,17 @@ mod tests {
             bad.get_switch_or("shared-registry", true),
             Err(CliError::BadValue { .. })
         ));
+    }
+
+    #[test]
+    fn path_options() {
+        let c = Command::new("t", "t").opt("plan-store", "store root");
+        let a = c.parse(&argv(&["--plan-store", "/tmp/plans"])).unwrap();
+        assert_eq!(
+            a.get_path("plan-store"),
+            Some(std::path::PathBuf::from("/tmp/plans"))
+        );
+        assert_eq!(a.get_path("missing"), None);
     }
 
     #[test]

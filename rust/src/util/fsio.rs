@@ -1,0 +1,59 @@
+//! Crash-safe file writes.
+//!
+//! Everything the crate persists (traces, plan-store documents) goes
+//! through [`write_atomic`]: write the bytes to a temporary sibling,
+//! then `rename` over the destination. On POSIX the rename is atomic
+//! within a filesystem, so readers observe either the old document or
+//! the new one — never a truncated half-write after a crash.
+
+use std::path::{Path, PathBuf};
+
+/// Write `contents` to `path` via a temp file + rename in the same
+/// directory (same filesystem, so the rename cannot degrade to a copy).
+/// The temp name embeds the process id so concurrent writers of the
+/// same destination cannot clobber each other's in-flight temp file;
+/// last rename wins, which is fine for idempotent documents.
+pub fn write_atomic(path: &Path, contents: &str) -> anyhow::Result<()> {
+    let tmp = temp_sibling(path);
+    std::fs::write(&tmp, contents)?;
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // Don't leave the orphan temp file behind on failure.
+            let _ = std::fs::remove_file(&tmp);
+            Err(e.into())
+        }
+    }
+}
+
+fn temp_sibling(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "out".to_string());
+    let pid = std::process::id();
+    path.with_file_name(format!(".{name}.{pid}.tmp"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_replaces_and_cleans_up() {
+        let dir = std::env::temp_dir().join("pgmo_fsio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("doc.json");
+        write_atomic(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        write_atomic(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        // No temp droppings left in the directory.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files not cleaned up");
+    }
+}

@@ -2,6 +2,7 @@
 //! crate closure, so serde / clap / rand / criterion equivalents live here).
 
 pub mod cli;
+pub mod fsio;
 pub mod humansize;
 pub mod json;
 pub mod log;

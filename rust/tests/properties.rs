@@ -1282,3 +1282,224 @@ fn shared_registry_stress_budget_respects_pins() {
 fn shared_registry_stress_budget_respects_pins_heavy() {
     run_shared_registry_budget_stress(12, 300);
 }
+
+// ---- persistent plan store: warm restart & adversarial corruption ------
+//
+// The disk tier must (a) round-trip the *full* plan document for every
+// block-choice policy, (b) let a restarted registry serve the first
+// batch per stored key by replay — zero cold builds — and (c) never
+// trust a damaged document over the invariants: truncation, version
+// skew, and a stale skeleton hash each invalidate the entry and fall
+// back to the existing cold path.
+
+use pgmo::plan::registry::PlanKey;
+use pgmo::plan::{PlanSnapshot, PlanStore, StoredPlan};
+use pgmo::profiler::MemoryProfiler;
+use pgmo::util::json::Json;
+
+const STORE_BUCKETS: [u32; 4] = [1, 2, 4, 8];
+
+/// Fresh store root under the system temp dir (wiped per test).
+fn plan_store_root(name: &str) -> PathBuf {
+    let root = std::env::temp_dir().join("pgmo_plan_store_props").join(name);
+    let _ = std::fs::remove_dir_all(&root);
+    root
+}
+
+/// One serving iteration of bucket-proportional traffic (the same shape
+/// as the shared-registry stress helper); returns whether every buffer
+/// came out of the solved arena (O(1) replay) rather than the heap.
+fn plan_store_iteration(p: &mut StagingPlanner, bucket: u32) -> bool {
+    p.begin_iteration();
+    let a = p.alloc(bucket as usize * 256);
+    let b = p.alloc(bucket as usize * 128);
+    let mut replayed = a.is_replayed() && b.is_replayed();
+    p.free(b);
+    let c = p.alloc(bucket as usize * 64);
+    replayed &= c.is_replayed();
+    p.free(a);
+    p.free(c);
+    p.end_iteration();
+    replayed
+}
+
+/// Populate a store by serving two iterations per ladder bucket through
+/// a single-owner registry (profile, solve, replay) and persisting each
+/// solved plan.
+fn populate_plan_store(root: &std::path::Path) {
+    let mut reg = StagingRegistry::new("mlp", "serving", RegistryConfig::new(&STORE_BUCKETS));
+    reg.set_store(PlanStore::open(root).unwrap());
+    for &bucket in &STORE_BUCKETS {
+        // Iteration 0 profiles (first bucket) or replays a seeded plan
+        // (later buckets — cross-bucket seeding is exact on this ladder);
+        // either way iteration 1 replays a solved plan worth persisting.
+        plan_store_iteration(reg.planner(bucket), bucket);
+        assert!(plan_store_iteration(reg.planner(bucket), bucket), "iter 1 replays");
+        assert!(reg.persist(bucket), "solved plan must persist");
+    }
+    assert_eq!(reg.stats().store_writes, STORE_BUCKETS.len() as u64);
+}
+
+#[test]
+fn plan_store_document_roundtrips_for_all_policies() {
+    // The full document — profiled trace, solved offsets/peak, key,
+    // policy, donor lineage — survives to_json → dump → parse →
+    // from_json bit-for-bit, under every block-choice policy and both
+    // lineage variants.
+    for (i, policy) in BlockChoice::ALL.into_iter().enumerate() {
+        let mut prof = MemoryProfiler::new("mlp", "serving-b8", 8);
+        let a = prof.on_alloc(2048);
+        let b = prof.on_alloc(1024);
+        prof.on_free(b);
+        let c = prof.on_alloc(512 + 64 * i as u64);
+        prof.on_free(a);
+        prof.on_free(c);
+        let trace = prof.finish();
+        let inst = trace.to_dsa_instance();
+        let sol = bestfit::solve_with(&inst, Policy { block_choice: policy });
+        let doc = StoredPlan {
+            key: PlanKey::new("mlp", "serving", 8),
+            policy,
+            donor_bucket: if i % 2 == 0 { Some(4) } else { None },
+            snapshot: PlanSnapshot {
+                trace,
+                offsets: sol.offsets,
+                peak: sol.peak,
+            },
+        };
+        let text = doc.to_json().unwrap().dump();
+        let back = StoredPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, doc, "policy {}", policy.name());
+    }
+}
+
+#[test]
+fn plan_store_warm_restart_replays_first_batch() {
+    let root = plan_store_root("warm_restart");
+    populate_plan_store(&root);
+
+    // Restart: a fresh registry against the populated store serves the
+    // very first batch of every stored key by replay — no profiling
+    // iteration, no solve.
+    let mut reg = StagingRegistry::new("mlp", "serving", RegistryConfig::new(&STORE_BUCKETS));
+    reg.set_store(PlanStore::open(&root).unwrap());
+    assert_eq!(reg.warm_from_store(), STORE_BUCKETS.len());
+    for &bucket in &STORE_BUCKETS {
+        let p = reg.planner(bucket);
+        assert!(plan_store_iteration(p, bucket), "bucket {bucket}: iter 0 must replay");
+        assert_eq!(p.solves(), 0, "bucket {bucket}: warm load must not solve");
+    }
+    let st = reg.stats();
+    assert_eq!(st.store_hits, STORE_BUCKETS.len() as u64, "{st:?}");
+    assert_eq!(st.misses, 0, "no cold builds after warm restart: {st:?}");
+    assert_eq!(st.store_invalidated, 0, "{st:?}");
+}
+
+#[test]
+fn plan_store_warm_restart_shared_registry() {
+    let root = plan_store_root("warm_restart_shared");
+    // Populate through the shared tier: serve two iterations per bucket,
+    // persisting at checkin like the serve worker does.
+    {
+        let mut reg =
+            SharedStagingRegistry::new("mlp", "serving", RegistryConfig::new(&STORE_BUCKETS));
+        reg.set_store(PlanStore::open(&root).unwrap());
+        for &bucket in &STORE_BUCKETS {
+            let slot = reg.checkout(bucket);
+            // Iteration 0 profiles or replays a seeded plan; iteration 1
+            // always replays the solved plan.
+            plan_store_iteration(&mut slot.plan(), bucket);
+            assert!(plan_store_iteration(&mut slot.plan(), bucket));
+            slot.sync_bytes();
+            assert!(reg.persist(&slot), "solved plan must persist");
+        }
+        assert_eq!(reg.stats().store_writes, STORE_BUCKETS.len() as u64);
+        // Seeding may have skipped some store loads; only the write side
+        // matters for the restart below.
+    }
+
+    let mut reg = SharedStagingRegistry::new("mlp", "serving", RegistryConfig::new(&STORE_BUCKETS));
+    reg.set_store(PlanStore::open(&root).unwrap());
+    assert_eq!(reg.warm_from_store(), STORE_BUCKETS.len());
+    for &bucket in &STORE_BUCKETS {
+        let slot = reg.checkout(bucket);
+        let mut p = slot.plan();
+        assert!(plan_store_iteration(&mut p, bucket), "bucket {bucket}: iter 0 must replay");
+        assert_eq!(p.solves(), 0, "bucket {bucket}: warm load must not solve");
+        drop(p);
+        slot.sync_bytes();
+    }
+    let st = reg.stats();
+    assert_eq!(st.store_hits, STORE_BUCKETS.len() as u64, "{st:?}");
+    assert_eq!(st.misses, 0, "no cold builds after warm restart: {st:?}");
+    assert_eq!(st.seeded_builds, 0, "nothing to seed — everything warm: {st:?}");
+}
+
+/// Corrupt the single stored document via `damage`, then assert a
+/// restarted registry invalidates it (counted, file discarded) and
+/// rebuilds the bucket cold: iteration 0 profiles, iteration 1 replays.
+fn check_plan_store_corruption_falls_back_cold(
+    name: &str,
+    damage: impl FnOnce(&std::path::Path),
+) {
+    const BUCKET: u32 = 4;
+    let root = plan_store_root(name);
+    let ladder = [BUCKET];
+    let mut reg = StagingRegistry::new("mlp", "serving", RegistryConfig::new(&ladder));
+    let store = PlanStore::open(&root).unwrap();
+    reg.set_store(store.clone());
+    assert!(!plan_store_iteration(reg.planner(BUCKET), BUCKET));
+    assert!(plan_store_iteration(reg.planner(BUCKET), BUCKET));
+    assert!(reg.persist(BUCKET));
+    let files = store.enumerate();
+    assert_eq!(files.len(), 1);
+    damage(&files[0]);
+
+    let mut reg = StagingRegistry::new("mlp", "serving", RegistryConfig::new(&ladder));
+    reg.set_store(store.clone());
+    assert_eq!(reg.warm_from_store(), 0, "damaged document must not install");
+    let st = reg.stats();
+    assert_eq!(st.store_invalidated, 1, "{st:?}");
+    assert!(store.enumerate().is_empty(), "damaged document must be discarded");
+
+    // Cold fallback: the bucket rebuilds exactly like a store-less miss.
+    assert!(
+        !plan_store_iteration(reg.planner(BUCKET), BUCKET),
+        "iter 0 must re-profile cold"
+    );
+    assert!(plan_store_iteration(reg.planner(BUCKET), BUCKET), "iter 1 replays again");
+    let st = reg.stats();
+    assert_eq!(st.store_misses, 1, "the cold build found no document: {st:?}");
+    assert_eq!(st.store_hits, 0, "{st:?}");
+}
+
+/// Re-serialize the document with one field swapped (test-only damage;
+/// production writes always go through `write_atomic`).
+fn tamper_field(path: &std::path::Path, field: &str, value: Json) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    j.set(field, value);
+    std::fs::write(path, j.dump()).unwrap();
+}
+
+#[test]
+fn plan_store_truncated_document_falls_back_cold() {
+    check_plan_store_corruption_falls_back_cold("truncated", |path| {
+        let text = std::fs::read_to_string(path).unwrap();
+        std::fs::write(path, &text[..text.len() / 2]).unwrap();
+    });
+}
+
+#[test]
+fn plan_store_version_skew_falls_back_cold() {
+    check_plan_store_corruption_falls_back_cold("version_skew", |path| {
+        tamper_field(path, "version", Json::Int(pgmo::plan::STORE_FORMAT_VERSION + 1));
+    });
+}
+
+#[test]
+fn plan_store_stale_skeleton_hash_falls_back_cold() {
+    check_plan_store_corruption_falls_back_cold("stale_skeleton", |path| {
+        tamper_field(path, "skeleton", Json::Str("00000000deadbeef".into()));
+    });
+}
