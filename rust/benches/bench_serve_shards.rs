@@ -249,6 +249,7 @@ fn main() {
                         .send(Request {
                             x,
                             created: Instant::now(),
+                            deadline: None,
                             reply: rtx,
                         })
                         .is_err()

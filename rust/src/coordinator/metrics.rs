@@ -68,6 +68,19 @@ pub struct ShardMetrics {
     pub steals: u64,
     /// Requests this shard took from other shards' queue lanes.
     pub stolen_requests: u64,
+    /// Times this shard's worker was respawned after a panic or fatal
+    /// execution error (bounded by `ServeConfig::restart_budget`).
+    pub restarts: u64,
+    /// Batch execution retries after transient backend errors (bounded
+    /// per batch by `ServeConfig::max_retries`).
+    pub retries: u64,
+    /// Requests shed with an explicit
+    /// [`Response::Expired`](crate::coordinator::serve::Response::Expired)
+    /// because their deadline passed before execution.
+    pub expired: u64,
+    /// Plan quarantines this shard tripped (repeated failures on one
+    /// bucket's plan crossed the threshold).
+    pub quarantined: u64,
 }
 
 impl ShardMetrics {
@@ -96,6 +109,10 @@ pub struct ServeMetrics {
     pub resident_bytes: u64,
     /// Plans resident across all registries at shutdown.
     pub resident_plans: usize,
+    /// Shards whose worker exhausted its restart budget and stayed dead
+    /// to the end of the session (their backlog was rescued by the
+    /// survivors or shed as expired).
+    pub failed_shards: usize,
 }
 
 impl ServeMetrics {
@@ -168,6 +185,13 @@ impl ServeMetrics {
                 out.push_str(&format!(
                     ", stole {} reqs in {} steals",
                     s.stolen_requests, s.steals,
+                ));
+            }
+            // Fault-tolerance activity shows only on shards that saw it.
+            if s.restarts + s.retries + s.expired + s.quarantined > 0 {
+                out.push_str(&format!(
+                    ", faults: {} restarts / {} retries / {} expired / {} quarantined",
+                    s.restarts, s.retries, s.expired, s.quarantined,
                 ));
             }
         }
@@ -268,6 +292,32 @@ impl ServeMetrics {
             out.push_str(&format!(
                 "\n  store: {} warm loads / {} misses / {} invalidated, {} write-behinds",
                 plans.store_hits, plans.store_misses, plans.store_invalidated, plans.store_writes,
+            ));
+        }
+        let restarts: u64 = self.shards.iter().map(|s| s.restarts).sum();
+        let retries: u64 = self.shards.iter().map(|s| s.retries).sum();
+        let expired: u64 = self.shards.iter().map(|s| s.expired).sum();
+        let fault_activity = restarts
+            + retries
+            + expired
+            + self.failed_shards as u64
+            + plans.quarantined
+            + plans.repack_failed
+            + plans.store_write_errors;
+        if fault_activity > 0 {
+            // The fault-tolerance tier: worker respawns, bounded batch
+            // retries, deadline-shed requests, quarantined plans, and
+            // the failures the session absorbed without losing replies.
+            out.push_str(&format!(
+                "\n  faults: {} restarts / {} retries / {} expired / {} quarantined, \
+                 {} repack failures, {} store write errors, {} dead shards",
+                restarts,
+                retries,
+                expired,
+                plans.quarantined,
+                plans.repack_failed,
+                plans.store_write_errors,
+                self.failed_shards,
             ));
         }
         out
@@ -488,6 +538,73 @@ mod tests {
             report.contains("store: 3 warm loads / 1 misses / 2 invalidated, 4 write-behinds"),
             "{report}"
         );
+    }
+
+    #[test]
+    fn faults_line_reports_fault_counters() {
+        let mut m = ServeMetrics {
+            requests: 16,
+            batches: 4,
+            wall: Duration::from_secs(1),
+            shards: vec![
+                ShardMetrics {
+                    shard: 0,
+                    requests: 10,
+                    batches: 3,
+                    restarts: 1,
+                    retries: 2,
+                    expired: 3,
+                    quarantined: 1,
+                    ..Default::default()
+                },
+                ShardMetrics {
+                    shard: 1,
+                    requests: 6,
+                    batches: 1,
+                    ..Default::default()
+                },
+            ],
+            failed_shards: 1,
+            ..Default::default()
+        };
+        m.registries.push(RegistryStats {
+            quarantined: 1,
+            repack_failed: 2,
+            store_write_errors: 3,
+            ..RegistryStats::default()
+        });
+        let report = m.report();
+        assert!(
+            report.contains(
+                "faults: 1 restarts / 2 retries / 3 expired / 1 quarantined, \
+                 2 repack failures, 3 store write errors, 1 dead shards"
+            ),
+            "{report}"
+        );
+        // The per-shard suffix shows only on the shard that saw faults.
+        assert!(
+            report.contains("faults: 1 restarts / 2 retries / 3 expired / 1 quarantined\n"),
+            "{report}"
+        );
+        assert_eq!(report.matches(", faults:").count(), 1, "{report}");
+    }
+
+    #[test]
+    fn faults_line_stays_out_of_a_clean_report() {
+        let mut m = ServeMetrics {
+            requests: 4,
+            batches: 1,
+            wall: Duration::from_secs(1),
+            shards: vec![ShardMetrics {
+                shard: 0,
+                requests: 4,
+                batches: 1,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        m.registries.push(RegistryStats::default());
+        assert!(!m.report().contains("faults:"), "{}", m.report());
     }
 
     #[test]

@@ -165,6 +165,29 @@ impl<T> StealQueue<T> {
         }
     }
 
+    /// Bring a dead lane back (a supervised worker respawned on its
+    /// shard): pushes route to it again. Anything the survivors already
+    /// stole stays stolen — revival only reopens the lane, it does not
+    /// claw work back. No-op on a closed queue (a revived worker would
+    /// drain and exit immediately anyway).
+    pub fn revive(&self, lane: usize) {
+        self.lanes[lane].alive.store(true, Ordering::Release);
+    }
+
+    /// Drain everything still queued on `lane`, bypassing liveness.
+    /// This is the post-shutdown rescue path: after [`close`](Self::close)
+    /// and every worker's exit, requests may remain on lanes that died
+    /// with no survivor left to steal them — the collector drains each
+    /// lane and answers those requests explicitly instead of stranding
+    /// their senders.
+    pub fn drain_lane(&self, lane: usize) -> Vec<T> {
+        let mut q = self.lanes[lane]
+            .deque
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        q.drain(..).collect()
+    }
+
     /// Close the queue: pushes fail, and workers return empty batches
     /// once every lane they can reach is drained.
     pub fn close(&self) {
@@ -402,6 +425,32 @@ mod tests {
             rescued.extend(q.next_batch(1, 8, WIN));
         }
         assert_eq!(rescued, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn revived_lane_accepts_pushes_again() {
+        let q: StealQueue<u32> = StealQueue::new(2);
+        q.mark_dead(0);
+        assert_eq!(q.push(0, 1), Err(1));
+        q.revive(0);
+        assert!(q.alive(0));
+        q.push(0, 2).unwrap();
+        assert_eq!(q.next_batch(0, 8, WIN), vec![2]);
+    }
+
+    #[test]
+    fn drain_lane_rescues_dead_backlog_after_close() {
+        let q: StealQueue<u32> = StealQueue::pinned(2);
+        for i in 0..3 {
+            q.push(1, i).unwrap();
+        }
+        q.mark_dead(1);
+        q.close();
+        // Pinned queue: no survivor will steal lane 1's backlog.
+        assert!(q.next_batch(0, 8, WIN).is_empty());
+        assert_eq!(q.drain_lane(0), Vec::<u32>::new());
+        assert_eq!(q.drain_lane(1), vec![0, 1, 2]);
+        assert_eq!(q.drain_lane(1), Vec::<u32>::new(), "drained once");
     }
 
     #[test]

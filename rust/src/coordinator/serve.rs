@@ -31,6 +31,18 @@
 //! 3b/3d) multiplied across workers, minus the padding waste the
 //! single-plan server paid on every small batch and minus the duplicate
 //! per-shard profiling the private registries paid on every bucket.
+//!
+//! The stack is **fault-tolerant**: each worker runs under a supervisor
+//! that catches panics and fatal execution errors, rescues the batch
+//! that was in flight, and respawns the worker against the same shared
+//! registry up to a restart budget — after which the lane is abandoned
+//! and survivors steal its backlog. Transient execution failures retry
+//! with bounded exponential backoff; requests may carry a deadline and
+//! are shed with an explicit [`Response::Expired`] once it passes; a
+//! plan that keeps failing is quarantined for a cooldown (its traffic
+//! degrades to the largest bucket) so one poisoned key cannot take the
+//! ladder down. Every accepted request gets exactly one reply, even
+//! when workers die mid-batch.
 
 use super::metrics::{BucketMetrics, ServeMetrics, ShardMetrics};
 use super::queue::StealQueue;
@@ -39,12 +51,14 @@ use crate::alloc::AllocStats;
 use crate::plan::registry::RegistryConfig;
 use crate::runtime::buffers::{literal_f32, to_f32};
 use crate::runtime::Runtime;
+use crate::testkit::FaultPlan;
 use crate::util::rng::Pcg32;
 use crate::util::stats::Summary;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -52,13 +66,46 @@ use std::time::{Duration, Instant};
 pub struct Request {
     pub x: Vec<f32>,
     pub created: Instant,
+    /// Drop-dead time: a request still queued (or about to be retried)
+    /// past this instant is shed with [`Response::Expired`] instead of
+    /// executed. `None` = wait forever.
+    pub deadline: Option<Instant>,
     pub reply: mpsc::Sender<Response>,
 }
 
+/// Exactly one `Response` is sent per accepted [`Request`] — either the
+/// served logits or an explicit shed. A caller never has to infer the
+/// fate of its request from a dropped channel.
 #[derive(Debug, Clone)]
-pub struct Response {
-    pub logits: Vec<f32>,
-    pub latency: Duration,
+pub enum Response {
+    /// The request was served.
+    Ok { logits: Vec<f32>, latency: Duration },
+    /// The request was shed without being served: its deadline passed
+    /// while queued, or the serving session ran out of capacity to
+    /// execute it (every worker dead, or shutdown caught it in-queue).
+    Expired { waited: Duration },
+}
+
+impl Response {
+    /// The served logits; `None` for a shed request.
+    pub fn logits(&self) -> Option<&[f32]> {
+        match self {
+            Response::Ok { logits, .. } => Some(logits),
+            Response::Expired { .. } => None,
+        }
+    }
+
+    /// The served logits by value; `None` for a shed request.
+    pub fn into_logits(self) -> Option<Vec<f32>> {
+        match self {
+            Response::Ok { logits, .. } => Some(logits),
+            Response::Expired { .. } => None,
+        }
+    }
+
+    pub fn is_expired(&self) -> bool {
+        matches!(self, Response::Expired { .. })
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -103,6 +150,23 @@ pub struct ServeConfig {
     /// malformed trace, colliding offsets) are discarded and rebuilt
     /// cold. `None` = no persistence.
     pub plan_store: Option<PathBuf>,
+    /// Bounded retries per batch after a transient execution failure:
+    /// the batch is re-executed up to this many extra times with
+    /// exponential backoff before the failure is treated as fatal for
+    /// the worker (the supervisor then rescues the batch and respawns
+    /// the worker). 0 = fail fast.
+    pub max_retries: u32,
+    /// First retry backoff; attempt `k` sleeps `retry_base * 2^(k-1)`.
+    pub retry_base: Duration,
+    /// How many times a dead shard worker (panic or fatal execution
+    /// error) is respawned before its lane is abandoned to the
+    /// survivors. 0 = never respawn.
+    pub restart_budget: u32,
+    /// Deterministic fault schedule for chaos testing (see
+    /// [`FaultPlan`]): injects worker panics, transient backend errors,
+    /// slow solves, and corrupted store writes at seeded points. `None`
+    /// (the default, and the only production setting) injects nothing.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
@@ -119,6 +183,10 @@ impl Default for ServeConfig {
             repack_interval: 16,
             shared_registry: true,
             plan_store: None,
+            max_retries: 2,
+            retry_base: Duration::from_millis(1),
+            restart_budget: 2,
+            faults: None,
         }
     }
 }
@@ -243,6 +311,12 @@ impl InferenceServer {
                 r.set_store(store.clone());
                 r.warm_from_store();
             }
+            // Chaos wiring (no-op in production): the fault schedule
+            // must be armed after the store attaches so injected store
+            // writes are covered too.
+            if let Some(f) = &self.cfg.faults {
+                r.set_faults(Arc::clone(f));
+            }
             Arc::new(r)
         };
         let registries: Vec<Arc<SharedStagingRegistry>> = if self.cfg.shared_registry {
@@ -253,64 +327,104 @@ impl InferenceServer {
         };
 
         let queue: StealQueue<Request> = StealQueue::new(n);
-        let outcomes: Vec<Result<ShardOutcome>> = thread::scope(|scope| {
-            let queue = &queue;
-            let mut handles = Vec::with_capacity(n);
-            for (shard, registry) in registries.iter().cloned().enumerate() {
-                let dir = self.dir.as_path();
-                let params = &self.params;
-                let param_dims = &self.param_dims;
-                let (input_dim, classes) = (self.input_dim, self.classes);
-                let cfg = self.cfg.clone();
-                handles.push(scope.spawn(move || {
-                    // The PJRT runtime must be created *inside* the worker
-                    // thread: PJRT handles are not `Send`. Parameters are
-                    // shared read-only — no per-shard copy.
-                    let out = ShardWorker::new(
-                        shard, dir, params, param_dims, input_dim, classes, registry, cfg,
-                    )
-                    .and_then(|worker| worker.run(queue));
-                    // Dead on any exit (startup error, serving error, or
-                    // queue close): the dispatcher drops this lane from
-                    // its rotation and survivors steal the backlog.
-                    queue.mark_dead(shard);
-                    out
-                }));
-            }
-
-            // Round-robin fan-out over the *live* lanes on the caller's
-            // thread. A dead shard hands the request back through the
-            // push error; try the next lane.
-            let mut next = 0usize;
-            for req in rx.iter() {
-                let mut undelivered = Some(req);
-                for attempt in 0..n {
-                    let lane = (next + attempt) % n;
-                    if !queue.alive(lane) {
-                        continue;
-                    }
-                    match queue.push(lane, undelivered.take().expect("requeued")) {
-                        Ok(()) => break,
-                        Err(back) => undelivered = Some(back),
-                    }
+        let (outcomes, dispatch_shed): (Vec<ShardOutcome>, Vec<u64>) =
+            thread::scope(|scope| {
+                let queue = &queue;
+                let mut handles = Vec::with_capacity(n);
+                for (shard, registry) in registries.iter().cloned().enumerate() {
+                    let dir = self.dir.as_path();
+                    let params = &self.params;
+                    let param_dims = &self.param_dims;
+                    let (input_dim, classes) = (self.input_dim, self.classes);
+                    let cfg = self.cfg.clone();
+                    handles.push(scope.spawn(move || {
+                        // The supervisor respawns a crashed worker (up to
+                        // the restart budget) and rescues its in-flight
+                        // batch; panics never cross the thread boundary.
+                        let out = supervise_shard(
+                            shard, dir, params, param_dims, input_dim, classes, registry, cfg,
+                            queue,
+                        );
+                        // Dead on any exit (budget exhausted or queue
+                        // close): the dispatcher drops this lane from its
+                        // rotation and survivors steal the backlog.
+                        queue.mark_dead(shard);
+                        out
+                    }));
                 }
-                next = (next + 1) % n;
-                if undelivered.is_some() {
-                    break; // every shard has exited; surface errors below
-                }
-            }
-            queue.close(); // drain-and-exit signal for the workers
 
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard worker panicked"))
-                .collect()
-        });
+                // Round-robin fan-out over the *live* lanes on the
+                // caller's thread. A dead shard hands the request back
+                // through the push error; try the next lane.
+                let mut next = 0usize;
+                let mut shed = vec![0u64; n];
+                for req in rx.iter() {
+                    let mut undelivered = Some(req);
+                    for attempt in 0..n {
+                        let lane = (next + attempt) % n;
+                        if !queue.alive(lane) {
+                            continue;
+                        }
+                        match queue.push(lane, undelivered.take().expect("requeued")) {
+                            Ok(()) => break,
+                            Err(back) => undelivered = Some(back),
+                        }
+                    }
+                    if let Some(req) = undelivered {
+                        // Every lane is dead: shed explicitly — a
+                        // dropped reply channel would leave the caller
+                        // guessing — and keep shedding until the stream
+                        // closes.
+                        shed[next] += 1;
+                        let _ = req.reply.send(Response::Expired {
+                            waited: req.created.elapsed(),
+                        });
+                    }
+                    next = (next + 1) % n;
+                }
+                queue.close(); // drain-and-exit signal for the workers
+
+                let outcomes = handles
+                    .into_iter()
+                    .enumerate()
+                    .map(|(shard, h)| {
+                        // A supervisor thread cannot panic in normal
+                        // operation (worker panics are caught inside);
+                        // if it somehow does, synthesize a failed
+                        // outcome instead of tearing the session down.
+                        h.join().unwrap_or_else(|p| {
+                            ShardOutcome::crashed(shard, panic_message(&p))
+                        })
+                    })
+                    .collect();
+                (outcomes, shed)
+            });
+
+        // Final sweep: requests still sitting in a lane after every
+        // worker exited (all workers died mid-stream, or a close raced a
+        // steal) get an explicit shed reply — no caller is left blocked.
+        let mut lane_swept = vec![0u64; n];
+        for (lane, swept) in lane_swept.iter_mut().enumerate() {
+            for req in queue.drain_lane(lane) {
+                *swept += 1;
+                let _ = req.reply.send(Response::Expired {
+                    waited: req.created.elapsed(),
+                });
+            }
+        }
 
         let mut metrics = ServeMetrics::default();
         self.shard_stats.clear();
-        for outcome in outcomes {
-            let o = outcome?;
+        let mut first_failure: Option<String> = None;
+        for o in outcomes {
+            if let Some(err) = o.failed {
+                eprintln!(
+                    "pgmo: shard {} worker failed permanently after {} restarts: {err}",
+                    o.metrics.shard, o.metrics.restarts
+                );
+                metrics.failed_shards += 1;
+                first_failure.get_or_insert(err);
+            }
             metrics.requests += o.metrics.requests;
             metrics.batches += o.metrics.batches;
             metrics.latency_ms.merge(&o.latency_ms);
@@ -318,10 +432,20 @@ impl InferenceServer {
             self.shard_stats.push(o.metrics.staging);
             metrics.shards.push(o.metrics);
         }
+        // A session where every shard failed and nothing was served is an
+        // error, not a report full of zeros (e.g. no artifact matches the
+        // ladder). Partial failure reports survivors' metrics instead.
+        if metrics.failed_shards == n && metrics.requests == 0 {
+            anyhow::bail!(
+                "all {n} shard workers failed: {}",
+                first_failure.unwrap_or_default()
+            );
+        }
         metrics.shards.sort_by_key(|s| s.shard);
         for s in &mut metrics.shards {
             s.steals = queue.steals(s.shard);
             s.stolen_requests = queue.stolen_items(s.shard);
+            s.expired += dispatch_shed[s.shard] + lane_swept[s.shard];
         }
         // Registry rollup: one entry shared, N entries per-shard. The
         // shared Arcs all point at the same registry — count it once.
@@ -347,11 +471,193 @@ impl InferenceServer {
     }
 }
 
-/// What one shard worker hands back when its queue closes.
+/// What one shard supervisor hands back when its lane retires.
 struct ShardOutcome {
     metrics: ShardMetrics,
     latency_ms: Summary,
     batch_sizes: Summary,
+    /// The final error of a worker that exhausted its restart budget
+    /// (`None` = clean exit at queue close).
+    failed: Option<String>,
+}
+
+impl ShardOutcome {
+    fn crashed(shard: usize, err: String) -> ShardOutcome {
+        ShardOutcome {
+            metrics: ShardMetrics {
+                shard,
+                ..ShardMetrics::default()
+            },
+            latency_ms: Summary::new(),
+            batch_sizes: Summary::new(),
+            failed: Some(err),
+        }
+    }
+}
+
+/// Render a caught panic payload (`&str` and `String` payloads cover
+/// `panic!`; anything else gets a generic label).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Lock a mutex whether or not a previous holder panicked: the guarded
+/// data here (a parked request batch) stays meaningful across a poison —
+/// rescuing it is the entire point.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-shard counters owned by the *supervisor*, not the worker, so a
+/// worker death cannot lose the history of already-completed batches.
+struct ShardAccum {
+    requests: u64,
+    batches: u64,
+    retries: u64,
+    expired: u64,
+    quarantined: u64,
+    latency_ms: Summary,
+    batch_sizes: Summary,
+    per_bucket: BTreeMap<u32, BucketMetrics>,
+}
+
+impl ShardAccum {
+    fn new() -> ShardAccum {
+        ShardAccum {
+            requests: 0,
+            batches: 0,
+            retries: 0,
+            expired: 0,
+            quarantined: 0,
+            latency_ms: Summary::new(),
+            batch_sizes: Summary::new(),
+            per_bucket: BTreeMap::new(),
+        }
+    }
+}
+
+/// Run one shard's worker under supervision: a panic (or fatal
+/// execution error) is caught, the batch that was in flight is rescued
+/// back onto the queue, and a replacement worker is spawned against the
+/// same registry — up to `restart_budget` times, after which the lane
+/// is abandoned to the survivors and whatever could not be requeued is
+/// shed with an explicit [`Response::Expired`].
+#[allow(clippy::too_many_arguments)]
+fn supervise_shard(
+    shard: usize,
+    dir: &Path,
+    params: &[Vec<f32>],
+    param_dims: &[Vec<usize>],
+    input_dim: usize,
+    classes: usize,
+    registry: Arc<SharedStagingRegistry>,
+    cfg: ServeConfig,
+    queue: &StealQueue<Request>,
+) -> ShardOutcome {
+    let n_lanes = cfg.shards.max(1);
+    let mut acc = ShardAccum::new();
+    let mut restarts = 0u64;
+    let mut failed: Option<String> = None;
+    loop {
+        // The worker parks each dequeued batch here while it owns it;
+        // on a crash the supervisor rescues the contents (poison is
+        // expected — see `relock`).
+        let inflight: Mutex<Vec<Request>> = Mutex::new(Vec::new());
+        // The accumulators stay valid across an unwind: every counter
+        // is committed only after its batch completed.
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            // The PJRT runtime must be created *inside* the worker
+            // thread: PJRT handles are not `Send`. Parameters are
+            // shared read-only — no per-shard copy.
+            let worker = ShardWorker::new(
+                shard,
+                dir,
+                params,
+                param_dims,
+                input_dim,
+                classes,
+                Arc::clone(&registry),
+                cfg.clone(),
+            )?;
+            worker.run(queue, &inflight, &mut acc)
+        }));
+        let err = match attempt {
+            Ok(Ok(())) => break, // queue closed and drained — clean exit
+            Ok(Err(e)) => format!("{e:#}"),
+            Err(p) => panic_message(p.as_ref()),
+        };
+        let stranded = std::mem::take(&mut *relock(&inflight));
+        if restarts < cfg.restart_budget as u64 {
+            restarts += 1;
+            eprintln!(
+                "pgmo: shard {shard} worker died ({err}); respawning ({restarts}/{})",
+                cfg.restart_budget
+            );
+            // Requeue the rescued batch at our own revived lane; a close
+            // that raced the crash sheds it explicitly instead.
+            queue.revive(shard);
+            for req in stranded {
+                if let Err(req) = queue.push(shard, req) {
+                    acc.expired += 1;
+                    let _ = req.reply.send(Response::Expired {
+                        waited: req.created.elapsed(),
+                    });
+                }
+            }
+            continue;
+        }
+        // Budget exhausted: the lane stays dead. Hand the rescued batch
+        // to the survivors; shed what no live lane will take.
+        for req in stranded {
+            let mut undelivered = Some(req);
+            for lane in 0..n_lanes {
+                if lane == shard || !queue.alive(lane) {
+                    continue;
+                }
+                match queue.push(lane, undelivered.take().expect("requeued")) {
+                    Ok(()) => break,
+                    Err(back) => undelivered = Some(back),
+                }
+            }
+            if let Some(req) = undelivered {
+                acc.expired += 1;
+                let _ = req.reply.send(Response::Expired {
+                    waited: req.created.elapsed(),
+                });
+            }
+        }
+        failed = Some(err);
+        break;
+    }
+    let mut staging_total = AllocStats::default();
+    for m in acc.per_bucket.values() {
+        staging_total.absorb(&m.staging);
+    }
+    ShardOutcome {
+        metrics: ShardMetrics {
+            shard,
+            requests: acc.requests,
+            batches: acc.batches,
+            staging: staging_total,
+            buckets: acc.per_bucket.into_values().collect(),
+            // Steal counters live on the queue; `run` fills them in.
+            steals: 0,
+            stolen_requests: 0,
+            restarts,
+            retries: acc.retries,
+            expired: acc.expired,
+            quarantined: acc.quarantined,
+        },
+        latency_ms: acc.latency_ms,
+        batch_sizes: acc.batch_sizes,
+        failed,
+    }
 }
 
 /// One executor loop: owns a runtime and a handle on the (usually
@@ -424,44 +730,106 @@ impl<'a> ShardWorker<'a> {
         })
     }
 
-    fn run(mut self, queue: &StealQueue<Request>) -> Result<ShardOutcome> {
-        let mut requests = 0u64;
-        let mut batches = 0u64;
-        let mut latency_ms = Summary::new();
-        let mut batch_sizes = Summary::new();
-        let mut per_bucket: BTreeMap<u32, BucketMetrics> = BTreeMap::new();
+    /// Serve until the queue closes. Every dequeued batch is parked in
+    /// `inflight` while this worker owns it, so the supervisor can
+    /// rescue it if the worker dies; counters commit to `acc` (owned by
+    /// the supervisor) only when their batch completed.
+    fn run(
+        mut self,
+        queue: &StealQueue<Request>,
+        inflight: &Mutex<Vec<Request>>,
+        acc: &mut ShardAccum,
+    ) -> Result<()> {
         // Coalesce up to the largest executable bucket.
         let cap = *self.route.buckets().last().expect("non-empty ladder") as usize;
 
         loop {
-            let mut batch = queue.next_batch(self.shard, cap, self.cfg.batch_window);
+            let batch = queue.next_batch(self.shard, cap, self.cfg.batch_window);
             if batch.is_empty() {
-                break; // queue closed and drained
+                return Ok(()); // queue closed and drained
             }
-            batch_sizes.add(batch.len() as f64);
-            requests += batch.len() as u64;
-            batches += 1;
-            self.execute_batch(&mut batch, &mut latency_ms, &mut per_bucket)?;
-        }
+            *relock(inflight) = batch;
+            // Injected worker panic (chaos only): fires while the batch
+            // is parked — exercising the supervisor's rescue path — and
+            // before any plan is touched, so surviving keys' plans stay
+            // byte-identical to a fault-free run.
+            if self
+                .cfg
+                .faults
+                .as_ref()
+                .is_some_and(|f| f.shard_batch_panics(self.shard))
+            {
+                panic!("injected fault: shard {} worker panic", self.shard);
+            }
 
-        let mut staging_total = AllocStats::default();
-        for m in per_bucket.values() {
-            staging_total.absorb(&m.staging);
+            let mut attempt = 0u32;
+            loop {
+                let mut guard = relock(inflight);
+                // Deadline shed — at dequeue and again before every
+                // retry, so an overloaded or flapping lane drops work
+                // nobody is waiting for instead of executing it.
+                let now = Instant::now();
+                let kept: Vec<Request> = guard
+                    .drain(..)
+                    .filter_map(|req| {
+                        if req.deadline.is_some_and(|d| now >= d) {
+                            acc.expired += 1;
+                            let _ = req.reply.send(Response::Expired {
+                                waited: now - req.created,
+                            });
+                            None
+                        } else {
+                            Some(req)
+                        }
+                    })
+                    .collect();
+                *guard = kept;
+                if guard.is_empty() {
+                    break; // the whole batch expired — nothing to run
+                }
+                let bucket = self.routed_bucket(guard.len() as u32);
+                match self.execute_batch(&mut guard, bucket, acc) {
+                    Ok(()) => {
+                        self.registry.record_plan_success(bucket);
+                        break;
+                    }
+                    Err(_) if attempt < self.cfg.max_retries => {
+                        // Transient until proven otherwise: back off and
+                        // re-execute (the failed attempt left the plan's
+                        // iteration balanced, and replies are only sent
+                        // on success, so a retry cannot double-reply).
+                        drop(guard);
+                        attempt += 1;
+                        acc.retries += 1;
+                        thread::sleep(self.cfg.retry_base * (1u32 << (attempt - 1).min(16)));
+                    }
+                    Err(e) => {
+                        // Retries exhausted: strike the plan (repeated
+                        // strikes quarantine the bucket) and die; the
+                        // supervisor rescues the parked batch.
+                        drop(guard);
+                        if self.registry.record_plan_failure(bucket) {
+                            acc.quarantined += 1;
+                        }
+                        return Err(e);
+                    }
+                }
+            }
         }
-        Ok(ShardOutcome {
-            metrics: ShardMetrics {
-                shard: self.shard,
-                requests,
-                batches,
-                staging: staging_total,
-                buckets: per_bucket.into_values().collect(),
-                // Steal counters live on the queue; `run` fills them in.
-                steals: 0,
-                stolen_requests: 0,
-            },
-            latency_ms,
-            batch_sizes,
-        })
+    }
+
+    /// The batch's routed bucket: smallest covering *executable* bucket,
+    /// degraded to the largest executable bucket while quarantined (a
+    /// quarantined plan key takes no traffic for its cooldown; the
+    /// largest bucket has nowhere bigger to go).
+    fn routed_bucket(&self, n: u32) -> u32 {
+        let bucket = self.route.bucket_for(n);
+        let largest = *self.route.buckets().last().expect("non-empty ladder");
+        if bucket != largest && self.registry.is_quarantined(bucket) {
+            largest
+        } else {
+            bucket
+        }
     }
 
     /// Build the PJRT inputs and execute `entry`. Free function over the
@@ -485,18 +853,19 @@ impl<'a> ShardWorker<'a> {
         to_f32(&outputs[0])
     }
 
+    /// Execute the parked batch against `bucket` (routed by the
+    /// caller). On success the replies are sent and the batch drained;
+    /// on failure the batch is left intact for the caller to retry or
+    /// for the supervisor to rescue, and the shared plan's iteration is
+    /// balanced either way.
     fn execute_batch(
         &mut self,
         batch: &mut Vec<Request>,
-        latency_ms: &mut Summary,
-        per_bucket: &mut BTreeMap<u32, BucketMetrics>,
+        bucket: u32,
+        acc: &mut ShardAccum,
     ) -> Result<()> {
         let n = batch.len();
         let d = self.input_dim;
-        // The routing rule: smallest covering bucket (falling back to
-        // the largest bucket for oversized batches, but `run` already
-        // caps coalescing at the largest bucket).
-        let bucket = self.route.bucket_for(n as u32);
         let slots = bucket as usize;
         let entry_name = self
             .entry_names
@@ -513,6 +882,17 @@ impl<'a> ShardWorker<'a> {
                 self.shard
             );
             flat[i * d..(i + 1) * d].copy_from_slice(&req.x);
+        }
+
+        // Injected transient backend error (chaos only): drawn before
+        // the plan is touched, so a faulted attempt leaves no trace in
+        // the plan and served keys stay byte-identical to a fault-free
+        // run. Each retry draws again.
+        if self.cfg.faults.as_ref().is_some_and(|f| f.draw_exec_error()) {
+            anyhow::bail!(
+                "injected fault: transient backend error (shard {})",
+                self.shard
+            );
         }
 
         // One registry checkout per batch: a brief read-lock + Arc bump
@@ -533,6 +913,7 @@ impl<'a> ShardWorker<'a> {
         let solves_before = planner.solves();
         let resolves_before = planner.resolves();
         let repacks_before = planner.repacks();
+        let repack_failed_before = planner.repack_failed();
         planner.begin_iteration();
 
         // Stage the bucket-padded input batch (constant shape per bucket
@@ -567,8 +948,8 @@ impl<'a> ShardWorker<'a> {
         let now = Instant::now();
         for (i, req) in batch.drain(..).enumerate() {
             let latency = now - req.created;
-            latency_ms.add(latency.as_secs_f64() * 1e3);
-            let _ = req.reply.send(Response {
+            acc.latency_ms.add(latency.as_secs_f64() * 1e3);
+            let _ = req.reply.send(Response::Ok {
                 logits: logits[i * self.classes..(i + 1) * self.classes].to_vec(),
                 latency,
             });
@@ -590,6 +971,7 @@ impl<'a> ShardWorker<'a> {
         let resolve_ns = planner.last_resolve_ns();
         let repacked = planner.repacks() > repacks_before;
         let repack_ns = planner.last_repack_ns();
+        let repack_died = planner.repack_failed() > repack_failed_before;
         drop(planner);
         if built {
             self.registry.record_build_ns(build_ns);
@@ -604,6 +986,11 @@ impl<'a> ShardWorker<'a> {
             // The solve ran on the background thread; only the swap
             // happened inside this batch's iteration boundary.
             self.registry.record_repack(repack_ns);
+        }
+        if repack_died {
+            // A background re-pack panicked and was discarded; the
+            // incumbent plan kept serving.
+            self.registry.record_repack_failed();
         }
 
         // Write-behind to the persistent store (no-op when none is
@@ -623,7 +1010,13 @@ impl<'a> ShardWorker<'a> {
         drop(slot);
         self.registry.enforce_budget();
 
-        let m = per_bucket.entry(bucket).or_insert_with(|| BucketMetrics {
+        // Commit the batch to the supervisor-owned counters only now
+        // that every reply is sent: a death earlier in this function
+        // leaves the counters describing completed work exactly.
+        acc.requests += n as u64;
+        acc.batches += 1;
+        acc.batch_sizes.add(n as f64);
+        let m = acc.per_bucket.entry(bucket).or_insert_with(|| BucketMetrics {
             bucket,
             ..BucketMetrics::default()
         });

@@ -19,12 +19,16 @@ use crate::dsa::bestfit;
 use crate::dsa::policies::Policy;
 use crate::dsa::solution::Assignment;
 use crate::plan::engine::PlanSnapshot;
-use crate::plan::registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
+use crate::plan::registry::{
+    PlanFootprint, PlanKey, PlanRegistry, Quarantine, RegistryConfig, RegistryStats,
+};
 use crate::plan::shared::{SharedPlanRegistry, SharedSlot};
 use crate::plan::store::{PlanStore, StoredPlan};
 use crate::plan::{HostBackend, MemoryBackend, ReplayEngine};
+use crate::testkit::FaultPlan;
 use crate::trace::TraceEvent;
-use std::sync::Arc;
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// A staged host buffer handle.
@@ -153,6 +157,18 @@ impl StagingPlanner {
     /// Wall nanoseconds of the most recent background re-pack solve.
     pub fn last_repack_ns(&self) -> u64 {
         self.engine.last_repack_ns()
+    }
+
+    /// Background re-packs whose thread panicked: discarded and counted,
+    /// the incumbent plan kept serving.
+    pub fn repack_failed(&self) -> u64 {
+        self.engine.repack_failed()
+    }
+
+    /// Arm a deterministic fault schedule on the underlying engine
+    /// (chaos testing): slow solves and re-pack panics.
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.engine.set_faults(faults);
     }
 
     pub fn is_replaying(&self) -> bool {
@@ -324,6 +340,12 @@ pub struct StagingRegistry {
     /// before paying a seed or a cold profile, written behind completed
     /// builds ([`persist`](Self::persist)).
     store: Option<PlanStore>,
+    /// Poisoned-plan quarantine (see [`Quarantine`]); consult
+    /// [`route_bucket`](Self::route_bucket) before [`planner`](Self::planner).
+    quarantine: Quarantine,
+    /// Keys whose write-behind failure was already logged (log once per
+    /// key; the counter keeps counting).
+    write_err_logged: HashSet<PlanKey>,
 }
 
 impl StagingRegistry {
@@ -332,8 +354,10 @@ impl StagingRegistry {
             model: model.to_string(),
             phase: phase.to_string(),
             repack_interval: cfg.repack_interval(),
+            quarantine: Quarantine::from_config(&cfg),
             registry: PlanRegistry::new(cfg),
             store: None,
+            write_err_logged: HashSet::new(),
         }
     }
 
@@ -386,7 +410,11 @@ impl StagingRegistry {
 
     /// Write the bucket's solved plan to the attached store (crash-safe
     /// temp-then-rename). No-op without a store, a resident plan, or a
-    /// solved plan. Counted in `store_writes`.
+    /// solved plan. Counted in `store_writes`. Write-behind is
+    /// **best-effort by design**: a failed save is counted
+    /// (`store_write_errors`), logged once per key, and serving
+    /// continues — the plan stays resident, it just will not survive a
+    /// restart.
     pub fn persist(&mut self, bucket: u32) -> bool {
         let Some(store) = self.store.clone() else {
             return false;
@@ -404,11 +432,22 @@ impl StagingRegistry {
             donor_bucket: planner.seeded_from(),
             snapshot,
         };
-        if store.save(&doc).is_ok() {
-            self.registry.record_store_write();
-            true
-        } else {
-            false
+        match store.save(&doc) {
+            Ok(()) => {
+                self.registry.record_store_write();
+                true
+            }
+            Err(e) => {
+                self.registry.record_store_write_error();
+                if self.write_err_logged.insert(doc.key.clone()) {
+                    eprintln!(
+                        "pgmo: plan-store write-behind failed for {} \
+                         (best-effort; serving continues): {e}",
+                        doc.key
+                    );
+                }
+                false
+            }
         }
     }
 
@@ -449,6 +488,52 @@ impl StagingRegistry {
     /// `batch` is oversized.
     pub fn bucket_for(&self, batch: u32) -> u32 {
         self.registry.bucket_for(batch)
+    }
+
+    /// Apply the quarantine to a routed bucket: a quarantined bucket's
+    /// traffic degrades to the largest-bucket fallback for the cooldown
+    /// (the largest bucket itself never reroutes — there is nowhere
+    /// bigger to go).
+    pub fn route_bucket(&self, bucket: u32) -> u32 {
+        let largest = *self.ladder().last().expect("non-empty ladder");
+        if bucket != largest
+            && self
+                .quarantine
+                .is_quarantined(&PlanKey::new(&self.model, &self.phase, bucket))
+        {
+            largest
+        } else {
+            bucket
+        }
+    }
+
+    /// Record one plan failure for `bucket` (slot-collision storm,
+    /// failed rebuild, store-invalidation loop). Returns `true` exactly
+    /// when this failure newly quarantined the bucket — the poisoned
+    /// plan is then evicted so the post-cooldown rebuild starts fresh,
+    /// and the event is counted in `RegistryStats::quarantined`.
+    pub fn record_plan_failure(&mut self, bucket: u32) -> bool {
+        let key = PlanKey::new(&self.model, &self.phase, bucket);
+        if self.quarantine.record_failure(&key) {
+            self.registry.record_quarantined();
+            let _ = self.registry.remove(&key);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record one plan success for `bucket`: consecutive-failure strikes
+    /// reset (see [`Quarantine::record_success`]).
+    pub fn record_plan_success(&mut self, bucket: u32) {
+        self.quarantine
+            .record_success(&PlanKey::new(&self.model, &self.phase, bucket));
+    }
+
+    /// Is `bucket` currently quarantined?
+    pub fn is_quarantined(&self, bucket: u32) -> bool {
+        self.quarantine
+            .is_quarantined(&PlanKey::new(&self.model, &self.phase, bucket))
     }
 
     /// The bucket's planner, created lazily on first use. Counts one
@@ -584,6 +669,17 @@ pub struct SharedStagingRegistry {
     /// Attached before the registry is shared (`set_store` takes `&mut`),
     /// so no synchronization is needed around the handle itself.
     store: Option<PlanStore>,
+    /// Poisoned-plan quarantine, shared by every shard (see
+    /// [`Quarantine`]); consult [`route_bucket`](Self::route_bucket)
+    /// before [`checkout`](Self::checkout).
+    quarantine: Quarantine,
+    /// Optional deterministic fault schedule (chaos testing), armed
+    /// before sharing; threaded into every planner built by
+    /// [`checkout`](Self::checkout).
+    faults: Option<Arc<FaultPlan>>,
+    /// Keys whose write-behind failure was already logged (log once per
+    /// key; the counter keeps counting).
+    write_err_logged: Mutex<HashSet<PlanKey>>,
 }
 
 impl SharedStagingRegistry {
@@ -592,9 +688,22 @@ impl SharedStagingRegistry {
             model: model.to_string(),
             phase: phase.to_string(),
             repack_interval: cfg.repack_interval(),
+            quarantine: Quarantine::from_config(&cfg),
             registry: SharedPlanRegistry::new(cfg),
             store: None,
+            faults: None,
+            write_err_logged: Mutex::new(HashSet::new()),
         }
+    }
+
+    /// Arm a deterministic fault schedule (before sharing the registry
+    /// across shards): the attached store honors its write faults and
+    /// every planner built from here on honors its solve/re-pack faults.
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        if let Some(store) = &mut self.store {
+            store.set_faults(Arc::clone(&faults));
+        }
+        self.faults = Some(faults);
     }
 
     /// Attach a persistent plan store (before sharing the registry
@@ -648,7 +757,11 @@ impl SharedStagingRegistry {
     /// checkin, after releasing the plan lock and sending replies — the
     /// plan is relocked briefly (uncontended) to snapshot, and the file
     /// write runs with no locks held, behind the serving path. No-op
-    /// without a store or before the plan has solved.
+    /// without a store or before the plan has solved. Write-behind is
+    /// **best-effort by design**: a failed save is counted
+    /// (`store_write_errors`), logged once per key, and serving
+    /// continues — the plan stays resident, it just will not survive a
+    /// restart.
     pub fn persist(&self, slot: &SharedSlot<StagingPlanner>) -> bool {
         let Some(store) = &self.store else {
             return false;
@@ -666,11 +779,26 @@ impl SharedStagingRegistry {
             donor_bucket,
             snapshot,
         };
-        if store.save(&doc).is_ok() {
-            self.registry.record_store_write();
-            true
-        } else {
-            false
+        match store.save(&doc) {
+            Ok(()) => {
+                self.registry.record_store_write();
+                true
+            }
+            Err(e) => {
+                self.registry.record_store_write_error();
+                let mut logged = self
+                    .write_err_logged
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                if logged.insert(doc.key.clone()) {
+                    eprintln!(
+                        "pgmo: plan-store write-behind failed for {} \
+                         (best-effort; serving continues): {e}",
+                        doc.key
+                    );
+                }
+                false
+            }
         }
     }
 
@@ -717,37 +845,90 @@ impl SharedStagingRegistry {
     pub fn checkout(&self, bucket: u32) -> Arc<SharedSlot<StagingPlanner>> {
         let key = PlanKey::new(&self.model, &self.phase, bucket);
         self.registry.get_or_build(&key, || {
-            // The persistent tier outranks seeding: a stored plan was
-            // solved for this exact key, a seed is a scaled guess.
-            if let Some(planner) = self.builder_from_store(&key) {
-                return planner;
+            let mut planner = self.build_planner(&key, bucket);
+            if let Some(f) = &self.faults {
+                planner.set_faults(Arc::clone(f));
             }
-            if let Some((donor_key, donor_slot)) = self.registry.seed_donor_slot(&key) {
-                let t0 = Instant::now();
-                // The donor lock waits out at most one in-flight batch;
-                // the builder holds no registry locks here, so no cycle.
-                let donor = donor_slot.plan();
-                let seeded = StagingPlanner::seeded(
-                    &key.model,
-                    &format!("{}-b{}", key.phase, key.batch_bucket),
-                    &donor,
-                    bucket,
-                    donor_key.batch_bucket,
-                );
-                drop(donor);
-                if let Some(mut planner) = seeded {
-                    self.registry.record_seeded_build(t0.elapsed().as_nanos() as u64);
-                    planner.set_repack_interval(self.repack_interval);
-                    return planner;
-                }
-            }
-            let mut planner = StagingPlanner::new(
-                &key.model,
-                &format!("{}-b{}", key.phase, key.batch_bucket),
-            );
-            planner.set_repack_interval(self.repack_interval);
             planner
         })
+    }
+
+    /// Build a planner for `key`: the persistent tier outranks seeding
+    /// (a stored plan was solved for this exact key, a seed is a scaled
+    /// guess), seeding outranks a cold profile-from-scratch.
+    fn build_planner(&self, key: &PlanKey, bucket: u32) -> StagingPlanner {
+        if let Some(planner) = self.builder_from_store(key) {
+            return planner;
+        }
+        if let Some((donor_key, donor_slot)) = self.registry.seed_donor_slot(key) {
+            let t0 = Instant::now();
+            // The donor lock waits out at most one in-flight batch;
+            // the builder holds no registry locks here, so no cycle.
+            let donor = donor_slot.plan();
+            let seeded = StagingPlanner::seeded(
+                &key.model,
+                &format!("{}-b{}", key.phase, key.batch_bucket),
+                &donor,
+                bucket,
+                donor_key.batch_bucket,
+            );
+            drop(donor);
+            if let Some(mut planner) = seeded {
+                self.registry.record_seeded_build(t0.elapsed().as_nanos() as u64);
+                planner.set_repack_interval(self.repack_interval);
+                return planner;
+            }
+        }
+        let mut planner =
+            StagingPlanner::new(&key.model, &format!("{}-b{}", key.phase, key.batch_bucket));
+        planner.set_repack_interval(self.repack_interval);
+        planner
+    }
+
+    /// Apply the quarantine to a routed bucket: a quarantined bucket's
+    /// traffic degrades to the largest-bucket fallback for the cooldown
+    /// (the largest bucket itself never reroutes — there is nowhere
+    /// bigger to go).
+    pub fn route_bucket(&self, bucket: u32) -> u32 {
+        let largest = *self.ladder().last().expect("non-empty ladder");
+        if bucket != largest
+            && self
+                .quarantine
+                .is_quarantined(&PlanKey::new(&self.model, &self.phase, bucket))
+        {
+            largest
+        } else {
+            bucket
+        }
+    }
+
+    /// Record one plan failure for `bucket` (exhausted retries, failed
+    /// rebuild). Returns `true` exactly when this failure newly
+    /// quarantined the bucket — the poisoned plan is then evicted so the
+    /// post-cooldown rebuild starts fresh, and the event is counted in
+    /// `RegistryStats::quarantined`.
+    pub fn record_plan_failure(&self, bucket: u32) -> bool {
+        let key = PlanKey::new(&self.model, &self.phase, bucket);
+        if self.quarantine.record_failure(&key) {
+            self.registry.record_quarantined();
+            self.evict(bucket);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record one plan success for `bucket`: consecutive-failure strikes
+    /// reset (see [`Quarantine::record_success`]).
+    pub fn record_plan_success(&self, bucket: u32) {
+        self.quarantine
+            .record_success(&PlanKey::new(&self.model, &self.phase, bucket));
+    }
+
+    /// Is `bucket` currently quarantined?
+    pub fn is_quarantined(&self, bucket: u32) -> bool {
+        self.quarantine
+            .is_quarantined(&PlanKey::new(&self.model, &self.phase, bucket))
     }
 
     /// Evict LRU *unpinned* bucket plans beyond the unified byte budget;
@@ -791,6 +972,11 @@ impl SharedStagingRegistry {
     /// Record one background re-pack of a bucket plan.
     pub fn record_repack(&self, ns: u64) {
         self.registry.record_repack(ns);
+    }
+
+    /// Record one discarded (panicked) background re-pack attempt.
+    pub fn record_repack_failed(&self) {
+        self.registry.record_repack_failed();
     }
 
     /// Total advertised bytes across resident bucket plans (the unified

@@ -111,6 +111,22 @@
 //! bucket-routed plan registry above them, and a work-stealing batch
 //! queue between dispatcher and shards ([`coordinator::serve`]).
 //!
+//! The serving path is *fault-tolerant* (ROADMAP.md `## Fault
+//! tolerance`): shard workers run under a supervisor that catches
+//! panics, rescues and requeues the in-flight batch, and respawns the
+//! worker within a restart budget (a shard past its budget dies cleanly
+//! and its lane drains into the survivors); transient execute errors
+//! retry with bounded exponential backoff; an optional per-request
+//! deadline sheds late requests with an explicit
+//! [`coordinator::serve::Response::Expired`] before execution; and a
+//! plan key that keeps failing is quarantined for a cooldown while its
+//! traffic reroutes to the largest-bucket fallback. Every accepted
+//! request is answered exactly once. The whole layer is testable
+//! deterministically through [`testkit::FaultPlan`] — a seeded fault
+//! schedule (shard panics, transient errors, slow solves, re-pack
+//! panics, corrupted/failed store writes) whose `fired()` counters let
+//! the chaos suite assert exact equalities instead of bounds.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

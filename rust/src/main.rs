@@ -8,7 +8,8 @@
 //! pgmo train [--steps 200] [--batch 32] [--artifacts artifacts/]
 //! pgmo serve [--requests 256] [--shards 2] [--buckets 1,4,8,16,32]
 //!            [--plan-budget 64MiB] [--plan-store plans/]
-//!            [--artifacts artifacts/]
+//!            [--deadline-ms 50] [--max-retries 2] [--retry-base-ms 1]
+//!            [--restart-budget 2] [--artifacts artifacts/]
 //! ```
 
 use anyhow::{Context, Result};
@@ -361,6 +362,27 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "persistent plan store directory: warm the ladder from disk at startup, \
              write solved plans behind the serving path (invalid entries rebuild cold)",
         )
+        .opt(
+            "deadline-ms",
+            "per-request deadline: a request still queued past it is shed with an \
+             explicit Expired reply instead of executed (default: none)",
+        )
+        .opt_default(
+            "max-retries",
+            "2",
+            "batch execution retries after a transient backend error (exponential backoff)",
+        )
+        .opt_default(
+            "retry-base-ms",
+            "1",
+            "first retry backoff in ms; retry k sleeps base * 2^(k-1)",
+        )
+        .opt_default(
+            "restart-budget",
+            "2",
+            "worker respawns per shard after a panic or fatal error before the lane \
+             is abandoned to the surviving shards",
+        )
         .opt_default("artifacts", "artifacts", "artifact directory");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.help_text());
@@ -385,7 +407,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         repack_interval: a.get_interval_or("repack-every", 16)?,
         shared_registry: a.get_switch_or("shared-registry", true)?,
         plan_store: a.get_path("plan-store"),
+        max_retries: a.get_or("max-retries", 2u32)?,
+        retry_base: Duration::from_millis(a.get_or("retry-base-ms", 1u64)?),
+        restart_budget: a.get_or("restart-budget", 2u32)?,
         ..ServeConfig::default()
+    };
+    let deadline: Option<Duration> = match a.get("deadline-ms") {
+        Some(raw) => Some(Duration::from_millis(raw.parse().with_context(|| {
+            format!("--deadline-ms: cannot parse {raw:?} (want milliseconds)")
+        })?)),
+        None => None,
     };
     let mut server = InferenceServer::new(&dir, 11, cfg)?;
     let dim = server.input_dim();
@@ -400,9 +431,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             for _ in 0..per {
                 let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
                 let (rtx, rrx) = std::sync::mpsc::channel();
+                let created = std::time::Instant::now();
                 let _ = tx.send(Request {
                     x,
-                    created: std::time::Instant::now(),
+                    created,
+                    deadline: deadline.map(|d| created + d),
                     reply: rtx,
                 });
                 let _ = rrx.recv();

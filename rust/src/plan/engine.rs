@@ -52,6 +52,7 @@ use crate::dsa::bestfit::{self, TraceDelta};
 use crate::dsa::problem::DsaInstance;
 use crate::dsa::solution::Assignment;
 use crate::profiler::{BlockHandle, MemoryProfiler};
+use crate::testkit::FaultPlan;
 use crate::trace::{Trace, TraceEvent};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
@@ -267,6 +268,13 @@ pub struct ReplayEngine<M: MemoryBackend> {
     repacks: u64,
     repack_ns: u64,
     last_repack_ns: u64,
+    /// Background re-packs whose thread panicked or died: the result is
+    /// discarded, the incumbent plan stays, and serving continues.
+    repack_failed: u64,
+    /// Optional deterministic fault schedule (chaos testing): injects
+    /// slow solves and re-pack panics at the engine's two thread-level
+    /// seams. `None` in production.
+    faults: Option<Arc<FaultPlan>>,
     /// Labels forwarded to traces/diagnostics.
     model: String,
     phase: String,
@@ -300,6 +308,8 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             repacks: 0,
             repack_ns: 0,
             last_repack_ns: 0,
+            repack_failed: 0,
+            faults: None,
             model: model.to_string(),
             phase: phase.to_string(),
             batch,
@@ -436,6 +446,20 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.last_repack_ns
     }
 
+    /// Background re-packs that panicked or died before delivering a
+    /// packing. Each one was discarded at the iteration boundary — the
+    /// incumbent plan kept serving — and counted here.
+    pub fn repack_failed(&self) -> u64 {
+        self.repack_failed
+    }
+
+    /// Arm a deterministic fault schedule (chaos testing): subsequent
+    /// cold solves honor [`FaultPlan::solve_delay`] and background
+    /// re-pack threads honor [`FaultPlan::repack_panics`].
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.faults = Some(faults);
+    }
+
     // ----- plan construction ------------------------------------------------
 
     fn fresh_profiler(&self) -> MemoryProfiler {
@@ -538,6 +562,9 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     fn solve_plan(&mut self, ctx: &mut M::Ctx, trace: Trace) -> Result<(), M::Error> {
         let inst = trace.to_dsa_instance();
         let t0 = Instant::now();
+        if let Some(d) = self.faults.as_ref().and_then(|f| f.solve_delay()) {
+            std::thread::sleep(d); // injected slow solve (measured below)
+        }
         let sol = bestfit::solve(&inst);
         self.last_solve_ns = t0.elapsed().as_nanos() as u64;
         self.solve_ns += self.last_solve_ns;
@@ -600,9 +627,13 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         // O(1): the trace is shared with the plan, not deep-copied on
         // the serving path.
         let trace = Arc::clone(&plan.trace);
+        let faults = self.faults.clone();
         self.repack = Some(RepackJob {
             generation: self.plan_generation,
             handle: std::thread::spawn(move || {
+                if faults.is_some_and(|f| f.repack_panics()) {
+                    panic!("injected fault: background re-pack panic");
+                }
                 let inst = trace.to_dsa_instance();
                 let t0 = Instant::now();
                 let sol = bestfit::solve(&inst);
@@ -622,7 +653,11 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// fresh packing that is *not* tighter than the incumbent is
     /// discarded after counting — the heuristic is not size-monotone,
     /// so the drifted warm plan can already sit at or below a cold
-    /// solve, and a re-pack must never grow the arena.
+    /// solve, and a re-pack must never grow the arena. A re-pack thread
+    /// that *panicked* is contained the same way: the join error is
+    /// swallowed, the failure counted ([`repack_failed`](Self::repack_failed)),
+    /// and the incumbent plan keeps serving — a background optimization
+    /// must never take the serving iteration down with it.
     fn try_swap_repack(&mut self, ctx: &mut M::Ctx) -> Result<(), M::Error> {
         let generation = self.plan_generation;
         let stale = self.repack.as_ref().is_some_and(|j| j.generation != generation);
@@ -633,7 +668,12 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         let Some(job) = self.repack.take() else {
             return Ok(());
         };
-        let (trace, inst, sol, ns) = job.handle.join().expect("repack thread panicked");
+        let Ok((trace, inst, sol, ns)) = job.handle.join() else {
+            // The re-pack thread panicked. Discard it, keep the
+            // incumbent plan; the next interval spawns a fresh attempt.
+            self.repack_failed += 1;
+            return Ok(());
+        };
         self.repacks += 1;
         self.last_repack_ns = ns;
         self.repack_ns += ns;

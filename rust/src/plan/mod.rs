@@ -43,6 +43,6 @@ pub mod store;
 
 pub use backend::{DeviceBackend, HostBackend, MemoryBackend};
 pub use engine::{Placement, PlanSnapshot, ReplayEngine};
-pub use registry::{PlanFootprint, PlanKey, PlanRegistry, RegistryConfig, RegistryStats};
+pub use registry::{PlanFootprint, PlanKey, PlanRegistry, Quarantine, RegistryConfig, RegistryStats};
 pub use shared::{SharedPlanRegistry, SharedSlot};
 pub use store::{PlanStore, StoredPlan, STORE_FORMAT_VERSION};

@@ -34,6 +34,8 @@
 use super::backend::MemoryBackend;
 use super::engine::ReplayEngine;
 use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Identity of one plan: which model, which phase (training / serving /
 /// staging label), and which batch bucket its shape was profiled at.
@@ -83,6 +85,8 @@ pub struct RegistryConfig {
     buckets: Vec<u32>,
     budget_bytes: u64,
     repack_interval: u64,
+    quarantine_threshold: u32,
+    quarantine_cooldown: Duration,
 }
 
 impl RegistryConfig {
@@ -98,6 +102,8 @@ impl RegistryConfig {
             buckets: b,
             budget_bytes: u64::MAX,
             repack_interval: 0,
+            quarantine_threshold: 3,
+            quarantine_cooldown: Duration::from_secs(60),
         }
     }
 
@@ -115,6 +121,14 @@ impl RegistryConfig {
         self
     }
 
+    /// Quarantine a key after `threshold` consecutive plan failures for
+    /// `cooldown` (0 threshold = never quarantine); see [`Quarantine`].
+    pub fn with_quarantine(mut self, threshold: u32, cooldown: Duration) -> RegistryConfig {
+        self.quarantine_threshold = threshold;
+        self.quarantine_cooldown = cooldown;
+        self
+    }
+
     pub fn buckets(&self) -> &[u32] {
         &self.buckets
     }
@@ -125,6 +139,14 @@ impl RegistryConfig {
 
     pub fn repack_interval(&self) -> u64 {
         self.repack_interval
+    }
+
+    pub fn quarantine_threshold(&self) -> u32 {
+        self.quarantine_threshold
+    }
+
+    pub fn quarantine_cooldown(&self) -> Duration {
+        self.quarantine_cooldown
     }
 
     /// The serve routing rule: smallest bucket covering `batch`; the
@@ -205,6 +227,18 @@ pub struct RegistryStats {
     pub store_invalidated: u64,
     /// Completed builds written back to the store (write-behind).
     pub store_writes: u64,
+    /// Write-behind saves that failed on disk. Write-behind is
+    /// best-effort by design: a failed save is counted and logged once
+    /// per key, and serving continues — the plan stays resident, it just
+    /// will not survive a restart.
+    pub store_write_errors: u64,
+    /// Keys newly placed under [`Quarantine`] after repeated plan
+    /// failures (each cooldown entry counts once).
+    pub quarantined: u64,
+    /// Background re-packs whose thread panicked; the result was
+    /// discarded and the incumbent plan kept
+    /// (`ReplayEngine::repack_failed`).
+    pub repack_failed: u64,
 }
 
 impl RegistryStats {
@@ -324,6 +358,114 @@ impl RegistryStats {
         self.store_misses += other.store_misses;
         self.store_invalidated += other.store_invalidated;
         self.store_writes += other.store_writes;
+        self.store_write_errors += other.store_write_errors;
+        self.quarantined += other.quarantined;
+        self.repack_failed += other.repack_failed;
+    }
+}
+
+// ----- poisoned-plan quarantine ---------------------------------------------
+
+#[derive(Debug, Default)]
+struct QuarantineEntry {
+    /// Consecutive failures since the last success (or cooldown expiry).
+    strikes: u32,
+    /// Set while the key is serving its cooldown.
+    until: Option<Instant>,
+}
+
+/// Poisoned-plan quarantine: a [`PlanKey`] whose plan keeps failing —
+/// slot collisions every iteration, failed rebuilds, a
+/// store-invalidation loop — is taken out of routing for a cooldown
+/// after `threshold` consecutive failures, so one bad key degrades to
+/// the largest-bucket fallback instead of triggering a process-wide
+/// rebuild storm. Failure accounting is *consecutive*: any success for
+/// the key resets its strikes. When the cooldown expires the key gets a
+/// fresh start (zero strikes) and normal routing resumes.
+///
+/// Thread-safe (`&self` everywhere, one mutex) so both registry tiers
+/// can share the mechanism; a threshold of 0 disables it.
+#[derive(Debug)]
+pub struct Quarantine {
+    threshold: u32,
+    cooldown: Duration,
+    entries: Mutex<HashMap<PlanKey, QuarantineEntry>>,
+}
+
+impl Quarantine {
+    pub fn new(threshold: u32, cooldown: Duration) -> Quarantine {
+        Quarantine {
+            threshold,
+            cooldown,
+            entries: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A quarantine configured from the registry knobs.
+    pub fn from_config(cfg: &RegistryConfig) -> Quarantine {
+        Quarantine::new(cfg.quarantine_threshold(), cfg.quarantine_cooldown())
+    }
+
+    /// Failure sites run on worker threads that may panic for unrelated
+    /// reasons; never cascade a poisoned mutex into routing.
+    fn entries(&self) -> std::sync::MutexGuard<'_, HashMap<PlanKey, QuarantineEntry>> {
+        self.entries.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one plan failure for `key`. Returns `true` exactly when
+    /// this failure crossed the threshold and *newly* quarantined the
+    /// key (the caller counts it in [`RegistryStats::quarantined`]).
+    pub fn record_failure(&self, key: &PlanKey) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        let mut entries = self.entries();
+        let e = entries.entry(key.clone()).or_default();
+        if e.until.is_some() {
+            return false; // already serving its cooldown
+        }
+        e.strikes += 1;
+        if e.strikes >= self.threshold {
+            e.until = Some(Instant::now() + self.cooldown);
+            return true;
+        }
+        false
+    }
+
+    /// Record one plan success for `key`: consecutive-failure strikes
+    /// reset. An active cooldown is *not* cut short — the fallback plan
+    /// serving the key's traffic produces successes of its own key, so a
+    /// success here means the quarantined plan itself recovered mid-test,
+    /// and the conservative choice is to let the cooldown run out.
+    pub fn record_success(&self, key: &PlanKey) {
+        let mut entries = self.entries();
+        if entries.get(key).is_some_and(|e| e.until.is_none()) {
+            entries.remove(key);
+        }
+    }
+
+    /// Is `key` currently quarantined? An expired cooldown is cleared on
+    /// observation (fresh start: zero strikes).
+    pub fn is_quarantined(&self, key: &PlanKey) -> bool {
+        let mut entries = self.entries();
+        match entries.get(key).and_then(|e| e.until) {
+            Some(until) if Instant::now() < until => true,
+            Some(_) => {
+                entries.remove(key);
+                false
+            }
+            None => false,
+        }
+    }
+
+    /// Keys currently serving a cooldown (expired entries not counted).
+    pub fn active(&self) -> usize {
+        let entries = self.entries();
+        let now = Instant::now();
+        entries
+            .values()
+            .filter(|e| e.until.is_some_and(|u| now < u))
+            .count()
     }
 }
 
@@ -515,6 +657,31 @@ impl<P: PlanFootprint> PlanRegistry<P> {
     /// Record one completed build written back to the store.
     pub fn record_store_write(&mut self) {
         self.stats.store_writes += 1;
+    }
+
+    /// Record one failed write-behind save (best-effort: serving goes on).
+    pub fn record_store_write_error(&mut self) {
+        self.stats.store_write_errors += 1;
+    }
+
+    /// Record one key newly placed under quarantine.
+    pub fn record_quarantined(&mut self) {
+        self.stats.quarantined += 1;
+    }
+
+    /// Record one panicked background re-pack (discarded, incumbent kept).
+    pub fn record_repack_failed(&mut self) {
+        self.stats.repack_failed += 1;
+    }
+
+    /// Drop `key`'s plan unconditionally — e.g. a quarantined key whose
+    /// poisoned plan must rebuild fresh after the cooldown. Counted as
+    /// an eviction; returns the removed plan (resources release per the
+    /// usual eviction contract).
+    pub fn remove(&mut self, key: &PlanKey) -> Option<P> {
+        let slot = self.slots.remove(key)?;
+        self.stats.evictions += 1;
+        Some(slot.plan)
     }
 
     /// Per-plan replay-lookup hit counts, sorted by key (diagnostics).
@@ -759,5 +926,61 @@ mod tests {
         assert!(r.held_bytes() >= 1024 + 4096, "both arenas resident");
         assert_eq!(r.stats().hits, 2);
         assert_eq!(r.stats().misses, 2);
+    }
+
+    #[test]
+    fn quarantine_trips_on_threshold_and_only_once() {
+        let q = Quarantine::new(3, Duration::from_secs(3600));
+        assert!(!q.record_failure(&key(4)));
+        assert!(!q.record_failure(&key(4)));
+        assert!(!q.is_quarantined(&key(4)), "below threshold");
+        assert!(q.record_failure(&key(4)), "third strike trips");
+        assert!(q.is_quarantined(&key(4)));
+        assert!(
+            !q.record_failure(&key(4)),
+            "further failures during cooldown do not re-trip"
+        );
+        assert!(!q.is_quarantined(&key(8)), "other keys unaffected");
+        assert_eq!(q.active(), 1);
+    }
+
+    #[test]
+    fn quarantine_success_resets_consecutive_strikes() {
+        let q = Quarantine::new(2, Duration::from_secs(3600));
+        assert!(!q.record_failure(&key(4)));
+        q.record_success(&key(4));
+        assert!(!q.record_failure(&key(4)), "strikes restarted after success");
+        assert!(q.record_failure(&key(4)));
+        assert!(q.is_quarantined(&key(4)));
+        // A success during the cooldown does not cut it short.
+        q.record_success(&key(4));
+        assert!(q.is_quarantined(&key(4)));
+    }
+
+    #[test]
+    fn quarantine_cooldown_expiry_gives_a_fresh_start() {
+        let q = Quarantine::new(1, Duration::ZERO);
+        assert!(q.record_failure(&key(4)), "threshold 1 trips immediately");
+        // Zero cooldown: already expired on observation → fresh start.
+        assert!(!q.is_quarantined(&key(4)));
+        assert_eq!(q.active(), 0);
+        assert!(q.record_failure(&key(4)), "strikes were reset at expiry");
+    }
+
+    #[test]
+    fn quarantine_threshold_zero_disables() {
+        let q = Quarantine::new(0, Duration::from_secs(3600));
+        for _ in 0..10 {
+            assert!(!q.record_failure(&key(4)));
+        }
+        assert!(!q.is_quarantined(&key(4)));
+    }
+
+    #[test]
+    fn config_carries_quarantine_knobs() {
+        let cfg = RegistryConfig::new(&[1]).with_quarantine(5, Duration::from_millis(250));
+        assert_eq!(cfg.quarantine_threshold(), 5);
+        assert_eq!(cfg.quarantine_cooldown(), Duration::from_millis(250));
+        assert_eq!(RegistryConfig::default().quarantine_threshold(), 3);
     }
 }

@@ -500,6 +500,27 @@ impl<P: PlanFootprint> SharedPlanRegistry<P> {
     pub fn record_store_write(&self) {
         self.recorded.lock().expect("recorded stats poisoned").store_writes += 1;
     }
+
+    /// Record one failed write-behind save (best-effort: serving goes on).
+    pub fn record_store_write_error(&self) {
+        self.recorded
+            .lock()
+            .expect("recorded stats poisoned")
+            .store_write_errors += 1;
+    }
+
+    /// Record one key newly placed under quarantine.
+    pub fn record_quarantined(&self) {
+        self.recorded.lock().expect("recorded stats poisoned").quarantined += 1;
+    }
+
+    /// Record one panicked background re-pack (discarded, incumbent kept).
+    pub fn record_repack_failed(&self) {
+        self.recorded
+            .lock()
+            .expect("recorded stats poisoned")
+            .repack_failed += 1;
+    }
 }
 
 #[cfg(test)]

@@ -33,9 +33,11 @@
 use crate::dsa::policies::BlockChoice;
 use crate::plan::engine::PlanSnapshot;
 use crate::plan::registry::PlanKey;
+use crate::testkit::{FaultPlan, StoreFault};
 use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Bumped whenever the document layout changes incompatibly; entries
 /// from any other version are discarded, never migrated in place.
@@ -146,6 +148,9 @@ impl StoredPlan {
 #[derive(Debug, Clone)]
 pub struct PlanStore {
     root: PathBuf,
+    /// Optional deterministic fault schedule (chaos testing): corrupts
+    /// or fails scheduled writes. `None` in production.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl PlanStore {
@@ -155,7 +160,14 @@ impl PlanStore {
             .map_err(|e| anyhow::anyhow!("plan store {}: {e}", root.display()))?;
         Ok(PlanStore {
             root: root.to_path_buf(),
+            faults: None,
         })
+    }
+
+    /// Arm a deterministic fault schedule: subsequent [`save`](Self::save)
+    /// calls honor [`FaultPlan::next_store_write`].
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.faults = Some(faults);
     }
 
     pub fn root(&self) -> &Path {
@@ -187,7 +199,24 @@ impl PlanStore {
 
     /// Persist one plan, crash-safely (temp-then-rename).
     pub fn save(&self, plan: &StoredPlan) -> anyhow::Result<()> {
-        write_atomic(&self.file_for(&plan.key), &plan.to_json()?.dump())
+        let text = plan.to_json()?.dump();
+        match self.faults.as_ref().map(|f| f.next_store_write()) {
+            Some(StoreFault::Corrupt) => {
+                // The write "succeeds" but the document is damaged the
+                // way a torn or bit-rotted file would be; the load-time
+                // validation chain must catch it.
+                let mut cut = text.len() / 2;
+                while !text.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                return write_atomic(&self.file_for(&plan.key), &text[..cut]);
+            }
+            Some(StoreFault::Fail) => {
+                anyhow::bail!("injected fault: store write failed for {}", plan.key);
+            }
+            Some(StoreFault::None) | None => {}
+        }
+        write_atomic(&self.file_for(&plan.key), &text)
     }
 
     /// Load and fully validate one document.
@@ -318,6 +347,22 @@ mod tests {
         }
         let j = p.to_json().unwrap();
         assert!(StoredPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn injected_store_faults_corrupt_then_fail_then_pass() {
+        let mut store = test_store("faults");
+        store.set_faults(Arc::new(
+            crate::testkit::FaultPlan::seeded(1)
+                .corrupt_store_write(0)
+                .fail_store_write(1),
+        ));
+        let p = stored();
+        store.save(&p).unwrap(); // write 0: lands corrupted
+        assert!(store.load(&p.key).is_err(), "corrupted document must fail validation");
+        assert!(store.save(&p).is_err(), "write 1: injected I/O failure");
+        store.save(&p).unwrap(); // write 2: clean
+        assert_eq!(store.load(&p.key).unwrap().unwrap(), p);
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Chaos testing is only useful when a failing run can be replayed: a
+//! fault that fires "sometimes" produces bugs nobody can reproduce. A
+//! [`FaultPlan`] is therefore *seeded* — every probabilistic draw comes
+//! from one [`Pcg32`](crate::util::rng::Pcg32) stream and every
+//! scheduled fault fires at a fixed ordinal (the Nth batch a shard
+//! dequeues, the Nth store write, the Nth background re-pack), so the
+//! same seed and schedule yield the same fault sequence on every run.
+//!
+//! One `Arc<FaultPlan>` is threaded through the serve stack
+//! ([`ServeConfig::faults`](crate::coordinator::serve::ServeConfig)) and
+//! consulted at four kinds of injection site:
+//!
+//! * **shard-worker panics** — [`shard_batch_panics`](FaultPlan::shard_batch_panics)
+//!   is checked by the worker loop before each batch touches a plan, so
+//!   an injected panic never leaves a planner mid-iteration;
+//! * **transient backend errors** — [`draw_exec_error`](FaultPlan::draw_exec_error)
+//!   fails `execute_batch` with probability `exec_error_rate` before any
+//!   plan state is staged, exercising the retry/backoff path;
+//! * **slow solves / repack panics** — [`solve_delay`](FaultPlan::solve_delay)
+//!   stretches `ReplayEngine` solve latency and
+//!   [`repack_panics`](FaultPlan::repack_panics) kills the Nth
+//!   background re-pack thread, exercising the discard-and-count path;
+//! * **store document faults** — [`next_store_write`](FaultPlan::next_store_write)
+//!   corrupts or fails the Nth [`PlanStore`](crate::plan::store::PlanStore)
+//!   write, exercising load-time invalidation and write-behind error
+//!   accounting.
+//!
+//! Every fault that actually fires is counted; tests read the totals via
+//! [`fired`](FaultPlan::fired) to assert the serve report's `faults:`
+//! line is truthful rather than merely plausible.
+
+use crate::util::rng::Pcg32;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What one store write should do, drawn per write ordinal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreFault {
+    /// Write the document faithfully.
+    None,
+    /// Write a deliberately corrupted document: the write itself
+    /// succeeds, but the content must fail validation on the next load.
+    Corrupt,
+    /// Fail the write outright, as a disk I/O error would.
+    Fail,
+}
+
+#[derive(Debug, Default)]
+struct Fired {
+    exec_errors: AtomicU64,
+    shard_panics: AtomicU64,
+    repack_panics: AtomicU64,
+    solve_delays: AtomicU64,
+    store_corruptions: AtomicU64,
+    store_failures: AtomicU64,
+}
+
+/// Snapshot of how many injected faults of each kind have fired.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub exec_errors: u64,
+    pub shard_panics: u64,
+    pub repack_panics: u64,
+    pub solve_delays: u64,
+    pub store_corruptions: u64,
+    pub store_failures: u64,
+}
+
+impl FaultCounts {
+    /// Total faults fired across every kind.
+    pub fn total(&self) -> u64 {
+        self.exec_errors
+            + self.shard_panics
+            + self.repack_panics
+            + self.solve_delays
+            + self.store_corruptions
+            + self.store_failures
+    }
+}
+
+/// A seeded, thread-safe fault schedule. Build one with
+/// [`seeded`](FaultPlan::seeded) plus the builder methods, wrap it in an
+/// `Arc`, and hand it to the components under test; every query method
+/// takes `&self` and is safe to call from any worker thread.
+#[derive(Debug)]
+pub struct FaultPlan {
+    exec_error_rate: f64,
+    /// Per-shard batch ordinals (0-based, counted across restarts) at
+    /// which the worker loop panics.
+    panic_schedule: HashMap<usize, BTreeSet<u64>>,
+    solve_delay: Option<Duration>,
+    repack_panic_schedule: BTreeSet<u64>,
+    corrupt_store_writes: BTreeSet<u64>,
+    fail_store_writes: BTreeSet<u64>,
+    rng: Mutex<Pcg32>,
+    batch_ordinals: Mutex<HashMap<usize, u64>>,
+    repack_ordinal: AtomicU64,
+    store_write_ordinal: AtomicU64,
+    fired: Fired,
+}
+
+/// Injection sites run inside threads that may (deliberately) panic;
+/// a poisoned lock here must not cascade into unrelated workers.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl FaultPlan {
+    /// A plan with no faults scheduled; all probabilistic draws come
+    /// from a `Pcg32` stream seeded with `seed`.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            exec_error_rate: 0.0,
+            panic_schedule: HashMap::new(),
+            solve_delay: None,
+            repack_panic_schedule: BTreeSet::new(),
+            corrupt_store_writes: BTreeSet::new(),
+            fail_store_writes: BTreeSet::new(),
+            rng: Mutex::new(Pcg32::seeded(seed)),
+            batch_ordinals: Mutex::new(HashMap::new()),
+            repack_ordinal: AtomicU64::new(0),
+            store_write_ordinal: AtomicU64::new(0),
+            fired: Fired::default(),
+        }
+    }
+
+    // ----- schedule builders -------------------------------------------------
+
+    /// Fail each batch execution with probability `p` (clamped to
+    /// `[0, 1]`), as a transient backend error would.
+    pub fn exec_error_rate(mut self, p: f64) -> Self {
+        self.exec_error_rate = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Panic shard `shard`'s worker loop on its `nth` dequeued batch
+    /// (0-based, counted across restarts — a scheduled panic therefore
+    /// fires exactly once). May be called repeatedly to schedule several
+    /// panics per shard.
+    pub fn panic_shard(mut self, shard: usize, nth_batch: u64) -> Self {
+        self.panic_schedule.entry(shard).or_default().insert(nth_batch);
+        self
+    }
+
+    /// Stretch every plan solve by `delay` (a slow solver, not a hung
+    /// one: bounded so tests stay fast).
+    pub fn delay_solves(mut self, delay: Duration) -> Self {
+        self.solve_delay = Some(delay);
+        self
+    }
+
+    /// Panic the `nth` background re-pack thread (0-based).
+    pub fn panic_repack(mut self, nth: u64) -> Self {
+        self.repack_panic_schedule.insert(nth);
+        self
+    }
+
+    /// Corrupt the `nth` store write (0-based): the document lands on
+    /// disk but fails validation on load.
+    pub fn corrupt_store_write(mut self, nth: u64) -> Self {
+        self.corrupt_store_writes.insert(nth);
+        self
+    }
+
+    /// Fail the `nth` store write (0-based) with an I/O error.
+    pub fn fail_store_write(mut self, nth: u64) -> Self {
+        self.fail_store_writes.insert(nth);
+        self
+    }
+
+    // ----- injection-site queries --------------------------------------------
+
+    /// Should this batch execution fail with a transient backend error?
+    /// One seeded draw per call (a retried batch redraws).
+    pub fn draw_exec_error(&self) -> bool {
+        if self.exec_error_rate <= 0.0 {
+            return false;
+        }
+        let hit = relock(&self.rng).bool(self.exec_error_rate);
+        if hit {
+            self.fired.exec_errors.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Advance shard `shard`'s batch ordinal and report whether the
+    /// worker loop should panic *now* (call exactly once per dequeued
+    /// batch, before touching any plan).
+    pub fn shard_batch_panics(&self, shard: usize) -> bool {
+        let ordinal = {
+            let mut ords = relock(&self.batch_ordinals);
+            let n = ords.entry(shard).or_insert(0);
+            let cur = *n;
+            *n += 1;
+            cur
+        };
+        let hit = self
+            .panic_schedule
+            .get(&shard)
+            .is_some_and(|s| s.contains(&ordinal));
+        if hit {
+            self.fired.shard_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// The configured per-solve delay, if any (counted when drawn).
+    pub fn solve_delay(&self) -> Option<Duration> {
+        let d = self.solve_delay?;
+        self.fired.solve_delays.fetch_add(1, Ordering::Relaxed);
+        Some(d)
+    }
+
+    /// Advance the re-pack ordinal and report whether this background
+    /// re-pack should panic.
+    pub fn repack_panics(&self) -> bool {
+        let ordinal = self.repack_ordinal.fetch_add(1, Ordering::Relaxed);
+        let hit = self.repack_panic_schedule.contains(&ordinal);
+        if hit {
+            self.fired.repack_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Advance the store-write ordinal and report what this write should
+    /// do. Corruption wins if the same ordinal is scheduled for both.
+    pub fn next_store_write(&self) -> StoreFault {
+        let ordinal = self.store_write_ordinal.fetch_add(1, Ordering::Relaxed);
+        if self.corrupt_store_writes.contains(&ordinal) {
+            self.fired.store_corruptions.fetch_add(1, Ordering::Relaxed);
+            StoreFault::Corrupt
+        } else if self.fail_store_writes.contains(&ordinal) {
+            self.fired.store_failures.fetch_add(1, Ordering::Relaxed);
+            StoreFault::Fail
+        } else {
+            StoreFault::None
+        }
+    }
+
+    /// Totals of every fault that has actually fired.
+    pub fn fired(&self) -> FaultCounts {
+        FaultCounts {
+            exec_errors: self.fired.exec_errors.load(Ordering::Relaxed),
+            shard_panics: self.fired.shard_panics.load(Ordering::Relaxed),
+            repack_panics: self.fired.repack_panics.load(Ordering::Relaxed),
+            solve_delays: self.fired.solve_delays.load(Ordering::Relaxed),
+            store_corruptions: self.fired.store_corruptions.load(Ordering::Relaxed),
+            store_failures: self.fired.store_failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_error_draws_are_seed_deterministic() {
+        let a = FaultPlan::seeded(7).exec_error_rate(0.3);
+        let b = FaultPlan::seeded(7).exec_error_rate(0.3);
+        let da: Vec<bool> = (0..200).map(|_| a.draw_exec_error()).collect();
+        let db: Vec<bool> = (0..200).map(|_| b.draw_exec_error()).collect();
+        assert_eq!(da, db, "same seed, same draw sequence");
+        assert!(da.iter().any(|&x| x) && da.iter().any(|&x| !x));
+        assert_eq!(a.fired().exec_errors, da.iter().filter(|&&x| x).count() as u64);
+    }
+
+    #[test]
+    fn zero_rate_never_fires_and_never_draws() {
+        let p = FaultPlan::seeded(1);
+        assert!((0..100).all(|_| !p.draw_exec_error()));
+        assert_eq!(p.fired().total(), 0);
+    }
+
+    #[test]
+    fn shard_panic_fires_exactly_at_its_ordinal() {
+        let p = FaultPlan::seeded(1).panic_shard(1, 2);
+        // Shard 0 has no schedule, shard 1 panics on its third batch only.
+        assert!((0..5).all(|_| !p.shard_batch_panics(0)));
+        let hits: Vec<bool> = (0..5).map(|_| p.shard_batch_panics(1)).collect();
+        assert_eq!(hits, vec![false, false, true, false, false]);
+        assert_eq!(p.fired().shard_panics, 1);
+    }
+
+    #[test]
+    fn shard_ordinals_count_across_restarts() {
+        // A replacement worker keeps the shard's ordinal stream: the
+        // scheduled panic cannot fire a second time after a respawn.
+        let p = FaultPlan::seeded(1).panic_shard(0, 1);
+        assert!(!p.shard_batch_panics(0));
+        assert!(p.shard_batch_panics(0)); // worker dies here...
+        assert!((0..10).all(|_| !p.shard_batch_panics(0))); // ...respawn is safe
+        assert_eq!(p.fired().shard_panics, 1);
+    }
+
+    #[test]
+    fn store_writes_fault_by_ordinal_with_corrupt_precedence() {
+        let p = FaultPlan::seeded(1)
+            .corrupt_store_write(1)
+            .fail_store_write(1)
+            .fail_store_write(3);
+        let seq: Vec<StoreFault> = (0..5).map(|_| p.next_store_write()).collect();
+        assert_eq!(
+            seq,
+            vec![
+                StoreFault::None,
+                StoreFault::Corrupt,
+                StoreFault::None,
+                StoreFault::Fail,
+                StoreFault::None
+            ]
+        );
+        let fired = p.fired();
+        assert_eq!((fired.store_corruptions, fired.store_failures), (1, 1));
+    }
+
+    #[test]
+    fn repack_panics_by_ordinal() {
+        let p = FaultPlan::seeded(1).panic_repack(0);
+        assert!(p.repack_panics());
+        assert!(!p.repack_panics());
+        assert_eq!(p.fired().repack_panics, 1);
+    }
+
+    #[test]
+    fn solve_delay_counts_every_draw() {
+        let p = FaultPlan::seeded(1).delay_solves(Duration::from_millis(2));
+        assert_eq!(p.solve_delay(), Some(Duration::from_millis(2)));
+        assert_eq!(p.solve_delay(), Some(Duration::from_millis(2)));
+        assert_eq!(p.fired().solve_delays, 2);
+        assert!(FaultPlan::seeded(1).solve_delay().is_none());
+    }
+}

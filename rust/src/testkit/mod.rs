@@ -14,8 +14,10 @@
 //! });
 //! ```
 
+pub mod faults;
 pub mod gen;
 pub mod prop;
 
+pub use faults::{FaultCounts, FaultPlan, StoreFault};
 pub use gen::Gen;
 pub use prop::{check, check_seeded};

@@ -88,6 +88,7 @@ fn serving_answers_every_request_with_correct_shape() {
         tx.send(Request {
             x: vec![i as f32 / n_requests as f32; dim],
             created: std::time::Instant::now(),
+            deadline: None,
             reply: rtx,
         })
         .unwrap();
@@ -98,8 +99,9 @@ fn serving_answers_every_request_with_correct_shape() {
     assert_eq!(metrics.requests, n_requests);
     for r in replies {
         let resp = r.recv().unwrap();
-        assert_eq!(resp.logits.len(), 10);
-        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        let logits = resp.logits().expect("request must be served, not shed");
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
     }
     // Per-shard breakdown: every shard served work and replayed its
     // staging after its first (profiling) batch.
@@ -166,6 +168,7 @@ fn serving_mixed_batches_route_through_bucketed_plans() {
                     tx.send(Request {
                         x: vec![j as f32 / 32.0; dim],
                         created: std::time::Instant::now(),
+                        deadline: None,
                         reply: rtx,
                     })
                     .unwrap();
@@ -173,8 +176,9 @@ fn serving_mixed_batches_route_through_bucketed_plans() {
                 }
                 for r in replies {
                     let resp = r.recv().expect("every request answered");
-                    assert_eq!(resp.logits.len(), 10);
-                    assert!(resp.logits.iter().all(|v| v.is_finite()));
+                    let logits = resp.logits().expect("request must be served, not shed");
+                    assert_eq!(logits.len(), 10);
+                    assert!(logits.iter().all(|v| v.is_finite()));
                 }
                 total += burst as u64;
             }
@@ -246,12 +250,16 @@ fn identical_inputs_get_identical_logits_across_batches() {
         tx.send(Request {
             x: vec![0.5; dim],
             created: std::time::Instant::now(),
+            deadline: None,
             reply: rtx,
         })
         .unwrap();
         drop(tx);
         server.run(rx).unwrap();
-        rrx.recv().unwrap().logits
+        rrx.recv()
+            .unwrap()
+            .into_logits()
+            .expect("request must be served, not shed")
     };
     let a = ask(&mut server);
     let b = ask(&mut server);

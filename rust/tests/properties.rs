@@ -215,16 +215,18 @@ enum EpisodeKind {
     Skyline,
     Reopt,
     Seeded,
+    Fault,
 }
 
 impl EpisodeKind {
-    const PREFIXED: [&'static str; 2] = ["reopt-", "seeded-"];
+    const PREFIXED: [&'static str; 3] = ["reopt-", "seeded-", "fault-"];
 
     fn prefix(self) -> Option<&'static str> {
         match self {
             EpisodeKind::Skyline => None,
             EpisodeKind::Reopt => Some("reopt-"),
             EpisodeKind::Seeded => Some("seeded-"),
+            EpisodeKind::Fault => Some("fault-"),
         }
     }
 
@@ -1502,4 +1504,638 @@ fn plan_store_stale_skeleton_hash_falls_back_cold() {
     check_plan_store_corruption_falls_back_cold("stale_skeleton", |path| {
         tamper_field(path, "skeleton", Json::Str("00000000deadbeef".into()));
     });
+}
+
+// ---- fault tolerance: deterministic chaos serving sessions -----------------
+//
+// The serve stack's fault contract (ROADMAP `## Fault tolerance`), driven
+// end-to-end without PJRT: a mini serving session over the real dispatch
+// fabric (`StealQueue<Request>`) and the real shared plan tier
+// (`SharedStagingRegistry`, quarantine, plan store), using the same
+// supervision idioms as `coordinator::serve` — catch_unwind around the
+// worker loop, the in-flight batch parked in a mutex for rescue,
+// revive-and-requeue within a restart budget — while a seeded
+// [`FaultPlan`] injects shard panics, transient execute errors, slow
+// solves, and one corrupted store write. Under any seed:
+//
+//   1. every request receives exactly one reply — served, or explicitly
+//      `Expired`; nothing is stranded and nothing is double-sent;
+//   2. the session counters are truthful: restarts == injected panics
+//      that fired, retries == transient errors drawn (retries are
+//      bounded high enough that exhaustion is impossible at the
+//      configured error rate, so worker deaths come from scheduled
+//      panics alone);
+//   3. requests whose deadline already passed come back `Expired`, and
+//      nothing else expires;
+//   4. for every ladder bucket, the faulted session ends with a plan
+//      byte-identical (offsets, peak, arena bytes) to the fault-free
+//      twin session's — faults may cost latency, never plan quality;
+//   5. the one corrupted write-behind document is invalidated on the
+//      next warm restart; every other persisted plan installs.
+
+use pgmo::coordinator::queue::StealQueue;
+use pgmo::coordinator::serve::{Request, Response};
+use pgmo::testkit::FaultPlan;
+use std::collections::BTreeSet;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+const CHAOS_BUCKETS: [u32; 4] = [1, 2, 4, 8];
+const CHAOS_SHARDS: usize = 2;
+/// High enough that exhaustion at `CHAOS_EXEC_ERROR_RATE` is impossible
+/// in practice (0.05^7 ≈ 8e-10 per batch), so an episode's worker
+/// deaths come from scheduled panics alone and the accounting below can
+/// be exact instead of probabilistic.
+const CHAOS_MAX_RETRIES: u32 = 6;
+const CHAOS_EXEC_ERROR_RATE: f64 = 0.05;
+const CHAOS_RESTART_BUDGET: u64 = 4;
+
+/// Worker threads die by injected panic; recovery must read through any
+/// lock they poisoned on the way down instead of cascading the panic.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Session-wide counters, written by workers and supervisors.
+#[derive(Default)]
+struct ChaosCounters {
+    served: AtomicU64,
+    expired: AtomicU64,
+    retries: AtomicU64,
+    restarts: AtomicU64,
+    failed_shards: AtomicU64,
+}
+
+/// One incarnation of a mini shard worker: the dequeue → park →
+/// deadline-shed → execute-with-retries loop of the serve path's
+/// `ShardWorker::run`, with one staging iteration standing in for the
+/// PJRT dispatch. Returns `Ok(())` on clean queue shutdown; an injected
+/// panic unwinds out to the supervisor with the batch still parked.
+#[allow(clippy::too_many_arguments)]
+fn chaos_worker_attempt(
+    shard: usize,
+    queue: &StealQueue<Request>,
+    registry: &SharedStagingRegistry,
+    faults: &FaultPlan,
+    inflight: &Mutex<Vec<Request>>,
+    persisted: &Mutex<BTreeSet<u32>>,
+    built: &Mutex<BTreeSet<u32>>,
+    counters: &ChaosCounters,
+) -> Result<(), String> {
+    let cap = *CHAOS_BUCKETS.last().expect("non-empty ladder") as usize;
+    loop {
+        let batch = queue.next_batch(shard, cap, Duration::from_micros(500));
+        if batch.is_empty() {
+            return Ok(()); // closed and drained
+        }
+        *relock(inflight) = batch;
+        // The injection point mirrors the serve worker: the batch is
+        // parked for rescue and no plan has been touched yet.
+        if faults.shard_batch_panics(shard) {
+            panic!("injected fault: chaos shard {shard} worker panic");
+        }
+        let mut attempt = 0u32;
+        loop {
+            let mut guard = relock(inflight);
+            // Shed expired requests explicitly before (re)executing.
+            let now = Instant::now();
+            let kept: Vec<Request> = guard
+                .drain(..)
+                .filter_map(|req| {
+                    if req.deadline.is_some_and(|d| now >= d) {
+                        counters.expired.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.reply.send(Response::Expired {
+                            waited: now - req.created,
+                        });
+                        None
+                    } else {
+                        Some(req)
+                    }
+                })
+                .collect();
+            *guard = kept;
+            if guard.is_empty() {
+                break;
+            }
+            let bucket = registry.route_bucket(registry.bucket_for(guard.len() as u32));
+            if faults.draw_exec_error() {
+                if attempt < CHAOS_MAX_RETRIES {
+                    drop(guard);
+                    attempt += 1;
+                    counters.retries.fetch_add(1, Ordering::Relaxed);
+                    continue; // bounded retry; no backoff needed in-test
+                }
+                drop(guard);
+                registry.record_plan_failure(bucket);
+                return Err(format!(
+                    "shard {shard}: bucket {bucket} exhausted {CHAOS_MAX_RETRIES} retries"
+                ));
+            }
+            let slot = registry.checkout(bucket);
+            iterate_shared_slot(&slot, bucket);
+            registry.record_plan_success(bucket);
+            relock(built).insert(bucket);
+            // Write-behind once per bucket, like the serve worker
+            // persisting at first checkin (a corrupted write still
+            // "lands" — load-time validation owns catching it).
+            if registry.store().is_some() {
+                let mut p = relock(persisted);
+                if !p.contains(&bucket) && registry.persist(&slot) {
+                    p.insert(bucket);
+                }
+            }
+            for req in guard.drain(..) {
+                counters.served.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Response::Ok {
+                    logits: vec![req.x[0]],
+                    latency: req.created.elapsed(),
+                });
+            }
+            break;
+        }
+    }
+}
+
+/// Supervise one shard: catch a dead worker, rescue its parked batch,
+/// respawn within the restart budget, and on exhaustion migrate the
+/// backlog to surviving lanes (explicit `Expired` when nobody can take
+/// it) — the `supervise_shard` logic of `coordinator::serve`.
+#[allow(clippy::too_many_arguments)]
+fn chaos_shard(
+    shard: usize,
+    queue: &StealQueue<Request>,
+    registry: &SharedStagingRegistry,
+    faults: &FaultPlan,
+    persisted: &Mutex<BTreeSet<u32>>,
+    built: &Mutex<BTreeSet<u32>>,
+    counters: &ChaosCounters,
+) {
+    let mut restarts = 0u64;
+    loop {
+        let inflight: Mutex<Vec<Request>> = Mutex::new(Vec::new());
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            chaos_worker_attempt(
+                shard, queue, registry, faults, &inflight, persisted, built, counters,
+            )
+        }));
+        if matches!(outcome, Ok(Ok(()))) {
+            return; // clean shutdown
+        }
+        let stranded = std::mem::take(&mut *relock(&inflight));
+        if restarts < CHAOS_RESTART_BUDGET {
+            restarts += 1;
+            counters.restarts.fetch_add(1, Ordering::Relaxed);
+            queue.revive(shard);
+            for req in stranded {
+                if let Err(req) = queue.push(shard, req) {
+                    counters.expired.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Response::Expired {
+                        waited: req.created.elapsed(),
+                    });
+                }
+            }
+            continue;
+        }
+        // Budget exhausted: the lane dies; migrate its backlog.
+        counters.failed_shards.fetch_add(1, Ordering::Relaxed);
+        queue.mark_dead(shard);
+        for req in stranded.into_iter().chain(queue.drain_lane(shard)) {
+            let mut undelivered = Some(req);
+            for lane in 0..CHAOS_SHARDS {
+                if lane == shard || !queue.alive(lane) {
+                    continue;
+                }
+                match queue.push(lane, undelivered.take().expect("unplaced request")) {
+                    Ok(()) => break,
+                    Err(back) => undelivered = Some(back),
+                }
+            }
+            if let Some(req) = undelivered {
+                counters.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Response::Expired {
+                    waited: req.created.elapsed(),
+                });
+            }
+        }
+        return;
+    }
+}
+
+/// What one chaos session observed, for cross-run comparison.
+struct ChaosOutcome {
+    served: u64,
+    expired: u64,
+    retries: u64,
+    restarts: u64,
+    failed_shards: u64,
+    /// Buckets whose plan was successfully written behind.
+    persisted: BTreeSet<u32>,
+    /// Buckets that served at least one batch.
+    built: BTreeSet<u32>,
+    /// Post-session plan fingerprint per ladder bucket: (bucket,
+    /// offsets, peak, arena bytes). Missing buckets are built after the
+    /// session so the comparison is total — cross-bucket seeding is
+    /// exact on this ladder, so the fingerprint is build-path-invariant.
+    plans: Vec<(u32, Vec<u64>, u64, usize)>,
+}
+
+/// Run one supervised mini serving session of `requests` requests over
+/// `CHAOS_SHARDS` shard workers with `faults` armed; every 10th request
+/// arrives already expired so the deadline shed path always runs.
+fn run_chaos_session(
+    requests: usize,
+    faults: &Arc<FaultPlan>,
+    store_root: Option<&std::path::Path>,
+) -> Result<ChaosOutcome, String> {
+    let mut registry =
+        SharedStagingRegistry::new("mlp", "serving", RegistryConfig::new(&CHAOS_BUCKETS));
+    if let Some(root) = store_root {
+        registry.set_store(PlanStore::open(root).map_err(|e| e.to_string())?);
+    }
+    registry.set_faults(Arc::clone(faults));
+    let registry = &registry;
+
+    let queue: StealQueue<Request> = StealQueue::new(CHAOS_SHARDS);
+    let counters = ChaosCounters::default();
+    let persisted: Mutex<BTreeSet<u32>> = Mutex::new(BTreeSet::new());
+    let built: Mutex<BTreeSet<u32>> = Mutex::new(BTreeSet::new());
+    let (queue, counters, persisted, built) = (&queue, &counters, &persisted, &built);
+
+    let mut replies: Vec<(bool, mpsc::Receiver<Response>)> = Vec::with_capacity(requests);
+    let responses = std::thread::scope(|scope| {
+        for shard in 0..CHAOS_SHARDS {
+            scope.spawn(move || {
+                chaos_shard(shard, queue, registry, faults, persisted, built, counters);
+                queue.mark_dead(shard);
+            });
+        }
+        // Open-loop round-robin dispatch over live lanes.
+        for i in 0..requests {
+            let (rtx, rrx) = mpsc::channel();
+            let created = Instant::now();
+            let expired_on_arrival = i % 10 == 0;
+            let mut undelivered = Some(Request {
+                x: vec![i as f32],
+                created,
+                deadline: if expired_on_arrival { Some(created) } else { None },
+                reply: rtx,
+            });
+            replies.push((expired_on_arrival, rrx));
+            for attempt in 0..CHAOS_SHARDS {
+                let lane = (i + attempt) % CHAOS_SHARDS;
+                if !queue.alive(lane) {
+                    continue;
+                }
+                match queue.push(lane, undelivered.take().expect("unplaced request")) {
+                    Ok(()) => break,
+                    Err(back) => undelivered = Some(back),
+                }
+            }
+            if let Some(req) = undelivered {
+                // Every lane dead or closed: shed explicitly, never drop.
+                counters.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Response::Expired {
+                    waited: req.created.elapsed(),
+                });
+            }
+        }
+        // Gather every reply *before* closing: the replies are the proof
+        // of delivery, and closing only afterwards keeps the
+        // requeue-after-respawn path open for late rescues.
+        let gathered: Result<Vec<Response>, String> = replies
+            .iter()
+            .enumerate()
+            .map(|(i, (_, rrx))| {
+                rrx.recv_timeout(Duration::from_secs(30))
+                    .map_err(|_| format!("request {i}: no reply after 30s — stranded"))
+            })
+            .collect();
+        queue.close();
+        gathered
+    })?;
+
+    // Exactly-once: one reply arrived per request; a second would still
+    // be buffered in the channel.
+    for (i, (_, rrx)) in replies.iter().enumerate() {
+        if rrx.try_recv().is_ok() {
+            return Err(format!("request {i}: more than one reply"));
+        }
+    }
+    // Nothing stranded in a lane after shutdown.
+    for lane in 0..CHAOS_SHARDS {
+        let left = queue.drain_lane(lane).len();
+        if left != 0 {
+            return Err(format!("lane {lane}: {left} requests stranded after shutdown"));
+        }
+    }
+    let mut served = 0u64;
+    let mut expired = 0u64;
+    for (i, ((expired_on_arrival, _), resp)) in replies.iter().zip(&responses).enumerate() {
+        match resp {
+            Response::Ok { logits, .. } => {
+                if *expired_on_arrival {
+                    return Err(format!("request {i}: expired on arrival but served"));
+                }
+                if logits.len() != 1 || logits[0] != i as f32 {
+                    return Err(format!("request {i}: reply cross-wired ({logits:?})"));
+                }
+                served += 1;
+            }
+            Response::Expired { .. } => expired += 1,
+        }
+    }
+    if served + expired != requests as u64 {
+        return Err(format!("{served} served + {expired} expired != {requests}"));
+    }
+    let (c_served, c_expired) = (
+        counters.served.load(Ordering::Relaxed),
+        counters.expired.load(Ordering::Relaxed),
+    );
+    if (c_served, c_expired) != (served, expired) {
+        return Err(format!(
+            "counter drift: sent {c_served} Ok / {c_expired} Expired, received {served} / {expired}"
+        ));
+    }
+
+    // Fingerprint every ladder bucket (build the unbuilt ones now; one
+    // extra replay iteration is a no-op on a session-built plan).
+    let plans = CHAOS_BUCKETS
+        .iter()
+        .map(|&bucket| {
+            let slot = registry.checkout(bucket);
+            iterate_shared_slot(&slot, bucket);
+            let p = slot.plan();
+            (
+                bucket,
+                p.planned_offsets().map(|o| o.to_vec()).unwrap_or_default(),
+                p.planned_peak().unwrap_or(0),
+                p.arena_bytes(),
+            )
+        })
+        .collect();
+    Ok(ChaosOutcome {
+        served,
+        expired,
+        retries: counters.retries.load(Ordering::Relaxed),
+        restarts: counters.restarts.load(Ordering::Relaxed),
+        failed_shards: counters.failed_shards.load(Ordering::Relaxed),
+        persisted: relock(persisted).clone(),
+        built: relock(built).clone(),
+        plans,
+    })
+}
+
+/// One chaos episode: a faulted session (seeded panics + transient
+/// errors + slow solves + one corrupted store write), its accounting
+/// checks, a warm-restart check against the damaged store, and a
+/// fault-free twin session the plans must match byte-for-byte.
+fn fault_episode(seed: u64, requests: usize) -> Result<(), String> {
+    let mut rng = Pcg32::seeded(seed ^ 0xc4a0_5eed);
+    let faults = Arc::new(
+        FaultPlan::seeded(seed)
+            .exec_error_rate(CHAOS_EXEC_ERROR_RATE)
+            .panic_shard(0, rng.range(0, 4))
+            .panic_shard(1, rng.range(0, 4))
+            .delay_solves(Duration::from_micros(50))
+            .corrupt_store_write(0),
+    );
+    let root = plan_store_root(&format!("chaos_{seed:016x}_{requests}"));
+    let chaos = run_chaos_session(requests, &faults, Some(&root))?;
+    let fired = faults.fired();
+
+    // Supervision: every scheduled panic that fired cost exactly one
+    // restart; the budget was never exhausted.
+    if chaos.failed_shards != 0 {
+        return Err(format!(
+            "{} shards failed permanently (budget {CHAOS_RESTART_BUDGET})",
+            chaos.failed_shards
+        ));
+    }
+    if chaos.restarts != fired.shard_panics {
+        return Err(format!(
+            "restarts {} != injected panics that fired {}",
+            chaos.restarts, fired.shard_panics
+        ));
+    }
+    // Retry accounting: every drawn transient error cost exactly one
+    // bounded retry (exhaustion is impossible at this rate).
+    if chaos.retries != fired.exec_errors {
+        return Err(format!(
+            "retries {} != injected exec errors {}",
+            chaos.retries, fired.exec_errors
+        ));
+    }
+    // Deadline accounting: exactly the expired-on-arrival requests were
+    // shed — nothing else can expire in this episode.
+    let forced = (requests as u64).div_ceil(10);
+    if chaos.expired != forced {
+        return Err(format!(
+            "expired {} != {forced} expired-on-arrival requests",
+            chaos.expired
+        ));
+    }
+    if chaos.built.is_empty() || chaos.served == 0 {
+        return Err("a session with live shards must serve traffic".into());
+    }
+    if fired.solve_delays == 0 {
+        return Err("at least one (delayed) cold solve must have run".into());
+    }
+
+    // Store: the first write-behind was corrupted on disk. A warm
+    // restart must invalidate exactly that document — and install every
+    // other persisted plan.
+    if fired.store_corruptions != 1 {
+        return Err(format!(
+            "store corruptions fired {} (the first write is scheduled corrupt)",
+            fired.store_corruptions
+        ));
+    }
+    let mut restart =
+        SharedStagingRegistry::new("mlp", "serving", RegistryConfig::new(&CHAOS_BUCKETS));
+    restart.set_store(PlanStore::open(&root).map_err(|e| e.to_string())?);
+    let installed = restart.warm_from_store();
+    if installed != chaos.persisted.len() - 1 {
+        return Err(format!(
+            "warm restart installed {installed} of {} persisted plans (exactly one was corrupted)",
+            chaos.persisted.len()
+        ));
+    }
+    let st = restart.stats();
+    if st.store_invalidated != 1 {
+        return Err(format!("store_invalidated {} != 1: {st:?}", st.store_invalidated));
+    }
+    let _ = std::fs::remove_dir_all(&root);
+
+    // Fault-free twin: same request stream, nothing injected — every
+    // bucket's plan must be byte-identical to the faulted session's.
+    let clean_faults = Arc::new(FaultPlan::seeded(seed));
+    let clean = run_chaos_session(requests, &clean_faults, None)?;
+    if clean_faults.fired().total() != 0 {
+        return Err("fault-free twin must inject nothing".into());
+    }
+    if clean.restarts != 0 || clean.retries != 0 || clean.failed_shards != 0 {
+        return Err(format!(
+            "fault-free twin saw faults: {} restarts / {} retries / {} failed shards",
+            clean.restarts, clean.retries, clean.failed_shards
+        ));
+    }
+    if chaos.plans != clean.plans {
+        return Err(format!(
+            "plans diverge under faults:\n  faulted {:?}\n  clean   {:?}",
+            chaos.plans, clean.plans
+        ));
+    }
+    if chaos
+        .plans
+        .iter()
+        .any(|(_, offsets, peak, arena)| offsets.is_empty() || *peak == 0 || *arena == 0)
+    {
+        return Err("every bucket must end with a solved, non-trivial plan".into());
+    }
+    Ok(())
+}
+
+/// Corpus replay + fresh seeded episodes, mirroring `run_skyline_fuzz`:
+/// a failing fresh seed is persisted as `fault-{seed:016x}.seed` so it
+/// replays first on every future run (commit the file to pin it).
+fn run_fault_fuzz(episodes: u64, requests: usize) {
+    let dir = skyline_corpus_dir();
+    let corpus = corpus_seeds(&dir, EpisodeKind::Fault);
+    assert!(
+        !corpus.is_empty(),
+        "committed fault corpus must hold at least one seed"
+    );
+    for (path, seed) in &corpus {
+        if let Err(e) = fault_episode(*seed, requests) {
+            panic!("fault corpus regression {path:?}: {e}");
+        }
+    }
+
+    let base: u64 = std::env::var("PGMO_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfa17_c4a0_5eed_0001);
+    for i in 0..episodes {
+        let seed = base.wrapping_add(i);
+        if let Err(e) = fault_episode(seed, requests) {
+            let path = dir.join(format!("fault-{seed:016x}.seed"));
+            let _ = std::fs::write(&path, format!("{seed}\n"));
+            panic!(
+                "fault fuzz failed: {e}\nseed persisted to {path:?} — \
+                 commit it so the regression replays first"
+            );
+        }
+    }
+}
+
+#[test]
+fn staging_serve_session_survives_injected_faults() {
+    run_fault_fuzz(4, 120);
+}
+
+#[test]
+#[ignore = "heavy: 10× episodes, run by the nightly `cargo test -- --ignored` job"]
+fn staging_serve_session_survives_injected_faults_heavy() {
+    run_fault_fuzz(40, 160);
+}
+
+/// Quarantine contract: consecutive failures past the threshold take a
+/// bucket out of routing for the cooldown (largest-bucket fallback,
+/// poisoned plan evicted, event counted once); successes reset strikes;
+/// an expired cooldown is a fresh start.
+#[test]
+fn faults_quarantine_trips_reroutes_and_recovers() {
+    // Long cooldown: routing while quarantined.
+    let cfg = RegistryConfig::new(&CHAOS_BUCKETS).with_quarantine(2, Duration::from_secs(3600));
+    let reg = SharedStagingRegistry::new("mlp", "serving", cfg);
+    let slot = reg.checkout(2);
+    iterate_shared_slot(&slot, 2);
+    drop(slot);
+    assert_eq!(reg.resident_plans(), 1);
+    assert!(!reg.record_plan_failure(2), "first strike must not quarantine");
+    reg.record_plan_success(2);
+    assert!(!reg.record_plan_failure(2), "success resets consecutive strikes");
+    assert!(reg.record_plan_failure(2), "second consecutive failure quarantines");
+    assert!(reg.is_quarantined(2));
+    assert_eq!(reg.stats().quarantined, 1);
+    assert_eq!(reg.resident_plans(), 0, "the poisoned plan is evicted");
+    // Quarantined traffic degrades to the largest bucket; other buckets
+    // route normally, and the largest has nowhere bigger to go.
+    assert_eq!(reg.route_bucket(2), 8);
+    assert_eq!(reg.route_bucket(1), 1, "only the poisoned bucket reroutes");
+    assert_eq!(reg.route_bucket(8), 8);
+    // Failures during an active cooldown neither extend nor double-count.
+    assert!(!reg.record_plan_failure(2));
+    assert_eq!(reg.stats().quarantined, 1);
+
+    // Zero cooldown: expiry is observed as a fresh start.
+    let cfg = RegistryConfig::new(&CHAOS_BUCKETS).with_quarantine(2, Duration::ZERO);
+    let reg = SharedStagingRegistry::new("mlp", "serving", cfg);
+    assert!(!reg.record_plan_failure(4));
+    assert!(reg.record_plan_failure(4));
+    assert!(!reg.is_quarantined(4), "zero cooldown expires immediately");
+    assert_eq!(reg.route_bucket(4), 4, "routing resumes after expiry");
+    assert!(!reg.record_plan_failure(4), "fresh start: strikes cleared");
+}
+
+/// Write-behind failure contract: a failed store save is surfaced in
+/// `store_write_errors`, leaves no document, and does not interrupt
+/// serving — the next write-behind lands and survives a restart.
+#[test]
+fn faults_store_write_failure_is_surfaced_and_best_effort() {
+    let root = plan_store_root("fault_write_fail");
+    let ladder = [4u32];
+    let mut reg = SharedStagingRegistry::new("mlp", "serving", RegistryConfig::new(&ladder));
+    reg.set_store(PlanStore::open(&root).unwrap());
+    reg.set_faults(Arc::new(FaultPlan::seeded(3).fail_store_write(0)));
+    let slot = reg.checkout(4);
+    iterate_shared_slot(&slot, 4);
+    assert!(!reg.persist(&slot), "injected write failure must surface");
+    let st = reg.stats();
+    assert_eq!((st.store_writes, st.store_write_errors), (0, 1), "{st:?}");
+    assert!(
+        reg.store().unwrap().enumerate().is_empty(),
+        "a failed write must leave no document"
+    );
+    // Serving continues on the resident plan; the next write-behind
+    // (fault exhausted) lands.
+    iterate_shared_slot(&slot, 4);
+    assert!(reg.persist(&slot), "the next write-behind must land");
+    let st = reg.stats();
+    assert_eq!((st.store_writes, st.store_write_errors), (1, 1), "{st:?}");
+    drop(slot);
+
+    let mut restarted = SharedStagingRegistry::new("mlp", "serving", RegistryConfig::new(&ladder));
+    restarted.set_store(PlanStore::open(&root).unwrap());
+    assert_eq!(restarted.warm_from_store(), 1, "the landed document installs");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Background re-pack panic contract: the panicked thread is joined at
+/// the next iteration boundary, discarded, and counted; the incumbent
+/// plan keeps serving; the re-pack machinery recovers on the next
+/// interval.
+#[test]
+fn faults_background_repack_panic_keeps_the_incumbent_plan() {
+    let faults = Arc::new(FaultPlan::seeded(11).panic_repack(0));
+    let mut e = ReplayEngine::new(HostBackend::new(), "prop", "fault-repack", 1);
+    e.set_repack_interval(1);
+    e.set_faults(Arc::clone(&faults));
+    let mut sizes = vec![256u64, 512, 1024];
+    drive_engine(&mut e, &sizes); // profile + first solve
+    sizes[2] += 64; // ratchet → warm reopt → spawns re-pack #0 (panics)
+    drive_engine(&mut e, &sizes);
+    let peak = e.planned_peak().expect("solved plan");
+    drive_engine(&mut e, &sizes); // the boundary joins the dead re-pack
+    assert_eq!(e.repack_failed(), 1, "panicked re-pack discarded and counted");
+    assert_eq!(faults.fired().repack_panics, 1);
+    assert_eq!(e.planned_peak(), Some(peak), "the incumbent plan keeps serving");
+    assert_eq!(e.repacks(), 0, "a discarded attempt is not a re-pack");
+    sizes[2] += 64; // the next interval spawns a fresh, healthy re-pack
+    drive_engine(&mut e, &sizes);
+    drive_engine(&mut e, &sizes);
+    assert_eq!(e.repacks(), 1, "re-pack machinery recovers after the panic");
+    assert_eq!(e.repack_failed(), 1);
 }
