@@ -1,0 +1,154 @@
+//! Bench: anytime background re-pack vs the old cold re-solve
+//! (ROADMAP.md `## Anytime improvement`).
+//!
+//! The background re-pack used to re-run the best-fit heuristic cold.
+//! `anytime::improve` spends the same wall time better: its first
+//! restart *is* the default-policy cold solve (so it can never reclaim
+//! less), and whatever slice remains goes to the other block orders,
+//! lift-and-replace local moves, and — on small instances — bounded
+//! exact dives.
+//!
+//! The harness replays `bench_plan_seeding`'s chained mixed-deviation
+//! stream (diffuse ratchets + lifetime shifts + appended blocks) at 10k
+//! blocks. At every re-pack point it times a cold solve of the live
+//! trace, then hands `anytime::improve` a budget equal to that measured
+//! cold wall time, and credits each strategy the bytes it would reclaim
+//! from the shared incumbent (tightness-gated, like the engine: a
+//! re-pack never grows the arena). A paired comparison on identical
+//! incumbents — the stream then adopts the anytime result.
+//!
+//! Perf target (pinned here): at equal wall time on the mixed-delta
+//! stream, the anytime re-pack reclaims **at least** as many bytes as
+//! the cold re-solve. Reported as reclaimed bytes per search-second
+//! for both strategies.
+//!
+//! Run: `cargo bench --bench bench_anytime_repack`
+
+use pgmo::dsa::bestfit::{self, TraceDelta};
+use pgmo::dsa::{anytime, DsaInstance};
+use pgmo::testkit::gen::{large_dsa_triples, ratchet_triples};
+use pgmo::util::rng::Pcg32;
+use std::time::{Duration, Instant};
+
+const N: usize = 10_000;
+const ROUNDS: usize = 20;
+const REPACK_EVERY: usize = 5;
+
+/// Mixed mutation: diffuse ratchets plus occasional lifetime shifts and
+/// appended blocks (the messier §4.3 traffic, as in
+/// `bench_plan_seeding`).
+fn mixed(rng: &mut Pcg32, triples: &[(u64, u64, u64)]) -> Vec<(u64, u64, u64)> {
+    let horizon = triples.iter().map(|t| t.2).max().unwrap_or(64);
+    let mut out = ratchet_triples(rng, triples, 0.01);
+    for t in out.iter_mut() {
+        if rng.bool(0.002) {
+            let a = rng.below(horizon);
+            *t = (t.0, a, a + rng.range(1, 24));
+        }
+    }
+    if rng.bool(0.5) {
+        for _ in 0..rng.range_usize(1, 10) {
+            let a = rng.below(horizon);
+            out.push((rng.range(256, 4 << 20), a, a + rng.range(1, 24)));
+        }
+    }
+    out
+}
+
+#[derive(Default)]
+struct Tally {
+    reclaimed: u64,
+    search: Duration,
+    events: u64,
+    steps: u64,
+}
+
+impl Tally {
+    fn per_second(&self) -> f64 {
+        let secs = self.search.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.reclaimed as f64 / secs
+        }
+    }
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(0x5eed_0003);
+    let mut triples = large_dsa_triples(N, 0xa4_11_7e);
+    let mut inst = DsaInstance::from_triples(&triples);
+    let mut prev = bestfit::solve(&inst);
+    let mut warm_streak = 0usize;
+    let (mut cold_tally, mut any_tally) = (Tally::default(), Tally::default());
+
+    for _ in 0..ROUNDS {
+        let mutated = mixed(&mut rng, &triples);
+        let new_inst = DsaInstance::from_triples(&mutated);
+        let delta = TraceDelta::diff(&inst, &new_inst);
+        let r = bestfit::resolve(&inst, &prev, &new_inst, &delta);
+        warm_streak = if r.warm { warm_streak + 1 } else { 0 };
+        prev = r.assignment;
+
+        if warm_streak >= REPACK_EVERY {
+            // Strategy A — the old cold re-pack: a from-scratch solve,
+            // swapped in only when tighter (the engine's gate).
+            let t0 = Instant::now();
+            let cold = bestfit::solve(&new_inst);
+            let cold_elapsed = t0.elapsed();
+            cold_tally.reclaimed += prev.peak.saturating_sub(cold.peak);
+            cold_tally.search += cold_elapsed;
+            cold_tally.events += 1;
+
+            // Strategy B — the anytime search, granted exactly the wall
+            // time the cold solve just spent, from the same incumbent.
+            let budget = cold_elapsed.max(Duration::from_micros(50));
+            let t0 = Instant::now();
+            let any = anytime::improve(&new_inst, &prev, budget);
+            any_tally.search += t0.elapsed();
+            any_tally.reclaimed += any.reclaimed;
+            any_tally.events += 1;
+            any_tally.steps += any.steps;
+
+            // The stream serves the anytime result (never worse than
+            // the cold one — its first restart is that cold solve).
+            prev = any.assignment;
+            prev.validate(&new_inst).expect("anytime packing sound");
+            warm_streak = 0;
+        }
+
+        triples = mutated;
+        inst = new_inst;
+    }
+
+    println!(
+        "mixed-delta stream ({ROUNDS} rounds, re-pack every {REPACK_EVERY} warm): \
+         {} re-pack points",
+        any_tally.events
+    );
+    println!(
+        "cold re-solve   reclaimed {:>12} B in {:>9.1} ms search   {:>14.0} B/s",
+        cold_tally.reclaimed,
+        cold_tally.search.as_secs_f64() * 1e3,
+        cold_tally.per_second(),
+    );
+    println!(
+        "anytime search  reclaimed {:>12} B in {:>9.1} ms search   {:>14.0} B/s   \
+         ({} improvement steps)",
+        any_tally.reclaimed,
+        any_tally.search.as_secs_f64() * 1e3,
+        any_tally.per_second(),
+        any_tally.steps,
+    );
+    assert!(
+        any_tally.reclaimed >= cold_tally.reclaimed,
+        "anytime re-pack must reclaim at least as much as the cold re-solve \
+         at equal wall time ({} < {})",
+        any_tally.reclaimed,
+        cold_tally.reclaimed,
+    );
+    println!(
+        "target: anytime re-pack reclaims ≥ the cold re-solve at equal wall \
+         time on the mixed-delta stream"
+    );
+}

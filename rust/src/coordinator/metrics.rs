@@ -271,6 +271,17 @@ impl ServeMetrics {
                 plans.mean_repack_ns() as f64 / 1e3,
             ));
         }
+        if plans.anytime_steps > 0 || plans.reclaimed_bytes > 0 {
+            // The anytime search's yield: arena bytes the background
+            // improvement steps actually reclaimed from resident plans,
+            // against the wall time the searches spent looking.
+            out.push_str(&format!(
+                "\n  anytime: reclaimed {} bytes in {} ms search ({} improvement steps)",
+                plans.reclaimed_bytes,
+                plans.repack_ns_total / 1_000_000,
+                plans.anytime_steps,
+            ));
+        }
         if plans.reopts() > 0 {
             // Warm-start effectiveness: how many reopts kept their
             // placements, and what the incremental re-solve cost.
@@ -449,6 +460,8 @@ mod tests {
             repacks: 1,
             repack_ns_total: 8_000,
             repack_ns_max: 8_000,
+            anytime_steps: 2,
+            reclaimed_bytes: 4_096,
             ..RegistryStats::default()
         });
         let rollup = m.bucket_rollup();
@@ -488,6 +501,34 @@ mod tests {
         assert!(
             report.contains("repacks: 1 background re-packs, solve max 8.0 µs"),
             "{report}"
+        );
+        // 8_000 ns of search truncates to 0 ms — the line still reports
+        // the reclaimed yield and step count.
+        assert!(
+            report.contains("anytime: reclaimed 4096 bytes in 0 ms search (2 improvement steps)"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn anytime_line_absent_without_reclaim_activity() {
+        let mut m = ServeMetrics {
+            requests: 1,
+            batches: 1,
+            wall: Duration::from_secs(1),
+            ..Default::default()
+        };
+        m.registries.push(RegistryStats {
+            repacks: 1,
+            repack_ns_total: 8_000,
+            repack_ns_max: 8_000,
+            ..RegistryStats::default()
+        });
+        let report = m.report();
+        assert!(report.contains("repacks: 1 background re-packs"), "{report}");
+        assert!(
+            !report.contains("anytime: reclaimed"),
+            "gate-discarded searches alone must not print a yield line: {report}"
         );
     }
 

@@ -136,6 +136,16 @@ pub struct ServeConfig {
     /// interval, with the solve itself off the serving path (0 = never
     /// re-pack).
     pub repack_interval: u64,
+    /// Drift trigger for the background anytime re-pack: search when a
+    /// warm-reoptimized plan's peak exceeds its liveness lower bound by
+    /// more than this fraction — there are measurable bytes to reclaim —
+    /// instead of waiting out the fixed cadence (0.0 = drift never
+    /// triggers; the interval still applies).
+    pub repack_drift: f64,
+    /// Time slice, in milliseconds, each background anytime re-pack may
+    /// spend searching (policy restarts, lift-and-replace moves, bounded
+    /// exact dives) before publishing its incumbent.
+    pub anytime_budget_ms: u64,
     /// One process-wide plan registry shared by every shard (the
     /// default): each bucket plan is built once and replayed everywhere,
     /// under one unified budget. `false` gives every shard a private
@@ -181,6 +191,8 @@ impl Default for ServeConfig {
                 .collect(),
             plan_budget_bytes: u64::MAX,
             repack_interval: 16,
+            repack_drift: 0.05,
+            anytime_budget_ms: 25,
             shared_registry: true,
             plan_store: None,
             max_retries: 2,
@@ -293,7 +305,9 @@ impl InferenceServer {
         // registry through the identical code path.
         let registry_cfg = RegistryConfig::new(&self.cfg.ladder())
             .with_budget(self.cfg.plan_budget_bytes)
-            .with_repack_interval(self.cfg.repack_interval);
+            .with_repack_interval(self.cfg.repack_interval)
+            .with_repack_drift(self.cfg.repack_drift)
+            .with_anytime_budget_ms(self.cfg.anytime_budget_ms);
         // The persistent tier attaches (and warms the ladder) before any
         // worker spawns: every plan the store holds for a ladder key is
         // validated and installed up front, so the first batch per
@@ -913,6 +927,8 @@ impl<'a> ShardWorker<'a> {
         let solves_before = planner.solves();
         let resolves_before = planner.resolves();
         let repacks_before = planner.repacks();
+        let anytime_steps_before = planner.anytime_steps();
+        let reclaimed_before = planner.reclaimed_bytes();
         let repack_failed_before = planner.repack_failed();
         planner.begin_iteration();
 
@@ -971,6 +987,8 @@ impl<'a> ShardWorker<'a> {
         let resolve_ns = planner.last_resolve_ns();
         let repacked = planner.repacks() > repacks_before;
         let repack_ns = planner.last_repack_ns();
+        let anytime_steps = planner.anytime_steps() - anytime_steps_before;
+        let reclaimed = planner.reclaimed_bytes() - reclaimed_before;
         let repack_died = planner.repack_failed() > repack_failed_before;
         drop(planner);
         if built {
@@ -983,9 +1001,12 @@ impl<'a> ShardWorker<'a> {
             self.registry.record_cold_reopt();
         }
         if repacked {
-            // The solve ran on the background thread; only the swap
+            // The search ran on the background thread; only the swap
             // happened inside this batch's iteration boundary.
             self.registry.record_repack(repack_ns);
+        }
+        if anytime_steps > 0 || reclaimed > 0 {
+            self.registry.record_anytime(anytime_steps, reclaimed);
         }
         if repack_died {
             // A background re-pack panicked and was discarded; the

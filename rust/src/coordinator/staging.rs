@@ -149,9 +149,33 @@ impl StagingPlanner {
         self.engine.set_repack_interval(every);
     }
 
-    /// Background cold re-packs swapped into this planner's plan.
+    /// Drift-trigger a background re-pack when the plan's peak exceeds
+    /// its liveness lower bound by more than `fraction` (0 = never);
+    /// see `ReplayEngine::set_repack_drift`.
+    pub fn set_repack_drift(&mut self, fraction: f64) {
+        self.engine.set_repack_drift(fraction);
+    }
+
+    /// Time slice each background anytime re-pack search may spend;
+    /// see `ReplayEngine::set_anytime_budget_ms`.
+    pub fn set_anytime_budget_ms(&mut self, ms: u64) {
+        self.engine.set_anytime_budget_ms(ms);
+    }
+
+    /// Background anytime re-pack searches completed against this
+    /// planner's plan (swapped in or gate-discarded).
     pub fn repacks(&self) -> u64 {
         self.engine.repacks()
+    }
+
+    /// Published anytime improvement steps across re-pack searches.
+    pub fn anytime_steps(&self) -> u64 {
+        self.engine.anytime_steps()
+    }
+
+    /// Arena bytes reclaimed by anytime re-packs that swapped in.
+    pub fn reclaimed_bytes(&self) -> u64 {
+        self.engine.reclaimed_bytes()
     }
 
     /// Wall nanoseconds of the most recent background re-pack solve.
@@ -334,6 +358,8 @@ pub struct StagingRegistry {
     model: String,
     phase: String,
     repack_interval: u64,
+    repack_drift: f64,
+    anytime_budget_ms: u64,
     registry: PlanRegistry<StagingPlanner>,
     /// Optional persistent tier: warm-loaded at startup
     /// ([`warm_from_store`](Self::warm_from_store)), consulted on misses
@@ -354,6 +380,8 @@ impl StagingRegistry {
             model: model.to_string(),
             phase: phase.to_string(),
             repack_interval: cfg.repack_interval(),
+            repack_drift: cfg.repack_drift(),
+            anytime_budget_ms: cfg.anytime_budget_ms(),
             quarantine: Quarantine::from_config(&cfg),
             registry: PlanRegistry::new(cfg),
             store: None,
@@ -476,7 +504,7 @@ impl StagingRegistry {
     }
 
     fn adopt_stored(&self, sp: StoredPlan) -> StagingPlanner {
-        adopt_stored(sp, self.repack_interval)
+        adopt_stored(sp, self.repack_interval, self.repack_drift, self.anytime_budget_ms)
     }
 
     /// The normalized bucket ladder, ascending.
@@ -569,12 +597,15 @@ impl StagingRegistry {
                 seed = Some(planner);
             }
         }
-        let repack_interval = self.repack_interval;
+        let (repack_interval, repack_drift, anytime_budget_ms) =
+            (self.repack_interval, self.repack_drift, self.anytime_budget_ms);
         self.registry.get_or_insert_with(&key, move |k| {
             let mut planner = seed.unwrap_or_else(|| {
                 StagingPlanner::new(&k.model, &format!("{}-b{}", k.phase, k.batch_bucket))
             });
             planner.set_repack_interval(repack_interval);
+            planner.set_repack_drift(repack_drift);
+            planner.set_anytime_budget_ms(anytime_budget_ms);
             planner
         })
     }
@@ -617,6 +648,12 @@ impl StagingRegistry {
         self.registry.record_repack(ns);
     }
 
+    /// Record anytime-search outcomes of bucket plan re-packs (see
+    /// [`PlanRegistry::record_anytime`]).
+    pub fn record_anytime(&mut self, steps: u64, reclaimed: u64) {
+        self.registry.record_anytime(steps, reclaimed);
+    }
+
     /// Total bytes held across resident bucket plans (arenas + any live
     /// heap escapes).
     pub fn held_bytes(&self) -> u64 {
@@ -629,10 +666,15 @@ impl StagingRegistry {
 }
 
 /// Turn a validated store document into a replaying planner, restoring
-/// lineage and applying the registry's re-pack cadence — the same phase
+/// lineage and applying the registry's re-pack knobs — the same phase
 /// labeling as a cold build, so a warm-loaded plan is indistinguishable
 /// from the one that was persisted.
-fn adopt_stored(sp: StoredPlan, repack_interval: u64) -> StagingPlanner {
+fn adopt_stored(
+    sp: StoredPlan,
+    repack_interval: u64,
+    repack_drift: f64,
+    anytime_budget_ms: u64,
+) -> StagingPlanner {
     let mut planner = StagingPlanner::from_snapshot(
         &sp.key.model,
         &format!("{}-b{}", sp.key.phase, sp.key.batch_bucket),
@@ -640,6 +682,8 @@ fn adopt_stored(sp: StoredPlan, repack_interval: u64) -> StagingPlanner {
     );
     planner.seeded_from = sp.donor_bucket;
     planner.set_repack_interval(repack_interval);
+    planner.set_repack_drift(repack_drift);
+    planner.set_anytime_budget_ms(anytime_budget_ms);
     planner
 }
 
@@ -664,6 +708,8 @@ pub struct SharedStagingRegistry {
     model: String,
     phase: String,
     repack_interval: u64,
+    repack_drift: f64,
+    anytime_budget_ms: u64,
     registry: SharedPlanRegistry<StagingPlanner>,
     /// Optional persistent tier; see [`StagingRegistry`]'s `store`.
     /// Attached before the registry is shared (`set_store` takes `&mut`),
@@ -688,6 +734,8 @@ impl SharedStagingRegistry {
             model: model.to_string(),
             phase: phase.to_string(),
             repack_interval: cfg.repack_interval(),
+            repack_drift: cfg.repack_drift(),
+            anytime_budget_ms: cfg.anytime_budget_ms(),
             quarantine: Quarantine::from_config(&cfg),
             registry: SharedPlanRegistry::new(cfg),
             store: None,
@@ -744,7 +792,8 @@ impl SharedStagingRegistry {
                 continue; // someone else's plan — not ours to judge
             }
             let key = sp.key.clone();
-            let planner = adopt_stored(sp, self.repack_interval);
+            let planner =
+                adopt_stored(sp, self.repack_interval, self.repack_drift, self.anytime_budget_ms);
             if self.registry.install(&key, planner) {
                 self.registry.record_store_hit();
                 installed += 1;
@@ -817,7 +866,12 @@ impl SharedStagingRegistry {
         match store.load_file(&path) {
             Ok(sp) if sp.key == *key => {
                 self.registry.record_store_hit();
-                Some(adopt_stored(sp, self.repack_interval))
+                Some(adopt_stored(
+                    sp,
+                    self.repack_interval,
+                    self.repack_drift,
+                    self.anytime_budget_ms,
+                ))
             }
             _ => {
                 self.registry.record_store_invalidated();
@@ -875,14 +929,20 @@ impl SharedStagingRegistry {
             drop(donor);
             if let Some(mut planner) = seeded {
                 self.registry.record_seeded_build(t0.elapsed().as_nanos() as u64);
-                planner.set_repack_interval(self.repack_interval);
+                self.apply_repack_knobs(&mut planner);
                 return planner;
             }
         }
         let mut planner =
             StagingPlanner::new(&key.model, &format!("{}-b{}", key.phase, key.batch_bucket));
-        planner.set_repack_interval(self.repack_interval);
+        self.apply_repack_knobs(&mut planner);
         planner
+    }
+
+    fn apply_repack_knobs(&self, planner: &mut StagingPlanner) {
+        planner.set_repack_interval(self.repack_interval);
+        planner.set_repack_drift(self.repack_drift);
+        planner.set_anytime_budget_ms(self.anytime_budget_ms);
     }
 
     /// Apply the quarantine to a routed bucket: a quarantined bucket's
@@ -972,6 +1032,11 @@ impl SharedStagingRegistry {
     /// Record one background re-pack of a bucket plan.
     pub fn record_repack(&self, ns: u64) {
         self.registry.record_repack(ns);
+    }
+
+    /// Record anytime-search outcomes of bucket plan re-packs.
+    pub fn record_anytime(&self, steps: u64, reclaimed: u64) {
+        self.registry.record_anytime(steps, reclaimed);
     }
 
     /// Record one discarded (panicked) background re-pack attempt.
@@ -1243,6 +1308,28 @@ mod tests {
         assert_eq!(p.repacks(), 1);
         assert_eq!(p.stats().reopt_warm, 2);
         assert_eq!(p.arena_bytes(), 4096, "re-pack equals the cold packing");
+        // A single ratcheted buffer already sits at the liveness bound:
+        // the anytime search proves it immediately, and the tightness
+        // gate keeps the incumbent — nothing reclaimed, no steps.
+        assert_eq!((p.anytime_steps(), p.reclaimed_bytes()), (0, 0));
+    }
+
+    #[test]
+    fn registry_threads_anytime_knobs_without_disturbing_tight_plans() {
+        // The drift trigger is armed but every plan this traffic builds
+        // sits exactly at its liveness bound, so no search ever spawns —
+        // the knob threading must not perturb plans or counters.
+        let cfg = RegistryConfig::new(&[1])
+            .with_repack_drift(0.25)
+            .with_anytime_budget_ms(5);
+        let mut r = StagingRegistry::new("m", "serve", cfg);
+        one_registry_iteration(&mut r, 1, 1024); // profile
+        one_registry_iteration(&mut r, 1, 2048); // warm ratchet (peak = lb)
+        one_registry_iteration(&mut r, 1, 2048); // boundary where a swap would land
+        let p = r.planner(1);
+        assert_eq!(p.repacks(), 0, "tight plans never drift-trigger");
+        assert_eq!((p.anytime_steps(), p.reclaimed_bytes()), (0, 0));
+        assert_eq!(p.arena_bytes(), 2048);
     }
 
     #[test]

@@ -531,6 +531,45 @@ fn warm_place_indexed(
     debug_assert!(sky.check_invariants().is_ok());
 }
 
+/// Lift-and-replace local move for the anytime optimizer
+/// ([`super::anytime`]): remove the `lifted` blocks from `current`, keep
+/// every other placement at its offset, and re-run the indexed best-fit
+/// loop over the lifted blocks on the kept placements' envelope — the
+/// same keep/envelope/re-place machinery as a §4.3 warm re-solve, with
+/// the lifted set chosen by the search instead of by a trace delta. The
+/// result is always a valid assignment for `inst`; it improves on
+/// `current` only when the re-placement packs the lifted set tighter
+/// than where it sat (the caller gates on strict peak decrease).
+pub(crate) fn lift_and_replace(
+    inst: &DsaInstance,
+    current: &Assignment,
+    lifted: &[usize],
+    policy: Policy,
+) -> Assignment {
+    debug_assert_eq!(current.offsets.len(), inst.len());
+    let mut disturbed = lifted.to_vec();
+    disturbed.sort_unstable();
+    disturbed.dedup();
+    if disturbed.is_empty() {
+        return current.clone();
+    }
+    let mut is_lifted = vec![false; inst.len()];
+    for &i in &disturbed {
+        is_lifted[i] = true;
+    }
+    let kept: Vec<(u64, u64, u64)> = (0..inst.len())
+        .filter(|&i| !is_lifted[i])
+        .map(|i| {
+            let b = &inst.blocks[i];
+            (b.alloc_at, b.free_at, current.offsets[i] + b.size)
+        })
+        .collect();
+    let mut offsets = current.offsets.clone();
+    let envelope = kept_envelope(inst, &kept, &disturbed);
+    warm_place_indexed(inst, policy, &mut offsets, &disturbed, &envelope);
+    Assignment::from_offsets(inst, offsets)
+}
+
 /// The quadratic spec of the warm placement loop: reference `Vec` skyline
 /// plus a linear rescan of the disturbed blocks per step.
 fn warm_place_reference(
@@ -1129,6 +1168,40 @@ mod tests {
         let r = resolve(&prev_inst, &prev, &new_inst, &delta);
         r.assignment.validate(&new_inst).unwrap();
         assert_eq!(r.disturbed, 2);
+    }
+
+    #[test]
+    fn lift_and_replace_is_valid_and_keeps_unlifted_offsets() {
+        let mut rng = Pcg32::seeded(0x11f7);
+        for case in 0..20 {
+            let n = rng.range_usize(4, 40);
+            let triples: Vec<(u64, u64, u64)> = (0..n)
+                .map(|_| {
+                    let a = rng.range(0, 100);
+                    (rng.range(1, 512), a, a + rng.range(1, 30))
+                })
+                .collect();
+            let inst = DsaInstance::from_triples(&triples);
+            let current = solve(&inst);
+            let lifted: Vec<usize> = (0..n).filter(|_| rng.bool(0.3)).collect();
+            for choice in BlockChoice::ALL {
+                let moved =
+                    lift_and_replace(&inst, &current, &lifted, Policy { block_choice: choice });
+                moved
+                    .validate(&inst)
+                    .unwrap_or_else(|e| panic!("case {case} policy {}: {e}", choice.name()));
+                for i in 0..n {
+                    if !lifted.contains(&i) {
+                        assert_eq!(
+                            moved.offsets[i], current.offsets[i],
+                            "case {case}: unlifted block {i} moved"
+                        );
+                    }
+                }
+            }
+            // Lifting nothing is the identity.
+            assert_eq!(lift_and_replace(&inst, &current, &[], Policy::default()), current);
+        }
     }
 
     // ----- cross-bucket plan seeding -----------------------------------------

@@ -14,6 +14,13 @@
 //! quickly. A wall-clock time limit mirrors the paper's 1-hour CPLEX cap;
 //! on timeout the incumbent (seeded with the best-fit heuristic solution)
 //! is returned with `proved_optimal = false`.
+//!
+//! The search core is exposed as [`dive`]: a bounded branch-and-bound
+//! descent seeded from *any* caller-supplied incumbent, cut off by a
+//! wall-clock deadline and a node budget. [`solve`] is `dive` seeded
+//! from the best-fit heuristic with an unlimited node budget; the
+//! anytime optimizer ([`super::anytime`]) issues short node-bounded
+//! dives from its own incumbent instead.
 
 use super::bestfit;
 use super::problem::DsaInstance;
@@ -32,32 +39,134 @@ pub struct ExactResult {
     pub elapsed: Duration,
 }
 
-/// Solve exactly with a time limit.
-pub fn solve(inst: &DsaInstance, time_limit: Duration) -> ExactResult {
-    let start = Instant::now();
+/// Outcome of one bounded branch-and-bound dive (see [`dive`]).
+#[derive(Debug, Clone)]
+pub struct DiveResult {
+    /// Best assignment found: the seed incumbent (cloned — the caller's
+    /// copy is never aliased by branching scratch state) or a strictly
+    /// tighter packing.
+    pub assignment: Assignment,
+    /// Search nodes expanded before completion or cutoff.
+    pub nodes: u64,
+    /// True when the search space was exhausted (or the liveness lower
+    /// bound met) within the budgets — the assignment is then a
+    /// certified optimum.
+    pub completed: bool,
+}
+
+struct Ctx<'a> {
+    inst: &'a DsaInstance,
+    order: &'a [usize],
+    overlaps: &'a [Vec<usize>],
+    lb: u64,
+    best: Assignment,
+    nodes: u64,
+    node_limit: u64,
+    deadline: Instant,
+    cut_off: bool,
+}
+
+fn dfs(ctx: &mut Ctx<'_>, depth: usize, offsets: &mut Vec<u64>, peak: u64) {
+    ctx.nodes += 1;
+    if ctx.cut_off || ctx.best.peak == ctx.lb {
+        return;
+    }
+    // The deadline is polled on the very first node (so a zero budget
+    // returns the untouched seed) and every 4096 nodes after; the node
+    // budget is exact.
+    if ctx.nodes > ctx.node_limit
+        || (ctx.nodes & 4095 == 1 && Instant::now() >= ctx.deadline)
+    {
+        ctx.cut_off = true;
+        return;
+    }
+    if depth == ctx.order.len() {
+        if peak < ctx.best.peak {
+            // Scatter branch-order offsets back to block ids.
+            let mut by_id = vec![0u64; ctx.inst.len()];
+            for (k, &i) in ctx.order.iter().enumerate() {
+                by_id[i] = offsets[k];
+            }
+            ctx.best = Assignment::from_offsets(ctx.inst, by_id);
+            debug_assert_eq!(ctx.best.peak, peak);
+        }
+        return;
+    }
+
+    let bid = ctx.order[depth];
+    let b = &ctx.inst.blocks[bid];
+
+    // Candidate offsets: 0 plus tops of overlapping placed blocks.
+    let mut candidates: Vec<u64> = vec![0];
+    for &p in &ctx.overlaps[depth] {
+        candidates.push(offsets[p] + ctx.inst.blocks[ctx.order[p]].size);
+    }
+    candidates.sort_unstable();
+    candidates.dedup();
+
+    for x in candidates {
+        let top = x + b.size;
+        if top.max(peak) >= ctx.best.peak {
+            // Candidates ascend, so all later ones prune too.
+            break;
+        }
+        if let Some(cap) = ctx.inst.capacity {
+            if top > cap {
+                break;
+            }
+        }
+        // Feasibility vs placed overlapping blocks.
+        let collides = ctx.overlaps[depth].iter().any(|&p| {
+            let pb = &ctx.inst.blocks[ctx.order[p]];
+            let (px, ptop) = (offsets[p], offsets[p] + pb.size);
+            x < ptop && px < top
+        });
+        if collides {
+            continue;
+        }
+        offsets.push(x);
+        dfs(ctx, depth + 1, offsets, peak.max(top));
+        offsets.pop();
+        if ctx.cut_off || ctx.best.peak == ctx.lb {
+            return;
+        }
+    }
+}
+
+/// One bounded branch-and-bound dive seeded from `incumbent`.
+///
+/// The incumbent is **cloned before branching** — the search's scratch
+/// state never mutates the caller's copy, and a cut-off dive returns an
+/// exact clone of the seed. The returned assignment is always valid for
+/// `inst` and never worse than the seed; `completed = true` certifies it
+/// as a global optimum (search space exhausted, or the liveness lower
+/// bound was already met). The dive stops at `deadline` (polled on the
+/// first node and every 4096 thereafter) or after `node_limit` expanded
+/// nodes, whichever comes first.
+pub fn dive(
+    inst: &DsaInstance,
+    incumbent: &Assignment,
+    deadline: Instant,
+    node_limit: u64,
+) -> DiveResult {
     let n = inst.len();
+    debug_assert_eq!(incumbent.offsets.len(), n, "incumbent must match the instance");
     if n == 0 {
-        return ExactResult {
+        return DiveResult {
             assignment: Assignment {
                 offsets: Vec::new(),
                 peak: 0,
             },
-            proved_optimal: true,
             nodes: 0,
-            elapsed: start.elapsed(),
+            completed: true,
         };
     }
-
     let lb = inst.lower_bound();
-
-    // Incumbent: the heuristic solution (also the paper's comparison).
-    let mut best = bestfit::solve(inst);
-    if best.peak == lb {
-        return ExactResult {
-            assignment: best,
-            proved_optimal: true,
+    if incumbent.peak <= lb {
+        return DiveResult {
+            assignment: incumbent.clone(),
             nodes: 0,
-            elapsed: start.elapsed(),
+            completed: true,
         };
     }
 
@@ -79,99 +188,43 @@ pub fn solve(inst: &DsaInstance, time_limit: Duration) -> ExactResult {
         })
         .collect();
 
-    struct Ctx<'a> {
-        inst: &'a DsaInstance,
-        order: &'a [usize],
-        overlaps: &'a [Vec<usize>],
-        lb: u64,
-        best: Assignment,
-        nodes: u64,
-        deadline: Instant,
-        timed_out: bool,
-    }
-
-    fn dfs(ctx: &mut Ctx<'_>, depth: usize, offsets: &mut Vec<u64>, peak: u64) {
-        ctx.nodes += 1;
-        if ctx.timed_out || ctx.best.peak == ctx.lb {
-            return;
-        }
-        if ctx.nodes % 4096 == 0 && Instant::now() >= ctx.deadline {
-            ctx.timed_out = true;
-            return;
-        }
-        if depth == ctx.order.len() {
-            if peak < ctx.best.peak {
-                // Scatter branch-order offsets back to block ids.
-                let mut by_id = vec![0u64; ctx.inst.len()];
-                for (k, &i) in ctx.order.iter().enumerate() {
-                    by_id[i] = offsets[k];
-                }
-                ctx.best = Assignment::from_offsets(ctx.inst, by_id);
-                debug_assert_eq!(ctx.best.peak, peak);
-            }
-            return;
-        }
-
-        let bid = ctx.order[depth];
-        let b = &ctx.inst.blocks[bid];
-
-        // Candidate offsets: 0 plus tops of overlapping placed blocks.
-        let mut candidates: Vec<u64> = vec![0];
-        for &p in &ctx.overlaps[depth] {
-            candidates.push(offsets[p] + ctx.inst.blocks[ctx.order[p]].size);
-        }
-        candidates.sort_unstable();
-        candidates.dedup();
-
-        for x in candidates {
-            let top = x + b.size;
-            if top.max(peak) >= ctx.best.peak {
-                // Candidates ascend, so all later ones prune too.
-                break;
-            }
-            if let Some(cap) = ctx.inst.capacity {
-                if top > cap {
-                    break;
-                }
-            }
-            // Feasibility vs placed overlapping blocks.
-            let collides = ctx.overlaps[depth].iter().any(|&p| {
-                let pb = &ctx.inst.blocks[ctx.order[p]];
-                let (px, ptop) = (offsets[p], offsets[p] + pb.size);
-                x < ptop && px < top
-            });
-            if collides {
-                continue;
-            }
-            offsets.push(x);
-            dfs(ctx, depth + 1, offsets, peak.max(top));
-            offsets.pop();
-            if ctx.timed_out || ctx.best.peak == ctx.lb {
-                return;
-            }
-        }
-    }
-
     let mut ctx = Ctx {
         inst,
         order: &order,
         overlaps: &overlaps,
         lb,
-        best: best.clone(),
+        best: incumbent.clone(),
         nodes: 0,
-        deadline: start + time_limit,
-        timed_out: false,
+        node_limit,
+        deadline,
+        cut_off: false,
     };
     let mut offsets = Vec::with_capacity(n);
     dfs(&mut ctx, 0, &mut offsets, 0);
 
-    best = ctx.best;
-    let proved = !ctx.timed_out;
-    debug_assert!(best.validate(inst).is_ok());
-    ExactResult {
-        assignment: best,
-        proved_optimal: proved,
+    debug_assert!(ctx.best.validate(inst).is_ok());
+    DiveResult {
+        assignment: ctx.best,
         nodes: ctx.nodes,
+        completed: !ctx.cut_off,
+    }
+}
+
+/// Solve exactly with a time limit.
+///
+/// Every exit path — empty instance, lower bound met by the heuristic
+/// seed, completed search, timeout — reports `nodes` as the actual
+/// expansion count (0 when no branching happened) and `elapsed` as the
+/// wall time from entry.
+pub fn solve(inst: &DsaInstance, time_limit: Duration) -> ExactResult {
+    let start = Instant::now();
+    // Incumbent: the heuristic solution (also the paper's comparison).
+    let seed = bestfit::solve(inst);
+    let d = dive(inst, &seed, start + time_limit, u64::MAX);
+    ExactResult {
+        assignment: d.assignment,
+        proved_optimal: d.completed,
+        nodes: d.nodes,
         elapsed: start.elapsed(),
     }
 }
@@ -197,6 +250,23 @@ mod tests {
         let r = solve(&inst, LIMIT);
         assert!(r.proved_optimal);
         assert_eq!(r.assignment.peak, 30);
+    }
+
+    #[test]
+    fn empty_instance_reports_consistent_counters() {
+        // Regression: the empty path must look exactly like any other
+        // no-branching exit — proved, zero nodes, elapsed recorded.
+        let inst = DsaInstance::from_triples(&[]);
+        let r = solve(&inst, LIMIT);
+        assert!(r.proved_optimal);
+        assert_eq!(r.assignment.peak, 0);
+        assert!(r.assignment.offsets.is_empty());
+        assert_eq!(r.nodes, 0);
+        assert!(r.elapsed <= LIMIT);
+        // Same contract through the bounded entry.
+        let d = dive(&inst, &r.assignment, Instant::now() + LIMIT, u64::MAX);
+        assert!(d.completed);
+        assert_eq!((d.nodes, d.assignment.peak), (0, 0));
     }
 
     /// Exhaustive grid search over small offsets, used to certify the
@@ -258,9 +328,11 @@ mod tests {
     }
 
     #[test]
-    fn timeout_returns_incumbent() {
-        // A dense instance with a zero time budget must still return the
-        // (valid) heuristic incumbent, unproven.
+    fn timeout_returns_the_heuristic_incumbent_unproven() {
+        // Regression: a zero time budget must cut off on the very first
+        // node — before any improvement — and return the (valid)
+        // best-fit seed byte-for-byte, with proved_optimal = false and
+        // the node/elapsed counters still populated.
         let mut rng = Pcg32::seeded(41);
         let triples: Vec<(u64, u64, u64)> = (0..40)
             .map(|_| {
@@ -269,7 +341,57 @@ mod tests {
             })
             .collect();
         let inst = DsaInstance::from_triples(&triples);
+        let seed = bestfit::solve(&inst);
+        assert!(seed.peak > inst.lower_bound(), "instance must not be lb-tight");
         let r = solve(&inst, Duration::from_nanos(0));
         r.assignment.validate(&inst).unwrap();
+        assert!(!r.proved_optimal);
+        assert_eq!(r.assignment.offsets, seed.offsets, "incumbent is the seed");
+        assert_eq!(r.assignment.peak, seed.peak);
+        assert!(r.nodes >= 1, "the cutoff node itself is counted");
+    }
+
+    #[test]
+    fn dive_clones_the_seed_and_never_worsens_it() {
+        // Regression: branching scratch state must not alias the
+        // caller's incumbent — a cut-off dive hands back an exact clone
+        // and leaves the original untouched.
+        let mut rng = Pcg32::seeded(43);
+        let triples: Vec<(u64, u64, u64)> = (0..12)
+            .map(|_| {
+                let a = rng.range(0, 20);
+                (rng.range(1, 32), a, a + rng.range(1, 10))
+            })
+            .collect();
+        let inst = DsaInstance::from_triples(&triples);
+        let seed = bestfit::solve(&inst);
+        let before = seed.clone();
+        let cut = dive(&inst, &seed, Instant::now(), u64::MAX);
+        assert_eq!(seed.offsets, before.offsets, "seed untouched by the dive");
+        assert_eq!(seed.peak, before.peak);
+        assert_eq!(cut.assignment.offsets, seed.offsets, "cut-off dive = clone");
+        let full = dive(&inst, &seed, Instant::now() + LIMIT, u64::MAX);
+        assert!(full.completed);
+        assert!(full.assignment.peak <= seed.peak);
+        assert!(full.assignment.validate(&inst).is_ok());
+        assert_eq!(seed.offsets, before.offsets, "seed untouched by a full dive");
+    }
+
+    #[test]
+    fn dive_respects_the_node_budget() {
+        let mut rng = Pcg32::seeded(47);
+        let triples: Vec<(u64, u64, u64)> = (0..30)
+            .map(|_| {
+                let a = rng.range(0, 40);
+                (rng.range(1, 80), a, a + rng.range(1, 20))
+            })
+            .collect();
+        let inst = DsaInstance::from_triples(&triples);
+        let seed = bestfit::solve(&inst);
+        let d = dive(&inst, &seed, Instant::now() + LIMIT, 64);
+        assert!(!d.completed, "a 30-block search cannot finish in 64 nodes");
+        assert!(d.nodes <= 65, "budget is exact (+1 for the cutoff node)");
+        assert!(d.assignment.peak <= seed.peak);
+        assert!(d.assignment.validate(&inst).is_ok());
     }
 }

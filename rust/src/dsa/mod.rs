@@ -26,9 +26,16 @@
 //! * [`policies`] — ablatable block-/offset-choice policies;
 //! * [`firstfit`] — address-ordered first-fit baseline (what an idealized
 //!   online allocator achieves);
-//! * [`exact`] — branch-and-bound exact solver standing in for CPLEX;
+//! * [`exact`] — branch-and-bound exact solver standing in for CPLEX,
+//!   with a bounded [`exact::dive`] entry reused by the anytime search;
+//! * [`anytime`] — anytime improvement of an incumbent packing: policy
+//!   restarts, lift-and-replace local moves, and bounded exact dives
+//!   under a time slice, with a monotone-incumbent guarantee (the
+//!   background re-pack path runs it — ROADMAP.md `## Anytime
+//!   improvement`);
 //! * [`mip`] — LP-format emitter of the paper's §3.1 MIP formulation.
 
+pub mod anytime;
 pub mod bestfit;
 pub mod candidates;
 pub mod exact;

@@ -79,11 +79,21 @@
 //! and [`plan::ReplayEngine::adopt_plan`] installs the result so the
 //! new bucket replays from its very first iteration instead of paying a
 //! profile + cold solve on the serving path. Against warm-start drift,
-//! a configurable re-pack interval (`ServeConfig::repack_interval`,
-//! `--repack-every`) re-solves the live trace on a background thread
-//! after every `K`th consecutive warm reopt and swaps the fresh packing
-//! in at the next iteration boundary when it is tighter than the
-//! incumbent, bounding drift to one interval without growing the arena.
+//! a background re-pack fires on either a fixed cadence (every `K`th
+//! consecutive warm reopt, `ServeConfig::repack_interval` /
+//! `--repack-every`) or a drift trigger (incumbent peak above the
+//! liveness lower bound by more than `ServeConfig::repack_drift` /
+//! `--repack-drift`), and runs [`dsa::anytime::improve`] instead of a
+//! cold heuristic re-run: an anytime search seeded from the incumbent
+//! packing — policy-perturbation restarts across all four block
+//! orders, lift-and-replace local moves on the peak, and bounded
+//! branch-and-bound dives reusing [`dsa::exact`] — that publishes only
+//! validated, strictly tighter incumbents under a configurable time
+//! slice (`--anytime-budget-ms`), so cancellation at any moment yields
+//! a sound plan no worse than the heuristic's. The result swaps in at
+//! the next iteration boundary when it is tighter than the incumbent,
+//! bounding drift without growing the arena, and the serve report
+//! shows the yield as reclaimed bytes per search-second.
 //!
 //! Solved plans also survive the process: [`plan::PlanStore`] is a disk
 //! tier beneath the registry persisting each plan — profiled trace,

@@ -353,6 +353,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "background re-pack a bucket plan after this many warm reopts ('off' = never)",
         )
         .opt_default(
+            "repack-drift",
+            "0.05",
+            "also re-pack when a plan's peak drifts above its liveness lower bound by \
+             this fraction ('off' = drift never triggers; the cadence still applies)",
+        )
+        .opt_default(
+            "anytime-budget-ms",
+            "25",
+            "time slice per background anytime re-pack search (restarts, local moves, \
+             bounded exact dives); results swap in only when strictly tighter",
+        )
+        .opt_default(
             "shared-registry",
             "on",
             "one process-wide plan registry shared by all shards ('off' = private per-shard registries)",
@@ -405,6 +417,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         bucket_ladder: a.get_csv::<usize>("buckets")?,
         plan_budget_bytes,
         repack_interval: a.get_interval_or("repack-every", 16)?,
+        repack_drift: a.get_fraction_or("repack-drift", 0.05)?,
+        anytime_budget_ms: a.get_or("anytime-budget-ms", 25u64)?,
         shared_registry: a.get_switch_or("shared-registry", true)?,
         plan_store: a.get_path("plan-store"),
         max_retries: a.get_or("max-retries", 2u32)?,

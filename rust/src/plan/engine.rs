@@ -25,18 +25,27 @@
 //!   plan scaled along the batch dimension (`bestfit::seed_scaled`) —
 //!   so the engine replays from its very first iteration; every
 //!   deviation rule above applies unchanged from then on.
-//! * **Periodic cold re-pack**: chained warm reoptimizations can drift
-//!   above what a fresh solve would achieve. With a nonzero
-//!   [`set_repack_interval`](ReplayEngine::set_repack_interval), every
-//!   `K`th consecutive warm reopt spawns a *background* re-solve of the
-//!   live trace; the result swaps in atomically at the next iteration
-//!   boundary (no block is live there) when it is tighter than the
-//!   incumbent plan, bounding drift to one interval — post-repack peak
-//!   is exactly `min(incumbent peak, cold peak)`, so a re-pack never
-//!   grows the arena. The solve overlaps serving; the boundary join is
-//!   a no-op once the worker finished, and at worst waits out one
-//!   solve's remainder per `K` reopts. A cold solve of any kind resets
-//!   the interval — it is already a fresh packing.
+//! * **Background anytime re-pack**: chained warm reoptimizations can
+//!   drift above what a fresh solve would achieve, and the one-shot
+//!   heuristic itself leaves bytes on the table. Two triggers arm a
+//!   *background* search of the live trace: a fixed cadence
+//!   ([`set_repack_interval`](ReplayEngine::set_repack_interval) — every
+//!   `K`th consecutive warm reopt) and a drift threshold
+//!   ([`set_repack_drift`](ReplayEngine::set_repack_drift) — the planned
+//!   peak sits more than that fraction above the instance's lower
+//!   bound, i.e. there are measurably bytes to reclaim). The worker
+//!   runs [`anytime::improve`] seeded from the incumbent assignment for
+//!   [`set_anytime_budget_ms`](ReplayEngine::set_anytime_budget_ms)
+//!   milliseconds — policy restarts (never worse than the old cold
+//!   re-pack), lift-and-replace moves, bounded exact dives — and the
+//!   result swaps in atomically at the next iteration boundary (no
+//!   block is live there) when it is *strictly* tighter than the
+//!   incumbent plan, so a re-pack never grows the arena. Neither
+//!   trigger fires without at least one warm reopt since the last
+//!   fresh packing, so fixed-traffic replay stays byte-deterministic.
+//!   The search overlaps serving; the boundary join is a no-op once
+//!   the worker finished. A cold solve of any kind resets both
+//!   triggers — it is already a fresh packing.
 //!
 //! Soundness: replay identifies blocks positionally, which is only sound
 //! for hot propagation. Before handing out a planned slot off the fast
@@ -48,6 +57,7 @@
 
 use super::backend::MemoryBackend;
 use crate::alloc::AllocStats;
+use crate::dsa::anytime::{self, AnytimeResult};
 use crate::dsa::bestfit::{self, TraceDelta};
 use crate::dsa::problem::DsaInstance;
 use crate::dsa::solution::Assignment;
@@ -57,7 +67,7 @@ use crate::trace::{Trace, TraceEvent};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One expected event of a hot iteration, in plan order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +88,9 @@ struct Plan {
     sizes: Vec<u64>,
     offsets: Vec<u64>,
     peak: u64,
+    /// The instance's lower bound, cached at install time — the drift
+    /// trigger compares the peak against it every boundary.
+    lb: u64,
     /// Arena base address the backend reserved for this plan.
     base: u64,
     /// The expected event sequence of a hot iteration — drives the
@@ -95,13 +108,14 @@ impl Plan {
     }
 }
 
-/// An in-flight background re-pack: a worker thread cold-solving the
-/// live trace. `generation` names the plan install the trace was cloned
-/// from; if the plan changed underneath (a reopt landed first), the
-/// result is stale and dropped unjoined.
+/// An in-flight background re-pack: a worker thread running the anytime
+/// search over the live trace, seeded from the incumbent assignment.
+/// `generation` names the plan install the seed was cloned from; if the
+/// plan changed underneath (a reopt landed first), the result is stale
+/// and dropped unjoined.
 struct RepackJob {
     generation: u64,
-    handle: std::thread::JoinHandle<(Arc<Trace>, DsaInstance, Assignment, u64)>,
+    handle: std::thread::JoinHandle<(Arc<Trace>, DsaInstance, AnytimeResult, u64)>,
 }
 
 impl std::fmt::Debug for RepackJob {
@@ -259,6 +273,16 @@ pub struct ReplayEngine<M: MemoryBackend> {
     /// Background re-pack cadence: after this many consecutive warm
     /// reopts, re-solve the live trace off the serving path (0 = never).
     repack_interval: u64,
+    /// Drift trigger: search when the planned peak exceeds the plan
+    /// instance's lower bound by more than this fraction *and* at least
+    /// one warm reopt accrued since the last fresh packing (0.0 = off).
+    repack_drift: f64,
+    /// Wall-clock slice each background anytime search may spend.
+    anytime_budget: Duration,
+    /// Improvement steps published by background anytime searches.
+    anytime_steps: u64,
+    /// Arena bytes reclaimed by swapped-in anytime results.
+    reclaimed_bytes: u64,
     /// Warm reopts since the last fresh packing (cold solve or re-pack).
     warm_since_repack: u64,
     /// Bumped on every plan install; pending re-packs of older
@@ -302,6 +326,10 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             last_resolve_ns: 0,
             resolves: 0,
             repack_interval: 0,
+            repack_drift: 0.0,
+            anytime_budget: Duration::from_millis(25),
+            anytime_steps: 0,
+            reclaimed_bytes: 0,
             warm_since_repack: 0,
             plan_generation: 0,
             repack: None,
@@ -428,6 +456,36 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.repack_interval = every;
     }
 
+    /// Arm the drift trigger: spawn a background anytime search whenever
+    /// the planned peak exceeds the plan instance's lower bound by more
+    /// than `fraction` (e.g. `0.05` = 5% of reclaimable headroom) and at
+    /// least one warm reopt accrued since the last fresh packing. `0.0`
+    /// disables it (the default), leaving only the fixed cadence.
+    pub fn set_repack_drift(&mut self, fraction: f64) {
+        self.repack_drift = fraction.max(0.0);
+    }
+
+    /// Wall-clock budget (milliseconds) each background anytime search
+    /// may spend. A zero budget degrades every re-pack to a no-op probe
+    /// (the seed comes back untouched and the tightness gate discards
+    /// it).
+    pub fn set_anytime_budget_ms(&mut self, ms: u64) {
+        self.anytime_budget = Duration::from_millis(ms);
+    }
+
+    /// Improvement steps published by background anytime searches (each
+    /// one a validated assignment strictly tighter than its
+    /// predecessor), summed across all completed re-packs.
+    pub fn anytime_steps(&self) -> u64 {
+        self.anytime_steps
+    }
+
+    /// Arena bytes reclaimed by background searches whose result swapped
+    /// in (incumbent peak minus the swapped-in peak, summed).
+    pub fn reclaimed_bytes(&self) -> u64 {
+        self.reclaimed_bytes
+    }
+
     /// Background cold re-packs completed: swapped into this engine's
     /// plan when tighter than the incumbent, or discarded after
     /// confirming the incumbent already matched a fresh packing.
@@ -519,6 +577,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             sizes,
             offsets: sol.offsets,
             peak: sol.peak,
+            lb: inst.lower_bound(),
             base,
             events,
             addrs,
@@ -613,20 +672,37 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.install_plan(ctx, Arc::new(merged), &new_inst, r.assignment)
     }
 
-    /// Spawn the background re-pack once `repack_interval` consecutive
-    /// warm reopts have accumulated and no re-pack is already in flight.
+    /// Spawn the background anytime search when either trigger says
+    /// there is work — the fixed cadence (`repack_interval` consecutive
+    /// warm reopts) or measured drift (the planned peak more than
+    /// `repack_drift` above the instance's lower bound) — and no search
+    /// is already in flight. Both triggers require at least one warm
+    /// reopt since the last fresh packing: an undrifted plan has
+    /// nothing a search is *needed* for, and fixed-traffic replay must
+    /// never become timing-dependent.
     fn maybe_spawn_repack(&mut self) {
-        if self.repack_interval == 0
-            || self.warm_since_repack < self.repack_interval
-            || self.repack.is_some()
-        {
+        if self.warm_since_repack == 0 || self.repack.is_some() {
+            return;
+        }
+        let interval_due =
+            self.repack_interval > 0 && self.warm_since_repack >= self.repack_interval;
+        let drift_due = self.repack_drift > 0.0 && {
+            let plan = self.plan.as_ref().expect("repack without plan");
+            plan.lb > 0 && (plan.peak - plan.lb) as f64 > plan.lb as f64 * self.repack_drift
+        };
+        if !interval_due && !drift_due {
             return;
         }
         self.warm_since_repack = 0;
         let plan = self.plan.as_ref().expect("repack without plan");
         // O(1): the trace is shared with the plan, not deep-copied on
-        // the serving path.
+        // the serving path. The incumbent seed is one offsets clone.
         let trace = Arc::clone(&plan.trace);
+        let incumbent = Assignment {
+            offsets: plan.offsets.clone(),
+            peak: plan.peak,
+        };
+        let budget = self.anytime_budget;
         let faults = self.faults.clone();
         self.repack = Some(RepackJob {
             generation: self.plan_generation,
@@ -636,9 +712,9 @@ impl<M: MemoryBackend> ReplayEngine<M> {
                 }
                 let inst = trace.to_dsa_instance();
                 let t0 = Instant::now();
-                let sol = bestfit::solve(&inst);
+                let result = anytime::improve(&inst, &incumbent, budget);
                 let ns = t0.elapsed().as_nanos() as u64;
-                (trace, inst, sol, ns)
+                (trace, inst, result, ns)
             }),
         });
     }
@@ -668,7 +744,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         let Some(job) = self.repack.take() else {
             return Ok(());
         };
-        let Ok((trace, inst, sol, ns)) = job.handle.join() else {
+        let Ok((trace, inst, result, ns)) = job.handle.join() else {
             // The re-pack thread panicked. Discard it, keep the
             // incumbent plan; the next interval spawns a fresh attempt.
             self.repack_failed += 1;
@@ -677,14 +753,20 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.repacks += 1;
         self.last_repack_ns = ns;
         self.repack_ns += ns;
+        self.anytime_steps += result.steps;
         self.warm_since_repack = 0;
         let current_peak = self.plan.as_ref().expect("repack without plan").peak;
-        if sol.peak >= current_peak {
-            // The incumbent is already at least as tight: the re-pack
-            // just verified there is no drift to reclaim.
+        if result.assignment.peak >= current_peak {
+            // The incumbent is already at least as tight: the search
+            // just verified there is nothing to reclaim. (The anytime
+            // monotone guarantee makes `>` impossible when the seed was
+            // this plan; `==` is the common no-drift case.)
             return Ok(());
         }
-        self.install_plan(ctx, trace, &inst, sol)
+        // The stale check above proved the seed was this very plan, so
+        // the gap is exactly what the search reclaimed.
+        self.reclaimed_bytes += current_peak - result.assignment.peak;
+        self.install_plan(ctx, trace, &inst, result.assignment)
     }
 
     /// Leave the in-sync fast path: reconstruct the profiler, live map,
@@ -1194,9 +1276,14 @@ mod tests {
         assert!(drive(&mut e, &[3000]), "hot iteration replays");
         assert_eq!(e.repacks(), 1, "re-pack swapped in at the boundary");
         assert!(e.last_repack_ns() > 0 && e.repack_ns() >= e.last_repack_ns());
-        // The re-pack equals the cold solve of the live trace.
-        let cold = bestfit::solve(&e.plan_trace().unwrap().to_dsa_instance());
-        assert_eq!(e.planned_peak(), Some(cold.peak));
+        // The anytime search includes a default-policy restart, so the
+        // post-repack peak never exceeds a cold solve of the live trace
+        // (and never dips below the instance's lower bound).
+        let inst = e.plan_trace().unwrap().to_dsa_instance();
+        let cold = bestfit::solve(&inst);
+        let peak = e.planned_peak().unwrap();
+        assert!(peak <= cold.peak, "{peak} > cold {}", cold.peak);
+        assert!(peak >= inst.lower_bound());
         assert_eq!((e.stats().reopt_warm, e.stats().reopt_cold), (2, 0));
         // The swapped plan replays like any other.
         assert!(drive(&mut e, &[3000]));
@@ -1218,6 +1305,73 @@ mod tests {
         drive(&mut e, &[2000, 1500]); // hot boundary → swap
         assert_eq!(e.repacks(), 1);
         assert_eq!((e.stats().reopt_warm, e.stats().reopt_cold), (3, 1));
+    }
+
+    #[test]
+    fn drift_trigger_fires_without_a_fixed_cadence() {
+        // Adopt a deliberately loose plan (serial blocks stacked instead
+        // of sharing offset 0), ratchet once so a warm reopt accrues,
+        // and let the drift trigger — no interval configured — spawn
+        // the anytime search that reclaims the slack.
+        let mut e = host_engine();
+        e.set_repack_drift(0.1);
+        let mut donor = host_engine();
+        donor.begin_iteration();
+        let a = ok(donor.alloc(&mut (), 1000));
+        donor.free(&mut (), a.addr, 1000);
+        let b = ok(donor.alloc(&mut (), 1000));
+        donor.free(&mut (), b.addr, 1000);
+        ok(donor.end_iteration(&mut ()));
+        let trace = donor.plan_trace().unwrap().clone();
+        let inst = trace.to_dsa_instance();
+        let loose = crate::dsa::solution::Assignment {
+            offsets: vec![0, 1000],
+            peak: 2000,
+        };
+        loose.validate(&inst).unwrap();
+        ok(e.adopt_plan(&mut (), trace, &inst, loose));
+
+        // One serial iteration (matching the profiled event order:
+        // alloc/free, alloc/free), returning whether all replayed.
+        fn serial(e: &mut ReplayEngine<HostBackend>, s0: u64, s1: u64) -> bool {
+            e.begin_iteration();
+            let a = ok(e.alloc(&mut (), s0));
+            e.free(&mut (), a.addr, s0);
+            let b = ok(e.alloc(&mut (), s1));
+            e.free(&mut (), b.addr, s1);
+            ok(e.end_iteration(&mut ()));
+            a.is_replayed() && b.is_replayed()
+        }
+
+        // Warm reopt: grow block 0 in place (its slack is open), keeping
+        // peak 2000 over a lower bound of 1500 — 33% drift.
+        serial(&mut e, 1500, 1000);
+        assert_eq!(e.stats().reopt_warm, 1);
+        assert_eq!(e.planned_peak(), Some(2000), "still loose before the swap");
+        // Boundary: the drift-triggered search lands and swaps in.
+        assert!(serial(&mut e, 1500, 1000), "hot iteration replays");
+        assert_eq!(e.repacks(), 1, "drift alone triggered the re-pack");
+        assert_eq!(e.planned_peak(), Some(1500), "serial blocks share offset 0");
+        assert_eq!(e.reclaimed_bytes(), 500);
+        assert!(e.anytime_steps() >= 1);
+        // Once tight (peak == lb), the trigger stays quiet.
+        assert!(serial(&mut e, 1500, 1000));
+        assert_eq!(e.repacks(), 1, "no drift left to reclaim");
+    }
+
+    #[test]
+    fn undrifted_plan_never_drift_triggers() {
+        // A plan sitting at its lower bound accrues warm reopts but no
+        // reclaimable drift: the drift trigger must stay quiet.
+        let mut e = host_engine();
+        e.set_repack_drift(0.05);
+        drive(&mut e, &[1000]); // profile: peak == lb
+        drive(&mut e, &[2000]); // in-place ratchet: peak == lb still
+        drive(&mut e, &[2000]);
+        drive(&mut e, &[2000]);
+        assert_eq!(e.stats().reopt_warm, 1);
+        assert_eq!(e.repacks(), 0);
+        assert_eq!((e.anytime_steps(), e.reclaimed_bytes()), (0, 0));
     }
 
     #[test]

@@ -85,6 +85,8 @@ pub struct RegistryConfig {
     buckets: Vec<u32>,
     budget_bytes: u64,
     repack_interval: u64,
+    repack_drift: f64,
+    anytime_budget_ms: u64,
     quarantine_threshold: u32,
     quarantine_cooldown: Duration,
 }
@@ -102,6 +104,8 @@ impl RegistryConfig {
             buckets: b,
             budget_bytes: u64::MAX,
             repack_interval: 0,
+            repack_drift: 0.0,
+            anytime_budget_ms: 25,
             quarantine_threshold: 3,
             quarantine_cooldown: Duration::from_secs(60),
         }
@@ -118,6 +122,21 @@ impl RegistryConfig {
     /// reopts (0 = never); see `ReplayEngine::set_repack_interval`.
     pub fn with_repack_interval(mut self, every: u64) -> RegistryConfig {
         self.repack_interval = every;
+        self
+    }
+
+    /// Drift-trigger a background re-pack when a managed plan's peak
+    /// exceeds its liveness lower bound by more than this fraction
+    /// (0 = never drift-trigger); see `ReplayEngine::set_repack_drift`.
+    pub fn with_repack_drift(mut self, fraction: f64) -> RegistryConfig {
+        self.repack_drift = fraction.max(0.0);
+        self
+    }
+
+    /// Time slice, in milliseconds, each background anytime re-pack may
+    /// spend searching; see `ReplayEngine::set_anytime_budget_ms`.
+    pub fn with_anytime_budget_ms(mut self, ms: u64) -> RegistryConfig {
+        self.anytime_budget_ms = ms;
         self
     }
 
@@ -139,6 +158,14 @@ impl RegistryConfig {
 
     pub fn repack_interval(&self) -> u64 {
         self.repack_interval
+    }
+
+    pub fn repack_drift(&self) -> f64 {
+        self.repack_drift
+    }
+
+    pub fn anytime_budget_ms(&self) -> u64 {
+        self.anytime_budget_ms
     }
 
     pub fn quarantine_threshold(&self) -> u32 {
@@ -209,13 +236,19 @@ pub struct RegistryStats {
     pub seed_ns_total: u64,
     /// Slowest single recorded seeded build, in wall nanoseconds.
     pub seed_ns_max: u64,
-    /// Background cold re-packs swapped into resident plans.
+    /// Background anytime re-pack searches completed against resident
+    /// plans (whether or not their result was tight enough to swap in).
     pub repacks: u64,
-    /// Total wall nanoseconds across recorded re-pack solves (spent on
-    /// the background thread, off the serving path).
+    /// Total wall nanoseconds across recorded re-pack searches (spent
+    /// on the background thread, off the serving path).
     pub repack_ns_total: u64,
-    /// Slowest single recorded re-pack solve, in wall nanoseconds.
+    /// Slowest single recorded re-pack search, in wall nanoseconds.
     pub repack_ns_max: u64,
+    /// Published anytime improvement steps across re-pack searches
+    /// (each one a validated, strictly tighter incumbent).
+    pub anytime_steps: u64,
+    /// Arena bytes reclaimed by anytime re-packs that swapped in.
+    pub reclaimed_bytes: u64,
     /// Plans installed from the persistent store at warm-load: keys the
     /// restart served by replay instead of a cold profile+solve.
     pub store_hits: u64,
@@ -326,7 +359,15 @@ impl RegistryStats {
         self.repack_ns_max = self.repack_ns_max.max(ns);
     }
 
-    /// Mean nanoseconds per recorded re-pack solve; 0 before any.
+    /// Record the anytime-search outcome of background re-packs:
+    /// published improvement `steps` and arena bytes `reclaimed` by
+    /// swapped-in results (search wall time rides [`Self::record_repack`]).
+    pub fn record_anytime(&mut self, steps: u64, reclaimed: u64) {
+        self.anytime_steps += steps;
+        self.reclaimed_bytes += reclaimed;
+    }
+
+    /// Mean nanoseconds per recorded re-pack search; 0 before any.
     pub fn mean_repack_ns(&self) -> u64 {
         if self.repacks == 0 {
             return 0;
@@ -354,6 +395,8 @@ impl RegistryStats {
         self.repacks += other.repacks;
         self.repack_ns_total += other.repack_ns_total;
         self.repack_ns_max = self.repack_ns_max.max(other.repack_ns_max);
+        self.anytime_steps += other.anytime_steps;
+        self.reclaimed_bytes += other.reclaimed_bytes;
         self.store_hits += other.store_hits;
         self.store_misses += other.store_misses;
         self.store_invalidated += other.store_invalidated;
@@ -674,6 +717,12 @@ impl<P: PlanFootprint> PlanRegistry<P> {
         self.stats.repack_failed += 1;
     }
 
+    /// Record anytime-search outcomes of background re-packs (see
+    /// [`RegistryStats::record_anytime`]).
+    pub fn record_anytime(&mut self, steps: u64, reclaimed: u64) {
+        self.stats.record_anytime(steps, reclaimed);
+    }
+
     /// Drop `key`'s plan unconditionally — e.g. a quarantined key whose
     /// poisoned plan must rebuild fresh after the cooldown. Counted as
     /// an eviction; returns the removed plan (resources release per the
@@ -870,10 +919,42 @@ mod tests {
     }
 
     #[test]
+    fn anytime_counters_record_and_absorb() {
+        let mut r: PlanRegistry<Toy> = PlanRegistry::new(RegistryConfig::new(&[1]));
+        r.record_anytime(3, 4_096);
+        r.record_anytime(0, 0); // gate-discarded searches add nothing
+        let st = r.stats();
+        assert_eq!((st.anytime_steps, st.reclaimed_bytes), (3, 4_096));
+
+        let mut total = RegistryStats::default();
+        total.absorb(&st);
+        total.absorb(&RegistryStats {
+            anytime_steps: 2,
+            reclaimed_bytes: 512,
+            ..RegistryStats::default()
+        });
+        assert_eq!((total.anytime_steps, total.reclaimed_bytes), (5, 4_608));
+    }
+
+    #[test]
     fn config_carries_repack_interval() {
         let cfg = RegistryConfig::new(&[1, 2]).with_repack_interval(7);
         assert_eq!(cfg.repack_interval(), 7);
         assert_eq!(RegistryConfig::default().repack_interval(), 0);
+    }
+
+    #[test]
+    fn config_carries_anytime_knobs() {
+        let cfg = RegistryConfig::new(&[1, 2])
+            .with_repack_drift(0.05)
+            .with_anytime_budget_ms(40);
+        assert_eq!(cfg.repack_drift(), 0.05);
+        assert_eq!(cfg.anytime_budget_ms(), 40);
+        let d = RegistryConfig::default();
+        assert_eq!(d.repack_drift(), 0.0);
+        assert_eq!(d.anytime_budget_ms(), 25);
+        // A negative fraction clamps to "never".
+        assert_eq!(RegistryConfig::new(&[1]).with_repack_drift(-1.0).repack_drift(), 0.0);
     }
 
     #[test]

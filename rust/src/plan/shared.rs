@@ -478,6 +478,15 @@ impl<P: PlanFootprint> SharedPlanRegistry<P> {
         self.recorded.lock().expect("recorded stats poisoned").record_repack(ns);
     }
 
+    /// Record anytime-search outcomes of background re-packs (see
+    /// [`RegistryStats::record_anytime`]).
+    pub fn record_anytime(&self, steps: u64, reclaimed: u64) {
+        self.recorded
+            .lock()
+            .expect("recorded stats poisoned")
+            .record_anytime(steps, reclaimed);
+    }
+
     /// Record one plan installed from the persistent store at warm-load.
     pub fn record_store_hit(&self) {
         self.recorded.lock().expect("recorded stats poisoned").store_hits += 1;

@@ -221,6 +221,30 @@ impl Args {
         }
     }
 
+    /// Parse a fractional option that can be switched off: a finite
+    /// value in `0.0..=1.0`, or one of `off`/`never`/`none`/`disabled`
+    /// (all → 0.0, the conventional "feature disabled" value, e.g.
+    /// `--repack-drift off`). A missing option yields `fallback`.
+    pub fn get_fraction_or(&self, name: &str, fallback: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(fallback),
+            Some("off" | "never" | "none" | "disabled") => Ok(0.0),
+            Some(raw) => match raw.parse::<f64>() {
+                Ok(f) if f.is_finite() && (0.0..=1.0).contains(&f) => Ok(f),
+                Ok(_) => Err(CliError::BadValue {
+                    key: name.to_string(),
+                    value: raw.to_string(),
+                    why: "expected a fraction in 0.0..=1.0".to_string(),
+                }),
+                Err(e) => Err(CliError::BadValue {
+                    key: name.to_string(),
+                    value: raw.to_string(),
+                    why: e.to_string(),
+                }),
+            },
+        }
+    }
+
     /// Parse an on/off switch: `on`/`true`/`yes`/`1` and
     /// `off`/`false`/`no`/`0` (e.g. `--shared-registry off`). A missing
     /// option yields `fallback`; anything else is a [`CliError::BadValue`].
@@ -356,6 +380,26 @@ mod tests {
             bad.get_interval_or("repack-every", 16),
             Err(CliError::BadValue { .. })
         ));
+    }
+
+    #[test]
+    fn fraction_options_accept_off_words_and_reject_out_of_range() {
+        let c = Command::new("t", "t").opt("repack-drift", "drift fraction");
+        for word in ["off", "never", "none", "disabled"] {
+            let a = c.parse(&argv(&["--repack-drift", word])).unwrap();
+            assert_eq!(a.get_fraction_or("repack-drift", 0.05).unwrap(), 0.0, "{word}");
+        }
+        let a = c.parse(&argv(&["--repack-drift", "0.25"])).unwrap();
+        assert_eq!(a.get_fraction_or("repack-drift", 0.05).unwrap(), 0.25);
+        let missing = c.parse(&argv(&[])).unwrap();
+        assert_eq!(missing.get_fraction_or("repack-drift", 0.05).unwrap(), 0.05);
+        for bad in ["1.5", "-0.1", "NaN", "x"] {
+            let a = c.parse(&argv(&["--repack-drift", bad])).unwrap();
+            assert!(
+                matches!(a.get_fraction_or("repack-drift", 0.05), Err(CliError::BadValue { .. })),
+                "{bad}"
+            );
+        }
     }
 
     #[test]

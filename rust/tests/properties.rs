@@ -8,7 +8,7 @@ use pgmo::dsa::indexed::{Changes, IndexedSkyline};
 use pgmo::dsa::policies::{BlockChoice, Policy};
 use pgmo::dsa::problem::DsaInstance;
 use pgmo::dsa::skyline::Skyline;
-use pgmo::dsa::{bestfit, exact, firstfit};
+use pgmo::dsa::{anytime, bestfit, exact, firstfit, mip};
 use pgmo::plan::{DeviceBackend, HostBackend, MemoryBackend, ReplayEngine};
 use pgmo::testkit::{self, gen};
 use pgmo::util::rng::Pcg32;
@@ -76,6 +76,117 @@ fn prop_exact_never_worse_than_heuristic() {
         let ex = exact::solve(&inst, Duration::from_secs(5));
         ex.assignment.validate(&inst).is_ok() && ex.assignment.peak <= heur.peak
     });
+}
+
+/// The exact solver seeds from the *default-policy* best-fit packing,
+/// but its certified optimum must sit at or below what **every**
+/// block-choice ablation achieves — a policy that beat the "optimum"
+/// would pin a pruning bug in the branch-and-bound.
+#[test]
+fn prop_exact_at_most_bestfit() {
+    testkit::check("exact ≤ best-fit (all policies)", 25, instance_gen(9), |t| {
+        let inst = to_instance(t);
+        let ex = exact::solve(&inst, Duration::from_secs(5));
+        ex.assignment.validate(&inst).is_ok()
+            && BlockChoice::ALL.iter().all(|&choice| {
+                let heur = bestfit::solve_with(
+                    &inst,
+                    Policy {
+                        block_choice: choice,
+                    },
+                );
+                ex.assignment.peak <= heur.peak
+            })
+    });
+}
+
+/// Certified-optimal peak by exhaustive search, independent of the
+/// branch-and-bound: for every permutation of the blocks, place each at
+/// its lowest feasible offset in order. Some optimal packing survives
+/// this lowering (ordering any feasible packing by offset and lowering
+/// each block in turn never raises an offset), so the minimum over all
+/// n! orders is the true optimum. Only viable for tiny n.
+fn brute_force_peak(inst: &DsaInstance) -> u64 {
+    fn lowest_feasible(inst: &DsaInstance, placed: &[(usize, u64)], i: usize) -> u64 {
+        let mut off = 0u64;
+        loop {
+            let bump = placed.iter().find(|&&(j, oj)| {
+                inst.blocks[i].overlaps(&inst.blocks[j])
+                    && off < oj + inst.blocks[j].size
+                    && oj < off + inst.blocks[i].size
+            });
+            match bump {
+                Some(&(j, oj)) => off = oj + inst.blocks[j].size,
+                None => return off,
+            }
+        }
+    }
+    fn permute(idx: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+        if k == idx.len() {
+            f(idx);
+            return;
+        }
+        for i in k..idx.len() {
+            idx.swap(k, i);
+            permute(idx, k + 1, f);
+            idx.swap(k, i);
+        }
+    }
+    let mut idx: Vec<usize> = (0..inst.len()).collect();
+    let mut best = if inst.is_empty() { 0 } else { u64::MAX };
+    permute(&mut idx, 0, &mut |order| {
+        let mut placed: Vec<(usize, u64)> = Vec::with_capacity(order.len());
+        let mut peak = 0u64;
+        for &i in order {
+            let off = lowest_feasible(inst, &placed, i);
+            peak = peak.max(off + inst.blocks[i].size);
+            placed.push((i, off));
+        }
+        best = best.min(peak);
+    });
+    best
+}
+
+/// On instances small enough to enumerate, the branch-and-bound's
+/// certified peak must *equal* the exhaustive optimum — not just bound
+/// it. This is the ground-truth anchor under the whole differential
+/// tower (exact ≤ best-fit ≤ first-fit, anytime → exact).
+#[test]
+fn prop_exact_matches_brute_force_on_tiny_instances() {
+    testkit::check("exact ≡ brute force", 30, raw_tiny_gen(6), |raw| {
+        let inst = tiny_instance(raw);
+        let ex = exact::solve(&inst, Duration::from_secs(10));
+        ex.proved_optimal && ex.assignment.peak == brute_force_peak(&inst)
+    });
+}
+
+/// An expired budget must surrender the best-fit seed byte-for-byte —
+/// the deadline is polled on the first node, before any branching could
+/// shuffle the incumbent — and must not claim optimality it never
+/// proved.
+#[test]
+fn exact_timeout_returns_the_bestfit_seed_unproven() {
+    let mut rng = Pcg32::seeded(0x7143);
+    let triples: Vec<(u64, u64, u64)> = (0..48)
+        .map(|_| {
+            let a = rng.range(0, 80);
+            (rng.range(1, 2048), a, a + rng.range(1, 30))
+        })
+        .collect();
+    let inst = to_instance(&triples);
+    let seed = bestfit::solve(&inst);
+    let ex = exact::solve(&inst, Duration::from_nanos(0));
+    assert_eq!(
+        ex.assignment.offsets, seed.offsets,
+        "a zero budget must return the heuristic seed untouched"
+    );
+    assert_eq!(ex.assignment.peak, seed.peak);
+    if seed.peak > inst.lower_bound() {
+        // Certification without search is only legitimate when the seed
+        // already sits on the lower bound; here it does not.
+        assert!(!ex.proved_optimal, "zero budget cannot certify 48 blocks");
+        assert!(ex.nodes >= 1, "the deadline is noticed by expanding a node");
+    }
 }
 
 // ----- differential solver testing ------------------------------------------
@@ -216,10 +327,11 @@ enum EpisodeKind {
     Reopt,
     Seeded,
     Fault,
+    Anytime,
 }
 
 impl EpisodeKind {
-    const PREFIXED: [&'static str; 3] = ["reopt-", "seeded-", "fault-"];
+    const PREFIXED: [&'static str; 4] = ["reopt-", "seeded-", "fault-", "anytime-"];
 
     fn prefix(self) -> Option<&'static str> {
         match self {
@@ -227,6 +339,7 @@ impl EpisodeKind {
             EpisodeKind::Reopt => Some("reopt-"),
             EpisodeKind::Seeded => Some("seeded-"),
             EpisodeKind::Fault => Some("fault-"),
+            EpisodeKind::Anytime => Some("anytime-"),
         }
     }
 
@@ -537,6 +650,174 @@ fn seeded_build_fuzz_lockstep_heavy() {
     run_seeded_fuzz(480, 3);
 }
 
+// ----- anytime-vs-exact differential fuzzing ---------------------------------
+
+/// One deterministic anytime differential episode (the tentpole's
+/// certification harness): a random ≤12-block instance is certified by
+/// `exact::solve`, then a seeded anytime run starting from the best-fit
+/// incumbent must (a) publish only validated incumbents in strictly
+/// decreasing peak order, (b) never publish a peak below the certified
+/// optimum, and (c) converge to that optimum with `proved_optimal` set
+/// within its slice — the search cannot stall above the optimum on an
+/// instance its dive layer can exhaust.
+fn anytime_episode(seed: u64) -> Result<(), String> {
+    let mut rng = Pcg32::seeded(seed);
+    let n = rng.range_usize(1, 12);
+    let triples: Vec<(u64, u64, u64)> = (0..n)
+        .map(|_| {
+            let a = rng.range(0, 40);
+            (rng.range(1, 1024), a, a + rng.range(1, 16))
+        })
+        .collect();
+    let inst = to_instance(&triples);
+    let opt = exact::solve(&inst, Duration::from_secs(10));
+    if !opt.proved_optimal {
+        return Err(format!("seed {seed}: exact could not certify {n} blocks in 10 s"));
+    }
+    let heur = bestfit::solve(&inst);
+    let mut last = heur.peak;
+    let mut violation: Option<String> = None;
+    let r = anytime::improve_observed(&inst, &heur, Duration::from_secs(5), seed, |a| {
+        if violation.is_some() {
+            return;
+        }
+        if a.peak >= last {
+            violation = Some(format!(
+                "published peak {} after {last} — not strictly tighter",
+                a.peak
+            ));
+        } else if let Err(e) = a.validate(&inst) {
+            violation = Some(format!("published an unsound incumbent at peak {}: {e}", a.peak));
+        } else if a.peak < opt.assignment.peak {
+            violation = Some(format!(
+                "published peak {} below the certified optimum {}",
+                a.peak, opt.assignment.peak
+            ));
+        }
+        last = a.peak;
+    });
+    if let Some(v) = violation {
+        return Err(format!("seed {seed}: {v}"));
+    }
+    if !r.proved_optimal {
+        return Err(format!(
+            "seed {seed}: anytime failed to certify within its slice (peak {}, optimum {})",
+            r.assignment.peak, opt.assignment.peak
+        ));
+    }
+    if r.assignment.peak != opt.assignment.peak {
+        return Err(format!(
+            "seed {seed}: anytime converged to {} but the certified optimum is {}",
+            r.assignment.peak, opt.assignment.peak
+        ));
+    }
+    r.assignment
+        .validate(&inst)
+        .map_err(|e| format!("seed {seed}: final assignment unsound: {e}"))
+}
+
+/// Replays the committed anytime corpus (`anytime-*.seed`) first, then
+/// runs fresh random episodes; a failing fresh seed is persisted with
+/// the `anytime-` prefix so it replays first on every future run
+/// (commit the file to pin it).
+fn run_anytime_fuzz(episodes: u64) {
+    let dir = skyline_corpus_dir();
+    let corpus = corpus_seeds(&dir, EpisodeKind::Anytime);
+    assert!(
+        !corpus.is_empty(),
+        "committed anytime corpus must hold at least one seed"
+    );
+    for (path, seed) in &corpus {
+        if let Err(e) = anytime_episode(*seed) {
+            panic!("anytime corpus regression {path:?}: {e}");
+        }
+    }
+
+    let base: u64 = std::env::var("PGMO_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xa17e_a17e_5eed_0001);
+    for i in 0..episodes {
+        let seed = base.wrapping_add(i);
+        if let Err(e) = anytime_episode(seed) {
+            let path = dir.join(format!("anytime-fail-{seed:016x}.seed"));
+            let _ = std::fs::write(&path, format!("{seed}\n"));
+            panic!(
+                "anytime differential fuzz failed: {e}\nseed persisted to {path:?} — \
+                 commit it so the regression replays first"
+            );
+        }
+    }
+}
+
+#[test]
+fn anytime_exact_differential_fuzz() {
+    run_anytime_fuzz(16);
+}
+
+#[test]
+#[ignore = "heavy: 10× episodes, run by the nightly `cargo test -- --ignored` job"]
+fn anytime_exact_differential_fuzz_heavy() {
+    run_anytime_fuzz(160);
+}
+
+/// The monotone-incumbent invariant at serving scale: on DNN-shaped
+/// 4k-block instances (too big for the dive layer — restarts and
+/// lift-and-replace carry the slice), every published incumbent must
+/// validate and be strictly tighter than its predecessor, the final
+/// result can never sit above the seed or below the lower bound, and
+/// the result's bookkeeping must match the published sequence exactly —
+/// so cancelling at *any* publication point yields a sound plan.
+fn check_anytime_monotone_and_sound(seeds: &[u64]) {
+    for &seed in seeds {
+        let inst = DsaInstance::from_triples(&gen::large_dsa_triples(4_000, seed));
+        let incumbent = bestfit::solve(&inst);
+        let mut last = incumbent.peak;
+        let mut published = 0u64;
+        let r = anytime::improve_observed(
+            &inst,
+            &incumbent,
+            Duration::from_millis(120),
+            seed,
+            |a| {
+                assert!(
+                    a.peak < last,
+                    "seed {seed}: published peak {} after {last}",
+                    a.peak
+                );
+                a.validate(&inst)
+                    .unwrap_or_else(|e| panic!("seed {seed}: unsound published incumbent: {e}"));
+                last = a.peak;
+                published += 1;
+            },
+        );
+        assert_eq!(r.steps, published, "seed {seed}: steps ≠ publications");
+        assert_eq!(r.assignment.peak, last, "seed {seed}: result ≠ last publication");
+        assert_eq!(
+            r.reclaimed,
+            incumbent.peak - last,
+            "seed {seed}: reclaimed bytes must match the peak delta"
+        );
+        assert!(r.assignment.peak >= inst.lower_bound(), "seed {seed}");
+        r.assignment
+            .validate(&inst)
+            .unwrap_or_else(|e| panic!("seed {seed}: final assignment unsound: {e}"));
+    }
+}
+
+#[test]
+fn prop_anytime_monotone_and_sound() {
+    check_anytime_monotone_and_sound(&[0xa11c, 0xbee5]);
+}
+
+#[test]
+#[ignore = "heavy: 10× seeds, run by the nightly `cargo test -- --ignored` job"]
+fn prop_anytime_monotone_and_sound_heavy() {
+    check_anytime_monotone_and_sound(&[
+        0xa11c, 0xbee5, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18,
+    ]);
+}
+
 // ----- §4.3 warm-start resolve ≡ reference, bounded by cold ------------------
 
 /// The reopt differential property. For a random base trace and a random
@@ -740,12 +1021,12 @@ fn drive_engine(e: &mut ReplayEngine<HostBackend>, sizes: &[u64]) {
 /// deviations, closed by a pure-ratchet tail — through a `ReplayEngine`
 /// with `repack_interval = K` and assert:
 ///
-/// 1. wherever a background re-pack completes, the post-repack peak
-///    *equals* `min(pre-repack peak, cold solve of the live trace)` —
-///    drift is fully reclaimed, and a re-pack never grows the arena
-///    (the heuristic is not size-monotone, so the drifted warm plan
-///    can already sit below a fresh solve; the tightness gate keeps
-///    it);
+/// 1. wherever a background re-pack completes, the post-repack peak is
+///    at most `min(pre-repack peak, cold solve of the live trace)` and
+///    at least the live trace's lower bound — drift is fully reclaimed,
+///    a re-pack never grows the arena, and the anytime search behind it
+///    (whose restart layer includes the default-policy cold solve) may
+///    only land *tighter* than the old cold re-pack;
 /// 2. inter-repack drift never exceeds the pre-repack warm peak (no
 ///    planned peak inside the interval sat above the peak the re-pack
 ///    checked);
@@ -794,7 +1075,8 @@ fn check_repack_bounds_drift(cases: usize) {
             if after.reopts != before.reopts + 1 {
                 return false; // every round must deviate exactly once
             }
-            let cold = bestfit::solve(&engine.plan_trace().expect("plan").to_dsa_instance());
+            let live = engine.plan_trace().expect("plan").to_dsa_instance();
+            let cold = bestfit::solve(&live);
             let pre_swap = engine.planned_peak().expect("plan");
             if after.reopt_warm > before.reopt_warm {
                 // 3a. the chained warm-resolve guarantee.
@@ -813,8 +1095,11 @@ fn check_repack_bounds_drift(cases: usize) {
             drive_engine(&mut engine, &sizes); // hot iteration: the boundary
             let peak = engine.planned_peak().expect("plan");
             if engine.repacks() > repacks_before {
-                // 1. post-repack peak == min(pre-repack, cold solve).
-                if peak != pre_swap.min(cold.peak) {
+                // 1. post-repack peak ≤ min(pre-repack, cold solve): the
+                // anytime search starts from the incumbent and restarts
+                // through the default policy, so it can only tighten on
+                // both; it must also stay sound above the lower bound.
+                if peak > pre_swap.min(cold.peak) || peak < live.lower_bound() {
                     return false;
                 }
                 // 2. inter-repack drift ≤ the pre-repack warm peak.
@@ -2020,7 +2305,7 @@ fn run_fault_fuzz(episodes: u64, requests: usize) {
     for i in 0..episodes {
         let seed = base.wrapping_add(i);
         if let Err(e) = fault_episode(seed, requests) {
-            let path = dir.join(format!("fault-{seed:016x}.seed"));
+            let path = dir.join(format!("fault-fail-{seed:016x}.seed"));
             let _ = std::fs::write(&path, format!("{seed}\n"));
             panic!(
                 "fault fuzz failed: {e}\nseed persisted to {path:?} — \
@@ -2138,4 +2423,50 @@ fn faults_background_repack_panic_keeps_the_incumbent_plan() {
     drive_engine(&mut e, &sizes);
     assert_eq!(e.repacks(), 1, "re-pack machinery recovers after the panic");
     assert_eq!(e.repack_failed(), 1);
+}
+
+// ----- golden LP emission (§3.1 MIP) -----------------------------------------
+
+/// Byte-exact golden output of `mip::to_lp` for a fixed 4-block
+/// instance, pinning the emitter's row order, naming scheme, and Big-M
+/// arithmetic: the LP file is the externally-checkable statement of the
+/// paper's formulation, so any drift must be loud and deliberate.
+#[test]
+fn mip_lp_emission_matches_golden_bytes() {
+    let inst = DsaInstance::from_triples(&[(16, 0, 4), (32, 2, 6), (8, 5, 9), (4, 3, 7)]);
+    let expected = "\
+\\ DSA MIP (Sekiyama et al. 2018, section 3.1)
+\\ n=4 |E|=5 W=60
+Minimize
+ obj: u
+Subject To
+ peak_0: x_0 - u <= -16
+ peak_1: x_1 - u <= -32
+ peak_2: x_2 - u <= -8
+ peak_3: x_3 - u <= -4
+ no_0_1_a: x_0 - x_1 - 60 z_0_1 <= -16
+ no_0_1_b: x_1 - x_0 + 60 z_0_1 <= 28
+ no_0_3_a: x_0 - x_3 - 60 z_0_3 <= -16
+ no_0_3_b: x_3 - x_0 + 60 z_0_3 <= 56
+ no_1_2_a: x_1 - x_2 - 60 z_1_2 <= -32
+ no_1_2_b: x_2 - x_1 + 60 z_1_2 <= 52
+ no_1_3_a: x_1 - x_3 - 60 z_1_3 <= -32
+ no_1_3_b: x_3 - x_1 + 60 z_1_3 <= 56
+ no_2_3_a: x_2 - x_3 - 60 z_2_3 <= -8
+ no_2_3_b: x_3 - x_2 + 60 z_2_3 <= 56
+Bounds
+ 0 <= u <= 60
+ 0 <= x_0
+ 0 <= x_1
+ 0 <= x_2
+ 0 <= x_3
+Binaries
+ z_0_1
+ z_0_3
+ z_1_2
+ z_1_3
+ z_2_3
+End
+";
+    assert_eq!(mip::to_lp(&inst), expected);
 }
