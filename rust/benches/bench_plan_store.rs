@@ -71,6 +71,7 @@ fn main() {
                 trace: trace.clone(),
                 offsets: sol.offsets.clone(),
                 peak: sol.peak,
+                schedule: vec![],
             },
         })
         .expect("persist plan");

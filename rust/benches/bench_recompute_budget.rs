@@ -1,0 +1,107 @@
+//! Bench: budget-bounded planning — the peak-vs-compute-overhead curve
+//! (ROADMAP.md `## Budgeted planning`).
+//!
+//! When an arena budget sits below the solved peak, no packing can help
+//! past the liveness lower bound: `recompute::plan_with_budget` trades
+//! compute for memory instead, dropping checkpointed blocks after their
+//! producing use and re-materializing them before their next use. This
+//! harness walks a ladder of budgets (0.95× down to 0.5× of the
+//! unbudgeted peak) over `bench_plan_seeding`'s 10k-block DNN-shaped
+//! stream and reports, per budget: the achieved peak, the number of
+//! splits, the per-iteration recompute cost as a fraction of the
+//! roofline compute of one whole iteration, and the planning wall time.
+//!
+//! Per-block producer costs use the same roofline fallback the planner
+//! applies when no profiled costs are recorded, so the overhead column
+//! is exactly what a serving replay of the budgeted plan would charge.
+//!
+//! Perf target (pinned here): at a 0.7× arena budget the recompute
+//! schedule costs **at most 30% extra compute** per iteration — the
+//! memory/compute trade stays on the favorable side of the curve.
+//!
+//! Run: `cargo bench --bench bench_recompute_budget`
+
+use pgmo::dsa::policies::Policy;
+use pgmo::dsa::recompute::{self, schedule_cost_ns};
+use pgmo::dsa::{bestfit, DsaInstance};
+use pgmo::graph::cost::ComputeModel;
+use pgmo::testkit::gen::large_dsa_triples;
+use std::time::Instant;
+
+const N: usize = 10_000;
+
+fn main() {
+    let triples = large_dsa_triples(N, 0xb0d9_e7);
+    let inst = DsaInstance::from_triples(&triples);
+    let unbudgeted = bestfit::solve(&inst);
+    let model = ComputeModel::default();
+    // Roofline producer cost of one whole iteration — every block's
+    // producer runs once per iteration regardless of the plan.
+    let iteration_ns: u64 = inst.blocks.iter().map(|b| model.kernel_ns(0, b.size)).sum();
+    let max_block = inst.max_block_size();
+
+    println!(
+        "budget curve over {N} blocks: unbudgeted peak {} B, \
+         iteration compute {:.2} ms (roofline)",
+        unbudgeted.peak,
+        iteration_ns as f64 / 1e6,
+    );
+    println!(
+        "{:>7} {:>14} {:>14} {:>7} {:>11} {:>9}",
+        "budget", "cap B", "peak B", "splits", "overhead %", "plan ms"
+    );
+
+    let mut overhead_at_07: Option<f64> = None;
+    for percent in [95u64, 90, 80, 70, 60, 50] {
+        let cap = (unbudgeted.peak * percent / 100).max(max_block);
+        let t0 = Instant::now();
+        match recompute::plan_with_budget(&inst, &[], cap, Policy::default()) {
+            Ok(plan) => {
+                let wall = t0.elapsed();
+                assert!(
+                    plan.assignment.peak <= cap,
+                    "planner overshot its own budget: {} > {cap}",
+                    plan.assignment.peak
+                );
+                plan.assignment
+                    .validate(&plan.instance)
+                    .expect("budgeted packing sound");
+                let overhead = schedule_cost_ns(&plan.schedule) as f64 / iteration_ns as f64;
+                println!(
+                    "{percent:>6}% {cap:>14} {:>14} {:>7} {:>10.1}% {:>9.1}",
+                    plan.assignment.peak,
+                    plan.schedule.len(),
+                    overhead * 100.0,
+                    wall.as_secs_f64() * 1e3,
+                );
+                if percent == 70 {
+                    overhead_at_07 = Some(overhead);
+                }
+            }
+            Err(e) => {
+                let wall = t0.elapsed();
+                println!(
+                    "{percent:>6}% {cap:>14} {:>14} {:>7} {:>11} {:>9.1}   ({e})",
+                    "-",
+                    "-",
+                    "infeasible",
+                    wall.as_secs_f64() * 1e3,
+                );
+            }
+        }
+    }
+
+    let overhead = overhead_at_07
+        .expect("a 0.7× arena budget must be feasible on the 10k-block stream");
+    assert!(
+        overhead <= 0.30,
+        "recompute overhead at a 0.7× budget must stay ≤ 30% extra compute \
+         per iteration (measured {:.1}%)",
+        overhead * 100.0,
+    );
+    println!(
+        "target: ≤30% recompute compute overhead at a 0.7× arena budget \
+         (measured {:.1}%)",
+        overhead * 100.0,
+    );
+}

@@ -58,6 +58,12 @@ pub struct AllocStats {
     /// Requests served dynamically by the replay engine's escape route
     /// (profiling iteration, interrupted regions, deviations).
     pub escape_allocs: u64,
+    /// Blocks re-materialized by a budgeted plan's recompute schedule
+    /// (`dsa::recompute`), paid on every replayed iteration.
+    pub recomputes: u64,
+    /// Modeled producer re-run time for those recomputes — the compute
+    /// overhead the arena budget was traded for.
+    pub recompute_ns: u64,
 }
 
 impl AllocStats {
@@ -83,6 +89,8 @@ impl AllocStats {
         self.reopt_cold += other.reopt_cold;
         self.slot_collisions += other.slot_collisions;
         self.escape_allocs += other.escape_allocs;
+        self.recomputes += other.recomputes;
+        self.recompute_ns += other.recompute_ns;
     }
 
     /// Counter-wise difference `self − earlier`, for windowed deltas of a
@@ -100,6 +108,8 @@ impl AllocStats {
             reopt_cold: self.reopt_cold.saturating_sub(earlier.reopt_cold),
             slot_collisions: self.slot_collisions.saturating_sub(earlier.slot_collisions),
             escape_allocs: self.escape_allocs.saturating_sub(earlier.escape_allocs),
+            recomputes: self.recomputes.saturating_sub(earlier.recomputes),
+            recompute_ns: self.recompute_ns.saturating_sub(earlier.recompute_ns),
         }
     }
 }

@@ -113,6 +113,14 @@ pub struct ServeMetrics {
     /// to the end of the session (their backlog was rescued by the
     /// survivors or shed as expired).
     pub failed_shards: usize,
+    /// Requests shed by the *dispatcher* (every lane dead at fan-out
+    /// time) or the post-run lane sweep — capacity sheds no shard ever
+    /// observed, so they are counted here, not folded into any shard's
+    /// `expired` (which carries only shard-observed deadline sheds).
+    pub dispatch_shed: u64,
+    /// Hard per-bucket arena budget the session served under
+    /// (`0` or `u64::MAX` = unlimited, no `budget:` line).
+    pub arena_budget: u64,
 }
 
 impl ServeMetrics {
@@ -305,26 +313,51 @@ impl ServeMetrics {
                 plans.store_hits, plans.store_misses, plans.store_invalidated, plans.store_writes,
             ));
         }
+        if self.arena_budget != 0 && self.arena_budget != u64::MAX {
+            // The budgeted-planning tier: the hard arena cap every bucket
+            // plan was solved under, the recomputes replay paid to honor
+            // it, and the modeled compute overhead that traded for the
+            // memory (recompute time over session wall time).
+            let mut staging = AllocStats::default();
+            for s in &self.shards {
+                staging.absorb(&s.staging);
+            }
+            let overhead = if self.wall.is_zero() {
+                0.0
+            } else {
+                staging.recompute_ns as f64 / self.wall.as_nanos() as f64
+            };
+            out.push_str(&format!(
+                "\n  budget: {} B arena cap, {} recomputes, compute overhead {:.1}%",
+                self.arena_budget,
+                staging.recomputes,
+                overhead * 100.0,
+            ));
+        }
         let restarts: u64 = self.shards.iter().map(|s| s.restarts).sum();
         let retries: u64 = self.shards.iter().map(|s| s.retries).sum();
         let expired: u64 = self.shards.iter().map(|s| s.expired).sum();
         let fault_activity = restarts
             + retries
             + expired
+            + self.dispatch_shed
             + self.failed_shards as u64
             + plans.quarantined
             + plans.repack_failed
             + plans.store_write_errors;
         if fault_activity > 0 {
             // The fault-tolerance tier: worker respawns, bounded batch
-            // retries, deadline-shed requests, quarantined plans, and
-            // the failures the session absorbed without losing replies.
+            // retries, deadline-shed requests, dispatcher capacity sheds
+            // (no live lane — observed by no shard), quarantined plans,
+            // and the failures the session absorbed without losing
+            // replies.
             out.push_str(&format!(
-                "\n  faults: {} restarts / {} retries / {} expired / {} quarantined, \
-                 {} repack failures, {} store write errors, {} dead shards",
+                "\n  faults: {} restarts / {} retries / {} expired / {} dispatcher sheds / \
+                 {} quarantined, {} repack failures, {} store write errors, {} dead shards",
                 restarts,
                 retries,
                 expired,
+                self.dispatch_shed,
                 plans.quarantined,
                 plans.repack_failed,
                 plans.store_write_errors,
@@ -606,6 +639,7 @@ mod tests {
                 },
             ],
             failed_shards: 1,
+            dispatch_shed: 4,
             ..Default::default()
         };
         m.registries.push(RegistryStats {
@@ -617,8 +651,8 @@ mod tests {
         let report = m.report();
         assert!(
             report.contains(
-                "faults: 1 restarts / 2 retries / 3 expired / 1 quarantined, \
-                 2 repack failures, 3 store write errors, 1 dead shards"
+                "faults: 1 restarts / 2 retries / 3 expired / 4 dispatcher sheds / \
+                 1 quarantined, 2 repack failures, 3 store write errors, 1 dead shards"
             ),
             "{report}"
         );
@@ -628,6 +662,80 @@ mod tests {
             "{report}"
         );
         assert_eq!(report.matches(", faults:").count(), 1, "{report}");
+    }
+
+    #[test]
+    fn dispatcher_sheds_alone_trigger_the_faults_line() {
+        // The regression this pins: capacity sheds observed by no shard
+        // used to be folded into a surviving shard's `expired`, so a
+        // clean-looking shard carried another lane's losses. They now
+        // live in their own counter and still surface in the report.
+        let mut m = ServeMetrics {
+            requests: 4,
+            batches: 1,
+            wall: Duration::from_secs(1),
+            shards: vec![ShardMetrics {
+                shard: 0,
+                requests: 4,
+                batches: 1,
+                ..Default::default()
+            }],
+            dispatch_shed: 7,
+            ..Default::default()
+        };
+        m.registries.push(RegistryStats::default());
+        let report = m.report();
+        assert!(
+            report.contains("0 restarts / 0 retries / 0 expired / 7 dispatcher sheds"),
+            "{report}"
+        );
+        assert!(
+            !report.contains(", faults:"),
+            "no shard saw a fault, so no per-shard suffix: {report}"
+        );
+    }
+
+    #[test]
+    fn budget_line_reports_cap_and_recompute_overhead() {
+        let mut m = ServeMetrics {
+            requests: 8,
+            batches: 2,
+            wall: Duration::from_secs(1),
+            arena_budget: 4096,
+            shards: vec![ShardMetrics {
+                shard: 0,
+                requests: 8,
+                batches: 2,
+                staging: AllocStats {
+                    n_allocs: 4,
+                    fast_path: 4,
+                    recomputes: 2,
+                    recompute_ns: 250_000_000, // 0.25 s of 1 s wall
+                    ..Default::default()
+                },
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let report = m.report();
+        assert!(
+            report.contains("budget: 4096 B arena cap, 2 recomputes, compute overhead 25.0%"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn budget_line_stays_out_without_a_budget() {
+        for unlimited in [0u64, u64::MAX] {
+            let mut m = ServeMetrics {
+                requests: 1,
+                batches: 1,
+                wall: Duration::from_secs(1),
+                arena_budget: unlimited,
+                ..Default::default()
+            };
+            assert!(!m.report().contains("budget:"), "{}", m.report());
+        }
     }
 
     #[test]

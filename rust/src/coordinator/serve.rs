@@ -129,6 +129,16 @@ pub struct ServeConfig {
     /// bucket plans are evicted beyond it (never one checked out by a
     /// shard). `u64::MAX` = unlimited.
     pub plan_budget_bytes: u64,
+    /// Hard per-bucket arena budget (`--arena-budget`): any bucket plan
+    /// whose solved peak would exceed this many bytes is re-planned with
+    /// checkpoint/recompute splits ([`crate::dsa::recompute`]) until it
+    /// fits — trading bounded recompute time for the memory — and a
+    /// budget no schedule can meet fails the build hard
+    /// (`BudgetInfeasible`) instead of overshooting. Distinct from
+    /// `plan_budget_bytes`, which caps how many plans stay *resident*;
+    /// this caps how big any single plan's arena may be. `u64::MAX` =
+    /// unlimited.
+    pub arena_budget: u64,
     /// After this many consecutive warm reoptimizations of a bucket
     /// plan, a background thread re-solves the live trace from scratch
     /// and the result swaps in at the next iteration boundary when
@@ -190,6 +200,7 @@ impl Default for ServeConfig {
                 .map(|&b| b as usize)
                 .collect(),
             plan_budget_bytes: u64::MAX,
+            arena_budget: u64::MAX,
             repack_interval: 16,
             repack_drift: 0.05,
             anytime_budget_ms: 25,
@@ -305,6 +316,7 @@ impl InferenceServer {
         // registry through the identical code path.
         let registry_cfg = RegistryConfig::new(&self.cfg.ladder())
             .with_budget(self.cfg.plan_budget_bytes)
+            .with_arena_budget(self.cfg.arena_budget)
             .with_repack_interval(self.cfg.repack_interval)
             .with_repack_drift(self.cfg.repack_drift)
             .with_anytime_budget_ms(self.cfg.anytime_budget_ms);
@@ -341,7 +353,7 @@ impl InferenceServer {
         };
 
         let queue: StealQueue<Request> = StealQueue::new(n);
-        let (outcomes, dispatch_shed): (Vec<ShardOutcome>, Vec<u64>) =
+        let (outcomes, dispatch_shed): (Vec<ShardOutcome>, u64) =
             thread::scope(|scope| {
                 let queue = &queue;
                 let mut handles = Vec::with_capacity(n);
@@ -371,7 +383,7 @@ impl InferenceServer {
                 // caller's thread. A dead shard hands the request back
                 // through the push error; try the next lane.
                 let mut next = 0usize;
-                let mut shed = vec![0u64; n];
+                let mut shed = 0u64;
                 for req in rx.iter() {
                     let mut undelivered = Some(req);
                     for attempt in 0..n {
@@ -388,8 +400,10 @@ impl InferenceServer {
                         // Every lane is dead: shed explicitly — a
                         // dropped reply channel would leave the caller
                         // guessing — and keep shedding until the stream
-                        // closes.
-                        shed[next] += 1;
+                        // closes. These are *dispatcher* sheds: no shard
+                        // ever saw the request, so they are counted
+                        // process-wide, never attributed to a lane.
+                        shed += 1;
                         let _ = req.reply.send(Response::Expired {
                             waited: req.created.elapsed(),
                         });
@@ -417,10 +431,13 @@ impl InferenceServer {
         // Final sweep: requests still sitting in a lane after every
         // worker exited (all workers died mid-stream, or a close raced a
         // steal) get an explicit shed reply — no caller is left blocked.
-        let mut lane_swept = vec![0u64; n];
-        for (lane, swept) in lane_swept.iter_mut().enumerate() {
+        // Swept requests were never observed by a worker either, so they
+        // join the dispatcher-shed counter rather than any shard's
+        // `expired`.
+        let mut lane_swept = 0u64;
+        for lane in 0..n {
             for req in queue.drain_lane(lane) {
-                *swept += 1;
+                lane_swept += 1;
                 let _ = req.reply.send(Response::Expired {
                     waited: req.created.elapsed(),
                 });
@@ -459,8 +476,13 @@ impl InferenceServer {
         for s in &mut metrics.shards {
             s.steals = queue.steals(s.shard);
             s.stolen_requests = queue.stolen_items(s.shard);
-            s.expired += dispatch_shed[s.shard] + lane_swept[s.shard];
         }
+        // Capacity sheds no worker observed (dispatcher + final sweep)
+        // stay in their own counter: folding them into a surviving
+        // shard's `expired` used to misattribute another lane's losses
+        // to a healthy shard.
+        metrics.dispatch_shed = dispatch_shed + lane_swept;
+        metrics.arena_budget = self.cfg.arena_budget;
         // Registry rollup: one entry shared, N entries per-shard. The
         // shared Arcs all point at the same registry — count it once.
         metrics.shared_registry = self.cfg.shared_registry;

@@ -17,6 +17,7 @@ use crate::alloc::arena::align_up;
 use crate::alloc::AllocStats;
 use crate::dsa::bestfit;
 use crate::dsa::policies::Policy;
+use crate::dsa::recompute::RecomputeStep;
 use crate::dsa::solution::Assignment;
 use crate::plan::engine::PlanSnapshot;
 use crate::plan::registry::{
@@ -98,6 +99,15 @@ impl StagingPlanner {
         den: u32,
     ) -> Option<StagingPlanner> {
         assert!(den > 0 && num >= den, "seeding only scales a plan up");
+        // A budgeted plan's offsets cover the *expanded* instance (split
+        // lifetimes + recompute segments) and only fit under the donor's
+        // own budget; scaling such a plan up cannot promise the target
+        // bucket's budget. Budgeted buckets always build for themselves.
+        if donor.engine.arena_budget() != u64::MAX
+            || !donor.engine.recompute_schedule().is_empty()
+        {
+            return None;
+        }
         let donor_trace = donor.engine.plan_trace()?;
         let donor_sol = Assignment {
             offsets: donor.engine.planned_offsets()?.to_vec(),
@@ -141,6 +151,24 @@ impl StagingPlanner {
     /// Donor lineage: the bucket this plan was seeded from, if any.
     pub fn seeded_from(&self) -> Option<u32> {
         self.seeded_from
+    }
+
+    /// Arm a hard arena budget (`u64::MAX` = unlimited): plans whose
+    /// solved peak exceeds it are re-planned with checkpoint/recompute
+    /// splits ([`crate::dsa::recompute`]) until they fit — or the build
+    /// panics (`BudgetInfeasible`) rather than silently overshooting.
+    pub fn set_arena_budget(&mut self, bytes: u64) {
+        self.engine.set_arena_budget(bytes);
+    }
+
+    /// The armed arena budget (`u64::MAX` = unlimited).
+    pub fn arena_budget(&self) -> u64 {
+        self.engine.arena_budget()
+    }
+
+    /// The active plan's recompute schedule (empty for unbudgeted plans).
+    pub fn recompute_schedule(&self) -> &[RecomputeStep] {
+        self.engine.recompute_schedule()
     }
 
     /// Background-re-pack the plan after this many consecutive warm
@@ -282,11 +310,22 @@ impl StagingPlanner {
         assert!(values.len() * 4 <= buf.len(), "staging write overflow");
         match buf {
             HostBuf::Slot { pos, .. } => {
+                // A budgeted plan may have this block *dropped* right now
+                // (its bytes live in the engine's checkpoint stash, its
+                // arena slot reused by another block) or *restored* into
+                // its recompute segment's slot — route accordingly.
+                if let Some(stash) = self.engine.recompute_stash_mut(*pos) {
+                    for (i, v) in values.iter().enumerate() {
+                        stash[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+                    }
+                    return;
+                }
+                let slot = self.engine.effective_slot(*pos);
                 self.engine
                     .backend_mut()
                     .arena_mut()
                     .expect("slot without arena")
-                    .write_f32(*pos, values);
+                    .write_f32(slot, values);
             }
             HostBuf::Heap { key, .. } => {
                 let dst = self.engine.backend_mut().heap_bytes_mut(*key);
@@ -301,12 +340,24 @@ impl StagingPlanner {
         assert!(count * 4 <= buf.len(), "staging read overflow");
         match buf {
             HostBuf::Slot { pos, .. } => {
+                if let Some(stash) = self.engine.recompute_stash(*pos) {
+                    return (0..count)
+                        .map(|i| {
+                            f32::from_le_bytes([
+                                stash[i * 4],
+                                stash[i * 4 + 1],
+                                stash[i * 4 + 2],
+                                stash[i * 4 + 3],
+                            ])
+                        })
+                        .collect();
+                }
                 let mut v = self
                     .engine
                     .backend()
                     .arena()
                     .expect("slot without arena")
-                    .as_f32(*pos);
+                    .as_f32(self.engine.effective_slot(*pos));
                 v.truncate(count);
                 v
             }
@@ -360,6 +411,12 @@ pub struct StagingRegistry {
     repack_interval: u64,
     repack_drift: f64,
     anytime_budget_ms: u64,
+    /// Hard per-bucket arena budget (`u64::MAX` = unlimited), armed on
+    /// every planner this registry builds or adopts; see
+    /// [`StagingPlanner::set_arena_budget`]. Under a finite budget
+    /// cross-bucket seeding is disabled (a scaled plan cannot promise
+    /// the budget) and stored plans whose peak exceeds it are skipped.
+    arena_budget: u64,
     registry: PlanRegistry<StagingPlanner>,
     /// Optional persistent tier: warm-loaded at startup
     /// ([`warm_from_store`](Self::warm_from_store)), consulted on misses
@@ -382,6 +439,7 @@ impl StagingRegistry {
             repack_interval: cfg.repack_interval(),
             repack_drift: cfg.repack_drift(),
             anytime_budget_ms: cfg.anytime_budget_ms(),
+            arena_budget: cfg.arena_budget(),
             quarantine: Quarantine::from_config(&cfg),
             registry: PlanRegistry::new(cfg),
             store: None,
@@ -427,7 +485,9 @@ impl StagingRegistry {
                 continue; // someone else's plan — not ours to judge
             }
             let key = sp.key.clone();
-            let planner = self.adopt_stored(sp);
+            let Some(planner) = self.adopt_stored(sp) else {
+                continue; // valid document, but over this registry's budget
+            };
             if self.registry.install(&key, planner) {
                 self.registry.record_store_hit();
                 installed += 1;
@@ -491,10 +551,19 @@ impl StagingRegistry {
             return None;
         }
         match store.load_file(&path) {
-            Ok(sp) if sp.key == *key => {
-                self.registry.record_store_hit();
-                Some(self.adopt_stored(sp))
-            }
+            Ok(sp) if sp.key == *key => match self.adopt_stored(sp) {
+                Some(planner) => {
+                    self.registry.record_store_hit();
+                    Some(planner)
+                }
+                None => {
+                    // A valid plan, solved without (or under a looser)
+                    // budget: unusable here, but not damaged — leave the
+                    // document for readers it still fits.
+                    self.registry.record_store_miss();
+                    None
+                }
+            },
             _ => {
                 self.registry.record_store_invalidated();
                 store.discard(&path);
@@ -503,8 +572,14 @@ impl StagingRegistry {
         }
     }
 
-    fn adopt_stored(&self, sp: StoredPlan) -> StagingPlanner {
-        adopt_stored(sp, self.repack_interval, self.repack_drift, self.anytime_budget_ms)
+    fn adopt_stored(&self, sp: StoredPlan) -> Option<StagingPlanner> {
+        adopt_stored(
+            sp,
+            self.repack_interval,
+            self.repack_drift,
+            self.anytime_budget_ms,
+            self.arena_budget,
+        )
     }
 
     /// The normalized bucket ladder, ascending.
@@ -577,7 +652,7 @@ impl StagingRegistry {
             // solved for this exact key, a seed is a scaled guess.
             seed = self.planner_from_store(&key);
         }
-        if seed.is_none() && self.registry.peek(&key).is_none() {
+        if seed.is_none() && self.registry.peek(&key).is_none() && self.arena_budget == u64::MAX {
             let built = match self.registry.seed_donor(&key) {
                 Some((donor_key, donor)) => {
                     let t0 = Instant::now();
@@ -597,8 +672,12 @@ impl StagingRegistry {
                 seed = Some(planner);
             }
         }
-        let (repack_interval, repack_drift, anytime_budget_ms) =
-            (self.repack_interval, self.repack_drift, self.anytime_budget_ms);
+        let (repack_interval, repack_drift, anytime_budget_ms, arena_budget) = (
+            self.repack_interval,
+            self.repack_drift,
+            self.anytime_budget_ms,
+            self.arena_budget,
+        );
         self.registry.get_or_insert_with(&key, move |k| {
             let mut planner = seed.unwrap_or_else(|| {
                 StagingPlanner::new(&k.model, &format!("{}-b{}", k.phase, k.batch_bucket))
@@ -606,6 +685,7 @@ impl StagingRegistry {
             planner.set_repack_interval(repack_interval);
             planner.set_repack_drift(repack_drift);
             planner.set_anytime_budget_ms(anytime_budget_ms);
+            planner.set_arena_budget(arena_budget);
             planner
         })
     }
@@ -668,13 +748,20 @@ impl StagingRegistry {
 /// Turn a validated store document into a replaying planner, restoring
 /// lineage and applying the registry's re-pack knobs — the same phase
 /// labeling as a cold build, so a warm-loaded plan is indistinguishable
-/// from the one that was persisted.
+/// from the one that was persisted. Returns `None` when the stored
+/// plan's peak exceeds `arena_budget`: adopting it would violate the
+/// hard budget, so the caller falls back to a fresh budgeted build (the
+/// document itself stays on disk for unbudgeted readers).
 fn adopt_stored(
     sp: StoredPlan,
     repack_interval: u64,
     repack_drift: f64,
     anytime_budget_ms: u64,
-) -> StagingPlanner {
+    arena_budget: u64,
+) -> Option<StagingPlanner> {
+    if sp.snapshot.peak > arena_budget {
+        return None;
+    }
     let mut planner = StagingPlanner::from_snapshot(
         &sp.key.model,
         &format!("{}-b{}", sp.key.phase, sp.key.batch_bucket),
@@ -684,7 +771,8 @@ fn adopt_stored(
     planner.set_repack_interval(repack_interval);
     planner.set_repack_drift(repack_drift);
     planner.set_anytime_budget_ms(anytime_budget_ms);
-    planner
+    planner.set_arena_budget(arena_budget);
+    Some(planner)
 }
 
 /// The concurrent serving tier of [`StagingRegistry`]: one process-wide
@@ -710,6 +798,9 @@ pub struct SharedStagingRegistry {
     repack_interval: u64,
     repack_drift: f64,
     anytime_budget_ms: u64,
+    /// Hard per-bucket arena budget (`u64::MAX` = unlimited); same
+    /// semantics as [`StagingRegistry`]'s field.
+    arena_budget: u64,
     registry: SharedPlanRegistry<StagingPlanner>,
     /// Optional persistent tier; see [`StagingRegistry`]'s `store`.
     /// Attached before the registry is shared (`set_store` takes `&mut`),
@@ -736,6 +827,7 @@ impl SharedStagingRegistry {
             repack_interval: cfg.repack_interval(),
             repack_drift: cfg.repack_drift(),
             anytime_budget_ms: cfg.anytime_budget_ms(),
+            arena_budget: cfg.arena_budget(),
             quarantine: Quarantine::from_config(&cfg),
             registry: SharedPlanRegistry::new(cfg),
             store: None,
@@ -792,8 +884,15 @@ impl SharedStagingRegistry {
                 continue; // someone else's plan — not ours to judge
             }
             let key = sp.key.clone();
-            let planner =
-                adopt_stored(sp, self.repack_interval, self.repack_drift, self.anytime_budget_ms);
+            let Some(planner) = adopt_stored(
+                sp,
+                self.repack_interval,
+                self.repack_drift,
+                self.anytime_budget_ms,
+                self.arena_budget,
+            ) else {
+                continue; // valid document, but over this registry's budget
+            };
             if self.registry.install(&key, planner) {
                 self.registry.record_store_hit();
                 installed += 1;
@@ -864,15 +963,25 @@ impl SharedStagingRegistry {
             return None;
         }
         match store.load_file(&path) {
-            Ok(sp) if sp.key == *key => {
-                self.registry.record_store_hit();
-                Some(adopt_stored(
-                    sp,
-                    self.repack_interval,
-                    self.repack_drift,
-                    self.anytime_budget_ms,
-                ))
-            }
+            Ok(sp) if sp.key == *key => match adopt_stored(
+                sp,
+                self.repack_interval,
+                self.repack_drift,
+                self.anytime_budget_ms,
+                self.arena_budget,
+            ) {
+                Some(planner) => {
+                    self.registry.record_store_hit();
+                    Some(planner)
+                }
+                None => {
+                    // A valid plan, solved without (or under a looser)
+                    // budget: unusable here, but not damaged — leave the
+                    // document for readers it still fits.
+                    self.registry.record_store_miss();
+                    None
+                }
+            },
             _ => {
                 self.registry.record_store_invalidated();
                 store.discard(&path);
@@ -914,6 +1023,14 @@ impl SharedStagingRegistry {
         if let Some(planner) = self.builder_from_store(key) {
             return planner;
         }
+        // Seeding is disabled under a finite budget: a scaled donor plan
+        // cannot promise it (same rule as the single-owner tier).
+        if self.arena_budget != u64::MAX {
+            let mut planner =
+                StagingPlanner::new(&key.model, &format!("{}-b{}", key.phase, key.batch_bucket));
+            self.apply_repack_knobs(&mut planner);
+            return planner;
+        }
         if let Some((donor_key, donor_slot)) = self.registry.seed_donor_slot(key) {
             let t0 = Instant::now();
             // The donor lock waits out at most one in-flight batch;
@@ -943,6 +1060,7 @@ impl SharedStagingRegistry {
         planner.set_repack_interval(self.repack_interval);
         planner.set_repack_drift(self.repack_drift);
         planner.set_anytime_budget_ms(self.anytime_budget_ms);
+        planner.set_arena_budget(self.arena_budget);
     }
 
     /// Apply the quarantine to a routed bucket: a quarantined bucket's
@@ -1403,6 +1521,108 @@ mod tests {
         assert_eq!(r.stats().evictions, 2);
         assert!(r.held_bytes() <= 1024);
         assert_eq!(r.resident().len(), 1);
+    }
+
+    // ----- hard arena budgets -------------------------------------------------
+
+    /// Liveness peak 3072 (1024-byte `a` overlapping 2048-byte `b`);
+    /// under a 2048-byte budget `a` must be dropped across `b`'s
+    /// lifetime and recomputed.
+    fn spike_profile(p: &mut StagingPlanner) {
+        p.begin_iteration();
+        let a = p.alloc(1024);
+        let b = p.alloc(2048);
+        p.free(b);
+        p.free(a);
+        p.end_iteration();
+    }
+
+    #[test]
+    fn budgeted_registry_plans_under_the_budget_and_carries_contents() {
+        let cfg = RegistryConfig::new(&[1]).with_arena_budget(2048);
+        let mut r = StagingRegistry::new("m", "serve", cfg);
+        let p = r.planner(1);
+        spike_profile(p);
+        assert!(p.is_replaying());
+        assert!(p.planned_peak().unwrap() <= 2048, "peak {:?}", p.planned_peak());
+        assert!(!p.recompute_schedule().is_empty(), "budget must force a split");
+
+        // Replay: write `a`'s payload before the drop window opens, read
+        // it back after the restore — the checkpoint stash carries it
+        // across even though `a`'s original slot is reused meanwhile.
+        p.begin_iteration();
+        let a = p.alloc(1024);
+        p.write_f32(&a, &[7.5; 16]);
+        let b = p.alloc(2048);
+        p.write_f32(&b, &[1.0; 16]);
+        p.free(b);
+        assert_eq!(p.read_f32(&a, 16), vec![7.5; 16], "restored after the window");
+        p.free(a);
+        p.end_iteration();
+        let st = p.stats();
+        assert_eq!(st.recomputes, 1, "one block re-materialized per replay");
+        assert!(st.recompute_ns > 0, "the traded compute is accounted");
+        assert_eq!(st.reopts, 0, "a clean replay never reoptimizes");
+    }
+
+    #[test]
+    fn shared_budgeted_checkout_plans_under_the_budget() {
+        let r = SharedStagingRegistry::new(
+            "m",
+            "serve",
+            RegistryConfig::new(&[1]).with_arena_budget(2048),
+        );
+        let slot = r.checkout(1);
+        let mut p = slot.plan();
+        spike_profile(&mut p);
+        assert!(p.planned_peak().unwrap() <= 2048);
+        assert!(!p.recompute_schedule().is_empty());
+        assert_eq!(p.arena_budget(), 2048);
+    }
+
+    #[test]
+    fn budgeted_registry_skips_over_budget_store_plans() {
+        let root = std::env::temp_dir().join("pgmo_staging_unit_budget_store");
+        let _ = std::fs::remove_dir_all(&root);
+        // An unbudgeted registry persists a 3072-byte-peak plan.
+        let mut r = StagingRegistry::new("m", "serve", RegistryConfig::new(&[1]));
+        r.set_store(PlanStore::open(&root).unwrap());
+        spike_profile(r.planner(1));
+        assert_eq!(r.planner(1).planned_peak(), Some(3072));
+        assert!(r.persist(1));
+
+        // A budgeted restart must not adopt it — the stored peak busts
+        // the budget — but the document stays on disk for unbudgeted
+        // readers, and the miss path re-plans under the budget instead.
+        let mut rb = StagingRegistry::new(
+            "m",
+            "serve",
+            RegistryConfig::new(&[1]).with_arena_budget(2048),
+        );
+        rb.set_store(PlanStore::open(&root).unwrap());
+        assert_eq!(rb.warm_from_store(), 0, "over-budget plan must be skipped");
+        let p = rb.planner(1);
+        assert!(!p.is_replaying(), "fresh budgeted build profiles from scratch");
+        spike_profile(p);
+        assert!(p.planned_peak().unwrap() <= 2048);
+        assert_eq!(rb.stats().store_invalidated, 0, "the document is valid, not damaged");
+        assert_eq!(
+            PlanStore::open(&root).unwrap().enumerate().len(),
+            1,
+            "the over-budget document was not discarded"
+        );
+    }
+
+    #[test]
+    fn budgeted_registry_never_seeds_across_buckets() {
+        let cfg = RegistryConfig::new(&[1, 2]).with_arena_budget(1 << 20);
+        let mut r = StagingRegistry::new("m", "serve", cfg);
+        one_registry_iteration(&mut r, 1, 1024);
+        assert!(one_registry_iteration(&mut r, 1, 1024));
+        // Bucket 2's first build would normally seed from bucket 1; under
+        // a finite budget it profiles for itself.
+        assert!(!one_registry_iteration(&mut r, 2, 2048));
+        assert_eq!(r.stats().seeded_builds, 0);
     }
 
     #[test]

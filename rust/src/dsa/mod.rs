@@ -28,6 +28,12 @@
 //!   online allocator achieves);
 //! * [`exact`] — branch-and-bound exact solver standing in for CPLEX,
 //!   with a bounded [`exact::dive`] entry reused by the anytime search;
+//! * [`recompute`] — budget-bounded planning: when the solved peak
+//!   exceeds a hard arena budget, greedily split block lifetimes into
+//!   checkpoint/recompute segments (cheapest recompute-cost per freed
+//!   byte·tick first) and re-solve until the peak fits, or fail with
+//!   [`recompute::BudgetInfeasible`] — never a silent overshoot
+//!   (ROADMAP.md `## Budgeted planning`);
 //! * [`anytime`] — anytime improvement of an incumbent packing: policy
 //!   restarts, lift-and-replace local moves, and bounded exact dives
 //!   under a time slice, with a monotone-incumbent guarantee (the
@@ -44,6 +50,7 @@ pub mod indexed;
 pub mod mip;
 pub mod policies;
 pub mod problem;
+pub mod recompute;
 pub mod skyline;
 pub mod solution;
 

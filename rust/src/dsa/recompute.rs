@@ -1,0 +1,400 @@
+//! Budget-bounded planning via checkpoint/recompute (ROADMAP.md
+//! `## Budgeted planning`; Chen et al.'s sublinear-memory training is
+//! the motivating trade).
+//!
+//! When the solved peak of an instance exceeds a configured arena
+//! budget, no packing can help past the liveness lower bound — the
+//! blocks themselves must change. This pass treats *lifetimes* as
+//! decision variables: a dropped block is released right after its
+//! producing use (`drop_tick = alloc_at + 1`) and re-materialized just
+//! before its next use (`recompute_tick = free_at - 1`), splitting its
+//! lifetime into two one-tick segments and freeing `size ×
+//! (lifetime - 2)` byte·ticks in between, at the price of re-running
+//! its producer once per replayed iteration.
+//!
+//! The selection is greedy: re-solve, find the first peak-liveness
+//! tick, and among the still-unsplit blocks whose freed window covers
+//! that tick pick the one with the lowest recompute-cost per freed
+//! byte·tick (per-op costs from [`crate::graph::cost`], recorded by the
+//! profiler into [`crate::trace::Trace::costs`]). Repeat until the peak
+//! fits or no candidate remains — in which case the result is
+//! [`BudgetInfeasible`], a hard error, never a silently overshooting
+//! plan.
+
+use super::bestfit;
+use super::policies::Policy;
+use super::problem::{Block, DsaInstance};
+use super::solution::Assignment;
+use crate::util::json::Json;
+
+/// One drop/recompute decision on an original block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecomputeStep {
+    /// Original block id (also the expanded id of its first segment).
+    pub id: usize,
+    /// Tick at which the checkpointed block is dropped: `alloc_at + 1`.
+    pub drop_tick: u64,
+    /// Tick at which it is re-materialized: `free_at - 1`.
+    pub recompute_tick: u64,
+    /// Expanded-instance id of the re-materialized second segment
+    /// (`n + k` for the k-th schedule entry over an n-block instance).
+    pub segment: usize,
+    /// Producer re-run cost in nanoseconds, paid every replay iteration.
+    pub cost_ns: u64,
+}
+
+impl RecomputeStep {
+    pub fn to_json(&self) -> anyhow::Result<Json> {
+        let int = |field: &str, v: u64| -> anyhow::Result<Json> {
+            let v = i64::try_from(v)
+                .map_err(|_| anyhow::anyhow!("{field} {v} exceeds the JSON integer range"))?;
+            Ok(Json::Int(v))
+        };
+        Ok(Json::from_pairs(vec![
+            ("id", int("id", self.id as u64)?),
+            ("drop_tick", int("drop_tick", self.drop_tick)?),
+            ("recompute_tick", int("recompute_tick", self.recompute_tick)?),
+            ("segment", int("segment", self.segment as u64)?),
+            ("cost_ns", int("cost_ns", self.cost_ns)?),
+        ]))
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<RecomputeStep> {
+        let field = |name: &str| -> anyhow::Result<u64> {
+            j.get(name)
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("recompute step: bad {name}"))
+        };
+        Ok(RecomputeStep {
+            id: field("id")? as usize,
+            drop_tick: field("drop_tick")?,
+            recompute_tick: field("recompute_tick")?,
+            segment: field("segment")? as usize,
+            cost_ns: field("cost_ns")?,
+        })
+    }
+}
+
+/// A budget-feasible plan: the expanded instance (split lifetimes plus
+/// recompute segments), its packing, and the schedule that produced it.
+/// An empty schedule means the unmodified instance already fit.
+#[derive(Debug, Clone)]
+pub struct BudgetedPlan {
+    pub instance: DsaInstance,
+    pub assignment: Assignment,
+    pub schedule: Vec<RecomputeStep>,
+}
+
+/// The budget cannot be met even with every droppable block split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BudgetInfeasible {
+    pub budget: u64,
+    /// Best (lowest) peak the pass achieved before giving up.
+    pub best_peak: u64,
+}
+
+impl std::fmt::Display for BudgetInfeasible {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "arena budget {} infeasible: best achievable peak {} even with \
+             every droppable block recomputed",
+            self.budget, self.best_peak
+        )
+    }
+}
+
+impl std::error::Error for BudgetInfeasible {}
+
+/// Rebuild the expanded instance an original instance + schedule imply,
+/// validating the schedule against the blocks (used when adopting a
+/// persisted plan — the disk is never trusted over the invariants).
+pub fn expand_instance(
+    inst: &DsaInstance,
+    schedule: &[RecomputeStep],
+) -> anyhow::Result<DsaInstance> {
+    let n = inst.len();
+    let mut split = vec![false; n];
+    let mut blocks = inst.blocks.clone();
+    for (k, step) in schedule.iter().enumerate() {
+        anyhow::ensure!(step.id < n, "recompute step {k}: id {} out of range", step.id);
+        anyhow::ensure!(!split[step.id], "recompute step {k}: block {} split twice", step.id);
+        let b = inst.blocks[step.id];
+        anyhow::ensure!(
+            b.free_at >= b.alloc_at + 3,
+            "recompute step {k}: block {} lifetime too short to split",
+            step.id
+        );
+        anyhow::ensure!(
+            step.drop_tick == b.alloc_at + 1 && step.recompute_tick == b.free_at - 1,
+            "recompute step {k}: ticks disagree with block {} lifetime",
+            step.id
+        );
+        anyhow::ensure!(
+            step.segment == n + k,
+            "recompute step {k}: segment id {} != {}",
+            step.segment,
+            n + k
+        );
+        split[step.id] = true;
+        blocks[step.id] = Block::new(step.id, b.size, b.alloc_at, step.drop_tick);
+        blocks.push(Block::new(step.segment, b.size, step.recompute_tick, b.free_at));
+    }
+    let mut expanded = DsaInstance::new(blocks);
+    expanded.capacity = inst.capacity;
+    Ok(expanded)
+}
+
+/// Plan the instance under a hard arena budget. `costs[id]` is block
+/// id's producer re-run cost in ns; an empty (or short) slice falls
+/// back to the roofline bandwidth model's price for re-materializing
+/// the bytes — the same fallback as [`crate::trace::Trace::recompute_cost`].
+pub fn plan_with_budget(
+    inst: &DsaInstance,
+    costs: &[u64],
+    budget: u64,
+    policy: Policy,
+) -> Result<BudgetedPlan, BudgetInfeasible> {
+    let n = inst.len();
+    let model = crate::graph::cost::ComputeModel::default();
+    let cost_of = |id: usize| -> u64 {
+        costs
+            .get(id)
+            .copied()
+            .unwrap_or_else(|| model.kernel_ns(0, inst.blocks[id].size))
+    };
+    // A block larger than the budget can never fit — dropping shrinks
+    // lifetimes, never sizes — so fail fast instead of splitting
+    // everything first.
+    if inst.max_block_size() > budget {
+        return Err(BudgetInfeasible {
+            budget,
+            best_peak: inst.max_block_size(),
+        });
+    }
+
+    // Drop order; `schedule[k].segment == n + k` by construction.
+    let mut schedule: Vec<RecomputeStep> = Vec::new();
+    let mut split = vec![false; n];
+    loop {
+        let expanded = expand_instance(inst, &schedule)
+            .expect("internally built schedule must be consistent");
+        let sol = bestfit::solve_with(&expanded, policy);
+        if sol.peak <= budget {
+            return Ok(BudgetedPlan {
+                instance: expanded,
+                assignment: sol,
+                schedule,
+            });
+        }
+
+        // Target the first tick of maximum liveness in the *expanded*
+        // instance — the packing can't beat that bound, so pressure
+        // there must be relieved by splitting a block whose freed
+        // window `[alloc_at+1, free_at-1)` covers it.
+        let t_star = argmax_liveness_tick(&expanded);
+        let droppable = |id: usize| -> bool {
+            let b = &inst.blocks[id];
+            !split[id] && b.free_at >= b.alloc_at + 3
+        };
+        // Score: recompute cost per freed byte·tick — cheapest trade
+        // first; ties break toward the lower id for determinism.
+        let score = |id: usize| -> f64 {
+            let b = &inst.blocks[id];
+            let freed = b.size as f64 * (b.free_at - b.alloc_at - 2) as f64;
+            cost_of(id) as f64 / freed
+        };
+        let pick = |ids: &mut dyn Iterator<Item = usize>| -> Option<usize> {
+            ids.min_by(|&a, &b| {
+                score(a)
+                    .partial_cmp(&score(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            })
+        };
+        let at_peak = pick(
+            &mut (0..n).filter(|&id| {
+                let b = &inst.blocks[id];
+                droppable(id) && b.alloc_at < t_star && t_star < b.free_at - 1
+            }),
+        );
+        // No droppable block spans the peak tick (its liveness there is
+        // irreducible): fall back to the cheapest remaining candidate
+        // anywhere — relieving other ticks can still un-fragment the
+        // packing — and fail only when nothing is left to split.
+        let chosen = match at_peak.or_else(|| pick(&mut (0..n).filter(|&id| droppable(id)))) {
+            Some(id) => id,
+            None => {
+                return Err(BudgetInfeasible {
+                    budget,
+                    best_peak: sol.peak,
+                })
+            }
+        };
+        let b = inst.blocks[chosen];
+        split[chosen] = true;
+        schedule.push(RecomputeStep {
+            id: chosen,
+            drop_tick: b.alloc_at + 1,
+            recompute_tick: b.free_at - 1,
+            segment: n + schedule.len(),
+            cost_ns: cost_of(chosen),
+        });
+    }
+}
+
+/// First tick achieving the maximum total size of simultaneously live
+/// blocks (the liveness lower bound's argmax).
+fn argmax_liveness_tick(inst: &DsaInstance) -> u64 {
+    // Event sweep mirroring `liveness_lower_bound`: frees sort before
+    // allocs at the same tick (half-open lifetimes don't collide).
+    let mut events: Vec<(u64, i8, u64)> = Vec::with_capacity(inst.blocks.len() * 2);
+    for b in &inst.blocks {
+        events.push((b.alloc_at, 1, b.size));
+        events.push((b.free_at, 0, b.size));
+    }
+    events.sort_unstable();
+    let (mut cur, mut peak, mut at) = (0u64, 0u64, 0u64);
+    for (tick, kind, size) in events {
+        if kind == 1 {
+            cur += size;
+            if cur > peak {
+                peak = cur;
+                at = tick;
+            }
+        } else {
+            cur -= size;
+        }
+    }
+    at
+}
+
+/// Total recompute cost of a schedule in nanoseconds — the per-iteration
+/// compute overhead a replayed budgeted plan pays.
+pub fn schedule_cost_ns(schedule: &[RecomputeStep]) -> u64 {
+    schedule.iter().map(|s| s.cost_ns).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roomy_budget_returns_untouched_instance() {
+        let inst = DsaInstance::from_triples(&[(100, 0, 10), (100, 4, 6)]);
+        let unbudgeted = bestfit::solve_with(&inst, Policy::default());
+        let plan = plan_with_budget(&inst, &[], u64::MAX, Policy::default()).unwrap();
+        assert!(plan.schedule.is_empty());
+        assert_eq!(plan.instance.len(), inst.len());
+        assert_eq!(plan.assignment, unbudgeted);
+    }
+
+    #[test]
+    fn drops_the_spanning_block_to_meet_budget() {
+        // A spans the whole horizon; B spikes in the middle. Peak 200.
+        // Dropping A leaves one-tick segments at [0,1) and [9,10) that
+        // don't overlap B's [4,6): peak falls to 100.
+        let inst = DsaInstance::from_triples(&[(100, 0, 10), (100, 4, 6)]);
+        let plan = plan_with_budget(&inst, &[], 100, Policy::default()).unwrap();
+        assert!(plan.assignment.peak <= 100);
+        plan.assignment.validate(&plan.instance).unwrap();
+        assert_eq!(plan.schedule.len(), 1);
+        let step = plan.schedule[0];
+        assert_eq!(step.id, 0);
+        assert_eq!(step.drop_tick, 1);
+        assert_eq!(step.recompute_tick, 9);
+        assert_eq!(step.segment, 2);
+        // Expanded instance: A truncated to [0,1), segment at [9,10).
+        assert_eq!(plan.instance.blocks[0].free_at, 1);
+        assert_eq!(plan.instance.blocks[2].alloc_at, 9);
+        assert_eq!(plan.instance.blocks[2].free_at, 10);
+    }
+
+    #[test]
+    fn picks_the_cheaper_cost_per_freed_byte_tick() {
+        // Two identical long blocks; either drop meets the budget. The
+        // recorded costs make block 1 the cheaper trade.
+        let inst = DsaInstance::from_triples(&[(100, 0, 10), (100, 0, 10), (100, 4, 6)]);
+        let plan = plan_with_budget(&inst, &[9_000, 1_000, 1], 200, Policy::default()).unwrap();
+        assert!(plan.assignment.peak <= 200);
+        assert_eq!(plan.schedule.len(), 1);
+        assert_eq!(plan.schedule[0].id, 1, "greedy must take the cheap drop");
+        assert_eq!(plan.schedule[0].cost_ns, 1_000);
+    }
+
+    #[test]
+    fn infeasible_budget_is_a_hard_error() {
+        // A single block bigger than the budget can never fit.
+        let inst = DsaInstance::from_triples(&[(100, 0, 10)]);
+        let err = plan_with_budget(&inst, &[], 50, Policy::default()).unwrap_err();
+        assert_eq!(err.budget, 50);
+        assert!(err.best_peak > 50);
+        assert!(err.to_string().contains("infeasible"));
+
+        // Two blocks overlapping at adjacent ticks: splitting frees
+        // nothing (lifetimes of 2 have no gap), so 150 is unreachable.
+        let inst = DsaInstance::from_triples(&[(100, 0, 2), (100, 1, 3)]);
+        assert!(plan_with_budget(&inst, &[], 150, Policy::default()).is_err());
+    }
+
+    #[test]
+    fn expand_rejects_inconsistent_schedules() {
+        let inst = DsaInstance::from_triples(&[(100, 0, 10), (50, 2, 8)]);
+        let good = RecomputeStep {
+            id: 0,
+            drop_tick: 1,
+            recompute_tick: 9,
+            segment: 2,
+            cost_ns: 7,
+        };
+        assert!(expand_instance(&inst, &[good]).is_ok());
+        for bad in [
+            RecomputeStep { id: 5, ..good },
+            RecomputeStep { drop_tick: 2, ..good },
+            RecomputeStep { recompute_tick: 8, ..good },
+            RecomputeStep { segment: 3, ..good },
+        ] {
+            assert!(expand_instance(&inst, &[bad]).is_err(), "{bad:?}");
+        }
+        // Splitting the same block twice is rejected.
+        let twice = [good, RecomputeStep { segment: 3, ..good }];
+        assert!(expand_instance(&inst, &twice).is_err());
+    }
+
+    #[test]
+    fn step_json_roundtrips() {
+        let step = RecomputeStep {
+            id: 3,
+            drop_tick: 4,
+            recompute_tick: 17,
+            segment: 12,
+            cost_ns: 123_456,
+        };
+        let back = RecomputeStep::from_json(&step.to_json().unwrap()).unwrap();
+        assert_eq!(back, step);
+    }
+
+    #[test]
+    fn every_policy_meets_the_budget_or_errors() {
+        let inst = DsaInstance::from_triples(&[
+            (64, 0, 12),
+            (32, 1, 11),
+            (128, 3, 7),
+            (64, 4, 6),
+            (16, 8, 10),
+        ]);
+        for bc in super::super::policies::BlockChoice::ALL {
+            let policy = Policy { block_choice: bc };
+            let lb = inst.liveness_lower_bound();
+            for budget in [lb, lb / 2, 128, 160] {
+                match plan_with_budget(&inst, &[], budget, policy) {
+                    Ok(plan) => {
+                        assert!(plan.assignment.peak <= budget, "{bc:?} budget {budget}");
+                        plan.assignment.validate(&plan.instance).unwrap();
+                    }
+                    Err(e) => assert_eq!(e.budget, budget),
+                }
+            }
+        }
+    }
+}

@@ -108,6 +108,20 @@
 //! stored offsets — and any mismatch discards the document and falls
 //! back cold: the disk is never trusted over the invariants.
 //!
+//! Planning is also *budget-bounded* (ROADMAP.md `## Budgeted
+//! planning`): when a hard arena cap (`pgmo serve --arena-budget`,
+//! [`plan::RegistryConfig::with_arena_budget`]) sits below a bucket's
+//! solved peak, [`dsa::recompute::plan_with_budget`] trades compute for
+//! memory — dropping checkpointed blocks after their producing use and
+//! re-materializing them before their next use, chosen greedily by
+//! recompute-cost per freed byte·tick from profiled producer costs —
+//! and re-solves until the peak fits. An unmeetable cap is the typed
+//! `BudgetInfeasible` hard error, never a silent overshoot. The replay
+//! engine stashes and restores the dropped bytes so the trade is
+//! invisible to clients, charging `recomputes`/`recompute_ns` per
+//! iteration, and budgeted schedules persist with their plans (store
+//! format v2).
+//!
 //! Around that core the crate ships the complete substrate the paper's
 //! evaluation needs: Chainer/CuPy-style pool and network-wise baseline
 //! allocators ([`alloc`]), a simulated 16-GiB GPU with a

@@ -7,7 +7,7 @@
 //! pgmo solve --trace t.json [--exact] [--policy largest-size]
 //! pgmo train [--steps 200] [--batch 32] [--artifacts artifacts/]
 //! pgmo serve [--requests 256] [--shards 2] [--buckets 1,4,8,16,32]
-//!            [--plan-budget 64MiB] [--plan-store plans/]
+//!            [--plan-budget 64MiB] [--arena-budget 4KiB] [--plan-store plans/]
 //!            [--deadline-ms 50] [--max-retries 2] [--retry-base-ms 1]
 //!            [--restart-budget 2] [--artifacts artifacts/]
 //! ```
@@ -348,6 +348,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
              per shard otherwise; e.g. 64MiB); LRU-evicts beyond it",
         )
         .opt_default(
+            "arena-budget",
+            "unlimited",
+            "hard per-bucket arena cap (e.g. 4KiB): plans exceeding it are re-planned \
+             with checkpoint/recompute splits until they fit; an unmeetable cap fails \
+             the build instead of overshooting",
+        )
+        .opt_default(
             "repack-every",
             "16",
             "background re-pack a bucket plan after this many warm reopts ('off' = never)",
@@ -411,11 +418,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             format!("--plan-budget: cannot parse {raw:?} (want e.g. 64MiB or 'unlimited')")
         })?,
     };
+    let arena_budget = match a.require("arena-budget")? {
+        "unlimited" | "none" => u64::MAX,
+        raw => pgmo::util::humansize::parse_bytes(raw).with_context(|| {
+            format!("--arena-budget: cannot parse {raw:?} (want e.g. 4KiB or 'unlimited')")
+        })?,
+    };
     let cfg = ServeConfig {
         shards: a.get_or("shards", 2usize)?,
         max_batch: a.get_or("max-batch", 32usize)?,
         bucket_ladder: a.get_csv::<usize>("buckets")?,
         plan_budget_bytes,
+        arena_budget,
         repack_interval: a.get_interval_or("repack-every", 16)?,
         repack_drift: a.get_fraction_or("repack-drift", 0.05)?,
         anytime_budget_ms: a.get_or("anytime-budget-ms", 25u64)?,

@@ -68,6 +68,20 @@ pub trait MemoryBackend {
     /// a memory address"). Default: free.
     fn on_replay(&mut self, _ctx: &mut Self::Ctx) {}
 
+    /// Snapshot the first `size` bytes of planned slot `pos` as a budgeted
+    /// plan drops the block (`dsa::recompute`). The stash stands in for
+    /// deterministic producer re-execution: [`MemoryBackend::restore`]
+    /// re-materializes exactly these bytes while the engine charges the
+    /// schedule's modeled producer cost. Default: empty — backends without
+    /// client-readable bytes (the simulated device) have nothing to carry.
+    fn checkpoint(&mut self, _ctx: &mut Self::Ctx, _pos: usize, _size: u64) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Re-materialize a dropped block's bytes into planned slot `pos` (the
+    /// recompute segment's slot). Default: no-op.
+    fn restore(&mut self, _ctx: &mut Self::Ctx, _pos: usize, _stash: &[u8]) {}
+
     /// Bytes currently held by this backend (arena + escape cache).
     fn held_bytes(&self) -> u64;
 }
@@ -236,6 +250,19 @@ impl MemoryBackend for HostBackend {
 
     fn escape_trim(&mut self, _ctx: &mut ()) {
         // Heap buffers are returned to the OS on free; nothing is cached.
+    }
+
+    fn checkpoint(&mut self, _ctx: &mut (), pos: usize, size: u64) -> Vec<u8> {
+        let arena = self.arena.as_ref().expect("checkpoint before arena");
+        let slot = arena.bytes(pos);
+        slot[..(size as usize).min(slot.len())].to_vec()
+    }
+
+    fn restore(&mut self, _ctx: &mut (), pos: usize, stash: &[u8]) {
+        self.arena
+            .as_mut()
+            .expect("restore before arena")
+            .write(pos, stash);
     }
 
     fn held_bytes(&self) -> u64 {

@@ -59,7 +59,9 @@ use super::backend::MemoryBackend;
 use crate::alloc::AllocStats;
 use crate::dsa::anytime::{self, AnytimeResult};
 use crate::dsa::bestfit::{self, TraceDelta};
+use crate::dsa::policies::Policy;
 use crate::dsa::problem::DsaInstance;
+use crate::dsa::recompute::{self, RecomputeStep};
 use crate::dsa::solution::Assignment;
 use crate::profiler::{BlockHandle, MemoryProfiler};
 use crate::testkit::FaultPlan;
@@ -96,16 +98,45 @@ struct Plan {
     /// The expected event sequence of a hot iteration — drives the
     /// *in-sync* O(1) fast path: while the incoming stream matches this
     /// prefix, no profiler recording, hashing, or interval checking is
-    /// needed at all.
+    /// needed at all. Always the *original* trace's events — recompute
+    /// segments are engine-internal and never appear in the client
+    /// stream.
     events: Vec<PlanEvent>,
-    /// Precomputed absolute address per position (base + offset).
+    /// Precomputed absolute address per position (base + offset). A
+    /// split block keeps its first segment's address for its whole
+    /// client-visible lifetime, so the free fast path matches unchanged.
     addrs: Vec<u64>,
+    /// Checkpoint/recompute schedule of a budgeted plan; empty
+    /// otherwise, and everything below is empty with it.
+    schedule: Vec<RecomputeStep>,
+    /// Split-block lookup: original position → schedule index.
+    split_of: HashMap<usize, usize>,
+    /// After serving `events[i]`: schedule steps whose checkpoint
+    /// becomes pending (flushed at the *next* engine call, so the
+    /// client keeps its write window after the alloc returns) …
+    drop_after: HashMap<usize, Vec<usize>>,
+    /// … and steps whose recompute segment must materialize at the end
+    /// of the *same* call (the client reads the block before issuing
+    /// its free, which is the next profiled event).
+    restore_after: HashMap<usize, Vec<usize>>,
 }
 
 impl Plan {
     fn arena_range(&self) -> (u64, u64) {
         (self.base, self.base + self.peak)
     }
+}
+
+/// Replay-time state of one schedule step's block, reset each iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SegState {
+    /// Bytes live in the block's own slot (segment A).
+    Whole,
+    /// Checkpointed to the engine-side stash; the slot is free for
+    /// whatever the packing overlapped into the gap.
+    Dropped,
+    /// Re-materialized into the recompute segment's slot (segment B).
+    Restored,
 }
 
 /// An in-flight background re-pack: a worker thread running the anytime
@@ -159,20 +190,39 @@ impl Placement {
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanSnapshot {
     pub trace: Trace,
-    /// Solved offset per plan position (index = λ).
+    /// Solved offset per plan position (index = λ). For a budgeted plan
+    /// this covers the *expanded* instance — the trace's own positions
+    /// followed by one recompute segment per schedule step.
     pub offsets: Vec<u64>,
     /// Arena size the offsets were packed into.
     pub peak: u64,
+    /// Checkpoint/recompute schedule of a budgeted plan
+    /// ([`recompute::plan_with_budget`]); empty for ordinary plans, and
+    /// absent from the serialized form when empty so unbudgeted
+    /// documents are byte-identical to the pre-budget format.
+    pub schedule: Vec<RecomputeStep>,
 }
 
 impl PlanSnapshot {
-    /// Full invariant check: the trace is well-formed and the offsets
-    /// are a valid no-overlap packing of its instance at exactly `peak`.
+    /// The instance the offsets must pack: the trace's own instance, or
+    /// its recompute expansion when a schedule is present.
+    fn solved_instance(&self) -> anyhow::Result<DsaInstance> {
+        let inst = self.trace.to_dsa_instance();
+        if self.schedule.is_empty() {
+            Ok(inst)
+        } else {
+            recompute::expand_instance(&inst, &self.schedule)
+        }
+    }
+
+    /// Full invariant check: the trace is well-formed, the schedule (if
+    /// any) names consistent split points, and the offsets are a valid
+    /// no-overlap packing of the (expanded) instance at exactly `peak`.
     /// Anything adopting a snapshot it did not build must run this first
     /// — never trust a deserialized plan over the invariants.
     pub fn validate(&self) -> anyhow::Result<()> {
         self.trace.validate()?;
-        let inst = self.trace.to_dsa_instance();
+        let inst = self.solved_instance()?;
         let sol = Assignment {
             offsets: self.offsets.clone(),
             peak: self.peak,
@@ -193,16 +243,26 @@ impl PlanSnapshot {
             .iter()
             .map(|&o| int("offset", o))
             .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(Json::from_pairs(vec![
+        let mut pairs = vec![
             ("trace", self.trace.to_json()?),
             ("offsets", Json::Arr(offsets)),
             ("peak", int("peak", self.peak)?),
-        ]))
+        ];
+        if !self.schedule.is_empty() {
+            let steps = self
+                .schedule
+                .iter()
+                .map(RecomputeStep::to_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            pairs.push(("recompute", Json::Arr(steps)));
+        }
+        Ok(Json::from_pairs(pairs))
     }
 
     /// Parse and validate. Errors on any structural damage: malformed
-    /// trace, missing/negative offsets, or offsets that collide /
-    /// misstate the peak ([`Assignment::validate`]).
+    /// trace, missing/negative offsets, an inconsistent recompute
+    /// schedule, or offsets that collide / misstate the peak
+    /// ([`Assignment::validate`]).
     pub fn from_json(j: &Json) -> anyhow::Result<PlanSnapshot> {
         let trace = Trace::from_json(j.get("trace"))?;
         let offsets = j
@@ -220,10 +280,18 @@ impl PlanSnapshot {
             .get("peak")
             .as_u64()
             .ok_or_else(|| anyhow::anyhow!("missing, negative or non-integer peak"))?;
+        let schedule = match j.get("recompute").as_arr() {
+            None => Vec::new(),
+            Some(arr) => arr
+                .iter()
+                .map(RecomputeStep::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
         let snap = PlanSnapshot {
             trace,
             offsets,
             peak,
+            schedule,
         };
         snap.validate()?;
         Ok(snap)
@@ -242,6 +310,14 @@ pub struct ReplayEngine<M: MemoryBackend> {
     plan: Option<Plan>,
     /// Live blocks by address (slow path only).
     live: HashMap<u64, LiveEntry>,
+    /// Overflow for duplicate live addresses. A budgeted plan's client
+    /// tokens are split blocks' first-segment addresses, and the
+    /// packing may legitimately reuse a dropped block's slot — so two
+    /// client-live blocks can share a token. The slow path chains the
+    /// duplicates here so every free still consumes exactly one entry
+    /// (identity between same-token blocks is interchangeable for the
+    /// client by construction). Always empty for unbudgeted plans.
+    live_dups: Vec<(u64, LiveEntry)>,
     /// Live arena intervals (offset → end offset), for the soundness
     /// check on structure-deviating iterations.
     arena_live: BTreeMap<u64, u64>,
@@ -295,6 +371,20 @@ pub struct ReplayEngine<M: MemoryBackend> {
     /// Background re-packs whose thread panicked or died: the result is
     /// discarded, the incumbent plan stays, and serving continues.
     repack_failed: u64,
+    /// Hard arena budget in bytes (`u64::MAX` = unbounded, the
+    /// default). When finite, every solve goes through
+    /// [`recompute::plan_with_budget`] and a plan whose peak exceeds
+    /// the budget is never installed — infeasibility is a hard error.
+    arena_budget: u64,
+    /// Per-schedule-step replay state, reset each `begin_iteration`.
+    seg_state: Vec<SegState>,
+    /// Checkpointed bytes per schedule step (index-aligned with
+    /// `seg_state`); `Some` exactly while the step is `Dropped`.
+    stash: Vec<Option<Vec<u8>>>,
+    /// Steps whose checkpoint is pending: enqueued when the drop event
+    /// was served, flushed at the entry of the next engine call so the
+    /// client's writes after the alloc land before the snapshot.
+    pending_drops: Vec<usize>,
     /// Optional deterministic fault schedule (chaos testing): injects
     /// slow solves and re-pack panics at the engine's two thread-level
     /// seams. `None` in production.
@@ -312,6 +402,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             profiler: MemoryProfiler::new(model, phase, batch),
             plan: None,
             live: HashMap::new(),
+            live_dups: Vec::new(),
             arena_live: BTreeMap::new(),
             deviated: false,
             structure_changed: false,
@@ -337,6 +428,10 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             repack_ns: 0,
             last_repack_ns: 0,
             repack_failed: 0,
+            arena_budget: u64::MAX,
+            seg_state: Vec::new(),
+            stash: Vec::new(),
+            pending_drops: Vec::new(),
             faults: None,
             model: model.to_string(),
             phase: phase.to_string(),
@@ -383,6 +478,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             trace: (*p.trace).clone(),
             offsets: p.offsets.clone(),
             peak: p.peak,
+            schedule: p.schedule.clone(),
         })
     }
 
@@ -393,12 +489,21 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// crossed a serialization boundary; this method re-derives the
     /// instance but does not re-check the packing in release builds.
     pub fn adopt_snapshot(&mut self, ctx: &mut M::Ctx, snap: PlanSnapshot) -> Result<(), M::Error> {
-        let inst = snap.trace.to_dsa_instance();
         let sol = Assignment {
             offsets: snap.offsets,
             peak: snap.peak,
         };
-        self.adopt_plan(ctx, snap.trace, &inst, sol)
+        if snap.schedule.is_empty() {
+            let inst = snap.trace.to_dsa_instance();
+            return self.adopt_plan(ctx, snap.trace, &inst, sol);
+        }
+        // A budgeted snapshot: the offsets cover the *expanded* instance,
+        // so `adopt_plan`'s trace-length check does not apply — rebuild
+        // the expansion the schedule implies and install directly.
+        assert!(self.plan.is_none(), "adopt_snapshot on an engine with a plan");
+        let inst = recompute::expand_instance(&snap.trace.to_dsa_instance(), &snap.schedule)
+            .expect("validated snapshot carries a consistent schedule");
+        self.install_plan(ctx, Arc::new(snap.trace), &inst, sol, snap.schedule)
     }
 
     /// Absolute address of plan position `pos` (base + offset). Panics
@@ -518,10 +623,83 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         self.faults = Some(faults);
     }
 
+    /// Impose a hard arena budget in bytes (`u64::MAX` = unbounded).
+    /// Every subsequent solve plans under the budget via
+    /// [`recompute::plan_with_budget`]; a plan that would exceed it is
+    /// never installed — an infeasible budget **panics** with the
+    /// [`recompute::BudgetInfeasible`] message rather than silently
+    /// overshooting (serve-side supervision turns that panic into a
+    /// shard restart and, on repetition, quarantine). Arming a finite
+    /// budget also turns on profiler cost recording, so drop selection
+    /// prices producers from the observed trace.
+    pub fn set_arena_budget(&mut self, bytes: u64) {
+        self.arena_budget = bytes;
+        if bytes != u64::MAX && self.plan.is_none() {
+            self.profiler.enable_cost_recording();
+        }
+    }
+
+    /// The configured hard arena budget (`u64::MAX` = unbounded).
+    pub fn arena_budget(&self) -> u64 {
+        self.arena_budget
+    }
+
+    /// The active plan's checkpoint/recompute schedule (empty for
+    /// unbudgeted plans or while profiling).
+    pub fn recompute_schedule(&self) -> &[RecomputeStep] {
+        self.plan
+            .as_ref()
+            .map(|p| p.schedule.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// The arena slot currently holding plan position `pos`'s bytes:
+    /// the position itself for whole blocks, the recompute segment once
+    /// the block was re-materialized. Backends that carry real bytes
+    /// (staging) route reads and writes through this.
+    pub fn effective_slot(&self, pos: usize) -> usize {
+        let Some(plan) = self.plan.as_ref() else {
+            return pos;
+        };
+        match plan.split_of.get(&pos) {
+            Some(&k) if self.seg_state[k] == SegState::Restored => plan.schedule[k].segment,
+            _ => pos,
+        }
+    }
+
+    /// Checkpointed bytes of plan position `pos` while it is dropped
+    /// (`None` otherwise). In the drop window the stash — not any arena
+    /// slot — is the block's authoritative content.
+    pub fn recompute_stash(&self, pos: usize) -> Option<&[u8]> {
+        let plan = self.plan.as_ref()?;
+        let &k = plan.split_of.get(&pos)?;
+        if self.seg_state[k] == SegState::Dropped {
+            self.stash[k].as_deref()
+        } else {
+            None
+        }
+    }
+
+    /// Mutable view of a dropped position's stashed bytes (`None` when
+    /// the position is not currently dropped).
+    pub fn recompute_stash_mut(&mut self, pos: usize) -> Option<&mut Vec<u8>> {
+        let plan = self.plan.as_ref()?;
+        let &k = plan.split_of.get(&pos)?;
+        if self.seg_state[k] == SegState::Dropped {
+            self.stash[k].as_mut()
+        } else {
+            None
+        }
+    }
+
     // ----- plan construction ------------------------------------------------
 
     fn fresh_profiler(&self) -> MemoryProfiler {
-        MemoryProfiler::new(&self.model, &self.phase, self.batch)
+        let mut prof = MemoryProfiler::new(&self.model, &self.phase, self.batch);
+        if self.arena_budget != u64::MAX {
+            prof.enable_cost_recording();
+        }
+        prof
     }
 
     /// Merge the plan skeleton with an observed trace: "the new observed
@@ -553,14 +731,20 @@ impl<M: MemoryBackend> ReplayEngine<M> {
 
     /// Install a solved assignment as the active plan; the backend
     /// reserves the arena. Returns Err when the arena cannot be reserved.
+    /// For a budgeted plan, `inst`/`sol` cover the *expanded* instance
+    /// (`schedule.len()` recompute segments appended after the trace's
+    /// own positions) while the event skeleton still comes from the
+    /// original trace — segments never appear in the client stream.
     fn install_plan(
         &mut self,
         ctx: &mut M::Ctx,
         trace: Arc<Trace>,
         inst: &DsaInstance,
         sol: Assignment,
+        schedule: Vec<RecomputeStep>,
     ) -> Result<(), M::Error> {
         debug_assert!(sol.validate(inst).is_ok());
+        debug_assert_eq!(inst.len(), trace.n_blocks() + schedule.len());
         let base = self.backend.reserve_arena(ctx, inst, &sol)?;
         let sizes: Vec<u64> = inst.blocks.iter().map(|b| b.size).collect();
         let events: Vec<PlanEvent> = trace
@@ -572,6 +756,31 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             })
             .collect();
         let addrs: Vec<u64> = sol.offsets.iter().map(|&o| base + o).collect();
+        let mut split_of = HashMap::new();
+        let mut drop_after: HashMap<usize, Vec<usize>> = HashMap::new();
+        let mut restore_after: HashMap<usize, Vec<usize>> = HashMap::new();
+        if !schedule.is_empty() {
+            let n = trace.n_blocks();
+            let (mut alloc_idx, mut free_idx) = (vec![usize::MAX; n], vec![usize::MAX; n]);
+            for (i, e) in events.iter().enumerate() {
+                match *e {
+                    PlanEvent::Alloc(p) => alloc_idx[p] = i,
+                    PlanEvent::Free(p) => free_idx[p] = i,
+                }
+            }
+            for (k, step) in schedule.iter().enumerate() {
+                split_of.insert(step.id, k);
+                drop_after.entry(alloc_idx[step.id]).or_default().push(k);
+                // The restore must land before the client's pre-free
+                // read, i.e. by the end of the call serving the event
+                // *preceding* the free (free_idx ≥ 1: the alloc came
+                // first).
+                restore_after.entry(free_idx[step.id] - 1).or_default().push(k);
+            }
+        }
+        self.seg_state = vec![SegState::Whole; schedule.len()];
+        self.stash = vec![None; schedule.len()];
+        self.pending_drops.clear();
         self.plan = Some(Plan {
             trace,
             sizes,
@@ -581,6 +790,10 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             base,
             events,
             addrs,
+            schedule,
+            split_of,
+            drop_after,
+            restore_after,
         });
         self.plan_generation += 1;
         Ok(())
@@ -613,23 +826,40 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             inst.len(),
             "assignment does not cover the adopted trace"
         );
-        self.install_plan(ctx, Arc::new(trace), inst, sol)
+        self.install_plan(ctx, Arc::new(trace), inst, sol, Vec::new())
     }
 
     /// Solve the plan from `trace` from scratch (cold). A fresh packing
     /// has zero warm-start drift, so the re-pack interval restarts.
+    /// Under a finite arena budget the solve goes through
+    /// [`recompute::plan_with_budget`]; an infeasible budget panics
+    /// (the hard-error contract of
+    /// [`set_arena_budget`](Self::set_arena_budget)) — an overshooting
+    /// plan is never installed.
     fn solve_plan(&mut self, ctx: &mut M::Ctx, trace: Trace) -> Result<(), M::Error> {
         let inst = trace.to_dsa_instance();
         let t0 = Instant::now();
         if let Some(d) = self.faults.as_ref().and_then(|f| f.solve_delay()) {
             std::thread::sleep(d); // injected slow solve (measured below)
         }
-        let sol = bestfit::solve(&inst);
+        if self.arena_budget == u64::MAX {
+            let sol = bestfit::solve(&inst);
+            self.last_solve_ns = t0.elapsed().as_nanos() as u64;
+            self.solve_ns += self.last_solve_ns;
+            self.solves += 1;
+            self.warm_since_repack = 0;
+            return self.install_plan(ctx, Arc::new(trace), &inst, sol, Vec::new());
+        }
+        let planned =
+            recompute::plan_with_budget(&inst, &trace.costs, self.arena_budget, Policy::default());
         self.last_solve_ns = t0.elapsed().as_nanos() as u64;
         self.solve_ns += self.last_solve_ns;
         self.solves += 1;
         self.warm_since_repack = 0;
-        self.install_plan(ctx, Arc::new(trace), &inst, sol)
+        match planned {
+            Ok(b) => self.install_plan(ctx, Arc::new(trace), &b.instance, b.assignment, b.schedule),
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Reoptimize after a pure size ratchet: warm-start the solver from
@@ -641,6 +871,14 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// reopt went.
     fn resolve_plan(&mut self, ctx: &mut M::Ctx, merged: Trace) -> Result<(), M::Error> {
         let plan = self.plan.as_ref().expect("resolve_plan without plan");
+        if self.arena_budget != u64::MAX || !plan.schedule.is_empty() {
+            // A budgeted plan's assignment covers the expanded instance,
+            // which the warm-start delta cannot diff against the trace's
+            // own positions — and a ratchet may push the peak past the
+            // budget anyway. Re-plan cold under the budget.
+            self.stats.reopt_cold += 1;
+            return self.solve_plan(ctx, merged);
+        }
         let prev_inst = plan.trace.to_dsa_instance();
         let prev = Assignment {
             offsets: plan.offsets.clone(),
@@ -669,7 +907,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             self.stats.reopt_cold += 1;
             self.warm_since_repack = 0;
         }
-        self.install_plan(ctx, Arc::new(merged), &new_inst, r.assignment)
+        self.install_plan(ctx, Arc::new(merged), &new_inst, r.assignment, Vec::new())
     }
 
     /// Spawn the background anytime search when either trigger says
@@ -682,6 +920,14 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// never become timing-dependent.
     fn maybe_spawn_repack(&mut self) {
         if self.warm_since_repack == 0 || self.repack.is_some() {
+            return;
+        }
+        if self.arena_budget != u64::MAX
+            || self.plan.as_ref().is_some_and(|p| !p.schedule.is_empty())
+        {
+            // Budgeted plans never accrue warm drift (every reopt
+            // re-plans cold under the budget), and the anytime search
+            // has no notion of the expanded instance — skip.
             return;
         }
         let interval_due =
@@ -766,7 +1012,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         // The stale check above proved the seed was this very plan, so
         // the gap is exactly what the search reclaimed.
         self.reclaimed_bytes += current_peak - result.assignment.peak;
-        self.install_plan(ctx, trace, &inst, result.assignment)
+        self.install_plan(ctx, trace, &inst, result.assignment, Vec::new())
     }
 
     /// Leave the in-sync fast path: reconstruct the profiler, live map,
@@ -776,29 +1022,70 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     #[cold]
     fn desync(&mut self) {
         debug_assert!(self.in_sync);
+        debug_assert!(
+            self.pending_drops.is_empty(),
+            "pending checkpoints flush at call entry, before any desync"
+        );
         self.in_sync = false;
+        let mut prof = self.fresh_profiler();
         let plan = self.plan.as_ref().expect("desync without plan");
-        let mut prof = MemoryProfiler::new(&self.model, &self.phase, self.batch);
         self.live.clear();
+        self.live_dups.clear();
         self.arena_live.clear();
+        // The interval a replayed position occupies *right now*: its own
+        // slot while whole, nothing while dropped (the bytes live in the
+        // engine-side stash), the recompute segment's slot once
+        // restored. Only the net liveness matters, so consulting the
+        // current state for prefix events is exact.
         let mut handles: Vec<Option<BlockHandle>> = vec![None; plan.sizes.len()];
         for &e in &plan.events[..self.event_idx] {
             match e {
                 PlanEvent::Alloc(pos) => {
                     let h = prof.on_alloc(plan.sizes[pos]);
                     handles[pos] = Some(h);
-                    self.live
-                        .insert(plan.addrs[pos], LiveEntry::Arena { handle: h, pos });
-                    self.arena_live
-                        .insert(plan.offsets[pos], plan.offsets[pos] + plan.sizes[pos]);
+                    let entry = LiveEntry::Arena { handle: h, pos };
+                    if let Some(prev) = self.live.insert(plan.addrs[pos], entry) {
+                        self.live_dups.push((plan.addrs[pos], prev));
+                    }
+                    match plan.split_of.get(&pos).copied() {
+                        Some(k) if self.seg_state[k] == SegState::Dropped => {}
+                        Some(k) if self.seg_state[k] == SegState::Restored => {
+                            let off = plan.offsets[plan.schedule[k].segment];
+                            self.arena_live.insert(off, off + plan.sizes[pos]);
+                        }
+                        _ => {
+                            self.arena_live
+                                .insert(plan.offsets[pos], plan.offsets[pos] + plan.sizes[pos]);
+                        }
+                    }
                 }
                 PlanEvent::Free(pos) => {
                     let h = handles[pos].take().expect("plan free before alloc");
                     prof.on_free(h);
-                    self.live.remove(&plan.addrs[pos]);
-                    self.arena_live.remove(&plan.offsets[pos]);
+                    let addr = plan.addrs[pos];
+                    if let Some(i) = self.live_dups.iter().rposition(|&(a, _)| a == addr) {
+                        self.live_dups.remove(i);
+                    } else {
+                        self.live.remove(&addr);
+                    }
+                    match plan.split_of.get(&pos).copied() {
+                        Some(k) if self.seg_state[k] == SegState::Dropped => {}
+                        Some(k) if self.seg_state[k] == SegState::Restored => {
+                            self.arena_live.remove(&plan.offsets[plan.schedule[k].segment]);
+                        }
+                        _ => {
+                            self.arena_live.remove(&plan.offsets[pos]);
+                        }
+                    }
                 }
             }
+        }
+        if !plan.schedule.is_empty() {
+            // Replay actions stop at the desync point, so this
+            // iteration cannot finish the schedule; re-plan cold under
+            // the budget at the boundary — safe over fast.
+            self.deviated = true;
+            self.structure_changed = true;
         }
         prof.set_interrupt_depth(self.interrupt_depth);
         self.profiler = prof;
@@ -816,6 +1103,77 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         Ok(Placement { addr, pos: None })
     }
 
+    // ----- budgeted replay: checkpoint/recompute actions -------------------
+
+    /// Flush checkpoints whose drop event was served on a *previous*
+    /// engine call. The client writes the freshly allocated block
+    /// between calls, so snapshotting at the next entry — before
+    /// anything else, including a desync — captures exactly the bytes
+    /// the producer left behind.
+    fn flush_pending_drops(&mut self, ctx: &mut M::Ctx) {
+        if self.pending_drops.is_empty() {
+            return;
+        }
+        let drops: Vec<(usize, usize, u64)> = {
+            let plan = self.plan.as_ref().expect("pending drop without plan");
+            self.pending_drops
+                .drain(..)
+                .map(|k| {
+                    let pos = plan.schedule[k].id;
+                    (k, pos, plan.sizes[pos])
+                })
+                .collect()
+        };
+        for (k, pos, size) in drops {
+            self.stash[k] = Some(self.backend.checkpoint(ctx, pos, size));
+            self.seg_state[k] = SegState::Dropped;
+        }
+    }
+
+    /// Run the recompute actions attached to the just-served in-sync
+    /// event `idx`: enqueue checkpoints (deferred to the next call
+    /// entry) and materialize recompute segments due *now* — the
+    /// client reads a recomputed block before its free, which is the
+    /// next profiled event, so the restore cannot wait. Early-restore
+    /// soundness: no profiled event separates this one from the free,
+    /// so any block overlapping the segment's slot in the packing is
+    /// live across the segment's lifetime too — which the no-overlap
+    /// packing forbids. A restore whose checkpoint is still pending
+    /// (drop and restore attached to the same event — the block's
+    /// alloc and free are adjacent) collapses to a direct copy.
+    fn apply_recompute_actions(&mut self, ctx: &mut M::Ctx, idx: usize) {
+        let (drops, restores) = {
+            let plan = self.plan.as_ref().expect("actions without plan");
+            let restores: Vec<(usize, RecomputeStep, u64)> = plan
+                .restore_after
+                .get(&idx)
+                .map(|ks| {
+                    ks.iter()
+                        .map(|&k| {
+                            let step = plan.schedule[k];
+                            (k, step, plan.sizes[step.id])
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            (plan.drop_after.get(&idx).cloned().unwrap_or_default(), restores)
+        };
+        self.pending_drops.extend(drops);
+        for (k, step, size) in restores {
+            if self.seg_state[k] == SegState::Whole {
+                self.pending_drops.retain(|&x| x != k);
+                let s = self.backend.checkpoint(ctx, step.id, size);
+                self.backend.restore(ctx, step.segment, &s);
+            } else {
+                let s = self.stash[k].take().expect("restore without stash");
+                self.backend.restore(ctx, step.segment, &s);
+            }
+            self.seg_state[k] = SegState::Restored;
+            self.stats.recomputes += 1;
+            self.stats.recompute_ns += step.cost_ns;
+        }
+    }
+
     // ----- the per-iteration state machine ---------------------------------
 
     /// λ reset (§4.2): positional ids restart each propagation.
@@ -826,6 +1184,11 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         if !self.in_sync {
             self.profiler = self.fresh_profiler();
         }
+        if !self.seg_state.is_empty() {
+            self.seg_state.fill(SegState::Whole);
+            self.stash.iter_mut().for_each(|s| *s = None);
+            self.pending_drops.clear();
+        }
         self.deviated = false;
         self.structure_changed = false;
     }
@@ -833,18 +1196,24 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// Serve a memory request of `size` bytes.
     pub fn alloc(&mut self, ctx: &mut M::Ctx, size: u64) -> Result<Placement, M::Error> {
         self.stats.n_allocs += 1;
+        self.flush_pending_drops(ctx);
 
         // The in-sync O(1) fast path: the expected next event is a known
         // allocation position — no recording, no hashing, no interval
         // check needed (§4.2's "just returns a memory address").
         if self.in_sync && self.interrupt_depth == 0 {
             let plan = self.plan.as_ref().expect("in_sync without plan");
+            let budgeted = !plan.schedule.is_empty();
             if let Some(&PlanEvent::Alloc(pos)) = plan.events.get(self.event_idx) {
                 if size <= plan.sizes[pos] {
                     let addr = plan.addrs[pos];
+                    let served = self.event_idx;
                     self.event_idx += 1;
                     self.stats.fast_path += 1;
                     self.backend.on_replay(ctx);
+                    if budgeted {
+                        self.apply_recompute_actions(ctx, served);
+                    }
                     return Ok(Placement {
                         addr,
                         pos: Some(pos),
@@ -876,7 +1245,15 @@ impl<M: MemoryBackend> ReplayEngine<M> {
         }
 
         let plan = self.plan.as_ref().expect("checked above");
-        if pos < plan.sizes.len() && size <= plan.sizes[pos] {
+        // Client-visible positions only: a budgeted plan's trailing
+        // recompute segments are engine-internal and must never match
+        // an overflowing request's λ. Post-desync serving from a
+        // budgeted plan is disabled outright — replay actions stopped
+        // at the desync point and split-block tokens can collide, so
+        // dynamic serving plus the boundary's cold budgeted re-solve is
+        // the safe route.
+        let n_client = plan.sizes.len() - plan.schedule.len();
+        if plan.schedule.is_empty() && pos < n_client && size <= plan.sizes[pos] {
             let (off, end) = (plan.offsets[pos], plan.offsets[pos] + plan.sizes[pos]);
             // Soundness check: the planned slot must not overlap a live
             // planned block. Disjoint sorted intervals ⇒ it suffices to
@@ -901,7 +1278,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             // Non-hot structure detected: fall through to dynamic serve.
             self.stats.slot_collisions += 1;
             self.structure_changed = true;
-        } else if pos >= plan.sizes.len() {
+        } else if pos >= n_client {
             self.structure_changed = true;
         }
 
@@ -914,16 +1291,22 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// Release the block at `addr` (`size` = originally requested bytes).
     pub fn free(&mut self, ctx: &mut M::Ctx, addr: u64, size: u64) {
         self.stats.n_frees += 1;
+        self.flush_pending_drops(ctx);
 
         if self.in_sync {
             let plan = self.plan.as_ref().expect("in_sync without plan");
+            let budgeted = !plan.schedule.is_empty();
             let (lo, hi) = plan.arena_range();
             if addr >= lo && addr < hi {
                 // In-sync arena free: must match the expected event.
                 if let Some(&PlanEvent::Free(pos)) = plan.events.get(self.event_idx) {
                     if plan.addrs[pos] == addr {
+                        let served = self.event_idx;
                         self.event_idx += 1;
                         self.backend.on_replay(ctx);
+                        if budgeted {
+                            self.apply_recompute_actions(ctx, served);
+                        }
                         return;
                     }
                 }
@@ -935,13 +1318,35 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             }
         }
 
-        if let Some(entry) = self.live.remove(&addr) {
+        let entry = self.live.remove(&addr).or_else(|| {
+            self.live_dups
+                .iter()
+                .rposition(|&(a, _)| a == addr)
+                .map(|i| self.live_dups.remove(i).1)
+        });
+        if let Some(entry) = entry {
             match entry {
                 LiveEntry::Arena { handle, pos } => {
                     // Replay free is pure bookkeeping — no device call.
                     self.backend.on_replay(ctx);
-                    let off = self.plan.as_ref().expect("arena entry without plan").offsets[pos];
-                    self.arena_live.remove(&off);
+                    let plan = self.plan.as_ref().expect("arena entry without plan");
+                    // A split block occupies whatever its replay state
+                    // says: nothing while dropped (the stash lives on
+                    // until the iteration boundary — same-token blocks
+                    // are interchangeable here, so clearing eagerly
+                    // could orphan a still-live twin), the recompute
+                    // segment's slot once restored, its own slot while
+                    // whole.
+                    match plan.split_of.get(&pos).copied() {
+                        Some(k) if self.seg_state[k] == SegState::Dropped => {}
+                        Some(k) if self.seg_state[k] == SegState::Restored => {
+                            let seg = plan.schedule[k].segment;
+                            self.arena_live.remove(&plan.offsets[seg]);
+                        }
+                        _ => {
+                            self.arena_live.remove(&plan.offsets[pos]);
+                        }
+                    }
                     self.profiler.on_free(handle);
                 }
                 LiveEntry::Escape { handle } => {
@@ -960,6 +1365,7 @@ impl<M: MemoryBackend> ReplayEngine<M> {
     /// Close the propagation: solve (first iteration), reoptimize (after a
     /// deviation), or — on a perfect hot iteration — do nothing at all.
     pub fn end_iteration(&mut self, ctx: &mut M::Ctx) -> Result<(), M::Error> {
+        self.flush_pending_drops(ctx);
         if self.in_sync {
             let complete =
                 self.event_idx == self.plan.as_ref().expect("in_sync without plan").events.len();
@@ -979,9 +1385,9 @@ impl<M: MemoryBackend> ReplayEngine<M> {
             self.structure_changed = true;
         }
         debug_assert!(
-            self.live.is_empty(),
+            self.live.is_empty() && self.live_dups.is_empty(),
             "blocks must not outlive the propagation ({} leaked)",
-            self.live.len()
+            self.live.len() + self.live_dups.len()
         );
         let fresh = self.fresh_profiler();
         let observed = std::mem::replace(&mut self.profiler, fresh).finish();
@@ -1383,6 +1789,121 @@ mod tests {
         }
         assert_eq!(e.stats().reopt_warm, 4);
         assert_eq!(e.repacks(), 0);
+    }
+
+    /// One client iteration of the budget-test shape: A spans, B spikes
+    /// — liveness peak 3000 — returning the two placements.
+    fn spike_iteration(e: &mut ReplayEngine<HostBackend>) -> (Placement, Placement) {
+        e.begin_iteration();
+        let a = ok(e.alloc(&mut (), 1000));
+        let b = ok(e.alloc(&mut (), 2000));
+        e.free(&mut (), b.addr, 2000);
+        e.free(&mut (), a.addr, 1000);
+        ok(e.end_iteration(&mut ()));
+        (a, b)
+    }
+
+    #[test]
+    fn budgeted_plan_meets_budget_and_recomputes_contents() {
+        let mut e = host_engine();
+        e.set_arena_budget(2000);
+        spike_iteration(&mut e); // profile: peak 3000 exceeds the budget
+        assert!(e.planned_peak().unwrap() <= 2000, "peak fits the budget");
+        assert_eq!(e.recompute_schedule().len(), 1);
+        assert_eq!(e.recompute_schedule()[0].id, 0, "the spanning block drops");
+
+        // Replay: the client writes A right after its alloc and reads it
+        // back just before the free — across the drop/recompute window.
+        let payload: Vec<u8> = (0..64u8).collect();
+        for _ in 0..2 {
+            e.begin_iteration();
+            let a = ok(e.alloc(&mut (), 1000));
+            assert!(a.is_replayed());
+            let pos = a.pos.unwrap();
+            e.backend_mut().arena_mut().unwrap().write(pos, &payload);
+            let b = ok(e.alloc(&mut (), 2000));
+            assert!(b.is_replayed());
+            e.free(&mut (), b.addr, 2000);
+            // B's free precedes A's, so the recompute segment holds A now.
+            let slot = e.effective_slot(pos);
+            assert_ne!(slot, pos, "restored into the recompute segment");
+            let got = e.backend().arena().unwrap().bytes(slot)[..payload.len()].to_vec();
+            assert_eq!(got, payload, "recomputed bytes are position-identical");
+            e.free(&mut (), a.addr, 1000);
+            ok(e.end_iteration(&mut ()));
+        }
+        let s = e.stats();
+        assert_eq!(s.recomputes, 2, "one recompute per replayed iteration");
+        assert!(s.recompute_ns > 0, "modeled producer cost is charged");
+        assert_eq!(s.reopts, 0, "budgeted replay stayed hot");
+    }
+
+    #[test]
+    fn roomy_budget_keeps_the_unbudgeted_plan() {
+        let mut budgeted = host_engine();
+        budgeted.set_arena_budget(1 << 20);
+        let mut plain = host_engine();
+        drive(&mut budgeted, &[1000, 2000]);
+        drive(&mut plain, &[1000, 2000]);
+        assert!(budgeted.recompute_schedule().is_empty());
+        assert_eq!(budgeted.planned_peak(), plain.planned_peak());
+        assert_eq!(budgeted.planned_offsets(), plain.planned_offsets());
+        assert!(drive(&mut budgeted, &[1000, 2000]));
+        assert_eq!(budgeted.stats().recomputes, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "infeasible")]
+    fn infeasible_budget_panics_instead_of_overshooting() {
+        let mut e = host_engine();
+        e.set_arena_budget(50); // a single 1000-byte block can never fit
+        e.begin_iteration();
+        let p = ok(e.alloc(&mut (), 1000));
+        e.free(&mut (), p.addr, 1000);
+        let _ = e.end_iteration(&mut ());
+    }
+
+    #[test]
+    fn budgeted_snapshot_roundtrips_and_adopts() {
+        let mut e = host_engine();
+        e.set_arena_budget(2000);
+        spike_iteration(&mut e);
+        let snap = e.snapshot().unwrap();
+        assert!(!snap.schedule.is_empty());
+        snap.validate().unwrap();
+        let back = PlanSnapshot::from_json(&snap.to_json().unwrap()).unwrap();
+        assert_eq!(back, snap);
+
+        let mut adopted = host_engine();
+        ok(adopted.adopt_snapshot(&mut (), back));
+        assert_eq!(adopted.planned_peak(), e.planned_peak());
+        let (a, b) = spike_iteration(&mut adopted);
+        assert!(a.is_replayed() && b.is_replayed(), "adopted plan replays");
+        assert_eq!(adopted.stats().recomputes, 1);
+    }
+
+    #[test]
+    fn budgeted_desync_replans_cold_under_the_budget() {
+        let mut e = host_engine();
+        e.set_arena_budget(2000);
+        spike_iteration(&mut e); // profile → budgeted plan with a drop
+        // Deviate structurally: a third block appears mid-iteration.
+        let shape = |e: &mut ReplayEngine<HostBackend>| -> bool {
+            e.begin_iteration();
+            let a = ok(e.alloc(&mut (), 1000));
+            let b = ok(e.alloc(&mut (), 2000));
+            let c = ok(e.alloc(&mut (), 500));
+            let all = a.is_replayed() && b.is_replayed() && c.is_replayed();
+            e.free(&mut (), c.addr, 500);
+            e.free(&mut (), b.addr, 2000);
+            e.free(&mut (), a.addr, 1000);
+            ok(e.end_iteration(&mut ()));
+            all
+        };
+        assert!(!shape(&mut e), "deviating iteration serves dynamically");
+        assert!(e.planned_peak().unwrap() <= 2000, "re-plan respects the budget");
+        assert_eq!(e.stats().reopt_cold, 1);
+        assert!(shape(&mut e), "the re-planned shape replays hot");
     }
 
     #[test]

@@ -84,6 +84,7 @@ pub const DEFAULT_LADDER: [u32; 5] = [1, 4, 8, 16, 32];
 pub struct RegistryConfig {
     buckets: Vec<u32>,
     budget_bytes: u64,
+    arena_budget: u64,
     repack_interval: u64,
     repack_drift: f64,
     anytime_budget_ms: u64,
@@ -103,6 +104,7 @@ impl RegistryConfig {
         RegistryConfig {
             buckets: b,
             budget_bytes: u64::MAX,
+            arena_budget: u64::MAX,
             repack_interval: 0,
             repack_drift: 0.0,
             anytime_budget_ms: 25,
@@ -115,6 +117,17 @@ impl RegistryConfig {
     /// evicted beyond it (`u64::MAX` = unlimited).
     pub fn with_budget(mut self, bytes: u64) -> RegistryConfig {
         self.budget_bytes = bytes;
+        self
+    }
+
+    /// Hard per-plan arena byte budget: a managed plan whose solved peak
+    /// exceeds it is re-planned with checkpoint/recompute splits
+    /// ([`dsa::recompute`](crate::dsa::recompute)) until the packed peak
+    /// fits, and a budget no schedule can meet is a hard build error —
+    /// never a silently overshooting plan (`u64::MAX` = no budget; see
+    /// `ReplayEngine::set_arena_budget`).
+    pub fn with_arena_budget(mut self, bytes: u64) -> RegistryConfig {
+        self.arena_budget = bytes;
         self
     }
 
@@ -154,6 +167,10 @@ impl RegistryConfig {
 
     pub fn budget_bytes(&self) -> u64 {
         self.budget_bytes
+    }
+
+    pub fn arena_budget(&self) -> u64 {
+        self.arena_budget
     }
 
     pub fn repack_interval(&self) -> u64 {
@@ -409,12 +426,32 @@ impl RegistryStats {
 
 // ----- poisoned-plan quarantine ---------------------------------------------
 
+/// When a cooldown ends. Arming a cooldown computes
+/// `Instant::now() + cooldown`, which overflows `Instant` for huge
+/// configured cooldowns (e.g. `Duration::MAX` as "forever"); overflow
+/// maps to [`Deadline::Forever`] — quarantined until process exit —
+/// instead of panicking on the failure-recording path.
+#[derive(Debug, Clone, Copy)]
+enum Deadline {
+    At(Instant),
+    Forever,
+}
+
+impl Deadline {
+    fn passed_by(self, now: Instant) -> bool {
+        match self {
+            Deadline::At(until) => now >= until,
+            Deadline::Forever => false,
+        }
+    }
+}
+
 #[derive(Debug, Default)]
 struct QuarantineEntry {
     /// Consecutive failures since the last success (or cooldown expiry).
     strikes: u32,
     /// Set while the key is serving its cooldown.
-    until: Option<Instant>,
+    until: Option<Deadline>,
 }
 
 /// Poisoned-plan quarantine: a [`PlanKey`] whose plan keeps failing —
@@ -469,7 +506,12 @@ impl Quarantine {
         }
         e.strikes += 1;
         if e.strikes >= self.threshold {
-            e.until = Some(Instant::now() + self.cooldown);
+            e.until = Some(
+                Instant::now()
+                    .checked_add(self.cooldown)
+                    .map(Deadline::At)
+                    .unwrap_or(Deadline::Forever),
+            );
             return true;
         }
         false
@@ -492,7 +534,7 @@ impl Quarantine {
     pub fn is_quarantined(&self, key: &PlanKey) -> bool {
         let mut entries = self.entries();
         match entries.get(key).and_then(|e| e.until) {
-            Some(until) if Instant::now() < until => true,
+            Some(until) if !until.passed_by(Instant::now()) => true,
             Some(_) => {
                 entries.remove(key);
                 false
@@ -507,7 +549,7 @@ impl Quarantine {
         let now = Instant::now();
         entries
             .values()
-            .filter(|e| e.until.is_some_and(|u| now < u))
+            .filter(|e| e.until.is_some_and(|u| !u.passed_by(now)))
             .count()
     }
 }
@@ -1046,6 +1088,19 @@ mod tests {
         assert!(!q.is_quarantined(&key(4)));
         assert_eq!(q.active(), 0);
         assert!(q.record_failure(&key(4)), "strikes were reset at expiry");
+    }
+
+    #[test]
+    fn quarantine_overflowing_cooldown_means_until_process_exit() {
+        // `Instant::now() + Duration::MAX` overflows; arming must not
+        // panic, and the entry behaves as "quarantined forever":
+        // observation never clears it, successes never cut it short.
+        let q = Quarantine::new(1, Duration::MAX);
+        assert!(q.record_failure(&key(4)), "threshold 1 trips immediately");
+        assert!(q.is_quarantined(&key(4)));
+        q.record_success(&key(4));
+        assert!(q.is_quarantined(&key(4)), "a Forever cooldown never expires");
+        assert_eq!(q.active(), 1);
     }
 
     #[test]

@@ -40,8 +40,21 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Bumped whenever the document layout changes incompatibly; entries
-/// from any other version are discarded, never migrated in place.
-pub const STORE_FORMAT_VERSION: i64 = 1;
+/// from an *unknown* version are discarded, never migrated in place.
+///
+/// Version history:
+/// * v1 — trace + offsets + peak.
+/// * v2 — adds the optional budgeted-planning fields: per-block
+///   recompute costs on the trace and a `recompute` schedule on the
+///   plan ([`crate::dsa::recompute`]). Both are additive and default
+///   to empty, so v1 documents still load (as schedule-free plans);
+///   new documents are always written as v2.
+pub const STORE_FORMAT_VERSION: i64 = 2;
+
+/// Oldest document version this build still reads. Documents older than
+/// this (or newer than [`STORE_FORMAT_VERSION`]) are rejected at load
+/// and fall back to the cold path.
+pub const STORE_FORMAT_MIN_READ: i64 = 1;
 
 /// One persisted plan: everything a restarted registry needs to serve
 /// the key's first batch by replay, plus provenance and integrity
@@ -88,8 +101,9 @@ impl StoredPlan {
             .as_i64()
             .ok_or_else(|| anyhow::anyhow!("missing store-format version"))?;
         anyhow::ensure!(
-            version == STORE_FORMAT_VERSION,
-            "store-format version skew: document v{version}, this build reads v{STORE_FORMAT_VERSION}"
+            (STORE_FORMAT_MIN_READ..=STORE_FORMAT_VERSION).contains(&version),
+            "store-format version skew: document v{version}, this build reads \
+             v{STORE_FORMAT_MIN_READ}..=v{STORE_FORMAT_VERSION}"
         );
         let model = j
             .get("model")
@@ -279,6 +293,35 @@ mod tests {
             trace,
             offsets: sol.offsets,
             peak: sol.peak,
+            schedule: vec![],
+        }
+    }
+
+    /// A snapshot whose plan carries a recompute schedule: peak liveness
+    /// 3000 at tick 2, planned under a 2000-byte budget, so block 0
+    /// (lifetime 3, droppable) is split.
+    fn budgeted_snapshot() -> PlanSnapshot {
+        let mut trace = Trace::new("toy", "serving-b8", 8);
+        trace.events = vec![
+            TraceEvent::Alloc { id: 0, size: 1000, tick: 1 },
+            TraceEvent::Alloc { id: 1, size: 2000, tick: 2 },
+            TraceEvent::Free { id: 1, tick: 3 },
+            TraceEvent::Free { id: 0, tick: 4 },
+        ];
+        trace.costs = vec![100, 200];
+        let inst = trace.to_dsa_instance();
+        let b = crate::dsa::recompute::plan_with_budget(
+            &inst,
+            &trace.costs,
+            2000,
+            crate::dsa::policies::Policy::default(),
+        )
+        .expect("2000-byte budget is feasible by dropping block 0");
+        PlanSnapshot {
+            trace,
+            offsets: b.assignment.offsets,
+            peak: b.assignment.peak,
+            schedule: b.schedule,
         }
     }
 
@@ -323,6 +366,42 @@ mod tests {
         let mut j = stored().to_json().unwrap();
         j.set("version", Json::Int(STORE_FORMAT_VERSION + 1));
         assert!(StoredPlan::from_json(&j).is_err());
+        let mut j = stored().to_json().unwrap();
+        j.set("version", Json::Int(STORE_FORMAT_MIN_READ - 1));
+        assert!(StoredPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn v1_document_still_loads_as_a_schedule_free_plan() {
+        // A v1 writer never emitted trace costs or a recompute schedule;
+        // a schedule-free v2 document differs only in the version field,
+        // so rewriting it *is* a faithful v1 document.
+        let p = stored();
+        let mut j = p.to_json().unwrap();
+        j.set("version", Json::Int(1));
+        let text = j.dump();
+        assert!(!text.contains("recompute") && !text.contains("costs"));
+        let back = StoredPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert!(back.snapshot.schedule.is_empty());
+    }
+
+    #[test]
+    fn budgeted_plan_roundtrips_with_its_schedule() {
+        let p = StoredPlan {
+            key: PlanKey::new("toy", "serving", 8),
+            policy: BlockChoice::LongestLifetime,
+            donor_bucket: None,
+            snapshot: budgeted_snapshot(),
+        };
+        assert!(!p.snapshot.schedule.is_empty(), "budget must force a split");
+        assert!(p.snapshot.peak <= 2000);
+        let store = test_store("budgeted");
+        store.save(&p).unwrap();
+        let back = store.load(&p.key).unwrap().unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.snapshot.schedule, p.snapshot.schedule);
+        assert_eq!(back.snapshot.trace.costs, p.snapshot.trace.costs);
     }
 
     #[test]

@@ -39,6 +39,11 @@ pub struct MemoryProfiler {
     next_id: usize,
     /// Nesting depth of interrupt() calls (§4.3): > 0 ⇒ not monitoring.
     interrupt_depth: u32,
+    /// When set, every profiled allocation also records its producer's
+    /// recompute cost into [`Trace::costs`]. Off by default so traces
+    /// profiled without an arena budget serialize byte-identically to
+    /// the pre-budget format.
+    record_costs: bool,
     trace: Trace,
 }
 
@@ -48,8 +53,18 @@ impl MemoryProfiler {
             clock: 1,
             next_id: 0,
             interrupt_depth: 0,
+            record_costs: false,
             trace: Trace::new(model, phase, batch),
         }
+    }
+
+    /// Turn on per-block recompute-cost recording. The budgeted planner
+    /// (`dsa::recompute`) scores drop candidates by cost per freed
+    /// byte·tick; callers that know the producer op's cost should pass
+    /// it via [`MemoryProfiler::on_alloc_costed`], otherwise the
+    /// roofline bandwidth model prices re-materializing the bytes.
+    pub fn enable_cost_recording(&mut self) {
+        self.record_costs = true;
     }
 
     /// Is monitoring currently suspended?
@@ -78,7 +93,21 @@ impl MemoryProfiler {
     }
 
     /// Record an allocation of `size` bytes; returns the block handle.
+    /// Under cost recording the producer cost defaults to the roofline
+    /// model's price for re-materializing the bytes.
     pub fn on_alloc(&mut self, size: u64) -> BlockHandle {
+        let cost = if self.record_costs {
+            crate::graph::cost::ComputeModel::default().kernel_ns(0, size)
+        } else {
+            0
+        };
+        self.on_alloc_costed(size, cost)
+    }
+
+    /// Record an allocation whose producer op costs `cost_ns` to re-run.
+    /// The cost is stored only when cost recording is enabled (it is
+    /// planner metadata, not trace structure).
+    pub fn on_alloc_costed(&mut self, size: u64, cost_ns: u64) -> BlockHandle {
         if self.interrupted() {
             // Out of optimization scope, but the clock still advances so
             // profiled lifetimes around the region stay ordered.
@@ -92,6 +121,10 @@ impl MemoryProfiler {
             size,
             tick: self.clock,
         });
+        if self.record_costs {
+            debug_assert_eq!(self.trace.costs.len(), id);
+            self.trace.costs.push(cost_ns);
+        }
         self.clock += 1;
         BlockHandle(id)
     }
@@ -179,6 +212,35 @@ mod tests {
     #[should_panic(expected = "resume without interrupt")]
     fn unbalanced_resume_panics() {
         MemoryProfiler::new("m", "t", 1).resume();
+    }
+
+    #[test]
+    fn cost_recording_is_opt_in_and_positional() {
+        // Off by default: the trace stays byte-identical to the
+        // pre-budget format (no costs recorded at all).
+        let mut p = MemoryProfiler::new("m", "t", 1);
+        let a = p.on_alloc(64);
+        p.on_free(a);
+        assert!(p.finish().costs.is_empty());
+
+        // On: every profiled alloc records a cost, explicit wins over
+        // the bandwidth-model default, interrupted allocs record none.
+        let mut p = MemoryProfiler::new("m", "t", 1);
+        p.enable_cost_recording();
+        let a = p.on_alloc_costed(64, 5_000);
+        p.interrupt();
+        let u = p.on_alloc(999);
+        p.on_free(u);
+        p.resume();
+        let b = p.on_alloc(128);
+        p.on_free(a);
+        p.on_free(b);
+        let t = p.finish();
+        t.validate().unwrap();
+        assert_eq!(t.costs.len(), 2);
+        assert_eq!(t.costs[0], 5_000);
+        let model = crate::graph::cost::ComputeModel::default();
+        assert_eq!(t.costs[1], model.kernel_ns(0, 128));
     }
 
     #[test]

@@ -37,6 +37,17 @@ pub struct Trace {
     pub model: String,
     pub phase: String,
     pub batch: u32,
+    /// Optional per-block producer recompute cost in simulated
+    /// nanoseconds, indexed by block id — what re-materializing the
+    /// block costs if budgeted planning
+    /// ([`dsa::recompute`](crate::dsa::recompute)) drops it mid-life.
+    /// Empty = unrecorded (the planner falls back to a bandwidth-model
+    /// estimate); when non-empty it must cover every block. Costs are
+    /// metadata, not structure: they do not enter
+    /// [`skeleton_hash`](Trace::skeleton_hash), and an empty vector
+    /// serializes to nothing so unbudgeted documents are byte-identical
+    /// to pre-cost output.
+    pub costs: Vec<u64>,
 }
 
 /// Summary statistics used by reports and tests.
@@ -57,6 +68,18 @@ impl Trace {
             model: model.to_string(),
             phase: phase.to_string(),
             batch,
+            costs: Vec::new(),
+        }
+    }
+
+    /// The recompute cost of block `id` (of `size` bytes): the recorded
+    /// per-block cost when the profiler captured one, else a roofline
+    /// bandwidth estimate — regenerating the block's bytes at effective
+    /// memory bandwidth ([`ComputeModel`](crate::graph::cost::ComputeModel)).
+    pub fn recompute_cost(&self, id: usize, size: u64) -> u64 {
+        match self.costs.get(id) {
+            Some(&ns) => ns,
+            None => crate::graph::cost::ComputeModel::default().kernel_ns(0, size),
         }
     }
 
@@ -141,6 +164,11 @@ impl Trace {
                 }
             }
         }
+        anyhow::ensure!(
+            self.costs.is_empty() || self.costs.len() == next_id,
+            "recorded costs cover {} of {next_id} blocks",
+            self.costs.len()
+        );
         Ok(())
     }
 
@@ -204,12 +232,22 @@ impl Trace {
                 ]),
             });
         }
-        Ok(Json::from_pairs(vec![
+        let mut pairs = vec![
             ("model", Json::Str(self.model.clone())),
             ("phase", Json::Str(self.phase.clone())),
             ("batch", Json::Int(self.batch as i64)),
             ("events", Json::Arr(events)),
-        ]))
+        ];
+        if !self.costs.is_empty() {
+            // Emitted only when recorded: an unbudgeted trace's document
+            // stays byte-identical to pre-cost output.
+            let mut costs = Vec::with_capacity(self.costs.len());
+            for (id, &ns) in self.costs.iter().enumerate() {
+                costs.push(int(&format!("cost[{id}]"), ns)?);
+            }
+            pairs.push(("costs", Json::Arr(costs)));
+        }
+        Ok(Json::from_pairs(pairs))
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
@@ -257,6 +295,16 @@ impl Trace {
                     tick: get(2)?,
                 }),
                 k => anyhow::bail!("event {n}: unknown kind {k:?}"),
+            }
+        }
+        // Optional per-block recompute costs (absent in documents written
+        // before budgeted planning, and in any unbudgeted trace).
+        if let Some(costs) = j.get("costs").as_arr() {
+            for (i, c) in costs.iter().enumerate() {
+                t.costs.push(
+                    c.as_u64()
+                        .ok_or_else(|| anyhow::anyhow!("cost {i}: not a non-negative integer"))?,
+                );
             }
         }
         t.validate()?;
@@ -378,6 +426,30 @@ mod tests {
         let mut reshaped = simple_trace();
         reshaped.events.pop();
         assert_ne!(reshaped.skeleton_hash(), h, "event shape is structural");
+    }
+
+    #[test]
+    fn recorded_costs_roundtrip_and_validate() {
+        let mut t = simple_trace();
+        assert!(
+            !t.to_json().unwrap().dump().contains("costs"),
+            "an unrecorded trace must serialize without a costs field"
+        );
+        t.costs = vec![5_000, 6_000, 7_000];
+        t.validate().unwrap();
+        let back = Trace::from_json(&t.to_json().unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.recompute_cost(1, 50), 6_000, "recorded cost wins");
+        assert_eq!(
+            simple_trace().recompute_cost(1, 50),
+            crate::graph::cost::ComputeModel::default().kernel_ns(0, 50),
+            "unrecorded cost falls back to the bandwidth model"
+        );
+        // Costs are metadata, not structure.
+        assert_eq!(t.skeleton_hash(), simple_trace().skeleton_hash());
+
+        t.costs.pop();
+        assert!(t.validate().is_err(), "partial cost coverage is malformed");
     }
 
     #[test]

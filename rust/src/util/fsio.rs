@@ -7,11 +7,21 @@
 //! the new one — never a truncated half-write after a crash.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Distinguishes concurrent in-process writers of one destination. A
+/// PID alone is not enough: per-shard registries (`--shared-registry
+/// off`) and a re-pack persist racing the serving-path persist all live
+/// in *one* process, and two threads sharing a temp name can interleave
+/// write/rename into a renamed half-write — exactly the corruption the
+/// store's load-validation exists to rule out from clean runs.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// Write `contents` to `path` via a temp file + rename in the same
 /// directory (same filesystem, so the rename cannot degrade to a copy).
-/// The temp name embeds the process id so concurrent writers of the
-/// same destination cannot clobber each other's in-flight temp file;
+/// The temp name embeds the process id *and* a process-wide sequence
+/// number, so concurrent writers of the same destination — including
+/// threads of this process — each own a private in-flight temp file;
 /// last rename wins, which is fine for idempotent documents.
 pub fn write_atomic(path: &Path, contents: &str) -> anyhow::Result<()> {
     let tmp = temp_sibling(path);
@@ -32,7 +42,8 @@ fn temp_sibling(path: &Path) -> PathBuf {
         .map(|n| n.to_string_lossy().into_owned())
         .unwrap_or_else(|| "out".to_string());
     let pid = std::process::id();
-    path.with_file_name(format!(".{name}.{pid}.tmp"))
+    let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!(".{name}.{pid}.{seq}.tmp"))
 }
 
 #[cfg(test)]
@@ -55,5 +66,68 @@ mod tests {
             .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
             .collect();
         assert!(leftovers.is_empty(), "temp files not cleaned up");
+    }
+
+    #[test]
+    fn concurrent_temp_names_are_distinct() {
+        // The in-process race reduces to this: two writers of one
+        // destination must never share a temp path (with PID-only
+        // naming they always did).
+        let a = temp_sibling(Path::new("/x/doc.json"));
+        let b = temp_sibling(Path::new("/x/doc.json"));
+        assert_ne!(a, b, "same-destination writers shared a temp file");
+    }
+
+    /// Same-destination hammer: N threads × M writes each, every write a
+    /// full distinctive payload. Any interleaved half-write would rename
+    /// a torn document into place; every observed read must therefore be
+    /// exactly one writer's complete bytes. Fails against the old
+    /// PID-only temp naming (threads share `.doc.json.{pid}.tmp`, so one
+    /// thread's rename can publish another thread's partially-written
+    /// temp file); passes with the per-write sequence number.
+    #[test]
+    fn write_atomic_same_destination_hammer() {
+        const THREADS: usize = 8;
+        const WRITES: usize = 50;
+        let dir = std::env::temp_dir().join("pgmo_fsio_hammer");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("doc.json");
+
+        // Each writer's payloads are self-describing and checksummable
+        // by shape: "w{t}-i{i}-" repeated to a writer-distinct length.
+        let payload = |t: usize, i: usize| -> String {
+            let unit = format!("w{t}-i{i}-");
+            unit.repeat(64 + t * 7 + i % 5)
+        };
+
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let path = &path;
+                scope.spawn(move || {
+                    for i in 0..WRITES {
+                        write_atomic(path, &payload(t, i)).unwrap();
+                        // Read back under contention: whatever document
+                        // is current must be *some* writer's complete
+                        // bytes — never a torn interleaving.
+                        let seen = std::fs::read_to_string(path).unwrap();
+                        let head = seen.split('-').collect::<Vec<_>>();
+                        assert!(
+                            head.len() >= 2 && head[0].starts_with('w') && head[1].starts_with('i'),
+                            "torn document header: {:?}",
+                            &seen[..seen.len().min(40)]
+                        );
+                        let wt: usize = head[0][1..].parse().expect("writer id");
+                        let wi: usize = head[1][1..].parse().expect("write index");
+                        assert_eq!(
+                            seen,
+                            payload(wt, wi),
+                            "observed document is not one writer's complete bytes"
+                        );
+                    }
+                });
+            }
+        });
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

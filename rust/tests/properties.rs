@@ -7,6 +7,7 @@ use pgmo::device::SimDevice;
 use pgmo::dsa::indexed::{Changes, IndexedSkyline};
 use pgmo::dsa::policies::{BlockChoice, Policy};
 use pgmo::dsa::problem::DsaInstance;
+use pgmo::dsa::recompute::{self, RecomputeStep};
 use pgmo::dsa::skyline::Skyline;
 use pgmo::dsa::{anytime, bestfit, exact, firstfit, mip};
 use pgmo::plan::{DeviceBackend, HostBackend, MemoryBackend, ReplayEngine};
@@ -328,10 +329,12 @@ enum EpisodeKind {
     Seeded,
     Fault,
     Anytime,
+    Recompute,
 }
 
 impl EpisodeKind {
-    const PREFIXED: [&'static str; 4] = ["reopt-", "seeded-", "fault-", "anytime-"];
+    const PREFIXED: [&'static str; 5] =
+        ["reopt-", "seeded-", "fault-", "anytime-", "recompute-"];
 
     fn prefix(self) -> Option<&'static str> {
         match self {
@@ -340,6 +343,7 @@ impl EpisodeKind {
             EpisodeKind::Seeded => Some("seeded-"),
             EpisodeKind::Fault => Some("fault-"),
             EpisodeKind::Anytime => Some("anytime-"),
+            EpisodeKind::Recompute => Some("recompute-"),
         }
     }
 
@@ -816,6 +820,358 @@ fn prop_anytime_monotone_and_sound_heavy() {
     check_anytime_monotone_and_sound(&[
         0xa11c, 0xbee5, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18,
     ]);
+}
+
+// ----- budgeted planning: checkpoint/recompute differentials -----------------
+
+/// The budget contract under every block-choice policy. For a random
+/// instance, random recorded costs, and a random budget:
+///
+/// 1. a budget at the unbudgeted peak returns that exact packing with
+///    an empty schedule — no budget pressure, byte-identical plan;
+/// 2. a feasible plan fits the budget, validates against its rewritten
+///    instance, and that instance re-expands *identically* from its own
+///    schedule through the adoption-path validator `expand_instance`;
+/// 3. infeasibility is the typed hard error with `best_peak` still
+///    above the budget — never a silently overshooting plan.
+fn check_recompute_meets_budget(cases: usize) {
+    let spec = gen::pair(instance_gen(40), gen::u64_in(0..=1 << 48));
+    testkit::check("recompute meets budget", cases, spec, |(triples, seed)| {
+        let inst = to_instance(triples);
+        let mut rng = Pcg32::seeded(*seed);
+        let costs: Vec<u64> = (0..inst.len()).map(|_| rng.range(1, 100_000)).collect();
+        let lb = inst.liveness_lower_bound();
+        for bc in BlockChoice::ALL {
+            let policy = Policy { block_choice: bc };
+            let unbudgeted = bestfit::solve_with(&inst, policy);
+            match recompute::plan_with_budget(&inst, &costs, unbudgeted.peak, policy) {
+                Ok(plan) => {
+                    if !plan.schedule.is_empty() || plan.assignment != unbudgeted {
+                        return false;
+                    }
+                }
+                Err(_) => return false,
+            }
+            let budget = lb / 2 + rng.range(0, unbudgeted.peak.max(1));
+            match recompute::plan_with_budget(&inst, &costs, budget, policy) {
+                Ok(plan) => {
+                    let Ok(expanded) = recompute::expand_instance(&inst, &plan.schedule)
+                    else {
+                        return false;
+                    };
+                    if plan.assignment.peak > budget
+                        || plan.assignment.validate(&plan.instance).is_err()
+                        || plan.instance.blocks != expanded.blocks
+                    {
+                        return false;
+                    }
+                }
+                Err(e) => {
+                    if e.budget != budget || e.best_peak <= budget {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_recompute_meets_budget() {
+    check_recompute_meets_budget(100);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases, run by the nightly `cargo test -- --ignored` job"]
+fn prop_recompute_meets_budget_heavy() {
+    check_recompute_meets_budget(1000);
+}
+
+/// The schedule a given drop set implies, ids ascending — the exhaustive
+/// harness's analogue of the greedy pass's bookkeeping. `cost_ns` is
+/// irrelevant to packing, so a placeholder.
+fn drop_set_schedule(inst: &DsaInstance, ids: &[usize]) -> Vec<RecomputeStep> {
+    let n = inst.len();
+    ids.iter()
+        .enumerate()
+        .map(|(k, &id)| {
+            let b = inst.blocks[id];
+            RecomputeStep {
+                id,
+                drop_tick: b.alloc_at + 1,
+                recompute_tick: b.free_at - 1,
+                segment: n + k,
+                cost_ns: 1,
+            }
+        })
+        .collect()
+}
+
+/// Exhaustive drop-set differential on tiny instances, mirroring the
+/// brute-force harness the exact solver is checked against. Every subset
+/// of the droppable blocks is expanded and solved; with `brute` the best
+/// peak over all subsets:
+///
+/// 1. every subset's expansion passes `expand_instance` and its packing
+///    validates — the schedule encoding is sound for *arbitrary* drop
+///    sets, not just the greedy pass's;
+/// 2. `budget < brute` forces the typed error: the greedy pass only
+///    ever lands on enumerated subsets, so a feasible result here would
+///    beat the exhaustive optimum — an unsound packing in disguise;
+/// 3. `budget ≥ unbudgeted peak` succeeds schedule-free;
+/// 4. in between, a greedy success fits the budget and never beats
+///    `brute`, and a greedy failure is the typed error.
+fn check_recompute_vs_bruteforce(cases: usize) {
+    testkit::check("recompute vs brute force", cases, instance_gen(6), |triples| {
+        // Uniquify sizes first. The policy order key falls back to block
+        // id on (key, size) ties, and the greedy pass numbers recompute
+        // segments in drop order while `drop_set_schedule` numbers them
+        // ascending — with duplicate sizes the two id assignments could
+        // legitimately pack differently, voiding the peak comparison.
+        // Distinct sizes make every ordering id-independent, so greedy's
+        // peak for a drop set equals the enumeration's for that set.
+        let triples: Vec<(u64, u64, u64)> = triples
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, a, f))| (s * 8 + i as u64, a, f))
+            .collect();
+        let inst = to_instance(&triples);
+        let n = inst.len();
+        let droppable: Vec<usize> = (0..n)
+            .filter(|&id| inst.blocks[id].free_at >= inst.blocks[id].alloc_at + 3)
+            .collect();
+        for bc in BlockChoice::ALL {
+            let policy = Policy { block_choice: bc };
+            let unbudgeted = bestfit::solve_with(&inst, policy);
+            let mut brute = unbudgeted.peak;
+            for mask in 0u32..1 << droppable.len() {
+                let ids: Vec<usize> = droppable
+                    .iter()
+                    .enumerate()
+                    .filter(|&(k, _)| mask & (1 << k) != 0)
+                    .map(|(_, &id)| id)
+                    .collect();
+                let Ok(expanded) =
+                    recompute::expand_instance(&inst, &drop_set_schedule(&inst, &ids))
+                else {
+                    return false;
+                };
+                let sol = bestfit::solve_with(&expanded, policy);
+                if sol.validate(&expanded).is_err() {
+                    return false;
+                }
+                brute = brute.min(sol.peak);
+            }
+            let budgets = [
+                brute.saturating_sub(1),
+                brute,
+                (brute + unbudgeted.peak) / 2,
+                unbudgeted.peak,
+            ];
+            for budget in budgets {
+                match recompute::plan_with_budget(&inst, &[], budget, policy) {
+                    Ok(plan) => {
+                        if plan.assignment.peak > budget || plan.assignment.peak < brute {
+                            return false;
+                        }
+                        if budget >= unbudgeted.peak && !plan.schedule.is_empty() {
+                            return false;
+                        }
+                    }
+                    Err(e) => {
+                        // Greedy may miss a feasible subset (its drop
+                        // order is nested), but below `brute` failure is
+                        // *mandatory* and above the unbudgeted peak it
+                        // is impossible.
+                        if budget >= unbudgeted.peak || e.best_peak <= budget {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_recompute_matches_bruteforce_dropsets() {
+    check_recompute_vs_bruteforce(40);
+}
+
+#[test]
+#[ignore = "heavy: 10× cases, run by the nightly `cargo test -- --ignored` job"]
+fn prop_recompute_matches_bruteforce_dropsets_heavy() {
+    check_recompute_vs_bruteforce(400);
+}
+
+/// Read `len` bytes of plan position `pos` from wherever the budgeted
+/// engine currently keeps them: the checkpoint stash while dropped, the
+/// effective arena slot (original or recompute segment) otherwise.
+fn read_pos(e: &ReplayEngine<HostBackend>, pos: usize, len: usize) -> Vec<u8> {
+    if let Some(stash) = e.recompute_stash(pos) {
+        return stash[..len].to_vec();
+    }
+    let slot = e.effective_slot(pos);
+    e.backend().arena().expect("replayed engine has an arena").bytes(slot)[..len].to_vec()
+}
+
+/// Write `payload` into plan position `pos`, honoring the same
+/// stash-or-slot routing a real staging client uses — if the engine ever
+/// reorders its checkpoint flush, this keeps the differential honest
+/// instead of scribbling on a stale slot.
+fn write_pos(e: &mut ReplayEngine<HostBackend>, pos: usize, payload: &[u8]) {
+    if let Some(stash) = e.recompute_stash_mut(pos) {
+        stash[..payload.len()].copy_from_slice(payload);
+        return;
+    }
+    let slot = e.effective_slot(pos);
+    e.backend_mut().arena_mut().expect("replayed engine has an arena").write(slot, payload);
+}
+
+/// One budgeted-replay differential episode. A random nested-stack
+/// client (every block but the innermost is droppable in this shape, and
+/// the full split packs at the largest single block — so any budget in
+/// `[max block, peak)` is feasible) is profiled twice, unbudgeted and
+/// under a random budget strictly below the unbudgeted peak, then both
+/// engines replay two iterations in lockstep with client payloads:
+/// every byte read back just before a free must match both the payload
+/// written after the alloc *and* what the unbudgeted twin holds at the
+/// same position — checkpoint/recompute must be invisible to the client
+/// except in the stats, which must charge one recompute per split per
+/// replayed iteration.
+fn recompute_episode(seed: u64) -> Result<(), String> {
+    let mut rng = Pcg32::seeded(seed ^ 0x7ec0_4407);
+    let n = rng.range_usize(2, 8);
+    let sizes: Vec<u64> = (0..n).map(|_| rng.range(64, 2048)).collect();
+
+    let mut plain = ReplayEngine::new(HostBackend::new(), "prop", "recompute", 1);
+    drive_engine(&mut plain, &sizes); // profile the unbudgeted twin
+    let peak = plain.planned_peak().ok_or("twin did not plan")?;
+    let max_block = *sizes.iter().max().expect("non-empty sizes");
+    let budget = rng.range(max_block, peak - 1);
+
+    let mut e = ReplayEngine::new(HostBackend::new(), "prop", "recompute", 1);
+    e.set_arena_budget(budget);
+    drive_engine(&mut e, &sizes); // profile under the budget
+    let bpeak = e.planned_peak().ok_or("budgeted engine did not plan")?;
+    if bpeak > budget {
+        return Err(format!("seed {seed}: planned peak {bpeak} over budget {budget}"));
+    }
+    let splits = e.recompute_schedule().len() as u64;
+    if splits == 0 {
+        return Err(format!(
+            "seed {seed}: budget {budget} below peak {peak} split nothing"
+        ));
+    }
+
+    let payload = |pos: usize, iter: u32, len: usize| -> Vec<u8> {
+        (0..len)
+            .map(|i| {
+                (seed as u8)
+                    ^ (pos as u8).wrapping_mul(31)
+                    ^ (iter as u8).wrapping_mul(97)
+                    ^ i as u8
+            })
+            .collect()
+    };
+    for iter in 0..2u32 {
+        e.begin_iteration();
+        plain.begin_iteration();
+        let mut live: Vec<(u64, u64, u64, usize)> = Vec::new();
+        for &s in &sizes {
+            let p = e.alloc(&mut (), s).expect("budgeted alloc");
+            let q = plain.alloc(&mut (), s).expect("twin alloc");
+            let pos = p.pos.ok_or("budgeted alloc escaped the plan")?;
+            if q.pos != Some(pos) {
+                return Err(format!("seed {seed}: plan positions diverge at {pos}"));
+            }
+            let len = (s as usize).min(64);
+            let bytes = payload(pos, iter, len);
+            write_pos(&mut e, pos, &bytes);
+            plain.backend_mut().arena_mut().expect("twin arena").write(pos, &bytes);
+            live.push((p.addr, q.addr, s, pos));
+        }
+        for (addr, qaddr, s, pos) in live.into_iter().rev() {
+            let len = (s as usize).min(64);
+            let got = read_pos(&e, pos, len);
+            let want = plain.backend().arena().expect("twin arena").bytes(pos)[..len].to_vec();
+            if got != want {
+                return Err(format!(
+                    "seed {seed}: iter {iter} position {pos} diverges from the unbudgeted twin"
+                ));
+            }
+            if got != payload(pos, iter, len) {
+                return Err(format!(
+                    "seed {seed}: iter {iter} position {pos} lost its written payload"
+                ));
+            }
+            e.free(&mut (), addr, s);
+            plain.free(&mut (), qaddr, s);
+        }
+        e.end_iteration(&mut ()).expect("budgeted end_iteration");
+        plain.end_iteration(&mut ()).expect("twin end_iteration");
+    }
+    let s = e.stats();
+    if s.reopts != 0 {
+        return Err(format!("seed {seed}: budgeted replay deviated ({} reopts)", s.reopts));
+    }
+    if s.recomputes != 2 * splits {
+        return Err(format!(
+            "seed {seed}: {} recomputes != {splits} splits × 2 replayed iterations",
+            s.recomputes
+        ));
+    }
+    if s.recompute_ns == 0 {
+        return Err(format!("seed {seed}: recomputes charged no producer cost"));
+    }
+    Ok(())
+}
+
+/// Replays the committed recompute corpus (`recompute-*.seed`) first,
+/// then runs fresh random episodes; a failing fresh seed is persisted
+/// with the `recompute-` prefix so it replays first on every future run
+/// (commit the file to pin it).
+fn run_recompute_fuzz(episodes: u64) {
+    let dir = skyline_corpus_dir();
+    let corpus = corpus_seeds(&dir, EpisodeKind::Recompute);
+    assert!(
+        !corpus.is_empty(),
+        "committed recompute corpus must hold at least one seed"
+    );
+    for (path, seed) in &corpus {
+        if let Err(e) = recompute_episode(*seed) {
+            panic!("recompute corpus regression {path:?}: {e}");
+        }
+    }
+
+    let base: u64 = std::env::var("PGMO_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x7ec0_4407_5eed_0001);
+    for i in 0..episodes {
+        let seed = base.wrapping_add(i);
+        if let Err(e) = recompute_episode(seed) {
+            let path = dir.join(format!("recompute-fail-{seed:016x}.seed"));
+            let _ = std::fs::write(&path, format!("{seed}\n"));
+            panic!(
+                "recompute replay differential fuzz failed: {e}\nseed persisted to {path:?} — \
+                 commit it so the regression replays first"
+            );
+        }
+    }
+}
+
+#[test]
+fn recompute_replay_differential_fuzz() {
+    run_recompute_fuzz(16);
+}
+
+#[test]
+#[ignore = "heavy: 10× episodes, run by the nightly `cargo test -- --ignored` job"]
+fn recompute_replay_differential_fuzz_heavy() {
+    run_recompute_fuzz(160);
 }
 
 // ----- §4.3 warm-start resolve ≡ reference, bounded by cold ------------------
@@ -1652,6 +2008,7 @@ fn plan_store_document_roundtrips_for_all_policies() {
                 trace,
                 offsets: sol.offsets,
                 peak: sol.peak,
+                schedule: vec![],
             },
         };
         let text = doc.to_json().unwrap().dump();
@@ -1851,6 +2208,11 @@ struct ChaosCounters {
     retries: AtomicU64,
     restarts: AtomicU64,
     failed_shards: AtomicU64,
+    /// Capacity sheds no shard worker ever observed (every lane dead at
+    /// dispatch). Kept apart from `expired` — folding them into a
+    /// shard's deadline-shed count is exactly the misattribution the
+    /// serve dispatcher used to commit.
+    dispatch_shed: AtomicU64,
 }
 
 /// One incarnation of a mini shard worker: the dequeue → park →
@@ -2015,6 +2377,9 @@ struct ChaosOutcome {
     retries: u64,
     restarts: u64,
     failed_shards: u64,
+    /// Dispatcher-side capacity sheds (all lanes dead), counted apart
+    /// from the shard-observed deadline sheds in `expired`.
+    dispatch_shed: u64,
     /// Buckets whose plan was successfully written behind.
     persisted: BTreeSet<u32>,
     /// Buckets that served at least one batch.
@@ -2079,8 +2444,10 @@ fn run_chaos_session(
                 }
             }
             if let Some(req) = undelivered {
-                // Every lane dead or closed: shed explicitly, never drop.
-                counters.expired.fetch_add(1, Ordering::Relaxed);
+                // Every lane dead or closed: shed explicitly, never
+                // drop. This is a *dispatcher* shed — no shard observed
+                // the request, so it must not land in `expired`.
+                counters.dispatch_shed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Response::Expired {
                     waited: req.created.elapsed(),
                 });
@@ -2134,13 +2501,18 @@ fn run_chaos_session(
     if served + expired != requests as u64 {
         return Err(format!("{served} served + {expired} expired != {requests}"));
     }
-    let (c_served, c_expired) = (
+    let (c_served, c_expired, c_shed) = (
         counters.served.load(Ordering::Relaxed),
         counters.expired.load(Ordering::Relaxed),
+        counters.dispatch_shed.load(Ordering::Relaxed),
     );
-    if (c_served, c_expired) != (served, expired) {
+    // A dispatcher shed still produces an `Expired` reply, so the
+    // received tally is the *sum* of the two shed counters — each must
+    // carry only its own sheds, never the other's.
+    if (c_served, c_expired + c_shed) != (served, expired) {
         return Err(format!(
-            "counter drift: sent {c_served} Ok / {c_expired} Expired, received {served} / {expired}"
+            "counter drift: sent {c_served} Ok / {c_expired} Expired / {c_shed} dispatcher \
+             sheds, received {served} / {expired}"
         ));
     }
 
@@ -2166,6 +2538,7 @@ fn run_chaos_session(
         retries: counters.retries.load(Ordering::Relaxed),
         restarts: counters.restarts.load(Ordering::Relaxed),
         failed_shards: counters.failed_shards.load(Ordering::Relaxed),
+        dispatch_shed: counters.dispatch_shed.load(Ordering::Relaxed),
         persisted: relock(persisted).clone(),
         built: relock(built).clone(),
         plans,
@@ -2213,12 +2586,22 @@ fn fault_episode(seed: u64, requests: usize) -> Result<(), String> {
         ));
     }
     // Deadline accounting: exactly the expired-on-arrival requests were
-    // shed — nothing else can expire in this episode.
+    // shed, all of them *observed by a shard* — nothing else can expire
+    // in this episode, and with every restart inside budget no lane was
+    // ever fully dead, so the dispatcher shed nothing. A nonzero
+    // dispatcher count here would mean capacity sheds leaked back into
+    // a shard's deadline tally (the old misattribution, inverted).
     let forced = (requests as u64).div_ceil(10);
     if chaos.expired != forced {
         return Err(format!(
             "expired {} != {forced} expired-on-arrival requests",
             chaos.expired
+        ));
+    }
+    if chaos.dispatch_shed != 0 {
+        return Err(format!(
+            "{} dispatcher sheds with every lane alive",
+            chaos.dispatch_shed
         ));
     }
     if chaos.built.is_empty() || chaos.served == 0 {
@@ -2264,6 +2647,12 @@ fn fault_episode(seed: u64, requests: usize) -> Result<(), String> {
         return Err(format!(
             "fault-free twin saw faults: {} restarts / {} retries / {} failed shards",
             clean.restarts, clean.retries, clean.failed_shards
+        ));
+    }
+    if clean.dispatch_shed != 0 {
+        return Err(format!(
+            "fault-free twin shed {} requests at the dispatcher",
+            clean.dispatch_shed
         ));
     }
     if chaos.plans != clean.plans {
